@@ -1,0 +1,57 @@
+//! Method shootout on one layer — a microscope on the paper's Fig. 6:
+//! quantize a single real linear layer with every method and print the
+//! remaining integral error ‖WX − ŷ(X)‖_F, rank, extra params, and time.
+//!
+//! Run: `cargo run --release --example method_shootout -- [layer-key]`
+
+use aser::calib::CalibConfig;
+use aser::coordinator::calibrate_model;
+use aser::methods::{layer_error_rel, method_by_name, RankPolicy};
+use aser::model::load_or_synthetic;
+use aser::quant::Precision;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let key = std::env::args().nth(1).unwrap_or_else(|| "L4.fc1".to_string());
+    let (model, _) = load_or_synthetic("A", Path::new("artifacts"), 7)?;
+    let ccfg = CalibConfig { n_seqs: 24, seq_len: 48, max_sample: 256, seed: 7 };
+    let stats = calibrate_model(&model, "wiki", &ccfg)?;
+    let calib = stats
+        .get(&key)
+        .ok_or_else(|| anyhow::anyhow!("unknown layer '{key}' (try L0.qkv_proj)"))?;
+    // Recover block/linear from the key to fetch the weight.
+    let block: usize = key[1..key.find('.').unwrap()].parse()?;
+    let lname = &key[key.find('.').unwrap() + 1..];
+    let w = model.get_linear(block, lname).dense_weight().unwrap();
+
+    println!(
+        "layer {key}: {}×{}, {} calib tokens\n",
+        w.rows,
+        w.cols,
+        calib.tokens
+    );
+    println!(
+        "{:<14} {:>9} {:>9} {:>7} {:>10} {:>8}",
+        "method", "rel W4A8", "rel W4A6", "rank", "+params", "ms"
+    );
+    for name in
+        ["rtn", "llm_int", "smoothquant", "smoothquant+", "awq", "gptq", "lorc", "l2qer", "aser-er", "aser"]
+    {
+        let method = method_by_name(name, RankPolicy::Fixed(16), 8)?;
+        let t = std::time::Instant::now();
+        let q8 = method.quantize_layer(w, calib, Precision::w4a8());
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let q6 = method.quantize_layer(w, calib, Precision::w4a6());
+        println!(
+            "{:<14} {:>9.5} {:>9.5} {:>7} {:>10} {:>8.0}",
+            name,
+            layer_error_rel(w, &q8, &calib.x),
+            layer_error_rel(w, &q6, &calib.x),
+            q8.rank(),
+            q8.extra_params(),
+            ms
+        );
+    }
+    println!("\nExpected ordering (paper): aser < aser-er < l2qer < lorc < smoothed < rtn");
+    Ok(())
+}

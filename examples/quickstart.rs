@@ -1,0 +1,67 @@
+//! Quickstart — the end-to-end driver (EXPERIMENTS.md §E2E).
+//!
+//! Loads the pretrained evaluation model (from `make artifacts`; falls back
+//! to a synthetic model), runs the full ASER pipeline — calibrate →
+//! quantize to W4A8 per-channel → evaluate — and prints the paper's
+//! headline comparison: fp16 vs RTN vs L²QER vs ASER perplexity + accuracy.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use aser::calib::CalibConfig;
+use aser::coordinator::{calibrate_model, run_ptq};
+use aser::data::corpus;
+use aser::eval::{perplexity, tasks};
+use aser::methods::{method_by_name, RankPolicy};
+use aser::model::load_or_synthetic;
+use aser::quant::Precision;
+use aser::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    let (model, pretrained) = load_or_synthetic("A", artifacts, 7)?;
+    println!(
+        "model A ({}; {} params, {} layers, d={})",
+        if pretrained { "pretrained" } else { "synthetic fallback — run `make artifacts`" },
+        model.cfg.total_params(),
+        model.cfg.n_layers,
+        model.cfg.d_model
+    );
+
+    // 1. Calibrate once (paper: 128 × 2048 tokens; scaled to the tiny model).
+    let ccfg = CalibConfig { n_seqs: 32, seq_len: 64, max_sample: 256, seed: 7 };
+    let t = std::time::Instant::now();
+    let stats = calibrate_model(&model, "wiki", &ccfg)?;
+    println!("calibrated {} linear layers in {:.1}s", stats.len(), t.elapsed().as_secs_f64());
+
+    // 2. Evaluation workload (held-out).
+    let c = corpus(model.cfg.vocab_size, "wiki")?;
+    let stream = c.stream(&mut Pcg64::seed(0xE0E0), 768);
+    let arc = tasks::generate(&c, "arc_c", 40, 99)?;
+
+    let ppl_fp = perplexity(&model, &stream, 64);
+    let acc_fp = tasks::evaluate(&model, &arc);
+    println!("\n{:<22} {:>9} {:>8}", "", "ppl(wiki)", "arc_c%");
+    println!("{:<22} {:>9.3} {:>8.1}", "fp16", ppl_fp, acc_fp);
+
+    // 3. Quantize with RTN (baseline), L²QER and ASER; evaluate each.
+    let prec = Precision::w4a8();
+    for (name, rank, f) in [("rtn", 16, 8), ("l2qer", 16, 8), ("aser", 16, 8)] {
+        let (model2, _) = load_or_synthetic("A", artifacts, 7)?;
+        let method = method_by_name(name, RankPolicy::Fixed(rank), f)?;
+        let t = std::time::Instant::now();
+        let (qm, report) = run_ptq(model2, &stats, method.as_ref(), prec, 0)?;
+        let q_secs = t.elapsed().as_secs_f64();
+        let ppl = perplexity(&qm, &stream, 64);
+        let acc = tasks::evaluate(&qm, &arc);
+        println!(
+            "{:<22} {:>9.3} {:>8.1}   (quantized in {q_secs:.1}s, +{:.2}% FLOPs)",
+            format!("{name} @ {prec}"),
+            ppl,
+            acc,
+            report.flops_overhead_pct()
+        );
+    }
+    println!("\nASER should sit closest to the fp16 row — the paper's headline claim.");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Rank explorer — the paper's Table 4 / Fig. 8 tradeoff, interactively:
+//! sweep the cumulative-singular-value threshold α, print per-layer selected
+//! ranks, layer error, and the +FLOPs overhead of the compensation branch.
+//!
+//! Run: `cargo run --release --example rank_explorer -- [model] [alphas]`
+//! e.g. `... -- A 0.015,0.05,0.1`
+
+use aser::analysis::selected_rank;
+use aser::calib::CalibConfig;
+use aser::coordinator::{calibrate_model, run_ptq};
+use aser::methods::{method_by_name, RankPolicy};
+use aser::model::{layer_key, load_or_synthetic, LINEAR_NAMES};
+use aser::quant::Precision;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let model_name = std::env::args().nth(1).unwrap_or_else(|| "A".to_string());
+    let alphas: Vec<f64> = std::env::args()
+        .nth(2)
+        .unwrap_or_else(|| "0.015,0.03,0.05,0.075,0.1".to_string())
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad alpha"))
+        .collect();
+
+    let (model, _) = load_or_synthetic(&model_name, Path::new("artifacts"), 7)?;
+    let ccfg = CalibConfig { n_seqs: 24, seq_len: 48, max_sample: 224, seed: 7 };
+    let stats = calibrate_model(&model, "wiki", &ccfg)?;
+
+    // Per-layer selected ranks for each α (Fig. 8 view, first + last block).
+    println!("selected rank per linear (whitened spectrum):");
+    print!("{:<18}", "layer");
+    for a in &alphas {
+        print!("{:>9}", format!("α={a}"));
+    }
+    println!();
+    for l in [0, model.cfg.n_layers - 1] {
+        for name in LINEAR_NAMES {
+            let key = layer_key(l, name);
+            let w = model.get_linear(l, name).dense_weight().unwrap();
+            print!("{key:<18}");
+            for &a in &alphas {
+                print!("{:>9}", selected_rank(w, &stats[&key], 4, a));
+            }
+            println!();
+        }
+    }
+
+    // Whole-model consequence of each α (Table 4 view).
+    println!("\nwhole-model ASER @ W4A8 by α:");
+    println!("{:<9} {:>10} {:>12} {:>10} {:>9}", "alpha", "mean rank", "mean rel err", "+FLOPs%", "sec");
+    for &a in &alphas {
+        let (m, _) = load_or_synthetic(&model_name, Path::new("artifacts"), 7)?;
+        let method = method_by_name("aser", RankPolicy::Threshold(a), 8)?;
+        let t = std::time::Instant::now();
+        let (_, rep) = run_ptq(m, &stats, method.as_ref(), Precision::w4a8(), 0)?;
+        println!(
+            "{:<9} {:>10.2} {:>12.5} {:>10.2} {:>9.1}",
+            a,
+            rep.mean_rank(),
+            rep.mean_rel_error(),
+            rep.flops_overhead_pct(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+    println!("\nOverhead should scale ~linearly with mean rank (paper Table 4).");
+    Ok(())
+}

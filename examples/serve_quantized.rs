@@ -1,0 +1,62 @@
+//! Serving demo: quantize model A with ASER (W4A8) and serve a bursty
+//! request trace through the router + continuous batcher, comparing
+//! throughput/latency against the fp16 model — the deployment scenario the
+//! paper's overhead analysis targets.
+//!
+//! Run: `cargo run --release --example serve_quantized`
+
+use aser::calib::CalibConfig;
+use aser::coordinator::{
+    calibrate_model, run_ptq, serve_requests, synthetic_requests, BatchConfig, ServerConfig,
+};
+use aser::methods::{method_by_name, RankPolicy};
+use aser::model::load_or_synthetic;
+use aser::quant::Precision;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    let n_requests = 24;
+    let cfg = ServerConfig {
+        workers: 2,
+        batch: BatchConfig { max_batch: 6, ..Default::default() },
+        kv_tokens: 1 << 14,
+    };
+
+    for variant in ["fp16", "aser-w4a8"] {
+        let (model, _) = load_or_synthetic("A", artifacts, 7)?;
+        let model = if variant == "fp16" {
+            model
+        } else {
+            let ccfg = CalibConfig { n_seqs: 24, seq_len: 48, max_sample: 192, seed: 7 };
+            let stats = calibrate_model(&model, "wiki", &ccfg)?;
+            let method = method_by_name("aser", RankPolicy::Fixed(16), 8)?;
+            let (qm, rep) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 0)?;
+            println!(
+                "[{variant}] quantized: mean rel err {:.4}, weight storage {:.1}% of fp32",
+                rep.mean_rel_error(),
+                100.0 * 4.25 / 32.0 // int4 codes + scales vs f32
+            );
+            qm
+        };
+        let vocab = model.cfg.vocab_size;
+        let reqs = synthetic_requests(vocab, n_requests, 12, 20, 42)?;
+        let run = serve_requests(Arc::new(model), &cfg, reqs);
+        println!(
+            "[{variant}] {} reqs | {:.1} tok/s decode | p50 latency {:.0}ms | p95 {:.0}ms | ttft p50 {:.0}ms",
+            run.responses.len(),
+            run.throughput_tok_s(),
+            run.latency_percentile_ms(50.0),
+            run.latency_percentile_ms(95.0),
+            run.ttft_percentile_ms(50.0),
+        );
+        for (i, m) in run.per_worker.iter().enumerate() {
+            println!(
+                "    worker{i}: {} reqs, {} iters, peak batch {}, kv rejects {}",
+                m.requests, m.iterations, m.peak_batch, m.rejected_capacity
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,139 @@
+"""AOT: lower the L2/L1 computations to HLO *text* artifacts for the rust
+PJRT runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (what the `xla`
+crate links) rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts (artifacts/hlo/):
+  qlinear_<shape>.hlo.txt   — fused W4A8 ASER linear (pallas, interpret)
+                              for the serving shapes of each model config
+  block_fwd_<cfg>.hlo.txt   — one fp32 transformer block forward
+  manifest.json             — shapes + arg order for the rust loader
+
+Usage: python -m compile.aot --out ../artifacts [--configs A,B]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import aser_matmul
+from .model import CONFIGS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_qlinear(t, d_in, d_out, r, abits=8):
+    """Fused quantized linear for fixed shapes; returns HLO text."""
+
+    def fn(x, m, wp, ws, la, lb):
+        return (aser_matmul.aser_qlinear(x, m, wp, ws, la, lb, abits=abits, block_t=min(64, t)),)
+
+    spec = [
+        jax.ShapeDtypeStruct((t, d_in), jnp.float32),
+        jax.ShapeDtypeStruct((d_in,), jnp.float32),
+        jax.ShapeDtypeStruct((d_out, d_in // 2), jnp.uint8),
+        jax.ShapeDtypeStruct((d_out,), jnp.float32),
+        jax.ShapeDtypeStruct((d_out, r), jnp.float32),
+        jax.ShapeDtypeStruct((r, d_in), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*spec))
+
+
+def lower_block_fwd(cfg):
+    """One fp32 block forward (B=1): h (T, d) + params → h' (T, d)."""
+    t = 64
+
+    def fn(h, attn_norm, qkv, out_proj, ffn_norm, fc1, fc2):
+        p = {
+            "attn_norm": attn_norm,
+            "qkv": qkv,
+            "out_proj": out_proj,
+            "ffn_norm": ffn_norm,
+            "fc1": fc1,
+            "fc2": fc2,
+        }
+        return (model.block_forward(cfg, p, h[None], model._dense_linear)[0],)
+
+    d = cfg.d_model
+    spec = [
+        jax.ShapeDtypeStruct((t, d), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((3 * d, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((2 * cfg.d_ff, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, cfg.d_ff), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*spec)), t
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="A")
+    ap.add_argument("--rank", type=int, default=64)
+    args = ap.parse_args()
+    hlo_dir = os.path.join(args.out, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    manifest = {"qlinear": [], "block_fwd": []}
+
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name.strip()]
+        d = cfg.d_model
+        r = min(args.rank, d // 2)
+        # Serving shapes: the four block linears at batch-token tile T=64.
+        shapes = {
+            "qkv_proj": (d, 3 * d),
+            "out_proj": (d, d),
+            "fc1": (d, 2 * cfg.d_ff),
+            "fc2": (cfg.d_ff, d),
+        }
+        t = 64
+        for lname, (d_in, d_out) in shapes.items():
+            fname = f"qlinear_{cfg.name}_{lname}_t{t}.hlo.txt"
+            text = lower_qlinear(t, d_in, d_out, r)
+            with open(os.path.join(hlo_dir, fname), "w") as f:
+                f.write(text)
+            manifest["qlinear"].append(
+                {
+                    "file": fname,
+                    "config": cfg.name,
+                    "layer": lname,
+                    "t": t,
+                    "d_in": d_in,
+                    "d_out": d_out,
+                    "rank": r,
+                    "abits": 8,
+                }
+            )
+            print(f"wrote {fname} ({len(text)} chars)")
+        text, t_blk = lower_block_fwd(cfg)
+        fname = f"block_fwd_{cfg.name}.hlo.txt"
+        with open(os.path.join(hlo_dir, fname), "w") as f:
+            f.write(text)
+        manifest["block_fwd"].append(
+            {"file": fname, "config": cfg.name, "t": t_blk, "d_model": d, "d_ff": cfg.d_ff}
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(hlo_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['qlinear'])} qlinear, {len(manifest['block_fwd'])} block")
+
+
+if __name__ == "__main__":
+    main()

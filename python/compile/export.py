@@ -1,0 +1,94 @@
+"""ATNS tensor-file writer/reader — python twin of `rust/src/util/io.rs`.
+
+Format ("ATNS" v1, little-endian): see the rust module docs. Used to hand
+pretrained weights (and cross-language reference activations) from the
+build path to the rust runtime.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"ATNS"
+DTYPES = {np.dtype("float32"): 0, np.dtype("int8"): 1, np.dtype("uint8"): 2, np.dtype("int32"): 3}
+DTYPES_INV = {0: np.float32, 1: np.int8, 2: np.uint8, 3: np.int32}
+
+
+def save(path, tensors):
+    """tensors: dict[str, np.ndarray] (f32/i8/u8/i32)."""
+    import os
+
+    os.makedirs(os.path.dirname(str(path)) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(struct.pack("<B", DTYPES[arr.dtype]))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    """Returns dict[str, np.ndarray]."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(n):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(ndim)]
+            (tag,) = struct.unpack("<B", f.read(1))
+            dt = np.dtype(DTYPES_INV[tag])
+            count = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(count * dt.itemsize), dtype=dt).reshape(dims)
+            out[name] = arr
+    return out
+
+
+def export_model(cfg, params, path):
+    """Write model params using the rust loader's naming scheme."""
+    t = {
+        "embed": np.asarray(params["embed"]),
+        "lm_head": np.asarray(params["lm_head"]),
+        "final_norm": np.asarray(params["final_norm"]),
+    }
+    for l, p in enumerate(params["blocks"]):
+        t[f"L{l}.attn_norm"] = np.asarray(p["attn_norm"])
+        t[f"L{l}.ffn_norm"] = np.asarray(p["ffn_norm"])
+        t[f"L{l}.qkv_proj"] = np.asarray(p["qkv"])
+        t[f"L{l}.out_proj"] = np.asarray(p["out_proj"])
+        t[f"L{l}.fc1"] = np.asarray(p["fc1"])
+        t[f"L{l}.fc2"] = np.asarray(p["fc2"])
+    save(path, t)
+
+
+def config_json(cfg):
+    import json
+
+    return json.dumps(
+        {
+            "name": cfg.name,
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "rope_base": cfg.rope_base,
+            "norm_eps": cfg.norm_eps,
+            "outlier_frac": cfg.outlier_frac,
+            "outlier_gain": cfg.outlier_gain,
+        },
+        indent=2,
+    )

@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These define the semantics contract three implementations must share:
+  1. this reference (tested against hand-computed cases),
+  2. the Pallas kernel in `aser_matmul.py` (tested against 1 by pytest),
+  3. the rust serving hot path `model::linear::forward_quant_token`
+     (tested against exported vectors in rust integration tests).
+
+Conventions match the paper + rust side:
+  - weights W: (d_out, d_in), per-output-channel symmetric int grid
+  - activations X: (T, d_in), per-token symmetric int grid
+  - smoothing m: (d_in,) divisor on activations (W was pre-multiplied)
+  - low-rank: y += (x_s @ L_Bᵀ) @ L_Aᵀ on the *unquantized* smoothed acts
+"""
+
+import jax.numpy as jnp
+
+
+def qmax_for(bits: int) -> float:
+    """Symmetric grid max: int8 -> 127, int4 -> 7."""
+    return float(2 ** (bits - 1) - 1)
+
+
+def quant_weight_per_channel(w, bits: int):
+    """RTN per-output-channel symmetric quantization.
+
+    Returns (codes int8 (d_out, d_in), scales f32 (d_out,)).
+    """
+    qmax = qmax_for(bits)
+    amax = jnp.max(jnp.abs(w), axis=1)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0)
+    codes = jnp.clip(jnp.round(w / scales[:, None]), -qmax, qmax).astype(jnp.int8)
+    return codes, scales.astype(jnp.float32)
+
+
+def quant_act_per_token(x, bits: int):
+    """Per-token symmetric quantization.
+
+    Returns (codes int8 (T, d), scales f32 (T,)).
+    """
+    qmax = qmax_for(bits)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0)
+    codes = jnp.clip(jnp.round(x / scales[:, None]), -qmax, qmax).astype(jnp.int8)
+    return codes, scales.astype(jnp.float32)
+
+
+def fake_quant_act(x, bits: int):
+    codes, scales = quant_act_per_token(x, bits)
+    return codes.astype(jnp.float32) * scales[:, None]
+
+
+def pack_int4(codes):
+    """Pack int8 codes in [-8, 7] two per byte, low nibble first.
+
+    codes: (d_out, d_in) with d_in even -> (d_out, d_in // 2) uint8.
+    """
+    lo = codes[:, 0::2].astype(jnp.uint8) & 0x0F
+    hi = codes[:, 1::2].astype(jnp.uint8) & 0x0F
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed, d_in: int):
+    """Inverse of pack_int4, sign-extending 4-bit two's complement."""
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    lo = ((lo ^ 8) - 8).astype(jnp.int8)
+    hi = ((hi ^ 8) - 8).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    return out[:, :d_in]
+
+
+def qlinear_ref(x, w_codes, w_scales, abits: int, m=None, la=None, lb=None):
+    """Reference quantized linear forward.
+
+    x: (T, d_in) f32; w_codes: (d_out, d_in) int8; w_scales: (d_out,).
+    abits == 16 disables activation quantization.
+    Returns (T, d_out) f32.
+    """
+    xs = x / m[None, :] if m is not None else x
+    if abits == 16:
+        y = xs @ (w_codes.astype(jnp.float32) * w_scales[:, None]).T
+    else:
+        xc, xscale = quant_act_per_token(xs, abits)
+        acc = xc.astype(jnp.float32) @ w_codes.astype(jnp.float32).T
+        y = acc * xscale[:, None] * w_scales[None, :]
+    if la is not None and lb is not None:
+        y = y + (xs @ lb.T) @ la.T
+    return y
+
+
+def dense_ref(x, w):
+    """fp32 reference: y = x Wᵀ."""
+    return x @ w.T

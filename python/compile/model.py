@@ -1,0 +1,212 @@
+"""L2: the JAX transformer — build-time twin of `rust/src/model/gpt.rs`.
+
+Must match the rust forward bit-for-bit up to f32 rounding:
+RMSNorm(eps) → fused qkv → rope (half-split) → causal MHSA → out_proj →
+residual; RMSNorm → fused fc1 (gate‖up) → SwiGLU → fc2 → residual;
+final RMSNorm → lm_head. The cross-language contract is pinned by
+`tests/test_model.py` (shapes/causality) and by the rust integration test
+over exported reference logits (`artifacts/models/<name>/ref_logits.atns`).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aser_matmul, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    rope_base: float = 10_000.0
+    norm_eps: float = 1e-5
+    outlier_frac: float = 0.01
+    outlier_gain: float = 25.0
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+# Mirror of rust ModelConfig::by_name (keep in sync — checked by the
+# config.json the exporter writes).
+CONFIGS = {
+    "A": Config("A", 512, 256, 8, 8, 512, 256),
+    "B": Config("B", 512, 320, 6, 8, 640, 256, outlier_frac=0.015, outlier_gain=45.0),
+    "C": Config("C", 512, 512, 8, 8, 1024, 256, outlier_gain=30.0),
+    "D": Config("D", 512, 384, 7, 8, 768, 256, outlier_gain=18.0),
+    "E": Config("E", 512, 448, 6, 8, 896, 256, outlier_frac=0.012, outlier_gain=35.0),
+    "F": Config("F", 512, 512, 7, 16, 1024, 256, outlier_frac=0.012, outlier_gain=40.0),
+    "micro": Config("micro", 128, 64, 2, 4, 128, 64),
+}
+
+
+def init_params(cfg: Config, key):
+    """GPT-2-style init matching rust `synthetic_model` scale choices."""
+    std = 0.02
+    resid_std = std / (2.0 * cfg.n_layers) ** 0.5
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * std,
+        "lm_head": jax.random.normal(keys[1], (cfg.vocab_size, cfg.d_model)) * std,
+        "final_norm": jnp.ones(cfg.d_model),
+        "blocks": [],
+    }
+    for l in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + l], 4)
+        params["blocks"].append(
+            {
+                "attn_norm": jnp.ones(cfg.d_model),
+                "qkv": jax.random.normal(ks[0], (3 * cfg.d_model, cfg.d_model)) * std,
+                "out_proj": jax.random.normal(ks[1], (cfg.d_model, cfg.d_model)) * resid_std,
+                "ffn_norm": jnp.ones(cfg.d_model),
+                "fc1": jax.random.normal(ks[2], (2 * cfg.d_ff, cfg.d_model)) * std,
+                "fc2": jax.random.normal(ks[3], (cfg.d_model, cfg.d_ff)) * resid_std,
+            }
+        )
+    return params
+
+
+def rmsnorm(x, gain, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope(x, cfg: Config):
+    """Half-split rotary over (B, T, nh, hd) — matches rust rope_inplace."""
+    b, t, nh, hd = x.shape
+    half = hd // 2
+    pos = jnp.arange(t)[:, None]
+    freq = cfg.rope_base ** (-2.0 * jnp.arange(half) / hd)[None, :]
+    angle = pos * freq  # (T, half)
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    a, bb = x[..., :half], x[..., half:]
+    sin = sin[None, :, None, :]
+    cos = cos[None, :, None, :]
+    return jnp.concatenate([a * cos - bb * sin, a * sin + bb * cos], axis=-1)
+
+
+def block_forward(cfg: Config, p, h, linear_fn):
+    """One transformer block. `linear_fn(name, params_entry, x2d) -> y2d`
+    lets the quantized variant reroute the four linears through kernels."""
+    b, t, d = h.shape
+    x = rmsnorm(h, p["attn_norm"], cfg.norm_eps)
+    qkv = linear_fn("qkv_proj", p["qkv"], x.reshape(b * t, d)).reshape(b, t, 3 * d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = rope(q.reshape(b, t, cfg.n_heads, cfg.head_dim), cfg)
+    k = rope(k.reshape(b, t, cfg.n_heads, cfg.head_dim), cfg)
+    v = v.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    scale = 1.0 / cfg.head_dim**0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, t, d)
+    h = h + linear_fn("out_proj", p["out_proj"], ctx.reshape(b * t, d)).reshape(b, t, d)
+
+    x2 = rmsnorm(h, p["ffn_norm"], cfg.norm_eps)
+    gu = linear_fn("fc1", p["fc1"], x2.reshape(b * t, d)).reshape(b, t, 2 * cfg.d_ff)
+    gate, up = gu[..., : cfg.d_ff], gu[..., cfg.d_ff :]
+    act = jax.nn.silu(gate) * up
+    h = h + linear_fn("fc2", p["fc2"], act.reshape(b * t, cfg.d_ff)).reshape(b, t, d)
+    return h
+
+
+def _dense_linear(name, w, x):
+    return x @ w.T
+
+
+def forward(cfg: Config, params, tokens, linear_fn=_dense_linear):
+    """tokens: (B, T) int32 → logits (B, T, vocab)."""
+    h = params["embed"][tokens]
+    for p in params["blocks"]:
+        h = block_forward(cfg, p, h, linear_fn)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h @ params["lm_head"].T
+
+
+def loss_fn(cfg: Config, params, batch):
+    """Next-token cross-entropy; batch: (B, T+1)."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# -- quantized forward (serving semantics, used by AOT) ---------------------
+
+
+def make_quantized_linear_fn(qparams, abits=8):
+    """qparams: {layer_key: dict(w_packed, w_scales, m, la, lb)} — reroutes
+    the four block linears through the fused Pallas kernel."""
+    counter = {"layer": 0, "seen": {}}
+
+    def linear_fn(name, w, x):
+        # Track which block we're in by counting qkv_proj visits.
+        if name == "qkv_proj":
+            counter["layer"] = counter["seen"].setdefault(id(w), len(counter["seen"]))
+        key = f"L{counter['layer']}.{name}"
+        qp = qparams.get(key)
+        if qp is None:
+            return x @ w.T
+        return aser_matmul.aser_qlinear(
+            x,
+            qp["m"],
+            qp["w_packed"],
+            qp["w_scales"],
+            qp["la"],
+            qp["lb"],
+            abits=abits,
+            block_t=min(64, x.shape[0]),
+        )
+
+    return linear_fn
+
+
+def quantize_params_rtn_int4(cfg: Config, params, rank=16):
+    """Build-time helper: naive RTN-int4 + zero low-rank factors for every
+    block linear (the AOT demo artifact; the *real* factors come from the
+    rust ASER pipeline — this just fixes shapes for the compiled kernel)."""
+    qparams = {}
+    for l, p in enumerate(params["blocks"]):
+        for name, w in [
+            ("qkv_proj", p["qkv"]),
+            ("out_proj", p["out_proj"]),
+            ("fc1", p["fc1"]),
+            ("fc2", p["fc2"]),
+        ]:
+            packed, scales = aser_matmul.quantize_weights_int4(w)
+            d_out, d_in = w.shape
+            qparams[f"L{l}.{name}"] = {
+                "w_packed": packed,
+                "w_scales": scales,
+                "m": jnp.ones(d_in),
+                "la": jnp.zeros((d_out, rank)),
+                "lb": jnp.zeros((rank, d_in)),
+            }
+    return qparams
+
+
+def fake_quant_forward(cfg: Config, params, tokens, wbits=4, abits=8):
+    """W-int/A-int fake-quant forward using the jnp reference (no pallas) —
+    the cheap path pretraining uses to sanity-check quantization damage."""
+
+    def linear_fn(name, w, x):
+        codes, scales = ref.quant_weight_per_channel(w, wbits)
+        return ref.qlinear_ref(x, codes, scales, abits)
+
+    return forward(cfg, params, tokens, linear_fn)
+
+
+jit_loss_grad = functools.partial(jax.jit, static_argnums=0)(
+    lambda cfg, params, batch: jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+)

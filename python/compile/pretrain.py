@@ -1,0 +1,177 @@
+"""Pretrain the tiny evaluation models on the synthetic corpus.
+
+Build-time only (`make artifacts`). Pipeline per model config:
+  1. read the rust-generated training stream
+     (artifacts/corpus/train_v{vocab}.bin — raw little-endian u32 tokens;
+     `repro gen-corpus` writes it, keeping the grammar single-sourced in
+     rust),
+  2. train with hand-rolled Adam (optax is not in the offline env),
+  3. inject function-preserving outlier channels (the activation-outlier
+     phenomenon ASER exploits; exact at fp32, see DESIGN.md §3),
+  4. export weights.atns + config.json + ref_logits.atns (cross-language
+     check consumed by rust integration tests).
+
+Usage: python -m compile.pretrain --models A,B --steps 300 --out ../artifacts
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import export, model
+from .model import CONFIGS
+
+
+def load_stream(path):
+    return np.fromfile(path, dtype=np.uint32).astype(np.int32)
+
+
+def sample_batch(rng, stream, batch, seq):
+    starts = rng.integers(0, len(stream) - seq - 1, size=batch)
+    return jnp.asarray(np.stack([stream[s : s + seq + 1] for s in starts]))
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree.map(
+        lambda p, mi, vi: p - lr * (mi * mhat_scale) / (jnp.sqrt(vi * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, total, peak):
+    warmup = max(10, total // 20)
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return peak * 0.5 * (1 + np.cos(np.pi * frac))
+
+
+def inject_outliers(cfg, params, seed):
+    """Post-hoc variant: boost RMSNorm gains and divide the consuming
+    linear's columns — function-preserving at fp32. NOTE: this leaves
+    X̄·W̄ invariant, so ASER's joint outlier criterion cannot see these
+    channels; prefer `seed_outliers_at_init` + training (below), which
+    grows *bona fide* outliers the way real LLMs do."""
+    rng = np.random.default_rng(seed)
+    d = cfg.d_model
+    n_out = max(1, round(d * cfg.outlier_frac))
+    for p in params["blocks"]:
+        for norm_key, lin_key in [("attn_norm", "qkv"), ("ffn_norm", "fc1")]:
+            chans = rng.choice(d, size=n_out, replace=False)
+            gains = cfg.outlier_gain * np.exp(rng.normal(0, 0.4, size=n_out))
+            norm = np.asarray(p[norm_key]).copy()
+            w = np.asarray(p[lin_key]).copy()
+            for c, g in zip(chans, gains):
+                norm[c] *= g
+                w[:, c] /= g
+            p[norm_key] = jnp.asarray(norm)
+            p[lin_key] = jnp.asarray(w)
+    return params
+
+
+def seed_outliers_at_init(cfg, params, seed):
+    """Boost ~outlier_frac of RMSNorm gains BEFORE training. Training then
+    adapts the consuming weights around the hot channels, so the final model
+    carries genuine activation outliers whose weight columns are NOT the
+    exact inverse of the gain — X̄ and X̄·W̄ both expose them, matching the
+    phenomenology the paper exploits (its Fig. 4)."""
+    rng = np.random.default_rng(seed)
+    d = cfg.d_model
+    n_out = max(1, round(d * cfg.outlier_frac))
+    for p in params["blocks"]:
+        for norm_key in ["attn_norm", "ffn_norm"]:
+            chans = rng.choice(d, size=n_out, replace=False)
+            gains = cfg.outlier_gain * np.exp(rng.normal(0, 0.4, size=n_out))
+            norm = np.asarray(p[norm_key]).copy()
+            for c, g in zip(chans, gains):
+                norm[c] *= g
+            p[norm_key] = jnp.asarray(norm)
+    return params
+
+
+def train_model(name, stream, steps, batch, seq, lr, seed, log_every=50):
+    cfg = CONFIGS[name]
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    params = seed_outliers_at_init(cfg, params, seed + 3)
+    state = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+    seq = min(seq, cfg.max_seq - 1)
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        b = sample_batch(rng, stream, batch, seq)
+        loss, grads = model.jit_loss_grad(cfg, params, b)
+        params, state = adam_step(params, grads, state, lr_schedule(step, steps, lr))
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(
+                f"[{name}] step {step:4d}  loss {loss:.4f}  "
+                f"({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    return cfg, params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="A,B,C,D,E,F")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--steps-large", type=int, default=0, help="override for C/F (0 = same)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    for name in args.models.split(","):
+        name = name.strip()
+        cfg = CONFIGS[name]
+        corpus_path = os.path.join(args.out, "corpus", f"train_v{cfg.vocab_size}.bin")
+        stream = load_stream(corpus_path)
+        print(f"[{name}] corpus {len(stream)} tokens, model {cfg.d_model}d×{cfg.n_layers}L")
+        steps = args.steps
+        if args.steps_large and cfg.d_model >= 448:
+            steps = args.steps_large
+        cfg, params, losses = train_model(
+            name, stream, steps, args.batch, args.seq, args.lr, args.seed
+        )
+
+        mdir = os.path.join(args.out, "models", name)
+        os.makedirs(mdir, exist_ok=True)
+        export.export_model(cfg, params, os.path.join(mdir, "weights.atns"))
+        with open(os.path.join(mdir, "config.json"), "w") as f:
+            f.write(export.config_json(cfg))
+        # Cross-language reference: logits for a fixed token sequence.
+        ref_tokens = np.arange(1, 17, dtype=np.int32) % cfg.vocab_size
+        logits = model.forward(cfg, params, jnp.asarray(ref_tokens)[None, :])[0]
+        export.save(
+            os.path.join(mdir, "ref_logits.atns"),
+            {
+                "tokens": ref_tokens.astype(np.int32),
+                "logits": np.asarray(logits, dtype=np.float32),
+                "final_loss": np.asarray(losses[-10:], dtype=np.float32),
+            },
+        )
+        print(f"[{name}] exported to {mdir} (final loss {np.mean(losses[-10:]):.4f})")
+
+
+if __name__ == "__main__":
+    main()

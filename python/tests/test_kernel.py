@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+The CORE correctness signal for the compiled hot path. Hypothesis sweeps
+shapes / bit-widths / ranks; fixed cases pin hand-computed numbers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aser_matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# -- reference self-checks ---------------------------------------------------
+
+
+class TestReference:
+    def test_weight_quant_hand_case(self):
+        w = jnp.array([[1.0, -2.0, 7.0], [0.5, 0.25, -0.5]])
+        codes, scales = ref.quant_weight_per_channel(w, 4)
+        assert scales[0] == pytest.approx(1.0)  # amax 7 / qmax 7
+        np.testing.assert_array_equal(np.asarray(codes[0]), [1, -2, 7])
+        assert scales[1] == pytest.approx(0.5 / 7)
+
+    def test_act_quant_bound(self):
+        x = rand(0, 16, 32, scale=3.0)
+        codes, scales = ref.quant_act_per_token(x, 8)
+        back = codes.astype(jnp.float32) * scales[:, None]
+        assert jnp.max(jnp.abs(back - x)) <= 0.5 * jnp.max(scales) + 1e-6
+        assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= 127
+
+    def test_pack_unpack_roundtrip(self):
+        codes = jnp.array([[-8, -1, 0, 7], [3, -5, 2, 1]], dtype=jnp.int8)
+        packed = ref.pack_int4(codes)
+        assert packed.shape == (2, 2)
+        back = ref.unpack_int4(packed, 4)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+    def test_qlinear_ref_a16_equals_dequant_matmul(self):
+        w = rand(1, 8, 16, scale=0.1)
+        x = rand(2, 4, 16)
+        codes, scales = ref.quant_weight_per_channel(w, 4)
+        y = ref.qlinear_ref(x, codes, scales, abits=16)
+        wq = codes.astype(jnp.float32) * scales[:, None]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ wq.T), rtol=1e-5, atol=1e-5)
+
+    def test_smoothing_migrates(self):
+        # (W·diag(m)) with x/m reproduces Wx when no quantization.
+        w = rand(3, 8, 16, scale=0.1)
+        x = rand(4, 4, 16)
+        m = jnp.abs(rand(5, 16)) + 0.5
+        ws = w * m[None, :]
+        codes, scales = ref.quant_weight_per_channel(ws, 8)
+        y = ref.qlinear_ref(x, codes, scales, abits=16, m=m)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T), rtol=5e-2, atol=5e-3)
+
+
+# -- pallas kernel vs reference ----------------------------------------------
+
+
+def make_inputs(key, t, d_in, d_out, r, w_scale=0.1):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    x = jax.random.normal(ks[0], (t, d_in))
+    w = jax.random.normal(ks[1], (d_out, d_in)) * w_scale
+    m = jnp.abs(jax.random.normal(ks[2], (d_in,))) + 0.5
+    la = jax.random.normal(ks[3], (d_out, r)) * 0.05
+    lb = jax.random.normal(ks[4], (r, d_in)) * 0.05
+    packed, scales = aser_matmul.quantize_weights_int4(w)
+    codes = ref.unpack_int4(packed, d_in)
+    return x, m, packed, codes, scales, la, lb
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("abits", [4, 6, 8])
+    def test_matches_reference(self, abits):
+        x, m, packed, codes, scales, la, lb = make_inputs(10, 64, 128, 128, 16)
+        got = aser_matmul.aser_qlinear(x, m, packed, scales, la, lb, abits=abits)
+        want = ref.qlinear_ref(x, codes, scales, abits, m=m, la=la, lb=lb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_grid_tiling_invariance(self):
+        # Different block sizes must not change numerics.
+        x, m, packed, codes, scales, la, lb = make_inputs(11, 128, 64, 256, 8)
+        a = aser_matmul.aser_qlinear(x, m, packed, scales, la, lb, block_t=32, block_o=64)
+        b = aser_matmul.aser_qlinear(x, m, packed, scales, la, lb, block_t=128, block_o=256)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+    def test_zero_lowrank_is_pure_quant(self):
+        x, m, packed, codes, scales, la, lb = make_inputs(12, 64, 64, 64, 4)
+        la = jnp.zeros_like(la)
+        lb = jnp.zeros_like(lb)
+        got = aser_matmul.aser_qlinear(x, m, packed, scales, la, lb)
+        want = ref.qlinear_ref(x, codes, scales, 8, m=m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_outlier_token_survives(self):
+        # A token with a huge outlier channel must not produce NaN/Inf.
+        x, m, packed, codes, scales, la, lb = make_inputs(13, 64, 64, 64, 4)
+        x = x.at[3, 7].set(1e4)
+        got = aser_matmul.aser_qlinear(x, m, packed, scales, la, lb)
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t_blocks=st.integers(1, 3),
+        d_in_h=st.sampled_from([32, 64, 96]),
+        d_out_b=st.integers(1, 3),
+        r=st.sampled_from([1, 4, 16]),
+        abits=st.sampled_from([4, 6, 8]),
+        key=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, t_blocks, d_in_h, d_out_b, r, abits, key):
+        t = 16 * t_blocks
+        d_out = 32 * d_out_b
+        x, m, packed, codes, scales, la, lb = make_inputs(key, t, d_in_h, d_out, r)
+        got = aser_matmul.aser_qlinear(
+            x, m, packed, scales, la, lb, abits=abits, block_t=16, block_o=32
+        )
+        want = ref.qlinear_ref(x, codes, scales, abits, m=m, la=la, lb=lb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+class TestKernelResourceModel:
+    def test_vmem_under_budget(self):
+        # Default serving blocks must fit TPU VMEM (~16 MiB).
+        assert aser_matmul.vmem_bytes(64, 128, 512, 64) < 16 * 2**20
+        assert aser_matmul.vmem_bytes(64, 128, 1024, 64) < 16 * 2**20
+
+    def test_mxu_estimate_monotone(self):
+        # Bigger aligned blocks → better MXU utilization.
+        small = aser_matmul.mxu_utilization_estimate(32, 32, 256, 64)
+        big = aser_matmul.mxu_utilization_estimate(128, 128, 256, 64)
+        assert big > small
+        assert 0.0 < big <= 1.0

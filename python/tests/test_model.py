@@ -1,0 +1,141 @@
+"""L2 correctness: the JAX model (shapes, causality, trainability,
+quantized-forward plumbing) and the ATNS exporter round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import export, model, pretrain
+from compile.model import CONFIGS
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["micro"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+class TestForward:
+    def test_shapes(self, params):
+        tokens = jnp.zeros((2, 8), dtype=jnp.int32)
+        logits = model.forward(CFG, params, tokens)
+        assert logits.shape == (2, 8, CFG.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_causality(self, params):
+        t1 = jnp.array([[1, 2, 3, 4, 5]], dtype=jnp.int32)
+        t2 = jnp.array([[1, 2, 3, 9, 9]], dtype=jnp.int32)
+        l1 = model.forward(CFG, params, t1)
+        l2 = model.forward(CFG, params, t2)
+        np.testing.assert_allclose(
+            np.asarray(l1[0, :3]), np.asarray(l2[0, :3]), rtol=1e-5, atol=1e-5
+        )
+        assert not np.allclose(np.asarray(l1[0, 4]), np.asarray(l2[0, 4]))
+
+    def test_rope_position_dependence(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 16))
+        y = model.rope(x, CFG)
+        assert y.shape == x.shape
+        # norms preserved per position/head
+        nx = jnp.linalg.norm(x, axis=-1)
+        ny = jnp.linalg.norm(y, axis=-1)
+        np.testing.assert_allclose(np.asarray(nx), np.asarray(ny), rtol=1e-5)
+        # position 0 unchanged
+        np.testing.assert_allclose(np.asarray(x[:, 0]), np.asarray(y[:, 0]), atol=1e-6)
+
+    def test_loss_decreases_in_tiny_training(self, params):
+        # 30 Adam steps on a repetitive stream must reduce loss.
+        stream = np.tile(np.arange(20, dtype=np.int32), 200)
+        rng = np.random.default_rng(0)
+        p = params
+        state = pretrain.adam_init(p)
+        first = last = None
+        for step in range(30):
+            b = pretrain.sample_batch(rng, stream, 4, 16)
+            loss, grads = model.jit_loss_grad(CFG, p, b)
+            p, state = pretrain.adam_step(p, grads, state, 2e-3)
+            first = first if first is not None else float(loss)
+            last = float(loss)
+        assert last < first * 0.9, f"{first} -> {last}"
+
+
+class TestQuantizedForward:
+    def test_fake_quant_close_at_w8a8(self, params):
+        tokens = jnp.arange(12, dtype=jnp.int32)[None, :]
+        full = model.forward(CFG, params, tokens)
+        q = model.fake_quant_forward(CFG, params, tokens, wbits=8, abits=8)
+        # int8 fake-quant is a small perturbation on an untrained model
+        rel = float(jnp.linalg.norm(q - full) / jnp.linalg.norm(full))
+        assert rel < 0.15, rel
+
+    def test_w4_damages_more_than_w8(self, params):
+        tokens = jnp.arange(12, dtype=jnp.int32)[None, :]
+        full = model.forward(CFG, params, tokens)
+        e4 = float(jnp.linalg.norm(model.fake_quant_forward(CFG, params, tokens, 4, 8) - full))
+        e8 = float(jnp.linalg.norm(model.fake_quant_forward(CFG, params, tokens, 8, 8) - full))
+        assert e4 > e8
+
+    def test_pallas_qlinear_fn_matches_dense_when_lossless(self, params):
+        # With rank-0-equivalent factors and int4 this is lossy, so just
+        # exercise plumbing: shapes + finite.
+        qparams = model.quantize_params_rtn_int4(CFG, params, rank=4)
+        lin = model.make_quantized_linear_fn(qparams)
+        tokens = jnp.arange(16, dtype=jnp.int32)[None, :]
+        logits = model.forward(CFG, params, tokens, lin)
+        assert logits.shape == (1, 16, CFG.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestOutlierInjection:
+    def test_function_preserving(self, params):
+        tokens = jnp.arange(10, dtype=jnp.int32)[None, :]
+        before = model.forward(CFG, params, tokens)
+        injected = pretrain.inject_outliers(
+            CFG, jax.tree.map(lambda x: x, params), seed=3
+        )
+        after = model.forward(CFG, injected, tokens)
+        rel = float(jnp.linalg.norm(after - before) / jnp.linalg.norm(before))
+        assert rel < 1e-4, rel
+
+    def test_creates_norm_gain_outliers(self, params):
+        injected = pretrain.inject_outliers(CFG, jax.tree.map(lambda x: x, params), seed=3)
+        g = np.asarray(injected["blocks"][0]["attn_norm"])
+        assert g.max() > 5.0  # boosted channels
+        assert np.median(g) == pytest.approx(1.0)
+
+
+class TestExport:
+    def test_atns_roundtrip(self, tmp_path, params):
+        path = tmp_path / "m.atns"
+        export.export_model(CFG, params, path)
+        back = export.load(path)
+        assert back["embed"].shape == (CFG.vocab_size, CFG.d_model)
+        np.testing.assert_allclose(
+            back["L0.qkv_proj"], np.asarray(params["blocks"][0]["qkv"]), rtol=1e-6
+        )
+        assert back["L1.fc2"].shape == (CFG.d_model, CFG.d_ff)
+
+    def test_config_json_fields(self):
+        import json
+
+        j = json.loads(export.config_json(CFG))
+        assert j["d_model"] == CFG.d_model
+        assert j["name"] == "micro"
+
+    def test_mixed_dtypes(self, tmp_path):
+        path = tmp_path / "t.atns"
+        export.save(
+            path,
+            {
+                "f": np.arange(6, dtype=np.float32).reshape(2, 3),
+                "u": np.array([1, 255], dtype=np.uint8),
+                "i": np.array([-3, 4], dtype=np.int32),
+            },
+        )
+        back = export.load(path)
+        assert back["u"].dtype == np.uint8
+        np.testing.assert_array_equal(back["i"], [-3, 4])

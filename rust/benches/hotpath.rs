@@ -1,0 +1,87 @@
+//! Hot-path microbenches (§Perf): the quantized linear forward in all its
+//! variants vs the dense fp32 GEMM of the same shape, the int8 dot kernel,
+//! and SVD variants. `cargo bench --offline` (criterion is not vendored;
+//! `util::stats::bench` provides warmup + robust summaries).
+
+use aser::methods::aser::Aser;
+use aser::methods::{LayerCalib, PtqMethod, RankPolicy};
+use aser::model::linear::{dot_i8, forward_quant_token};
+use aser::model::Linear;
+use aser::quant::Precision;
+use aser::tensor::{matmul, matvec, Matrix};
+use aser::util::rng::Pcg64;
+use aser::util::stats::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let mut rng = Pcg64::seed(7);
+
+    // ---- shapes of model A's four linears ----
+    for (label, d_in, d_out) in
+        [("qkv 256->768", 256usize, 768usize), ("fc1 256->1024", 256, 1024), ("fc2 512->256", 512, 256)]
+    {
+        let w = Matrix::randn(&mut rng, d_out, d_in, 0.05);
+        let mut xs = Matrix::randn(&mut rng, 128, d_in, 1.0);
+        for r in 0..xs.rows {
+            xs[(r, 3)] *= 25.0;
+        }
+        let calib = LayerCalib::from_sample(xs);
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal()).collect();
+
+        // dense reference
+        let dense = Linear::Dense(w.clone());
+        let s_dense = bench(&format!("dense    matvec {label}"), budget, || {
+            black_box(dense.forward_token(black_box(&x)));
+        });
+
+        // RTN W4A8 (no compensation)
+        let rtn = aser::methods::rtn::Rtn.quantize_layer(&w, &calib, Precision::w4a8());
+        bench(&format!("w4a8 rtn  token  {label}"), budget, || {
+            black_box(forward_quant_token(black_box(&rtn), black_box(&x)));
+        });
+
+        // full ASER W4A8 (smooth + low-rank r=16)
+        let aser = Aser { rank: RankPolicy::Fixed(16), outlier_f: 8, ..Default::default() }
+            .quantize_layer(&w, &calib, Precision::w4a8());
+        let s_aser = bench(&format!("w4a8 aser token  {label}"), budget, || {
+            black_box(forward_quant_token(black_box(&aser), black_box(&x)));
+        });
+        println!(
+            "  -> aser/dense ratio {:.2}x (target ≤ 1.5x: compensation ~free)",
+            s_aser.median_ns / s_dense.median_ns
+        );
+    }
+
+    // ---- int8 dot kernel ----
+    let a: Vec<i8> = (0..1024).map(|i| (i % 15 - 7) as i8).collect();
+    let b: Vec<i8> = (0..1024).map(|i| (i % 13 - 6) as i8).collect();
+    let s = bench("dot_i8 1024", budget, || {
+        black_box(dot_i8(black_box(&a), black_box(&b)));
+    });
+    println!("  -> {:.2} G i8-madd/s", 1024.0 / s.median_ns);
+
+    // ---- f32 GEMM ----
+    let ma = Matrix::randn(&mut rng, 256, 256, 1.0);
+    let mb = Matrix::randn(&mut rng, 256, 256, 1.0);
+    let s = bench("gemm 256x256x256", budget, || {
+        black_box(matmul(black_box(&ma), black_box(&mb)));
+    });
+    println!("  -> {:.2} GFLOP/s", 2.0 * 256f64.powi(3) / s.median_ns);
+    let v: Vec<f32> = (0..256).map(|i| i as f32).collect();
+    bench("matvec 256x256", budget, || {
+        black_box(matvec(black_box(&ma), black_box(&v)));
+    });
+
+    // ---- SVD variants (the quantization-pipeline bottleneck) ----
+    for (m, n) in [(256usize, 256usize), (1024, 256)] {
+        let a = Matrix::randn(&mut rng, m, n, 1.0);
+        let s_j = bench(&format!("svd jacobi {m}x{n}"), Duration::from_millis(1200), || {
+            black_box(aser::linalg::svd(black_box(&a)));
+        });
+        let s_g = bench(&format!("svd gram   {m}x{n}"), Duration::from_millis(1200), || {
+            black_box(aser::linalg::svd_gram(black_box(&a)));
+        });
+        println!("  -> gram speedup {:.1}x", s_j.median_ns / s_g.median_ns);
+    }
+}

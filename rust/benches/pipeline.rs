@@ -1,0 +1,45 @@
+//! Pipeline benches (§Perf): whole-model quantization wall-time per method
+//! and calibration throughput — the offline costs the paper's "minor
+//! overhead" claim is about.
+
+use aser::calib::CalibConfig;
+use aser::coordinator::{calibrate_model, run_ptq};
+use aser::methods::{method_by_name, RankPolicy};
+use aser::model::synthetic_model;
+use aser::quant::Precision;
+use std::time::Instant;
+
+fn main() {
+    // Calibration throughput.
+    let model = synthetic_model("A", 7).unwrap();
+    let ccfg = CalibConfig { n_seqs: 16, seq_len: 48, max_sample: 192, seed: 3 };
+    let t = Instant::now();
+    let stats = calibrate_model(&model, "wiki", &ccfg).unwrap();
+    let calib_s = t.elapsed().as_secs_f64();
+    let tokens = ccfg.n_seqs * ccfg.seq_len;
+    println!(
+        "bench calibrate  model A: {tokens} tokens, {} layers  {:.2}s  ({:.0} tok/s)",
+        stats.len(),
+        calib_s,
+        tokens as f64 / calib_s
+    );
+
+    // Per-method whole-model quantization.
+    println!("\nbench quantize (model A, W4A8, rank 16):");
+    println!("{:<14} {:>9} {:>14} {:>10}", "method", "sec", "mean rel err", "+FLOPs%");
+    for m in
+        ["rtn", "llm_int", "smoothquant", "smoothquant+", "awq", "gptq", "lorc", "l2qer", "aser-er", "aser"]
+    {
+        let model = synthetic_model("A", 7).unwrap();
+        let method = method_by_name(m, RankPolicy::Fixed(16), 8).unwrap();
+        let t = Instant::now();
+        let (_, rep) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 0).unwrap();
+        println!(
+            "{:<14} {:>9.2} {:>14.5} {:>10.2}",
+            m,
+            t.elapsed().as_secs_f64(),
+            rep.mean_rel_error(),
+            rep.flops_overhead_pct()
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! Serving benches (§Perf): decode throughput + latency of the continuous
+//! batcher vs batch size and worker count, on the W4A8-quantized model.
+//! The paper's deployment claim is that the compensation branch adds
+//! negligible serving cost; compare the fp16 rows against the aser rows.
+
+use aser::calib::CalibConfig;
+use aser::coordinator::{
+    calibrate_model, run_ptq, serve_requests, synthetic_requests, BatchConfig, ServerConfig,
+};
+use aser::methods::{method_by_name, RankPolicy};
+use aser::model::synthetic_model;
+use aser::quant::Precision;
+use std::sync::Arc;
+
+fn main() {
+    let base = synthetic_model("micro", 7).unwrap();
+    let ccfg = CalibConfig { n_seqs: 6, seq_len: 24, max_sample: 96, seed: 3 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+
+    for variant in ["fp16", "aser-w4a8"] {
+        let model = if variant == "fp16" {
+            synthetic_model("micro", 7).unwrap()
+        } else {
+            let m = synthetic_model("micro", 7).unwrap();
+            let method = method_by_name("aser", RankPolicy::Fixed(8), 4).unwrap();
+            run_ptq(m, &stats, method.as_ref(), Precision::w4a8(), 0).unwrap().0
+        };
+        let model = Arc::new(model);
+        println!("\n== {variant} ==");
+        println!(
+            "{:>6} {:>8} {:>12} {:>10} {:>10} {:>10}",
+            "batch", "workers", "tok/s", "p50 ms", "p95 ms", "iters"
+        );
+        for &(batch, workers) in &[(1usize, 1usize), (4, 1), (8, 1), (8, 2), (16, 2)] {
+            let reqs = synthetic_requests(model.cfg.vocab_size, 32, 8, 12, 11).unwrap();
+            let cfg = ServerConfig {
+                workers,
+                batch: BatchConfig { max_batch: batch, ..Default::default() },
+                kv_tokens: 1 << 14,
+            };
+            let run = serve_requests(Arc::clone(&model), &cfg, reqs);
+            let iters: usize = run.per_worker.iter().map(|m| m.iterations).sum();
+            println!(
+                "{:>6} {:>8} {:>12.1} {:>10.0} {:>10.0} {:>10}",
+                batch,
+                workers,
+                run.throughput_tok_s(),
+                run.latency_percentile_ms(50.0),
+                run.latency_percentile_ms(95.0),
+                iters
+            );
+        }
+    }
+    println!("\n(throughput should rise with batch; aser ≈ fp16 = 'minor overhead')");
+}

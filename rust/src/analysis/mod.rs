@@ -1,0 +1,186 @@
+//! Quantization-error analysis — the computations behind Figures 2-4, 6-8.
+
+use crate::linalg::{effective_rank, svd, Whitener};
+use crate::methods::{LayerCalib, QuantizedLinear};
+use crate::quant::fake_quant_weight;
+use crate::tensor::{matmul, matmul_bt, Matrix};
+
+/// Fig. 2: normalized top-k singular values of E_q and E_q·X for one layer.
+/// Returns (sv of E_q, sv of E_qX), both normalized to σ₁ = 1.
+pub fn error_spectra(w: &Matrix, calib: &LayerCalib, wbits: u8, top_k: usize) -> (Vec<f32>, Vec<f32>) {
+    let e_q = w.sub(&fake_quant_weight(w, wbits));
+    let s_w = svd(&e_q).s;
+    // E_q X with X = xᵀ (d×tokens): singular values of E_q·Xᵀ equal those of
+    // (X·E_qᵀ); use the thinner orientation.
+    let ex = matmul_bt(&calib.x, &e_q); // tokens × out
+    let s_ex = svd(&ex).s;
+    (normalize_top(&s_w, top_k), normalize_top(&s_ex, top_k))
+}
+
+fn normalize_top(s: &[f32], k: usize) -> Vec<f32> {
+    let top = &s[..k.min(s.len())];
+    let s1 = top.first().copied().unwrap_or(1.0).max(1e-20);
+    top.iter().map(|&v| v / s1).collect()
+}
+
+/// Fig. 3: effective rank of E_q·X for one layer.
+pub fn error_effective_rank(w: &Matrix, calib: &LayerCalib, wbits: u8) -> f32 {
+    let e_q = w.sub(&fake_quant_weight(w, wbits));
+    let ex = matmul_bt(&calib.x, &e_q);
+    effective_rank(&svd(&ex).s)
+}
+
+/// Fig. 4: per-channel magnitudes — ‖(E_qX) restricted to channel c‖,
+/// X̄_c, W̄_c and X̄·W̄, channels sorted by X̄·W̄ descending.
+pub struct ChannelProfile {
+    pub order: Vec<usize>,
+    pub err_norm: Vec<f32>,
+    pub x_bar: Vec<f32>,
+    pub w_bar: Vec<f32>,
+    pub xw: Vec<f32>,
+}
+
+pub fn channel_profile(w: &Matrix, calib: &LayerCalib, wbits: u8, top: usize) -> ChannelProfile {
+    let d = w.cols;
+    let e_q = w.sub(&fake_quant_weight(w, wbits));
+    let x_bar = calib.x_abs_mean.clone();
+    let w_bar = w.col_abs_mean();
+    let xw: Vec<f32> = x_bar.iter().zip(&w_bar).map(|(a, b)| a * b).collect();
+    // Per-channel error contribution: ‖x_c · E_q[:,c]‖_F over the sample.
+    let mut err = vec![0f32; d];
+    for c in 0..d {
+        let ec = e_q.col(c);
+        let ec_norm: f32 = ec.iter().map(|v| v * v).sum::<f32>();
+        let xc_norm: f32 = (0..calib.x.rows).map(|r| calib.x[(r, c)].powi(2)).sum();
+        err[c] = (ec_norm * xc_norm).sqrt();
+    }
+    let mut order: Vec<usize> = (0..d).collect();
+    order.sort_by(|&a, &b| xw[b].partial_cmp(&xw[a]).unwrap());
+    order.truncate(top.min(d));
+    ChannelProfile {
+        err_norm: order.iter().map(|&c| err[c]).collect(),
+        x_bar: order.iter().map(|&c| x_bar[c]).collect(),
+        w_bar: order.iter().map(|&c| w_bar[c]).collect(),
+        xw: order.iter().map(|&c| xw[c]).collect(),
+        order,
+    }
+}
+
+/// Fig. 6: remaining integral error ‖WX − ŷ(X)‖_F after a method's
+/// compensation (RTN = no compensation baseline).
+pub fn remaining_error(w: &Matrix, q: &QuantizedLinear, calib: &LayerCalib) -> f32 {
+    crate::methods::layer_error(w, q, &calib.x)
+}
+
+/// Fig. 8: ranks selected per layer by the α threshold on the *whitened*
+/// error spectrum (the quantity ASER actually truncates).
+pub fn selected_rank(w: &Matrix, calib: &LayerCalib, wbits: u8, alpha: f64) -> usize {
+    let e_q = w.sub(&fake_quant_weight(w, wbits));
+    match Whitener::from_gram(&calib.gram, w.cols) {
+        Ok(wh) => {
+            let es = matmul(&e_q, &wh.s);
+            crate::linalg::rank_for_threshold(&svd(&es).s, alpha)
+        }
+        Err(_) => 0,
+    }
+}
+
+/// Fig. 7: activation + weight channel ranges before/after smoothing.
+pub struct SmoothingEffect {
+    pub act_before: Vec<f32>,
+    pub act_after: Vec<f32>,
+    pub w_before: Vec<f32>,
+    pub w_after: Vec<f32>,
+}
+
+pub fn smoothing_effect(
+    w: &Matrix,
+    calib: &LayerCalib,
+    aser: &crate::methods::aser::Aser,
+) -> SmoothingEffect {
+    let plan = aser.smoothing_plan(w, calib);
+    let act_before = calib.x_abs_mean.clone();
+    let act_after: Vec<f32> =
+        act_before.iter().zip(&plan.m).map(|(&x, &m)| x / m).collect();
+    let w_before = w.col_abs_max();
+    let w_after = w.scale_cols(&plan.m).col_abs_max();
+    SmoothingEffect { act_before, act_after, w_before, w_after }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::LayerCalib;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (Matrix, LayerCalib) {
+        let mut rng = Pcg64::seed(171);
+        let d = 48;
+        let w = Matrix::randn(&mut rng, d, d, 0.05);
+        let mut x = Matrix::randn(&mut rng, 160, d, 1.0);
+        for &c in &[2usize, 20] {
+            for r in 0..x.rows {
+                x[(r, c)] *= 25.0;
+            }
+        }
+        (w, LayerCalib::from_sample(x))
+    }
+
+    #[test]
+    fn spectra_show_lowrank_structure_of_eqx() {
+        let (w, calib) = setup();
+        let (s_w, s_ex) = error_spectra(&w, &calib, 4, 32);
+        assert_eq!(s_w[0], 1.0);
+        assert_eq!(s_ex[0], 1.0);
+        // The activation-weighted spectrum decays faster (Fig. 2's claim).
+        let tail_w: f32 = s_w[8..].iter().sum();
+        let tail_ex: f32 = s_ex[8..].iter().sum();
+        assert!(tail_ex < tail_w, "E_qX tail {tail_ex} !< E_q tail {tail_w}");
+    }
+
+    #[test]
+    fn effective_rank_lower_for_eqx_than_dim() {
+        let (w, calib) = setup();
+        let er = error_effective_rank(&w, &calib, 4);
+        assert!(er > 1.0 && er < 48.0, "er={er}");
+    }
+
+    #[test]
+    fn channel_profile_sorted_and_correlated() {
+        let (w, calib) = setup();
+        let p = channel_profile(&w, &calib, 4, 20);
+        assert_eq!(p.order.len(), 20);
+        for i in 1..p.xw.len() {
+            assert!(p.xw[i - 1] >= p.xw[i]);
+        }
+        // Outlier channels (planted at 2, 20) must rank at the top.
+        assert!(p.order[..4].contains(&2) || p.order[..4].contains(&20));
+        // Error concentrates in the top channels (paper's Fig. 4 claim).
+        let top_err: f32 = p.err_norm[..4].iter().sum();
+        let rest_err: f32 = p.err_norm[4..].iter().sum();
+        assert!(top_err > rest_err / 4.0);
+    }
+
+    #[test]
+    fn selected_rank_monotone_in_alpha() {
+        let (w, calib) = setup();
+        let r1 = selected_rank(&w, &calib, 4, 0.05);
+        let r2 = selected_rank(&w, &calib, 4, 0.3);
+        assert!(r1 <= r2);
+        assert!(r2 >= 1);
+    }
+
+    #[test]
+    fn smoothing_flattens_activations() {
+        let (w, calib) = setup();
+        let aser = crate::methods::aser::Aser { outlier_f: 4, ..Default::default() };
+        let e = smoothing_effect(&w, &calib, &aser);
+        let max_before = e.act_before.iter().cloned().fold(0f32, f32::max);
+        let max_after = e.act_after.iter().cloned().fold(0f32, f32::max);
+        assert!(max_after < max_before, "{max_after} !< {max_before}");
+        // Weight range grows where activations shrank.
+        let wmax_b = e.w_before.iter().cloned().fold(0f32, f32::max);
+        let wmax_a = e.w_after.iter().cloned().fold(0f32, f32::max);
+        assert!(wmax_a >= wmax_b);
+    }
+}

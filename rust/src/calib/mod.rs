@@ -1,0 +1,238 @@
+//! Calibration capture.
+//!
+//! Streams calibration batches through the fp model and accumulates, per
+//! quantizable linear layer: the f64 channel Gram `XᵀX/tokens`, per-channel
+//! mean |x| (the paper's X̄), and a bounded reservoir subsample of
+//! activation rows used for error measurement and grid searches.
+//!
+//! The paper uses 128 sequences × 2048 tokens; we default to 128 × seq_len
+//! of the tiny models.
+
+use crate::methods::LayerCalib;
+use crate::model::{ActSink, Gpt};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Running statistics for one layer.
+struct LayerAcc {
+    d: usize,
+    gram: Vec<f64>,
+    abs_sum: Vec<f64>,
+    tokens: usize,
+    /// Reservoir of activation rows (Algorithm R).
+    sample: Vec<Vec<f32>>,
+    max_sample: usize,
+    rng: Pcg64,
+}
+
+impl LayerAcc {
+    fn new(d: usize, max_sample: usize, rng: Pcg64) -> LayerAcc {
+        LayerAcc {
+            d,
+            gram: vec![0f64; d * d],
+            abs_sum: vec![0f64; d],
+            tokens: 0,
+            sample: Vec::with_capacity(max_sample),
+            max_sample,
+            rng,
+        }
+    }
+
+    fn push(&mut self, x: &Matrix) {
+        assert_eq!(x.cols, self.d);
+        let d = self.d;
+        for r in 0..x.rows {
+            let row = x.row(r);
+            // Gram upper triangle.
+            for i in 0..d {
+                let xi = row[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let g = &mut self.gram[i * d..(i + 1) * d];
+                for (j, &xj) in row.iter().enumerate().skip(i) {
+                    g[j] += xi * xj as f64;
+                }
+            }
+            for (s, &v) in self.abs_sum.iter_mut().zip(row) {
+                *s += v.abs() as f64;
+            }
+            // Reservoir sampling.
+            if self.sample.len() < self.max_sample {
+                self.sample.push(row.to_vec());
+            } else {
+                let j = self.rng.below(self.tokens + 1);
+                if j < self.max_sample {
+                    self.sample[j] = row.to_vec();
+                }
+            }
+            self.tokens += 1;
+        }
+    }
+
+    fn finish(mut self) -> LayerCalib {
+        let d = self.d;
+        let n = self.tokens.max(1) as f64;
+        for i in 0..d {
+            for j in 0..i {
+                self.gram[i * d + j] = self.gram[j * d + i];
+            }
+        }
+        for v in &mut self.gram {
+            *v /= n;
+        }
+        let x_abs_mean: Vec<f32> = self.abs_sum.iter().map(|&s| (s / n) as f32).collect();
+        let rows = self.sample.len();
+        let mut x = Matrix::zeros(rows.max(1), d);
+        for (r, row) in self.sample.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(row);
+        }
+        LayerCalib { x, gram: self.gram, x_abs_mean, tokens: self.tokens }
+    }
+}
+
+/// ActSink that feeds the accumulators.
+struct Recorder {
+    accs: BTreeMap<String, LayerAcc>,
+    max_sample: usize,
+    seed: u64,
+}
+
+impl ActSink for Recorder {
+    fn record(&mut self, key: &str, x: &Matrix) {
+        let acc = self.accs.entry(key.to_string()).or_insert_with(|| {
+            LayerAcc::new(
+                x.cols,
+                self.max_sample,
+                Pcg64::new(self.seed, crate::util::rng::hash_label(key)),
+            )
+        });
+        acc.push(x);
+    }
+}
+
+/// Options for a calibration run.
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    /// Number of calibration sequences (paper: 128).
+    pub n_seqs: usize,
+    /// Tokens per sequence.
+    pub seq_len: usize,
+    /// Activation rows kept per layer for error measurement.
+    pub max_sample: usize,
+    pub seed: u64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig { n_seqs: 128, seq_len: 64, max_sample: 512, seed: 0xCA11B }
+    }
+}
+
+/// Run calibration over token sequences. Returns per-layer statistics keyed
+/// by `layer_key(block, linear)`.
+pub fn calibrate(
+    model: &Gpt,
+    seqs: &[Vec<u32>],
+    cfg: &CalibConfig,
+) -> BTreeMap<String, LayerCalib> {
+    let mut rec = Recorder { accs: BTreeMap::new(), max_sample: cfg.max_sample, seed: cfg.seed };
+    for seq in seqs.iter().take(cfg.n_seqs) {
+        let take = seq.len().min(cfg.seq_len).min(model.cfg.max_seq);
+        model.forward_logits(&seq[..take], &mut rec);
+    }
+    rec.accs.into_iter().map(|(k, acc)| (k, acc.finish())).collect()
+}
+
+/// Build calibration sequences from a corpus profile.
+pub fn calib_sequences(
+    vocab_size: usize,
+    profile: &str,
+    cfg: &CalibConfig,
+) -> anyhow::Result<Vec<Vec<u32>>> {
+    let corpus = crate::data::corpus(vocab_size, profile)?;
+    let mut rng = Pcg64::new(cfg.seed, 0xC0DE);
+    Ok((0..cfg.n_seqs)
+        .map(|_| corpus.stream(&mut rng, cfg.seq_len))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_model;
+
+    fn small_cfg() -> CalibConfig {
+        CalibConfig { n_seqs: 4, seq_len: 16, max_sample: 32, seed: 1 }
+    }
+
+    #[test]
+    fn captures_every_linear() {
+        let model = synthetic_model("micro", 5).unwrap();
+        let seqs = calib_sequences(model.cfg.vocab_size, "wiki", &small_cfg()).unwrap();
+        let stats = calibrate(&model, &seqs, &small_cfg());
+        assert_eq!(stats.len(), model.cfg.n_layers * 4);
+        let qkv = &stats["L0.qkv_proj"];
+        assert_eq!(qkv.in_features(), model.cfg.d_model);
+        assert_eq!(qkv.tokens, 4 * 16);
+        let fc2 = &stats["L1.fc2"];
+        assert_eq!(fc2.in_features(), model.cfg.d_ff);
+    }
+
+    #[test]
+    fn gram_is_psd_diag_nonneg() {
+        let model = synthetic_model("micro", 6).unwrap();
+        let seqs = calib_sequences(model.cfg.vocab_size, "ptb", &small_cfg()).unwrap();
+        let stats = calibrate(&model, &seqs, &small_cfg());
+        for (k, c) in &stats {
+            let d = c.in_features();
+            for i in 0..d {
+                assert!(c.gram[i * d + i] >= 0.0, "{k} diag[{i}]");
+                for j in 0..d {
+                    let diff = (c.gram[i * d + j] - c.gram[j * d + i]).abs();
+                    assert!(diff < 1e-9, "{k} asym ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let mut cfg = small_cfg();
+        cfg.max_sample = 10;
+        let model = synthetic_model("micro", 7).unwrap();
+        let seqs = calib_sequences(model.cfg.vocab_size, "wiki", &cfg).unwrap();
+        let stats = calibrate(&model, &seqs, &cfg);
+        for c in stats.values() {
+            assert!(c.x.rows <= 10);
+        }
+    }
+
+    #[test]
+    fn abs_mean_consistent_with_gram_scale() {
+        // X̄_i ≤ sqrt(Gram_ii) (Jensen).
+        let model = synthetic_model("micro", 8).unwrap();
+        let seqs = calib_sequences(model.cfg.vocab_size, "wiki", &small_cfg()).unwrap();
+        let stats = calibrate(&model, &seqs, &small_cfg());
+        for (k, c) in &stats {
+            let d = c.in_features();
+            for i in 0..d {
+                let rms = c.gram[i * d + i].sqrt() as f32;
+                assert!(c.x_abs_mean[i] <= rms * 1.001, "{k} ch{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_channels_visible_in_calib() {
+        // The injected outliers must dominate X̄ at qkv inputs.
+        let model = synthetic_model("micro", 9).unwrap();
+        let seqs = calib_sequences(model.cfg.vocab_size, "wiki", &small_cfg()).unwrap();
+        let stats = calibrate(&model, &seqs, &small_cfg());
+        let xm = &stats["L0.qkv_proj"].x_abs_mean;
+        let mut sorted = xm.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!(sorted[0] > 5.0 * sorted[sorted.len() / 2]);
+    }
+}

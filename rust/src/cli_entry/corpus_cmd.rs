@@ -1,0 +1,90 @@
+//! `repro gen-corpus` — emit training streams for python pretraining.
+//!
+//! The grammar lives in rust only (single source of truth); python reads the
+//! raw little-endian u32 token stream. Training streams are a mixture of the
+//! three corpus profiles so a single pretrained model handles all three
+//! evaluation distributions.
+
+use crate::data::corpus;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+pub fn run(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "artifacts");
+    let vocabs = args
+        .str_or("vocabs", "512,128")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| anyhow::anyhow!("--vocabs: {e}"))?;
+    let tokens = args.usize_or("tokens", 240_000)?;
+    let seed = args.u64_or("seed", 0xC0FFEE)?;
+
+    for vocab in vocabs {
+        let path = Path::new(&out).join("corpus").join(format!("train_v{vocab}.bin"));
+        write_mixture(vocab, tokens, seed, &path)?;
+        println!("wrote {} ({} tokens, vocab {})", path.display(), tokens, vocab);
+    }
+    Ok(())
+}
+
+/// Equal-parts mixture of the three profiles, interleaved at document scale.
+pub fn write_mixture(vocab: usize, tokens: usize, seed: u64, path: &Path) -> Result<()> {
+    let mut stream: Vec<u32> = Vec::with_capacity(tokens);
+    let profiles = corpus::CorpusProfile::all();
+    let per = tokens.div_ceil(profiles.len());
+    let mut chunks: Vec<Vec<u32>> = Vec::new();
+    for name in &profiles {
+        let c = corpus(vocab, name)?;
+        let mut rng = Pcg64::new(seed, crate::util::rng::hash_label(name));
+        // Emit in ~1k-token documents for later shuffling.
+        let mut remaining = per;
+        while remaining > 0 {
+            let n = remaining.min(1024);
+            chunks.push(c.stream(&mut rng, n));
+            remaining -= n;
+        }
+    }
+    let mut rng = Pcg64::new(seed, 0x5EED);
+    rng.shuffle(&mut chunks);
+    for ch in chunks {
+        stream.extend(ch);
+    }
+    stream.truncate(tokens);
+
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for t in &stream {
+        f.write_all(&t.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixture_written_and_loadable() {
+        let dir = std::env::temp_dir().join("aser_corpus_cmd");
+        let path = dir.join("train_v128.bin");
+        write_mixture(128, 5000, 1, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len(), 5000 * 4);
+        let toks: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert!(toks.iter().all(|&t| (t as usize) < 128));
+        // deterministic
+        let path2 = dir.join("again.bin");
+        write_mixture(128, 5000, 1, &path2).unwrap();
+        assert_eq!(bytes, std::fs::read(&path2).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,188 @@
+//! Shared experiment context for CLI commands, tables and figures:
+//! model loading (pretrained artifacts > synthetic fallback), calibration
+//! with a disk cache, and method construction from CLI options.
+
+use crate::calib::CalibConfig;
+use crate::coordinator::{calibrate_model, CalibStats};
+use crate::methods::{method_by_name, LayerCalib, PtqMethod, RankPolicy};
+use crate::model::{load_or_synthetic, Gpt};
+use crate::tensor::Matrix;
+use crate::util::cli::Args;
+use crate::util::io::{DType, RawTensor, TensorFile};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub seed: u64,
+    pub fast: bool,
+    pub verbose: bool,
+}
+
+impl Ctx {
+    pub fn from_args(args: &Args) -> Result<Ctx> {
+        Ok(Ctx {
+            artifacts: PathBuf::from(args.str_or("artifacts", "artifacts")),
+            seed: args.u64_or("seed", 0xA5E12)?,
+            fast: args.flag("fast"),
+            verbose: args.flag("verbose"),
+        })
+    }
+
+    /// Load the model for a config name; prefers pretrained artifacts.
+    pub fn model(&self, name: &str) -> Result<Gpt> {
+        let (model, pretrained) = load_or_synthetic(name, &self.artifacts, self.seed)?;
+        if self.verbose {
+            eprintln!(
+                "[ctx] model {name}: {} ({} params)",
+                if pretrained { "pretrained artifacts" } else { "synthetic fallback" },
+                model.cfg.total_params()
+            );
+        }
+        Ok(model)
+    }
+
+    pub fn calib_config(&self) -> CalibConfig {
+        if self.fast {
+            CalibConfig { n_seqs: 16, seq_len: 48, max_sample: 192, seed: self.seed }
+        } else {
+            CalibConfig { n_seqs: 64, seq_len: 64, max_sample: 384, seed: self.seed }
+        }
+    }
+
+    /// Calibration stats with a disk cache keyed by (model, profile, cfg).
+    pub fn calib(&self, model: &Gpt, profile: &str) -> Result<CalibStats> {
+        let cfg = self.calib_config();
+        let cache = self.artifacts.join("calib").join(format!(
+            "{}_{}_{}x{}_s{}.atns",
+            model.cfg.name, profile, cfg.n_seqs, cfg.seq_len, cfg.seed
+        ));
+        if cache.exists() {
+            if let Ok(stats) = load_calib(&cache) {
+                if self.verbose {
+                    eprintln!("[ctx] calib cache hit: {}", cache.display());
+                }
+                return Ok(stats);
+            }
+        }
+        let t = std::time::Instant::now();
+        let stats = calibrate_model(model, profile, &cfg)?;
+        if self.verbose {
+            eprintln!("[ctx] calibrated {} layers in {:.1}s", stats.len(), t.elapsed().as_secs_f64());
+        }
+        save_calib(&stats, &cache)?;
+        Ok(stats)
+    }
+
+    /// Build a method from CLI options.
+    pub fn method(&self, args: &Args) -> Result<Box<dyn PtqMethod>> {
+        let name = args.str_or("method", "aser");
+        let rank = rank_policy(args)?;
+        let f = args.usize_or("outlier-f", 32)?;
+        method_by_name(&name, rank, f)
+    }
+
+    pub fn reports_dir(&self) -> PathBuf {
+        self.artifacts.join("reports")
+    }
+}
+
+pub fn rank_policy(args: &Args) -> Result<RankPolicy> {
+    if let Some(alpha) = args.get("alpha") {
+        let a: f64 = alpha.parse().map_err(|_| anyhow::anyhow!("--alpha: bad number"))?;
+        Ok(RankPolicy::Threshold(a))
+    } else {
+        Ok(RankPolicy::Fixed(args.usize_or("rank", 64)?))
+    }
+}
+
+// -- calibration (de)serialization -------------------------------------------
+
+pub fn save_calib(stats: &CalibStats, path: &Path) -> Result<()> {
+    let mut tf = TensorFile::default();
+    for (key, c) in stats {
+        let d = c.in_features();
+        tf.insert_f32(&format!("{key}/x"), vec![c.x.rows, c.x.cols], &c.x.data);
+        tf.insert_f32(&format!("{key}/x_abs_mean"), vec![d], &c.x_abs_mean);
+        // Store the f64 Gram as raw bytes (precision matters for Cholesky).
+        let mut bytes = Vec::with_capacity(d * d * 8);
+        for v in &c.gram {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        tf.tensors.insert(
+            format!("{key}/gram_f64"),
+            RawTensor { dims: vec![d * d * 8], dtype: DType::U8, bytes },
+        );
+        tf.insert_f32(&format!("{key}/tokens"), vec![1], &[c.tokens as f32]);
+    }
+    tf.save(path)
+}
+
+pub fn load_calib(path: &Path) -> Result<CalibStats> {
+    let tf = TensorFile::load(path)?;
+    let mut keys: Vec<String> = tf
+        .tensors
+        .keys()
+        .filter_map(|k| k.strip_suffix("/x").map(|s| s.to_string()))
+        .collect();
+    keys.sort();
+    let mut out = CalibStats::new();
+    for key in keys {
+        let (dims, data) = tf.get_f32(&format!("{key}/x"))?;
+        let x = Matrix::from_vec(dims[0], dims[1], data);
+        let (_, x_abs_mean) = tf.get_f32(&format!("{key}/x_abs_mean"))?;
+        let raw = tf.get(&format!("{key}/gram_f64"))?;
+        let gram: Vec<f64> = raw
+            .bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect();
+        let (_, tokens) = tf.get_f32(&format!("{key}/tokens"))?;
+        anyhow::ensure!(gram.len() == x.cols * x.cols, "gram dims for {key}");
+        out.insert(
+            key,
+            LayerCalib { x, gram, x_abs_mean, tokens: tokens[0] as usize },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_model;
+
+    #[test]
+    fn calib_cache_roundtrip() {
+        let model = synthetic_model("micro", 81).unwrap();
+        let cfg = CalibConfig { n_seqs: 3, seq_len: 12, max_sample: 16, seed: 2 };
+        let stats = calibrate_model(&model, "wiki", &cfg).unwrap();
+        let dir = std::env::temp_dir().join("aser_ctx_test");
+        let path = dir.join("c.atns");
+        save_calib(&stats, &path).unwrap();
+        let back = load_calib(&path).unwrap();
+        assert_eq!(back.len(), stats.len());
+        let a = &stats["L0.qkv_proj"];
+        let b = &back["L0.qkv_proj"];
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.gram, b.gram, "f64 gram exact roundtrip");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rank_policy_parsing() {
+        let argv: Vec<String> = ["t", "--alpha", "0.05"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &[]).unwrap();
+        match rank_policy(&args).unwrap() {
+            RankPolicy::Threshold(a) => assert_eq!(a, 0.05),
+            _ => panic!("expected threshold"),
+        }
+        let argv2: Vec<String> = ["t", "--rank", "32"].iter().map(|s| s.to_string()).collect();
+        let args2 = Args::parse(&argv2, &[]).unwrap();
+        match rank_policy(&args2).unwrap() {
+            RankPolicy::Fixed(r) => assert_eq!(r, 32),
+            _ => panic!("expected fixed"),
+        }
+    }
+}

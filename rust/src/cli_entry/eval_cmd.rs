@@ -1,0 +1,47 @@
+//! `repro eval` — perplexity + zero-shot accuracy for one
+//! (model, method, precision) combination, or `--method fp16` baseline.
+
+use super::ctx::Ctx;
+use super::harness::{evaluate_model, EvalSpec};
+use crate::coordinator::run_ptq;
+use crate::quant::Precision;
+use crate::util::cli::Args;
+use anyhow::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    let model_name = args.str_or("model", "A");
+    let method_name = args.str_or("method", "fp16");
+    let model = ctx.model(&model_name)?;
+
+    let mut spec = if ctx.fast { EvalSpec::fast(ctx.seed) } else { EvalSpec::standard(ctx.seed) };
+    spec.ppl_tokens = args.usize_or("ppl-tokens", spec.ppl_tokens)?;
+    spec.task_instances = args.usize_or("task-instances", spec.task_instances)?;
+
+    let t0 = std::time::Instant::now();
+    let (label, result) = if method_name == "fp16" {
+        ("fp16".to_string(), evaluate_model(&model, &spec)?)
+    } else {
+        let prec = Precision::parse(&args.str_or("prec", "w4a8"))?;
+        let method = ctx.method(args)?;
+        let stats = ctx.calib(&model, &args.str_or("profile", "wiki"))?;
+        let (qmodel, report) = run_ptq(model, &stats, method.as_ref(), prec, 0)?;
+        println!(
+            "[quantize] {} @ {prec}: mean rel err {:.5}, +{:.2}% FLOPs",
+            report.method,
+            report.mean_rel_error(),
+            report.flops_overhead_pct()
+        );
+        (format!("{} @ {prec}", report.method), evaluate_model(&qmodel, &spec)?)
+    };
+
+    println!("== eval: model {model_name}, {label} ({:.1}s) ==", t0.elapsed().as_secs_f64());
+    for (profile, ppl) in &result.ppl {
+        println!("  ppl[{profile}] = {ppl:.3}");
+    }
+    for (task, acc) in &result.acc {
+        println!("  acc[{task}] = {acc:.2}%");
+    }
+    println!("  avg acc = {:.2}%", result.avg_acc());
+    Ok(())
+}

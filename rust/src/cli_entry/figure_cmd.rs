@@ -1,0 +1,237 @@
+//! `repro figure --id f2..f8` — regenerate every figure of the paper.
+//!
+//! | id | paper figure | content |
+//! |----|--------------|---------|
+//! | f2 | Fig. 2 | top-k normalized singular values of E_q vs E_qX, 4 linears |
+//! | f3 | Fig. 3 | effective rank of E_qX across layers |
+//! | f4 | Fig. 4 | per-channel ‖E_qX‖, X̄, W̄, X̄·W̄ (sorted by X̄·W̄) |
+//! | f5 | Fig. 5 | PPL of W8Ax for x ∈ {16,8,6,4}, six methods (model B) |
+//! | f6 | Fig. 6 | remaining error across layers, W4A6, four methods |
+//! | f7 | Fig. 7 | activation/weight ranges before vs after smoothing |
+//! | f8 | Fig. 8 | selected rank per layer for α ∈ [0.015, 0.1] |
+
+use super::ctx::Ctx;
+use crate::analysis;
+use crate::coordinator::CalibStats;
+use crate::data::corpus;
+use crate::eval::perplexity;
+use crate::methods::{aser::Aser, method_by_name, RankPolicy};
+use crate::model::{layer_key, Gpt, LINEAR_NAMES};
+use crate::quant::Precision;
+use crate::report::Figure;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    let id = args.str_or("id", "f2");
+    let t0 = std::time::Instant::now();
+    let fig = build_figure(&ctx, &id, args)?;
+    println!("{}", fig.render());
+    fig.save(&ctx.reports_dir(), &id)?;
+    println!(
+        "[saved {}/{id}.{{txt,csv,json}} in {:.0}s]",
+        ctx.reports_dir().display(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+pub fn build_figure(ctx: &Ctx, id: &str, args: &Args) -> Result<Figure> {
+    let model_name = args.str_or("model", if id == "f5" || id == "f7" { "B" } else { "A" });
+    let model = ctx.model(&model_name)?;
+    let stats = ctx.calib(&model, "wiki")?;
+    match id {
+        "f2" => fig2(&model, &stats, args),
+        "f3" => fig3(&model, &stats),
+        "f4" => fig4(&model, &stats, args),
+        "f5" => fig5(ctx, &model_name),
+        "f6" => fig6(ctx, &model_name),
+        "f7" => fig7(&model, &stats, args),
+        "f8" => fig8(&model, &stats, args),
+        other => anyhow::bail!("unknown figure id '{other}' (f2..f8)"),
+    }
+}
+
+fn weight_of<'m>(model: &'m Gpt, l: usize, name: &str) -> &'m crate::tensor::Matrix {
+    model.get_linear(l, name).dense_weight().expect("dense model")
+}
+
+/// Fig. 2: spectra at a deep block (paper: layer 30/32 ⇒ ~0.94 depth).
+fn fig2(model: &Gpt, stats: &CalibStats, args: &Args) -> Result<Figure> {
+    let l = args.usize_or("layer", model.cfg.n_layers.saturating_sub(2))?;
+    let top_k = args.usize_or("top-k", 64)?.min(model.cfg.d_model);
+    let mut fig = Figure::new(
+        &format!("Fig.2: normalized singular values of E_q vs E_qX (block {l})"),
+        "sv index",
+        (0..top_k).map(|i| i as f64).collect(),
+    );
+    for name in LINEAR_NAMES {
+        let key = layer_key(l, name);
+        let calib = &stats[&key];
+        let (s_w, s_ex) = analysis::error_spectra(weight_of(model, l, name), calib, 4, top_k);
+        fig.add(&format!("{name} E_q"), pad(s_w, top_k));
+        fig.add(&format!("{name} E_qX"), pad(s_ex, top_k));
+    }
+    Ok(fig)
+}
+
+fn pad(v: Vec<f32>, n: usize) -> Vec<f64> {
+    let mut out: Vec<f64> = v.into_iter().map(|x| x as f64).collect();
+    out.resize(n, 0.0);
+    out
+}
+
+/// Fig. 3: effective rank of E_qX across layers, per linear.
+fn fig3(model: &Gpt, stats: &CalibStats) -> Result<Figure> {
+    let n = model.cfg.n_layers;
+    let mut fig = Figure::new(
+        "Fig.3: effective rank of E_qX across layers",
+        "layer",
+        (0..n).map(|i| i as f64).collect(),
+    );
+    for name in LINEAR_NAMES {
+        let ys: Vec<f64> = (0..n)
+            .map(|l| {
+                let key = layer_key(l, name);
+                analysis::error_effective_rank(weight_of(model, l, name), &stats[&key], 4) as f64
+            })
+            .collect();
+        fig.add(name, ys);
+    }
+    Ok(fig)
+}
+
+/// Fig. 4: channel profile of one layer.
+fn fig4(model: &Gpt, stats: &CalibStats, args: &Args) -> Result<Figure> {
+    let l = args.usize_or("layer", 0)?;
+    let name = args.str_or("linear", "qkv_proj");
+    let top = args.usize_or("top-k", 128)?;
+    let key = layer_key(l, &name);
+    let p = analysis::channel_profile(weight_of(model, l, &name), &stats[&key], 4, top);
+    let n = p.order.len();
+    let mut fig = Figure::new(
+        &format!("Fig.4: channel magnitudes sorted by X̄·W̄ ({key})"),
+        "channel rank",
+        (0..n).map(|i| i as f64).collect(),
+    );
+    fig.add("err_norm", p.err_norm.iter().map(|&x| x as f64).collect());
+    fig.add("x_bar", p.x_bar.iter().map(|&x| x as f64).collect());
+    fig.add("w_bar", p.w_bar.iter().map(|&x| x as f64).collect());
+    fig.add("xw", p.xw.iter().map(|&x| x as f64).collect());
+    Ok(fig)
+}
+
+/// Fig. 5: PPL (wiki) of W8Ax across activation bit-widths, six methods.
+fn fig5(ctx: &Ctx, model_name: &str) -> Result<Figure> {
+    let abits = [16u8, 8, 6, 4];
+    let methods = ["llm_int", "smoothquant", "lorc", "l2qer", "aser-er", "aser"];
+    let mut fig = Figure::new(
+        &format!("Fig.5: PPL of W8Ax on model {model_name}"),
+        "activation bits",
+        abits.iter().map(|&b| b as f64).collect(),
+    );
+    let ppl_tokens = if ctx.fast { 192 } else { 512 };
+    let c = corpus(ctx.model(model_name)?.cfg.vocab_size, "wiki")?;
+    let mut rng = Pcg64::new(ctx.seed ^ 0xF15, 0);
+    let stream = c.stream(&mut rng, ppl_tokens);
+    for m in methods {
+        let mut ys = Vec::new();
+        for &ab in &abits {
+            eprintln!("[f5] {m} W8A{ab} ...");
+            let model = ctx.model(model_name)?;
+            let stats = ctx.calib(&model, "wiki")?;
+            let method = method_by_name(m, RankPolicy::Fixed(16), 8)?;
+            let (qm, _) = crate::coordinator::run_ptq(
+                model,
+                &stats,
+                method.as_ref(),
+                Precision::new(8, ab),
+                0,
+            )?;
+            ys.push(perplexity(&qm, &stream, 64));
+        }
+        fig.add(m, ys);
+    }
+    Ok(fig)
+}
+
+/// Fig. 6: remaining integral error across layers (W4A6).
+fn fig6(ctx: &Ctx, model_name: &str) -> Result<Figure> {
+    let model = ctx.model(model_name)?;
+    let stats = ctx.calib(&model, "wiki")?;
+    let n = model.cfg.n_layers;
+    // x axis: the 4·n linears in block-major order (as the paper plots
+    // consecutive linear layers).
+    let mut fig = Figure::new(
+        &format!("Fig.6: remaining quantization error across layers (model {model_name}, W4A4)"),
+        "linear index (block-major)",
+        (0..4 * n).map(|i| i as f64).collect(),
+    );
+    let prec = Precision::new(4, 4);
+    for m in ["rtn", "lorc", "aser-er", "aser"] {
+        let method = method_by_name(m, RankPolicy::Fixed(16), 8)?;
+        let mut ys = Vec::new();
+        for l in 0..n {
+            for name in LINEAR_NAMES {
+                let key = layer_key(l, name);
+                let w = weight_of(&model, l, name);
+                let q = method.quantize_layer(w, &stats[&key], prec);
+                ys.push(analysis::remaining_error(w, &q, &stats[&key]) as f64);
+            }
+        }
+        fig.add(m, ys);
+    }
+    Ok(fig)
+}
+
+/// Fig. 7: activation/weight channel ranges before/after smoothing (L0).
+fn fig7(model: &Gpt, stats: &CalibStats, args: &Args) -> Result<Figure> {
+    let l = args.usize_or("layer", 0)?;
+    let key = layer_key(l, "qkv_proj");
+    let w = weight_of(model, l, "qkv_proj");
+    let aser = Aser { outlier_f: 32, ..Default::default() };
+    let e = analysis::smoothing_effect(w, &stats[&key], &aser);
+    let d = e.act_before.len();
+    // Sort channels by pre-smoothing activation magnitude for readability.
+    let mut order: Vec<usize> = (0..d).collect();
+    order.sort_by(|&a, &b| e.act_before[b].partial_cmp(&e.act_before[a]).unwrap());
+    let take: Vec<usize> = order.into_iter().take(128).collect();
+    let sel = |v: &[f32]| take.iter().map(|&i| v[i] as f64).collect::<Vec<f64>>();
+    let mut fig = Figure::new(
+        &format!("Fig.7: smoothing effect on {key} (channels sorted by X̄)"),
+        "channel rank",
+        (0..take.len()).map(|i| i as f64).collect(),
+    );
+    fig.add("act_before", sel(&e.act_before));
+    fig.add("act_after", sel(&e.act_after));
+    fig.add("w_before", sel(&e.w_before));
+    fig.add("w_after", sel(&e.w_after));
+    Ok(fig)
+}
+
+/// Fig. 8: rank selected per layer for a ladder of α values.
+fn fig8(model: &Gpt, stats: &CalibStats, args: &Args) -> Result<Figure> {
+    let alphas = args
+        .list_f64("alphas")?
+        .unwrap_or_else(|| vec![0.015, 0.03, 0.05, 0.075, 0.1]);
+    let n = model.cfg.n_layers;
+    let mut fig = Figure::new(
+        "Fig.8: selected rank per layer (whitened spectrum, by α)",
+        "linear index (block-major)",
+        (0..4 * n).map(|i| i as f64).collect(),
+    );
+    for &alpha in &alphas {
+        let mut ys = Vec::new();
+        for l in 0..n {
+            for name in LINEAR_NAMES {
+                let key = layer_key(l, name);
+                ys.push(analysis::selected_rank(weight_of(model, l, name), &stats[&key], 4, alpha)
+                    as f64);
+            }
+        }
+        fig.add(&format!("alpha={alpha}"), ys);
+    }
+    Ok(fig)
+}

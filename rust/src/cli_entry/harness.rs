@@ -1,0 +1,123 @@
+//! Evaluation harness shared by `eval`, `bench-table` and the benches:
+//! perplexity over the three corpus profiles + zero-shot task accuracy.
+
+use crate::data::corpus;
+use crate::eval::tasks::{evaluate as eval_tasks, generate};
+use crate::eval::perplexity;
+use crate::model::Gpt;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct EvalSpec {
+    pub ppl_tokens: usize,
+    pub ppl_window: usize,
+    pub task_instances: usize,
+    pub tasks: Vec<String>,
+    pub profiles: Vec<String>,
+    pub seed: u64,
+}
+
+impl EvalSpec {
+    pub fn standard(seed: u64) -> EvalSpec {
+        EvalSpec {
+            ppl_tokens: 1024,
+            ppl_window: 64,
+            task_instances: 40,
+            tasks: ["arc_e", "arc_c", "mmlu", "hella", "piqa"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            profiles: ["wiki", "c4", "ptb"].iter().map(|s| s.to_string()).collect(),
+            seed,
+        }
+    }
+
+    pub fn fast(seed: u64) -> EvalSpec {
+        EvalSpec {
+            ppl_tokens: 256,
+            ppl_window: 48,
+            task_instances: 12,
+            ..EvalSpec::standard(seed)
+        }
+    }
+
+    /// Accuracy-only spec (Tables 3/7/8 report no perplexity).
+    pub fn accuracy_only(seed: u64, tasks: &[&str]) -> EvalSpec {
+        EvalSpec {
+            ppl_tokens: 0,
+            tasks: tasks.iter().map(|s| s.to_string()).collect(),
+            profiles: vec![],
+            ..EvalSpec::standard(seed)
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalResult {
+    /// profile → perplexity
+    pub ppl: BTreeMap<String, f64>,
+    /// task → accuracy (%)
+    pub acc: BTreeMap<String, f64>,
+}
+
+impl EvalResult {
+    pub fn avg_acc(&self) -> f64 {
+        if self.acc.is_empty() {
+            return 0.0;
+        }
+        self.acc.values().sum::<f64>() / self.acc.len() as f64
+    }
+}
+
+/// Run the full evaluation of one model snapshot.
+pub fn evaluate_model(model: &Gpt, spec: &EvalSpec) -> Result<EvalResult> {
+    let mut out = EvalResult::default();
+    for profile in &spec.profiles {
+        if spec.ppl_tokens == 0 {
+            break;
+        }
+        let c = corpus(model.cfg.vocab_size, profile)?;
+        // Held-out stream: a seed disjoint from training/calibration.
+        let mut rng = Pcg64::new(spec.seed ^ 0xEEA1, crate::util::rng::hash_label(profile));
+        let stream = c.stream(&mut rng, spec.ppl_tokens);
+        out.ppl.insert(profile.clone(), perplexity(model, &stream, spec.ppl_window));
+    }
+    let c = corpus(model.cfg.vocab_size, "wiki")?;
+    for task in &spec.tasks {
+        let set = generate(&c, task, spec.task_instances, spec.seed ^ 0x7A5C)?;
+        out.acc.insert(task.clone(), eval_tasks(model, &set));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_model;
+
+    #[test]
+    fn harness_runs_end_to_end() {
+        let model = synthetic_model("micro", 91).unwrap();
+        let mut spec = EvalSpec::fast(1);
+        spec.ppl_tokens = 128;
+        spec.task_instances = 6;
+        spec.tasks = vec!["arc_e".into(), "piqa".into()];
+        let r = evaluate_model(&model, &spec).unwrap();
+        assert_eq!(r.ppl.len(), 3);
+        assert!(r.ppl.values().all(|&p| p > 1.0 && p.is_finite()));
+        assert_eq!(r.acc.len(), 2);
+        assert!(r.avg_acc() >= 0.0 && r.avg_acc() <= 100.0);
+    }
+
+    #[test]
+    fn accuracy_only_skips_ppl() {
+        let model = synthetic_model("micro", 92).unwrap();
+        let mut spec = EvalSpec::accuracy_only(1, &["arc_e"]);
+        spec.task_instances = 5;
+        let r = evaluate_model(&model, &spec).unwrap();
+        assert!(r.ppl.is_empty());
+        assert_eq!(r.acc.len(), 1);
+    }
+}

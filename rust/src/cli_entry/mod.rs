@@ -1,0 +1,61 @@
+//! CLI dispatcher for the `repro` binary.
+
+mod corpus_cmd;
+pub mod ctx;
+pub mod harness;
+mod eval_cmd;
+pub mod figure_cmd;
+mod pipeline_cmd;
+mod runtime_cmd;
+mod serve_cmd;
+pub mod table_cmd;
+
+use crate::util::cli::Args;
+use anyhow::Result;
+
+pub const GLOBAL_FLAGS: [&str; 3] = ["help", "verbose", "fast"];
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &GLOBAL_FLAGS)?;
+    match args.cmd.as_str() {
+        "gen-corpus" => corpus_cmd::run(&args),
+        "calibrate" => pipeline_cmd::run_calibrate(&args),
+        "quantize" => pipeline_cmd::run_quantize(&args),
+        "eval" => eval_cmd::run(&args),
+        "serve" => serve_cmd::run(&args),
+        "bench-table" => table_cmd::run(&args),
+        "figure" => figure_cmd::run(&args),
+        "runtime-check" => runtime_cmd::run(&args),
+        "" | "help" => {
+            println!("{}", help());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try 'repro help')"),
+    }
+}
+
+fn help() -> String {
+    "\
+repro — ASER (AAAI'25) reproduction: quantization pipeline + serving runtime
+
+usage: repro <command> [options]
+
+commands:
+  gen-corpus     write synthetic training/eval token streams
+                   --out artifacts --vocabs 512,128 --tokens 200000
+  calibrate      capture per-layer calibration stats for a model
+                   --model A --profile wiki --n-seqs 128 --seq-len 64
+  quantize       quantize a model with a PTQ method
+                   --model A --method aser --prec w4a8 --rank 64 --outlier-f 32
+  eval           perplexity + zero-shot accuracy
+                   --model A --method aser --prec w4a8 [--ppl-tokens N]
+  serve          dynamic-batching server demo over a quantized model
+                   --model A --method aser --requests 32 --batch 8
+  bench-table    regenerate a paper table: --id t1|t2|...|t8
+  figure         regenerate a paper figure: --id f2|...|f8
+  runtime-check  load + run the AOT HLO artifacts through PJRT
+
+global flags: --verbose, --fast (smaller eval workloads), --seed N
+"
+    .to_string()
+}

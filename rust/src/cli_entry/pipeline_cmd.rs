@@ -1,0 +1,66 @@
+//! `repro calibrate` and `repro quantize` — the PTQ pipeline entry points.
+
+use super::ctx::Ctx;
+use crate::coordinator::run_ptq;
+use crate::quant::Precision;
+use crate::util::cli::Args;
+use anyhow::Result;
+
+pub fn run_calibrate(args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    let model_name = args.str_or("model", "A");
+    let profile = args.str_or("profile", "wiki");
+    let model = ctx.model(&model_name)?;
+    let t = std::time::Instant::now();
+    let stats = ctx.calib(&model, &profile)?;
+    println!(
+        "calibrated model {model_name} on '{profile}': {} layers, {} tokens/layer, {:.1}s",
+        stats.len(),
+        stats.values().next().map(|c| c.tokens).unwrap_or(0),
+        t.elapsed().as_secs_f64()
+    );
+    // Top outlier channels of the first layer — quick sanity signal.
+    if let Some(c) = stats.get("L0.qkv_proj") {
+        let mut idx: Vec<usize> = (0..c.x_abs_mean.len()).collect();
+        idx.sort_by(|&a, &b| c.x_abs_mean[b].partial_cmp(&c.x_abs_mean[a]).unwrap());
+        let top: Vec<String> =
+            idx[..8.min(idx.len())].iter().map(|&i| format!("{i}:{:.2}", c.x_abs_mean[i])).collect();
+        println!("L0.qkv_proj top |X̄| channels: {}", top.join(" "));
+    }
+    Ok(())
+}
+
+pub fn run_quantize(args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    let model_name = args.str_or("model", "A");
+    let profile = args.str_or("profile", "wiki");
+    let prec = Precision::parse(&args.str_or("prec", "w4a8"))?;
+    let method = ctx.method(args)?;
+    let threads = args.usize_or("threads", 0)?;
+
+    let model = ctx.model(&model_name)?;
+    let stats = ctx.calib(&model, &profile)?;
+    let (qmodel, report) = run_ptq(model, &stats, method.as_ref(), prec, threads)?;
+
+    println!(
+        "quantized model {model_name} with {} @ {prec}: mean rel error {:.5}, mean rank {:.1}, +params {} (+{:.2}% FLOPs), {:.1}s",
+        report.method,
+        report.mean_rel_error(),
+        report.mean_rank(),
+        report.total_extra_params,
+        report.flops_overhead_pct(),
+        report.wall_ms / 1e3,
+    );
+    if ctx.verbose {
+        for l in &report.layers {
+            println!(
+                "  {:<14} rel_err {:.5}  rank {:<4} {:.0}ms",
+                l.key, l.rel_error, l.rank, l.millis
+            );
+        }
+    }
+    // Smoke: quantized model must still generate.
+    let out = qmodel.generate_greedy(&[3, 9, 4], 8);
+    println!("sample generation: {:?}", out);
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! `repro runtime-check` — proves the AOT bridge: load every HLO artifact
+//! through PJRT, execute the fused qlinear kernel with real ASER factors,
+//! and cross-check numerics against the rust hot path.
+
+use super::ctx::Ctx;
+use crate::methods::{aser::Aser, PtqMethod, RankPolicy};
+use crate::quant::{pack_int4, Precision};
+use crate::runtime::{qlinear_reference, Manifest, Runtime};
+use crate::tensor::Matrix;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    let hlo_dir = ctx.artifacts.join("hlo");
+    let manifest = Manifest::load(&hlo_dir)
+        .context("no artifacts/hlo/manifest.json — run `make artifacts` first")?;
+    let mut rt = Runtime::new(&hlo_dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let mut checked = 0;
+    for art in &manifest.qlinear {
+        // Build genuine ASER factors for this shape from synthetic calib.
+        let mut rng = Pcg64::new(ctx.seed, crate::util::rng::hash_label(&art.file));
+        let w = Matrix::randn(&mut rng, art.d_out, art.d_in, 0.05);
+        let mut xc = Matrix::randn(&mut rng, 256, art.d_in, 1.0);
+        for r in 0..xc.rows {
+            xc[(r, 1)] *= 20.0;
+        }
+        let calib = crate::methods::LayerCalib::from_sample(xc);
+        let aser = Aser {
+            rank: RankPolicy::Fixed(art.rank),
+            outlier_f: 8,
+            smooth: true,
+            ..Default::default()
+        };
+        let q = aser.quantize_layer(&w, &calib, Precision::new(4, art.abits as u8));
+        let (la, lb) = q.low_rank.clone().expect("aser has factors");
+        // Pad/trim rank to the artifact's compiled rank.
+        let (la, lb) = fit_rank(&la, &lb, art.rank);
+        let m = q.act_smooth.clone().unwrap_or_else(|| vec![1.0; art.d_in]);
+        let packed = pack_int4(&q.weight.codes);
+        let x = Matrix::randn(&mut rng, art.t, art.d_in, 1.0);
+
+        let t0 = std::time::Instant::now();
+        let y = rt.run_qlinear(art, &x, &m, &packed, &q.weight.scales, &la, &lb)?;
+        let compile_run_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let want = qlinear_reference(
+            &x,
+            &m,
+            &q.weight.codes,
+            art.d_out,
+            &q.weight.scales,
+            &la,
+            &lb,
+            art.abits as u8,
+        );
+        let rel = y.sub(&want).frob_norm() / want.frob_norm().max(1e-12);
+        println!(
+            "  {:<38} t{}×{}→{} r{}  rel_diff {:.2e}  {:.0}ms",
+            art.file, art.t, art.d_in, art.d_out, art.rank, rel, compile_run_ms
+        );
+        anyhow::ensure!(rel < 1e-3, "{}: PJRT output diverges (rel {rel})", art.file);
+        checked += 1;
+    }
+    for (file, cfg) in &manifest.block_fwd {
+        let t0 = std::time::Instant::now();
+        rt.load(file)?;
+        println!("  {:<38} (block fwd, {cfg}) compiled in {:.0}ms", file, t0.elapsed().as_secs_f64() * 1e3);
+        checked += 1;
+    }
+    println!("runtime-check OK: {checked} artifacts, {} executables cached", rt.loaded());
+    Ok(())
+}
+
+/// Pad or truncate (L_A, L_B) to exactly rank r (zero-padding is exact:
+/// extra components contribute 0).
+fn fit_rank(la: &Matrix, lb: &Matrix, r: usize) -> (Matrix, Matrix) {
+    let cur = lb.rows;
+    if cur == r {
+        return (la.clone(), lb.clone());
+    }
+    let mut la2 = Matrix::zeros(la.rows, r);
+    let mut lb2 = Matrix::zeros(r, lb.cols);
+    let k = cur.min(r);
+    for i in 0..la.rows {
+        for j in 0..k {
+            la2[(i, j)] = la[(i, j)];
+        }
+    }
+    for i in 0..k {
+        lb2.row_mut(i).copy_from_slice(lb.row(i));
+    }
+    (la2, lb2)
+}

@@ -1,0 +1,70 @@
+//! `repro serve` — the serving demo: quantize a model, run the
+//! router + continuous batcher over a synthetic request trace, report
+//! latency/throughput. This is the "deployed W4A8 model" path of the paper.
+
+use super::ctx::Ctx;
+use crate::coordinator::{
+    run_ptq, serve_requests, synthetic_requests, BatchConfig, ServerConfig,
+};
+use crate::quant::Precision;
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    let model_name = args.str_or("model", "A");
+    let method_name = args.str_or("method", "aser");
+    let n_requests = args.usize_or("requests", 24)?;
+    let prompt_len = args.usize_or("prompt-len", 16)?;
+    let max_new = args.usize_or("max-new", 24)?;
+    let workers = args.usize_or("workers", 2)?;
+    let max_batch = args.usize_or("batch", 8)?;
+
+    let model = ctx.model(&model_name)?;
+    let model = if method_name == "fp16" {
+        model
+    } else {
+        let prec = Precision::parse(&args.str_or("prec", "w4a8"))?;
+        let method = ctx.method(args)?;
+        let stats = ctx.calib(&model, &args.str_or("profile", "wiki"))?;
+        let (qmodel, report) = run_ptq(model, &stats, method.as_ref(), prec, 0)?;
+        println!(
+            "[quantize] {} @ {prec}: mean rel err {:.5}",
+            report.method,
+            report.mean_rel_error()
+        );
+        qmodel
+    };
+
+    let requests =
+        synthetic_requests(model.cfg.vocab_size, n_requests, prompt_len, max_new, ctx.seed)?;
+    let cfg = ServerConfig {
+        workers,
+        batch: BatchConfig { max_batch, ..Default::default() },
+        kv_tokens: args.usize_or("kv-tokens", 1 << 15)?,
+    };
+    let run = serve_requests(Arc::new(model), &cfg, requests);
+
+    println!("== serve: {n_requests} requests, {workers} workers, batch {max_batch} ==");
+    println!("  completed      {}", run.responses.len());
+    println!("  wall           {:.2}s", run.wall.as_secs_f64());
+    println!("  throughput     {:.1} tok/s (decode)", run.throughput_tok_s());
+    println!(
+        "  latency p50/p95  {:.0} / {:.0} ms",
+        run.latency_percentile_ms(50.0),
+        run.latency_percentile_ms(95.0)
+    );
+    println!(
+        "  ttft p50/p95     {:.0} / {:.0} ms",
+        run.ttft_percentile_ms(50.0),
+        run.ttft_percentile_ms(95.0)
+    );
+    for (i, m) in run.per_worker.iter().enumerate() {
+        println!(
+            "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, kv-rejects {}",
+            m.requests, m.generated_tokens, m.iterations, m.peak_batch, m.rejected_capacity
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,268 @@
+//! Continuous (iteration-level) dynamic batcher — Orca-style scheduling.
+//!
+//! The decode loop keeps an *active set* of sequences. Every iteration it
+//! (1) admits queued requests while there is batch room AND the KV pool
+//! grants a lease (backpressure), (2) advances every active sequence by one
+//! token (prompt tokens first — chunked prefill — then greedy decode), and
+//! (3) retires finished sequences, freeing their KV lease. New requests
+//! therefore join between *iterations*, not between requests — the property
+//! that gives continuous batching its throughput.
+
+use super::kvpool::{KvPool, Lease};
+use crate::data::vocab::EOS;
+use crate::model::{argmax, Gpt, KvCache};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub submitted: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Time from submit to first generated token.
+    pub ttft: Duration,
+    /// Time from submit to completion.
+    pub total: Duration,
+    pub prompt_len: usize,
+}
+
+struct Active {
+    req: Request,
+    cache: KvCache,
+    lease: Lease,
+    /// Next prompt index to feed (prefill progress).
+    fed: usize,
+    generated: Vec<u32>,
+    last_logits: Vec<f32>,
+    first_token_at: Option<Instant>,
+}
+
+/// Batcher configuration.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    pub max_batch: usize,
+    /// Wait at most this long for work when idle.
+    pub idle_wait: Duration,
+    pub stop_on_eos: bool,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 8, idle_wait: Duration::from_millis(5), stop_on_eos: true }
+    }
+}
+
+/// Metrics the server reports.
+#[derive(Clone, Debug, Default)]
+pub struct BatchMetrics {
+    pub requests: usize,
+    pub generated_tokens: usize,
+    pub prefill_tokens: usize,
+    pub iterations: usize,
+    pub peak_batch: usize,
+    pub rejected_capacity: usize,
+}
+
+/// Run the batching loop until the request channel closes and the active
+/// set drains. Responses are delivered through `respond`.
+pub fn run_batcher(
+    model: &Gpt,
+    pool: &KvPool,
+    cfg: &BatchConfig,
+    rx: Receiver<Request>,
+    mut respond: impl FnMut(Response),
+) -> BatchMetrics {
+    let mut active: Vec<Active> = Vec::new();
+    let mut metrics = BatchMetrics::default();
+    let mut channel_open = true;
+    let mut pending: Vec<Request> = Vec::new();
+
+    while channel_open || !active.is_empty() || !pending.is_empty() {
+        // ---- admission ----
+        while active.len() < cfg.max_batch && channel_open {
+            match rx.recv_timeout(if active.is_empty() && pending.is_empty() {
+                cfg.idle_wait
+            } else {
+                Duration::ZERO
+            }) {
+                Ok(req) => pending.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    channel_open = false;
+                }
+            }
+        }
+        let mut still_pending = Vec::new();
+        for req in pending.drain(..) {
+            if active.len() >= cfg.max_batch {
+                still_pending.push(req);
+                continue;
+            }
+            // Lease the full prompt + expected generation upfront.
+            let want = req.prompt.len() + req.max_new;
+            match pool.alloc(want.min(model.cfg.max_seq)) {
+                Some(lease) => {
+                    active.push(Active {
+                        cache: KvCache::new(&model.cfg),
+                        lease,
+                        fed: 0,
+                        generated: Vec::new(),
+                        last_logits: Vec::new(),
+                        first_token_at: None,
+                        req,
+                    });
+                    metrics.requests += 1;
+                }
+                None => {
+                    metrics.rejected_capacity += 1;
+                    still_pending.push(req);
+                }
+            }
+        }
+        pending = still_pending;
+        metrics.peak_batch = metrics.peak_batch.max(active.len());
+        if active.is_empty() {
+            if !channel_open && pending.is_empty() {
+                break;
+            }
+            continue;
+        }
+
+        // ---- one iteration: advance every active sequence by one token ----
+        metrics.iterations += 1;
+        for a in active.iter_mut() {
+            if a.fed < a.req.prompt.len() {
+                let tok = a.req.prompt[a.fed];
+                a.last_logits = model.forward_step(tok, &mut a.cache);
+                a.fed += 1;
+                metrics.prefill_tokens += 1;
+            } else {
+                let next = argmax(&a.last_logits) as u32;
+                a.generated.push(next);
+                metrics.generated_tokens += 1;
+                if a.first_token_at.is_none() {
+                    a.first_token_at = Some(Instant::now());
+                }
+                let done = a.generated.len() >= a.req.max_new
+                    || (cfg.stop_on_eos && next == EOS)
+                    || a.cache.len() + 1 >= model.cfg.max_seq;
+                if !done {
+                    a.last_logits = model.forward_step(next, &mut a.cache);
+                }
+            }
+        }
+
+        // ---- retire finished ----
+        let mut i = 0;
+        while i < active.len() {
+            let done = {
+                let a = &active[i];
+                a.fed >= a.req.prompt.len()
+                    && (a.generated.len() >= a.req.max_new
+                        || (cfg.stop_on_eos && a.generated.last() == Some(&EOS))
+                        || a.cache.len() + 1 >= model.cfg.max_seq)
+            };
+            if done {
+                let a = active.swap_remove(i);
+                pool.free(a.lease);
+                let now = Instant::now();
+                respond(Response {
+                    id: a.req.id,
+                    prompt_len: a.req.prompt.len(),
+                    tokens: a.generated,
+                    ttft: a
+                        .first_token_at
+                        .map(|t| t - a.req.submitted)
+                        .unwrap_or_else(|| now - a.req.submitted),
+                    total: now - a.req.submitted,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_model;
+    use std::sync::mpsc::channel;
+
+    fn serve(reqs: Vec<Request>, max_batch: usize, kv_tokens: usize) -> (Vec<Response>, BatchMetrics) {
+        let model = synthetic_model("micro", 51).unwrap();
+        let pool = KvPool::new(kv_tokens, 8);
+        let (tx, rx) = channel();
+        for r in reqs {
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let mut out = Vec::new();
+        let cfg = BatchConfig { max_batch, ..Default::default() };
+        let m = run_batcher(&model, &pool, &cfg, rx, |r| out.push(r));
+        assert_eq!(pool.used_tokens(), 0, "all leases freed");
+        (out, m)
+    }
+
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request { id, prompt, max_new, submitted: Instant::now() }
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let reqs: Vec<Request> =
+            (0..10).map(|i| req(i, vec![1 + i as u32, 2, 3], 4)).collect();
+        let (out, m) = serve(reqs, 4, 10_000);
+        assert_eq!(out.len(), 10);
+        assert_eq!(m.requests, 10);
+        assert!(m.peak_batch <= 4);
+        assert!(out.iter().all(|r| r.tokens.len() <= 4 && !r.tokens.is_empty()));
+    }
+
+    #[test]
+    fn batched_output_matches_unbatched_greedy() {
+        let model = synthetic_model("micro", 51).unwrap();
+        let prompt = vec![5u32, 9, 13];
+        let want = model.generate_greedy(&prompt, 6);
+        let (out, _) = serve(
+            vec![req(1, prompt.clone(), 6), req(2, vec![7, 7], 6), req(3, prompt.clone(), 6)],
+            3,
+            10_000,
+        );
+        let r1 = out.iter().find(|r| r.id == 1).unwrap();
+        let r3 = out.iter().find(|r| r.id == 3).unwrap();
+        let trim = |v: &[u32]| {
+            // greedy may stop at EOS in batcher; compare prefix
+            v.to_vec()
+        };
+        assert!(want.starts_with(&trim(&r1.tokens)) || r1.tokens == want);
+        assert_eq!(r1.tokens, r3.tokens, "same prompt ⇒ same output");
+    }
+
+    #[test]
+    fn capacity_backpressure_still_completes() {
+        // Pool fits only ~1 sequence at a time; everything must still finish.
+        let reqs: Vec<Request> = (0..6).map(|i| req(i, vec![2, 3], 3)).collect();
+        let (out, m) = serve(reqs, 4, 6);
+        assert_eq!(out.len(), 6);
+        assert!(m.rejected_capacity > 0, "expected capacity pushback");
+    }
+
+    #[test]
+    fn iteration_count_reflects_continuous_batching() {
+        // 4 requests × (2 prompt + 3 decode) ≈ 5 iterations if perfectly
+        // batched, not 20 — continuous batching interleaves.
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, vec![2, 3], 3)).collect();
+        let (_, m) = serve(reqs, 4, 10_000);
+        assert!(m.iterations < 12, "iterations {}", m.iterations);
+        assert_eq!(m.prefill_tokens, 8);
+    }
+}

@@ -1,0 +1,182 @@
+//! KV-cache slot pool — serving memory manager.
+//!
+//! Accounts a fixed token budget across concurrent sequences; the batcher
+//! must hold a lease before admitting a request, which provides the
+//! backpressure that keeps the decode loop inside memory limits. Leases are
+//! RAII-free (explicit free) because they cross thread boundaries with the
+//! sequence state.
+
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug)]
+struct PoolState {
+    capacity_tokens: usize,
+    used_tokens: usize,
+    next_id: u64,
+    live: std::collections::BTreeMap<u64, usize>,
+    peak_tokens: usize,
+}
+
+/// Shared pool handle.
+#[derive(Clone)]
+pub struct KvPool {
+    state: Arc<Mutex<PoolState>>,
+    /// Per-token KV bytes for accounting (2 · n_layers · d_model · 4).
+    pub bytes_per_token: usize,
+}
+
+/// An allocation lease for one sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lease {
+    pub id: u64,
+    pub tokens: usize,
+}
+
+impl KvPool {
+    pub fn new(capacity_tokens: usize, bytes_per_token: usize) -> KvPool {
+        KvPool {
+            state: Arc::new(Mutex::new(PoolState {
+                capacity_tokens,
+                used_tokens: 0,
+                next_id: 1,
+                live: Default::default(),
+                peak_tokens: 0,
+            })),
+            bytes_per_token,
+        }
+    }
+
+    /// For a model: capacity from a byte budget.
+    pub fn for_model(cfg: &crate::model::ModelConfig, budget_bytes: usize) -> KvPool {
+        let per_token = 2 * cfg.n_layers * cfg.d_model * 4;
+        KvPool::new((budget_bytes / per_token).max(1), per_token)
+    }
+
+    /// Try to lease `tokens` tokens of KV space.
+    pub fn alloc(&self, tokens: usize) -> Option<Lease> {
+        let mut s = self.state.lock().unwrap();
+        if s.used_tokens + tokens > s.capacity_tokens {
+            return None;
+        }
+        s.used_tokens += tokens;
+        s.peak_tokens = s.peak_tokens.max(s.used_tokens);
+        let id = s.next_id;
+        s.next_id += 1;
+        s.live.insert(id, tokens);
+        Some(Lease { id, tokens })
+    }
+
+    /// Grow an existing lease by `extra` tokens (decode step).
+    pub fn grow(&self, lease: &mut Lease, extra: usize) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.used_tokens + extra > s.capacity_tokens {
+            return false;
+        }
+        let entry = s.live.get_mut(&lease.id).expect("lease alive");
+        *entry += extra;
+        s.used_tokens += extra;
+        s.peak_tokens = s.peak_tokens.max(s.used_tokens);
+        lease.tokens += extra;
+        true
+    }
+
+    /// Release a lease. Panics on double free (a bug we want loud).
+    pub fn free(&self, lease: Lease) {
+        let mut s = self.state.lock().unwrap();
+        let tokens = s.live.remove(&lease.id).expect("double free of KV lease");
+        assert_eq!(tokens, lease.tokens, "lease size drift");
+        s.used_tokens -= tokens;
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.state.lock().unwrap().used_tokens
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.state.lock().unwrap().capacity_tokens
+    }
+
+    pub fn peak_tokens(&self) -> usize {
+        self.state.lock().unwrap().peak_tokens
+    }
+
+    pub fn live_leases(&self) -> usize {
+        self.state.lock().unwrap().live.len()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_tokens() * self.bytes_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let pool = KvPool::new(100, 8);
+        let a = pool.alloc(40).unwrap();
+        let b = pool.alloc(60).unwrap();
+        assert!(pool.alloc(1).is_none(), "over capacity");
+        assert_eq!(pool.used_tokens(), 100);
+        pool.free(a);
+        assert_eq!(pool.used_tokens(), 60);
+        let c = pool.alloc(30).unwrap();
+        pool.free(b);
+        pool.free(c);
+        assert_eq!(pool.used_tokens(), 0);
+        assert_eq!(pool.live_leases(), 0);
+        assert_eq!(pool.peak_tokens(), 100);
+    }
+
+    #[test]
+    fn grow_respects_capacity() {
+        let pool = KvPool::new(50, 8);
+        let mut a = pool.alloc(45).unwrap();
+        assert!(pool.grow(&mut a, 5));
+        assert!(!pool.grow(&mut a, 1));
+        assert_eq!(a.tokens, 50);
+        pool.free(a);
+        assert_eq!(pool.used_tokens(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let pool = KvPool::new(10, 8);
+        let a = pool.alloc(5).unwrap();
+        pool.free(a);
+        pool.free(a);
+    }
+
+    #[test]
+    fn for_model_sizing() {
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let pool = KvPool::for_model(&cfg, 1 << 20);
+        assert_eq!(pool.bytes_per_token, 2 * 2 * 64 * 4);
+        assert_eq!(pool.capacity_tokens(), (1 << 20) / (2 * 2 * 64 * 4));
+    }
+
+    #[test]
+    fn concurrent_alloc_free_consistent() {
+        let pool = KvPool::new(1000, 8);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        if let Some(l) = p.alloc(7) {
+                            p.free(l);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.used_tokens(), 0);
+        assert_eq!(pool.live_leases(), 0);
+    }
+}

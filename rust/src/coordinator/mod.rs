@@ -1,0 +1,12 @@
+//! L3 coordinator: the quantization pipeline orchestrator and the serving
+//! runtime (continuous batcher, KV-cache pool, request router).
+
+pub mod batcher;
+pub mod kvpool;
+pub mod pipeline;
+pub mod router;
+
+pub use batcher::{BatchConfig, BatchMetrics, Request, Response};
+pub use kvpool::KvPool;
+pub use pipeline::{calibrate_model, quantize_model, run_ptq, CalibStats, PipelineReport};
+pub use router::{serve_requests, synthetic_requests, ServerConfig, ServerRun};

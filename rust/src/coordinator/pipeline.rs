@@ -1,0 +1,214 @@
+//! Quantization pipeline orchestrator.
+//!
+//! Drives the full PTQ flow: load model → calibrate once → quantize every
+//! linear layer with the selected method (layer jobs dispatched through the
+//! thread pool) → swap quantized layers into the model → report per-layer
+//! error metrics. Calibration statistics are computed once and shared by
+//! all methods so comparisons in the tables are apples-to-apples.
+
+use crate::calib::{calib_sequences, calibrate, CalibConfig};
+use crate::methods::{layer_error_rel, LayerCalib, PtqMethod, QuantizedLinear};
+use crate::model::{layer_key, Gpt, Linear, LINEAR_NAMES};
+use crate::quant::Precision;
+use crate::util::pool::scope_map;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Per-layer quantization outcome (for reports and Fig. 6).
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub key: String,
+    pub rel_error: f32,
+    pub rank: usize,
+    pub extra_params: usize,
+    pub millis: f64,
+}
+
+/// Whole-run outcome.
+pub struct PipelineReport {
+    pub method: String,
+    pub precision: Precision,
+    pub layers: Vec<LayerReport>,
+    pub total_extra_params: usize,
+    pub base_params: usize,
+    pub wall_ms: f64,
+}
+
+impl PipelineReport {
+    /// +FLOPs overhead (%) of the compensation branches vs the dense model,
+    /// as in the paper's Table 4 (2·r·(d_in+d_out) per token vs 2·d_in·d_out).
+    pub fn flops_overhead_pct(&self) -> f64 {
+        100.0 * self.total_extra_params as f64 / self.base_params as f64
+    }
+
+    pub fn mean_rel_error(&self) -> f32 {
+        self.layers.iter().map(|l| l.rel_error).sum::<f32>() / self.layers.len().max(1) as f32
+    }
+
+    pub fn mean_rank(&self) -> f64 {
+        self.layers.iter().map(|l| l.rank as f64).sum::<f64>() / self.layers.len().max(1) as f64
+    }
+}
+
+/// Calibration statistics for a model, reusable across methods.
+pub type CalibStats = BTreeMap<String, LayerCalib>;
+
+/// Run calibration over the model using corpus `profile`.
+pub fn calibrate_model(model: &Gpt, profile: &str, cfg: &CalibConfig) -> Result<CalibStats> {
+    let seqs = calib_sequences(model.cfg.vocab_size, profile, cfg)?;
+    Ok(calibrate(model, &seqs, cfg))
+}
+
+/// Quantize every linear layer of `model` in place. Layer jobs run on the
+/// scoped thread pool (`threads=0` ⇒ hardware parallelism).
+pub fn quantize_model(
+    model: &mut Gpt,
+    stats: &CalibStats,
+    method: &dyn PtqMethod,
+    prec: Precision,
+    threads: usize,
+) -> Result<PipelineReport> {
+    let t0 = Instant::now();
+    let n_layers = model.cfg.n_layers;
+    // Collect job descriptors: (key, block, name, weight).
+    let mut jobs: Vec<(String, usize, &'static str)> = Vec::new();
+    for l in 0..n_layers {
+        for name in LINEAR_NAMES {
+            jobs.push((layer_key(l, name), l, name));
+        }
+    }
+    // Snapshot dense weights (read-only view for workers).
+    let weights: Vec<&crate::tensor::Matrix> = jobs
+        .iter()
+        .map(|(_, l, name)| {
+            model
+                .get_linear(*l, name)
+                .dense_weight()
+                .expect("quantize_model requires a dense model")
+        })
+        .collect();
+
+    let results: Vec<(QuantizedLinear, LayerReport)> = scope_map(jobs.len(), threads, |i| {
+        let (key, _, _) = &jobs[i];
+        let w = weights[i];
+        let calib = stats.get(key).unwrap_or_else(|| panic!("no calibration for {key}"));
+        let t = Instant::now();
+        let q = method.quantize_layer(w, calib, prec);
+        let rel = layer_error_rel(w, &q, &calib.x);
+        let rep = LayerReport {
+            key: key.clone(),
+            rel_error: rel,
+            rank: q.rank(),
+            extra_params: q.extra_params(),
+            millis: t.elapsed().as_secs_f64() * 1e3,
+        };
+        (q, rep)
+    });
+
+    let mut layers = Vec::with_capacity(results.len());
+    let mut total_extra = 0usize;
+    for ((_, l, name), (q, rep)) in jobs.iter().zip(results) {
+        total_extra += rep.extra_params;
+        layers.push(rep);
+        model.set_linear(*l, name, Linear::Quant(q));
+    }
+    Ok(PipelineReport {
+        method: method.name(),
+        precision: prec,
+        layers,
+        total_extra_params: total_extra,
+        base_params: model.cfg.block_params(),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Convenience: full flow for one (model, method, precision) combo starting
+/// from a dense model. Returns the quantized model + report.
+pub fn run_ptq(
+    mut model: Gpt,
+    stats: &CalibStats,
+    method: &dyn PtqMethod,
+    prec: Precision,
+    threads: usize,
+) -> Result<(Gpt, PipelineReport)> {
+    let report = quantize_model(&mut model, stats, method, prec, threads)?;
+    Ok((model, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::{method_by_name, RankPolicy};
+    use crate::model::synthetic_model;
+
+    fn quick_calib(model: &Gpt) -> CalibStats {
+        let cfg = CalibConfig { n_seqs: 6, seq_len: 24, max_sample: 64, seed: 3 };
+        calibrate_model(model, "wiki", &cfg).unwrap()
+    }
+
+    #[test]
+    fn pipeline_quantizes_all_layers() {
+        let model = synthetic_model("micro", 31).unwrap();
+        let stats = quick_calib(&model);
+        let method = method_by_name("rtn", RankPolicy::Fixed(8), 4).unwrap();
+        let (qm, rep) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 1).unwrap();
+        assert_eq!(rep.layers.len(), qm.cfg.n_layers * 4);
+        assert!(rep.layers.iter().all(|l| l.rel_error.is_finite()));
+        // All linears are quantized now.
+        for l in 0..qm.cfg.n_layers {
+            for name in LINEAR_NAMES {
+                assert!(qm.get_linear(l, name).dense_weight().is_none(), "L{l}.{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn aser_pipeline_lower_error_than_rtn() {
+        let model = synthetic_model("micro", 32).unwrap();
+        let stats = quick_calib(&model);
+        let prec = Precision::w4a8();
+        let rtn = method_by_name("rtn", RankPolicy::Fixed(8), 4).unwrap();
+        let aser = method_by_name("aser", RankPolicy::Fixed(8), 4).unwrap();
+        let m1 = synthetic_model("micro", 32).unwrap();
+        let (_, rep_rtn) = run_ptq(m1, &stats, rtn.as_ref(), prec, 1).unwrap();
+        let m2 = synthetic_model("micro", 32).unwrap();
+        let (_, rep_aser) = run_ptq(m2, &stats, aser.as_ref(), prec, 1).unwrap();
+        assert!(
+            rep_aser.mean_rel_error() < rep_rtn.mean_rel_error(),
+            "aser {} !< rtn {}",
+            rep_aser.mean_rel_error(),
+            rep_rtn.mean_rel_error()
+        );
+        assert!(rep_aser.total_extra_params > 0);
+        assert!(rep_rtn.total_extra_params == 0);
+    }
+
+    #[test]
+    fn quantized_model_still_generates() {
+        let model = synthetic_model("micro", 33).unwrap();
+        let stats = quick_calib(&model);
+        let method = method_by_name("aser", RankPolicy::Fixed(4), 2).unwrap();
+        let (qm, _) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 1).unwrap();
+        let out = qm.generate_greedy(&[1, 2, 3], 5);
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn overhead_accounting_matches_rank() {
+        let model = synthetic_model("micro", 34).unwrap();
+        let stats = quick_calib(&model);
+        let method = method_by_name("lorc", RankPolicy::Fixed(4), 0).unwrap();
+        let (qm, rep) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 1).unwrap();
+        // LoRC at fixed rank 4: extra params = Σ 4·(d_in + d_out).
+        let mut want = 0usize;
+        for l in 0..qm.cfg.n_layers {
+            for name in LINEAR_NAMES {
+                let lin = qm.get_linear(l, name);
+                want += 4 * (lin.in_features() + lin.out_features());
+            }
+        }
+        assert_eq!(rep.total_extra_params, want);
+        assert!(rep.flops_overhead_pct() > 0.0);
+    }
+}

@@ -1,0 +1,263 @@
+//! Synthetic corpora with controllable statistics.
+//!
+//! Three profiles stand in for the paper's evaluation sets (DESIGN.md §3):
+//! - `wiki`  — WikiText2-like: broad Zipfian vocab, medium sentences, clean.
+//! - `c4`    — C4-like: noisier (agreement violations, ragged lengths).
+//! - `ptb`   — PTB-like: narrower effective vocab, short formal sentences.
+//!
+//! Sentences are drawn from a probabilistic grammar with agreement rules
+//! (verb class = subject-noun class, determiner number = noun number,
+//! adjective class compatible with the noun). The rules are what the tiny
+//! pretrained models learn; quantization damage shows up as broken
+//! agreement → higher perplexity and lower task accuracy.
+
+use super::vocab::{Cat, Vocab, EOS, N_CLASSES};
+use crate::util::rng::{Pcg64, ZipfSampler};
+
+#[derive(Clone, Debug)]
+pub struct CorpusProfile {
+    pub name: String,
+    /// Zipf exponent within each category.
+    pub zipf_s: f64,
+    /// Probability of violating an agreement rule (corpus noise).
+    pub noise: f64,
+    /// Probability an adjective precedes the noun.
+    pub p_adj: f64,
+    /// Probability of an adverb after the verb.
+    pub p_adv: f64,
+    /// Sentences per "document" (EOS separated).
+    pub sents_per_doc: (usize, usize),
+    /// Fraction of the noun/name vocabulary actually used (narrow corpora
+    /// use fewer types).
+    pub vocab_frac: f64,
+}
+
+impl CorpusProfile {
+    pub fn by_name(name: &str) -> anyhow::Result<CorpusProfile> {
+        Ok(match name {
+            "wiki" | "wikitext2" => CorpusProfile {
+                name: "wiki".into(),
+                zipf_s: 1.05,
+                noise: 0.02,
+                p_adj: 0.45,
+                p_adv: 0.25,
+                sents_per_doc: (3, 9),
+                vocab_frac: 1.0,
+            },
+            "c4" => CorpusProfile {
+                name: "c4".into(),
+                zipf_s: 0.9,
+                noise: 0.10,
+                p_adj: 0.35,
+                p_adv: 0.35,
+                sents_per_doc: (1, 6),
+                vocab_frac: 1.0,
+            },
+            "ptb" => CorpusProfile {
+                name: "ptb".into(),
+                zipf_s: 1.2,
+                noise: 0.01,
+                p_adj: 0.55,
+                p_adv: 0.15,
+                sents_per_doc: (2, 5),
+                vocab_frac: 0.5,
+            },
+            other => anyhow::bail!("unknown corpus '{other}'"),
+        })
+    }
+
+    pub fn all() -> Vec<&'static str> {
+        vec!["wiki", "c4", "ptb"]
+    }
+}
+
+/// Sentence/stream generator over a vocabulary.
+pub struct Corpus {
+    pub vocab: Vocab,
+    pub profile: CorpusProfile,
+    noun_z: ZipfSampler,
+    verb_z: ZipfSampler,
+    adj_z: ZipfSampler,
+    adv_z: ZipfSampler,
+}
+
+impl Corpus {
+    pub fn new(vocab: Vocab, profile: CorpusProfile) -> Corpus {
+        let lim = |n: usize| {
+            ((n as f64 * profile.vocab_frac) as usize).max(N_CLASSES * 2).min(n)
+        };
+        let noun_z = ZipfSampler::new(lim(vocab.count(Cat::Noun)), profile.zipf_s);
+        let verb_z = ZipfSampler::new(lim(vocab.count(Cat::Verb)), profile.zipf_s);
+        let adj_z = ZipfSampler::new(lim(vocab.count(Cat::Adj)), profile.zipf_s);
+        let adv_z = ZipfSampler::new(lim(vocab.count(Cat::Adv)), profile.zipf_s);
+        Corpus { vocab, profile, noun_z, verb_z, adj_z, adv_z }
+    }
+
+    /// Draw a category token of a specific agreement class.
+    fn draw_classed(&self, rng: &mut Pcg64, cat: Cat, sampler: &ZipfSampler, class: usize) -> u32 {
+        // Rejection-sample the Zipf draw until the class matches (classes
+        // are index mod N_CLASSES so acceptance is ~1/8; cheap).
+        for _ in 0..64 {
+            let k = sampler.sample(rng);
+            if k % N_CLASSES == class {
+                return self.vocab.nth(cat, k);
+            }
+        }
+        // Fallback: first token of that class.
+        self.vocab.nth(cat, class)
+    }
+
+    fn draw_noun_with(&self, rng: &mut Pcg64, plural: bool) -> u32 {
+        for _ in 0..64 {
+            let k = self.noun_z.sample(rng);
+            if (k % 2 == 1) == plural {
+                return self.vocab.nth(Cat::Noun, k);
+            }
+        }
+        self.vocab.nth(Cat::Noun, if plural { 1 } else { 0 })
+    }
+
+    /// One grammatical sentence (possibly with profile-level noise).
+    /// Template: DET [ADJ] NOUN VERB [ADV] DET [ADJ] NOUN PUNCT
+    pub fn sentence(&self, rng: &mut Pcg64) -> Vec<u32> {
+        let v = &self.vocab;
+        let p = &self.profile;
+        let mut out = Vec::with_capacity(10);
+        let noisy = |rng: &mut Pcg64| rng.f64() < p.noise;
+
+        // Subject NP.
+        let subj_plural = rng.f64() < 0.4;
+        let subj = self.draw_noun_with(rng, subj_plural);
+        let det_number = if noisy(rng) { !subj_plural } else { subj_plural };
+        out.push(v.det_for(det_number, rng.below(4)));
+        if rng.f64() < p.p_adj {
+            let class = if noisy(rng) {
+                rng.below(N_CLASSES)
+            } else {
+                v.class_of(subj) % (N_CLASSES / 2) // adj classes are coarser
+            };
+            out.push(self.draw_classed(rng, Cat::Adj, &self.adj_z, class));
+        }
+        out.push(subj);
+        // Verb agrees with the subject class.
+        let vclass = if noisy(rng) { rng.below(N_CLASSES) } else { v.class_of(subj) };
+        out.push(self.draw_classed(rng, Cat::Verb, &self.verb_z, vclass));
+        if rng.f64() < p.p_adv {
+            out.push(v.nth(Cat::Adv, self.adv_z.sample(rng)));
+        }
+        // Object NP (free class).
+        let obj_plural = rng.f64() < 0.4;
+        let obj = self.draw_noun_with(rng, obj_plural);
+        out.push(v.det_for(obj_plural, rng.below(4)));
+        out.push(obj);
+        // Punctuation: mostly '.'.
+        let p_idx = if rng.f64() < 0.85 { 0 } else { rng.below(v.count(Cat::Punct)) };
+        out.push(v.nth(Cat::Punct, p_idx));
+        out
+    }
+
+    /// Token stream of ~`n_tokens` (documents joined by EOS).
+    pub fn stream(&self, rng: &mut Pcg64, n_tokens: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n_tokens + 16);
+        while out.len() < n_tokens {
+            let (lo, hi) = self.profile.sents_per_doc;
+            let n_sents = lo + rng.below(hi - lo + 1);
+            for _ in 0..n_sents {
+                out.extend(self.sentence(rng));
+            }
+            out.push(EOS);
+        }
+        out.truncate(n_tokens);
+        out
+    }
+
+    /// Fixed-length training batches (seq_len + 1 tokens each, for
+    /// next-token targets).
+    pub fn batches(&self, rng: &mut Pcg64, n_batches: usize, seq_len: usize) -> Vec<Vec<u32>> {
+        let stream = self.stream(rng, n_batches * (seq_len + 1) + 1);
+        (0..n_batches)
+            .map(|i| stream[i * (seq_len + 1)..(i + 1) * (seq_len + 1) + 1.min(0)].to_vec())
+            .map(|mut b| {
+                b.truncate(seq_len + 1);
+                b
+            })
+            .collect()
+    }
+}
+
+/// Convenience: build corpus by names.
+pub fn corpus(vocab_size: usize, profile_name: &str) -> anyhow::Result<Corpus> {
+    Ok(Corpus::new(Vocab::new(vocab_size), CorpusProfile::by_name(profile_name)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentences_follow_agreement_when_noise_free() {
+        let mut profile = CorpusProfile::by_name("wiki").unwrap();
+        profile.noise = 0.0;
+        let c = Corpus::new(Vocab::new(512), profile);
+        let mut rng = Pcg64::seed(151);
+        for _ in 0..200 {
+            let s = c.sentence(&mut rng);
+            // Find subject noun (first noun) and the verb after it.
+            let v = &c.vocab;
+            let noun_pos = s.iter().position(|&t| v.cat_of(t) == Cat::Noun).unwrap();
+            let verb_pos = s.iter().position(|&t| v.cat_of(t) == Cat::Verb).unwrap();
+            assert!(verb_pos > noun_pos);
+            assert_eq!(
+                v.class_of(s[noun_pos]),
+                v.class_of(s[verb_pos]),
+                "agreement violated in {s:?}"
+            );
+            // Det number matches subject noun.
+            let det = s[0];
+            assert_eq!(v.is_plural_det(det), v.is_plural_noun(s[noun_pos]));
+        }
+    }
+
+    #[test]
+    fn stream_has_requested_length_and_eos() {
+        let c = corpus(512, "c4").unwrap();
+        let mut rng = Pcg64::seed(152);
+        let s = c.stream(&mut rng, 2000);
+        assert_eq!(s.len(), 2000);
+        assert!(s.contains(&EOS));
+        assert!(s.iter().all(|&t| (t as usize) < 512));
+    }
+
+    #[test]
+    fn profiles_differ_statistically() {
+        let mut rng = Pcg64::seed(153);
+        let wiki = corpus(512, "wiki").unwrap().stream(&mut rng, 5000);
+        let mut rng2 = Pcg64::seed(153);
+        let ptb = corpus(512, "ptb").unwrap().stream(&mut rng2, 5000);
+        let types = |s: &[u32]| s.iter().collect::<std::collections::HashSet<_>>().len();
+        // ptb uses a narrower vocabulary.
+        assert!(types(&ptb) < types(&wiki), "ptb {} !< wiki {}", types(&ptb), types(&wiki));
+    }
+
+    #[test]
+    fn batches_shape() {
+        let c = corpus(256, "wiki").unwrap();
+        let mut rng = Pcg64::seed(154);
+        let b = c.batches(&mut rng, 5, 32);
+        assert_eq!(b.len(), 5);
+        assert!(b.iter().all(|x| x.len() == 33));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = corpus(512, "wiki").unwrap();
+        let a = c.stream(&mut Pcg64::seed(7), 500);
+        let b = c.stream(&mut Pcg64::seed(7), 500);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unknown_profile_rejected() {
+        assert!(CorpusProfile::by_name("imagenet").is_err());
+    }
+}

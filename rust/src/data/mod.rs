@@ -1,0 +1,8 @@
+//! Synthetic data substrate: structured vocabulary, grammar-driven corpora
+//! (wiki/c4/ptb-like profiles), tokenization.
+
+pub mod corpus;
+pub mod vocab;
+
+pub use corpus::{corpus, Corpus, CorpusProfile};
+pub use vocab::{Cat, Vocab, BOS, EOS, PAD};

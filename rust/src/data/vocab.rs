@@ -1,0 +1,246 @@
+//! Structured synthetic vocabulary.
+//!
+//! Token ids are partitioned into grammatical categories with *classes*
+//! inside each category. The grammar (see `corpus`) enforces agreement rules
+//! between classes (verb class must match subject-noun class; determiner
+//! number must match noun parity), giving a small transformer something real
+//! to learn — which is what makes perplexity and the zero-shot tasks
+//! sensitive to quantization damage.
+//!
+//! Word surface forms are synthesized from syllables so the serving API can
+//! speak text instead of raw ids.
+
+/// Category layout within the id space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cat {
+    Special,
+    Punct,
+    Det,
+    Noun,
+    Verb,
+    Adj,
+    Adv,
+    Name,
+}
+
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+pub const PAD: u32 = 2;
+
+/// Number of agreement classes for nouns/verbs/adjs.
+pub const N_CLASSES: usize = 8;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+    /// [start, end) per category in the order: special, punct, det, noun,
+    /// verb, adj, adv, name.
+    ranges: [(u32, u32); 8],
+    words: Vec<String>,
+}
+
+impl Vocab {
+    /// Deterministic layout for a given vocab size (≥ 128).
+    pub fn new(size: usize) -> Vocab {
+        assert!(size >= 128, "vocab too small: {size}");
+        let n = size as u32;
+        // Fixed small sections + proportional big ones.
+        let special = (0u32, 3u32);
+        let punct = (3, 8); // . , ; ! ?
+        let det = (8, 16); // 4 singular + 4 plural
+        let rest = n - 16;
+        let n_noun = rest * 40 / 100;
+        let n_verb = rest * 25 / 100;
+        let n_adj = rest * 15 / 100;
+        let n_adv = rest * 8 / 100;
+        let noun = (16, 16 + n_noun);
+        let verb = (noun.1, noun.1 + n_verb);
+        let adj = (verb.1, verb.1 + n_adj);
+        let adv = (adj.1, adj.1 + n_adv);
+        let name = (adv.1, n);
+        let ranges = [special, punct, det, noun, verb, adj, adv, name];
+        let mut words = Vec::with_capacity(size);
+        for id in 0..n {
+            words.push(surface_form(id, &ranges));
+        }
+        Vocab { size, ranges, words }
+    }
+
+    fn range(&self, cat: Cat) -> (u32, u32) {
+        self.ranges[cat as usize]
+    }
+
+    pub fn cat_of(&self, id: u32) -> Cat {
+        for (i, &(a, b)) in self.ranges.iter().enumerate() {
+            if id >= a && id < b {
+                return [
+                    Cat::Special,
+                    Cat::Punct,
+                    Cat::Det,
+                    Cat::Noun,
+                    Cat::Verb,
+                    Cat::Adj,
+                    Cat::Adv,
+                    Cat::Name,
+                ][i];
+            }
+        }
+        Cat::Special
+    }
+
+    pub fn count(&self, cat: Cat) -> usize {
+        let (a, b) = self.range(cat);
+        (b - a) as usize
+    }
+
+    /// k-th token of a category (k < count).
+    pub fn nth(&self, cat: Cat, k: usize) -> u32 {
+        let (a, b) = self.range(cat);
+        assert!(k < (b - a) as usize, "{cat:?} index {k} out of range");
+        a + k as u32
+    }
+
+    /// Index of a token within its category.
+    pub fn index_in_cat(&self, id: u32) -> usize {
+        let (a, _) = self.range(self.cat_of(id));
+        (id - a) as usize
+    }
+
+    /// Agreement class of a noun/verb/adjective token. Nouns come in
+    /// (singular, plural) pairs sharing a class — parity encodes number,
+    /// `idx/2` encodes class — so class and number are independent.
+    pub fn class_of(&self, id: u32) -> usize {
+        let idx = self.index_in_cat(id);
+        match self.cat_of(id) {
+            Cat::Noun => (idx / 2) % N_CLASSES,
+            _ => idx % N_CLASSES,
+        }
+    }
+
+    /// Nouns use parity for grammatical number: even index = singular.
+    pub fn is_plural_noun(&self, id: u32) -> bool {
+        debug_assert_eq!(self.cat_of(id), Cat::Noun);
+        self.index_in_cat(id) % 2 == 1
+    }
+
+    /// Determiners: first half singular, second half plural.
+    pub fn det_for(&self, plural: bool, k: usize) -> u32 {
+        let n = self.count(Cat::Det) / 2;
+        self.nth(Cat::Det, if plural { n + k % n } else { k % n })
+    }
+
+    pub fn is_plural_det(&self, id: u32) -> bool {
+        debug_assert_eq!(self.cat_of(id), Cat::Det);
+        self.index_in_cat(id) >= self.count(Cat::Det) / 2
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    pub fn id_of(&self, word: &str) -> Option<u32> {
+        // Vocabularies are small; linear scan is fine for the text API.
+        self.words.iter().position(|w| w == word).map(|i| i as u32)
+    }
+
+    pub fn detokenize(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        for (i, &id) in ids.iter().enumerate() {
+            if i > 0 && self.cat_of(id) != Cat::Punct {
+                out.push(' ');
+            }
+            out.push_str(self.word(id));
+        }
+        out
+    }
+
+    pub fn tokenize(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().filter_map(|w| self.id_of(w.trim_matches(['.', ',']))).collect()
+    }
+}
+
+/// Deterministic pronounceable surface form per id.
+fn surface_form(id: u32, ranges: &[(u32, u32); 8]) -> String {
+    const ONSETS: [&str; 12] =
+        ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t"];
+    const VOWELS: [&str; 5] = ["a", "e", "i", "o", "u"];
+    const CODAS: [&str; 6] = ["", "n", "r", "s", "l", "k"];
+    match id {
+        0 => return "<bos>".into(),
+        1 => return "<eos>".into(),
+        2 => return "<pad>".into(),
+        _ => {}
+    }
+    if id >= ranges[1].0 && id < ranges[1].1 {
+        return [".", ",", ";", "!", "?"][(id - ranges[1].0) as usize].into();
+    }
+    // 2-3 syllables keyed by id; category prefix letter keeps words unique
+    // across categories even when the syllable hash collides.
+    let cat_idx = ranges.iter().position(|&(a, b)| id >= a && id < b).unwrap_or(7);
+    let mut h = (id as u64).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(cat_idx as u64);
+    let mut w = String::new();
+    let syls = 2 + (h % 2) as usize;
+    for _ in 0..syls {
+        h = h.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        w.push_str(ONSETS[(h >> 33) as usize % ONSETS.len()]);
+        w.push_str(VOWELS[(h >> 23) as usize % VOWELS.len()]);
+        w.push_str(CODAS[(h >> 13) as usize % CODAS.len()]);
+    }
+    format!("{w}{id}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_covers_vocab() {
+        let v = Vocab::new(512);
+        assert_eq!(v.size, 512);
+        let mut total = 0;
+        for cat in [Cat::Special, Cat::Punct, Cat::Det, Cat::Noun, Cat::Verb, Cat::Adj, Cat::Adv, Cat::Name] {
+            total += v.count(cat);
+        }
+        assert_eq!(total, 512);
+        assert_eq!(v.cat_of(BOS), Cat::Special);
+        assert!(v.count(Cat::Noun) > 100);
+    }
+
+    #[test]
+    fn class_and_number_rules() {
+        let v = Vocab::new(512);
+        let n0 = v.nth(Cat::Noun, 0);
+        let n1 = v.nth(Cat::Noun, 1);
+        assert!(!v.is_plural_noun(n0));
+        assert!(v.is_plural_noun(n1));
+        assert_eq!(v.class_of(n0), 0);
+        assert_eq!(v.class_of(n1), 0, "sg/pl pair shares class");
+        assert_eq!(v.class_of(v.nth(Cat::Noun, 9)), 4);
+        assert_eq!(v.class_of(v.nth(Cat::Verb, 9)), 1);
+        let d_sg = v.det_for(false, 0);
+        let d_pl = v.det_for(true, 0);
+        assert!(!v.is_plural_det(d_sg));
+        assert!(v.is_plural_det(d_pl));
+    }
+
+    #[test]
+    fn words_unique_and_roundtrip() {
+        let v = Vocab::new(256);
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..256u32 {
+            assert!(seen.insert(v.word(id).to_string()), "dup word {}", v.word(id));
+        }
+        for id in [5u32, 20, 100, 255] {
+            assert_eq!(v.id_of(v.word(id)), Some(id));
+        }
+    }
+
+    #[test]
+    fn detokenize_readable() {
+        let v = Vocab::new(512);
+        let ids = vec![v.nth(Cat::Det, 0), v.nth(Cat::Noun, 4), v.nth(Cat::Verb, 4), v.nth(Cat::Punct, 0)];
+        let text = v.detokenize(&ids);
+        assert!(text.ends_with('.'));
+        assert!(text.split(' ').count() >= 3);
+    }
+}

@@ -1,0 +1,166 @@
+//! Evaluation: causal-LM perplexity and log-likelihood scoring.
+
+pub mod tasks;
+
+use crate::model::{Gpt, NullSink};
+use crate::tensor::Matrix;
+
+/// Numerically stable log-softmax of one logit row, returning only the value
+/// at `target`.
+pub fn log_prob(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+    let mut lse = 0f64;
+    for &v in logits {
+        lse += ((v as f64) - max).exp();
+    }
+    (logits[target] as f64 - max) - lse.ln()
+}
+
+/// Perplexity of a token stream, evaluated in non-overlapping windows of
+/// `seq_len` (every position except the first of each window is scored —
+/// the standard strided PPL protocol).
+pub fn perplexity(model: &Gpt, stream: &[u32], seq_len: usize) -> f64 {
+    let seq_len = seq_len.min(model.cfg.max_seq);
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    let mut start = 0;
+    while start + 2 <= stream.len() {
+        let end = (start + seq_len).min(stream.len());
+        let window = &stream[start..end];
+        if window.len() < 2 {
+            break;
+        }
+        let logits = model.forward_logits(window, &mut NullSink);
+        for t in 0..window.len() - 1 {
+            nll -= log_prob(logits.row(t), window[t + 1] as usize);
+            count += 1;
+        }
+        start = end;
+    }
+    (nll / count.max(1) as f64).exp()
+}
+
+/// Sum log-likelihood of `continuation` given `prompt` (teacher-forced).
+pub fn continuation_ll(model: &Gpt, prompt: &[u32], continuation: &[u32]) -> f64 {
+    assert!(!continuation.is_empty());
+    let mut full = prompt.to_vec();
+    full.extend_from_slice(continuation);
+    let take = full.len().min(model.cfg.max_seq);
+    let full = &full[full.len() - take..];
+    let p_len = full.len() - continuation.len();
+    let logits = model.forward_logits(full, &mut NullSink);
+    let mut ll = 0f64;
+    for (k, &tok) in continuation.iter().enumerate() {
+        let pos = p_len + k;
+        // logits at pos-1 predict token at pos.
+        ll += log_prob(logits.row(pos - 1), tok as usize);
+    }
+    ll
+}
+
+/// Length-normalized continuation LL (HellaSwag-style scoring).
+pub fn continuation_ll_norm(model: &Gpt, prompt: &[u32], continuation: &[u32]) -> f64 {
+    continuation_ll(model, prompt, continuation) / continuation.len() as f64
+}
+
+/// Mean NLL difference helper used in reports: ppl_delta = ppl_q − ppl_ref.
+pub fn ppl_delta(ppl_q: f64, ppl_ref: f64) -> f64 {
+    ppl_q - ppl_ref
+}
+
+/// Batched greedy-match accuracy of next-token prediction over a stream —
+/// a cheap sanity metric for pretraining quality.
+pub fn next_token_accuracy(model: &Gpt, stream: &[u32], seq_len: usize) -> f64 {
+    let seq_len = seq_len.min(model.cfg.max_seq);
+    let mut hits = 0usize;
+    let mut count = 0usize;
+    let mut start = 0;
+    while start + 2 <= stream.len() && count < 4096 {
+        let end = (start + seq_len).min(stream.len());
+        let window = &stream[start..end];
+        if window.len() < 2 {
+            break;
+        }
+        let logits = model.forward_logits(window, &mut NullSink);
+        for t in 0..window.len() - 1 {
+            if crate::model::argmax(logits.row(t)) == window[t + 1] as usize {
+                hits += 1;
+            }
+            count += 1;
+        }
+        start = end;
+    }
+    hits as f64 / count.max(1) as f64
+}
+
+/// Softmax over a full logit row (used by sampling in serving).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut out: Vec<f32> = logits.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = out.iter().sum();
+    for v in &mut out {
+        *v /= sum;
+    }
+    out
+}
+
+/// The reference logits distance used in integration tests: max |Δ| over
+/// the final position.
+pub fn logits_max_diff(a: &Matrix, b: &Matrix) -> f32 {
+    a.max_diff(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_model;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn log_prob_matches_manual() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let lp = log_prob(&logits, 2);
+        let z: f64 = logits.iter().map(|&x| (x as f64).exp()).sum();
+        let want = (3f64.exp() / z).ln();
+        assert!((lp - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perplexity_uniform_model_close_to_vocab() {
+        // An untrained synthetic model is near-uniform ⇒ PPL ≈ vocab size.
+        let model = synthetic_model("micro", 15).unwrap();
+        let corpus = crate::data::corpus(model.cfg.vocab_size, "wiki").unwrap();
+        let stream = corpus.stream(&mut Pcg64::seed(3), 256);
+        let ppl = perplexity(&model, &stream, 32);
+        let v = model.cfg.vocab_size as f64;
+        assert!(ppl > v * 0.3 && ppl < v * 3.0, "ppl={ppl} vocab={v}");
+    }
+
+    #[test]
+    fn continuation_ll_additivity() {
+        let model = synthetic_model("micro", 16).unwrap();
+        let prompt = vec![3u32, 5, 7];
+        let cont = vec![11u32, 13];
+        let ll_joint = continuation_ll(&model, &prompt, &cont);
+        let ll_a = continuation_ll(&model, &prompt, &cont[..1].to_vec());
+        let mut p2 = prompt.clone();
+        p2.push(cont[0]);
+        let ll_b = continuation_ll(&model, &p2, &cont[1..].to_vec());
+        assert!((ll_joint - (ll_a + ll_b)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let s = softmax(&[0.0, 1.0, -2.0, 5.0]);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(s[3] > s[1]);
+    }
+
+    #[test]
+    fn ll_norm_divides_by_len() {
+        let model = synthetic_model("micro", 17).unwrap();
+        let ll = continuation_ll(&model, &[1, 2], &[3, 4]);
+        let lln = continuation_ll_norm(&model, &[1, 2], &[3, 4]);
+        assert!((lln - ll / 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,357 @@
+//! Synthetic zero-shot evaluation tasks.
+//!
+//! Stand-ins for the paper's benchmark suites (DESIGN.md §3). Each task is
+//! multiple-choice over token continuations scored by (length-normalized)
+//! log-likelihood — the same protocol OpenCompass uses for ARC/HellaSwag &
+//! co. The tasks probe the grammar rules the models were pretrained on, at
+//! increasing difficulty:
+//!
+//! - `arc_e`  — 2-way verb agreement (easy).
+//! - `arc_c`  — 4-way verb agreement with near-class distractors (hard).
+//! - `mmlu`   — 4-way mixed rule probing with longer, distracting context.
+//! - `hella`  — 4-way multi-token sentence completion, length-normalized.
+//! - `piqa`   — 2-way determiner-number agreement.
+//! - `gsm`    — long-horizon consistency: subject introduced sentences ago
+//!              must still govern the verb (chain "reasoning" stand-in).
+//! - `heval`  — structural validity: choose the continuation that keeps the
+//!              template well-formed (code-structure stand-in).
+
+use super::{continuation_ll, continuation_ll_norm};
+use crate::data::corpus::Corpus;
+use crate::data::vocab::{Cat, N_CLASSES};
+use crate::model::Gpt;
+use crate::util::rng::Pcg64;
+
+/// One multiple-choice instance.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub prompt: Vec<u32>,
+    pub options: Vec<Vec<u32>>,
+    pub correct: usize,
+    /// length-normalize the option scores (multi-token options).
+    pub norm: bool,
+}
+
+/// A named task set.
+pub struct TaskSet {
+    pub name: String,
+    pub tasks: Vec<Task>,
+}
+
+pub fn task_names() -> Vec<&'static str> {
+    vec!["arc_e", "arc_c", "mmlu", "hella", "piqa", "gsm", "heval"]
+}
+
+/// Generate `n` instances of the named task.
+pub fn generate(corpus: &Corpus, name: &str, n: usize, seed: u64) -> anyhow::Result<TaskSet> {
+    let mut rng = Pcg64::new(seed, crate::util::rng::hash_label(name));
+    let mut tasks = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = match name {
+            "arc_e" => agreement_task(corpus, &mut rng, 2, false),
+            "arc_c" => agreement_task(corpus, &mut rng, 4, true),
+            "mmlu" => mixed_rule_task(corpus, &mut rng),
+            "hella" => completion_task(corpus, &mut rng),
+            "piqa" => number_task(corpus, &mut rng),
+            "gsm" => chain_task(corpus, &mut rng),
+            "heval" => structure_task(corpus, &mut rng),
+            other => anyhow::bail!("unknown task '{other}'"),
+        };
+        tasks.push(t);
+    }
+    Ok(TaskSet { name: name.to_string(), tasks })
+}
+
+/// Score a task set: fraction of instances where the correct option has the
+/// highest (normalized) LL. Returns accuracy in percent.
+///
+/// Uses KV-prefix reuse: the prompt is forwarded once per task, every option
+/// is scored from a clone of the prompt cache — the same prefix-sharing
+/// trick the serving stack uses, cutting cost by ~n_options×.
+pub fn evaluate(model: &Gpt, set: &TaskSet) -> f64 {
+    let mut hits = 0usize;
+    for t in &set.tasks {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        // Prefill the prompt once.
+        let mut cache = crate::model::KvCache::new(&model.cfg);
+        let mut logits = Vec::new();
+        for &tok in &t.prompt {
+            logits = model.forward_step(tok, &mut cache);
+        }
+        for (i, opt) in t.options.iter().enumerate() {
+            let mut ll = super::log_prob(&logits, opt[0] as usize);
+            if opt.len() > 1 {
+                let mut c = cache.clone();
+                let mut lg = model.forward_step(opt[0], &mut c);
+                for &tok in &opt[1..] {
+                    ll += super::log_prob(&lg, tok as usize);
+                    lg = model.forward_step(tok, &mut c);
+                }
+            }
+            let score = if t.norm { ll / opt.len() as f64 } else { ll };
+            if score > best.0 {
+                best = (score, i);
+            }
+        }
+        if best.1 == t.correct {
+            hits += 1;
+        }
+    }
+    100.0 * hits as f64 / set.tasks.len().max(1) as f64
+}
+
+/// Reference (non-cached) scorer kept for the equivalence test.
+pub fn evaluate_reference(model: &Gpt, set: &TaskSet) -> f64 {
+    let mut hits = 0usize;
+    for t in &set.tasks {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (i, opt) in t.options.iter().enumerate() {
+            let ll = if t.norm {
+                continuation_ll_norm(model, &t.prompt, opt)
+            } else {
+                continuation_ll(model, &t.prompt, opt)
+            };
+            if ll > best.0 {
+                best = (ll, i);
+            }
+        }
+        if best.1 == t.correct {
+            hits += 1;
+        }
+    }
+    100.0 * hits as f64 / set.tasks.len().max(1) as f64
+}
+
+// -- generators -------------------------------------------------------------
+
+fn noun_of_class(c: &Corpus, rng: &mut Pcg64, class: usize) -> u32 {
+    // Noun layout: index = block·(2·N_CLASSES) + class·2 + parity.
+    let n = c.vocab.count(Cat::Noun);
+    let stride = 2 * N_CLASSES;
+    let parity = rng.below(2);
+    let offset = class * 2 + parity;
+    let blocks = (n - offset + stride - 1) / stride;
+    // Favor frequent (low-index) nouns the pretrained model has seen a lot.
+    let block = rng.below(blocks.min(8).max(1));
+    c.vocab.nth(Cat::Noun, block * stride + offset)
+}
+
+fn verb_of_class(c: &Corpus, rng: &mut Pcg64, class: usize) -> u32 {
+    let n = c.vocab.count(Cat::Verb);
+    let blocks = (n - class + N_CLASSES - 1) / N_CLASSES;
+    let block = rng.below(blocks.min(8).max(1));
+    c.vocab.nth(Cat::Verb, block * N_CLASSES + class)
+}
+
+/// DET NOUN_c → pick VERB_c among distractor verbs of other classes.
+fn agreement_task(c: &Corpus, rng: &mut Pcg64, n_opts: usize, near: bool) -> Task {
+    let class = rng.below(N_CLASSES);
+    let noun = noun_of_class(c, rng, class);
+    let det = c.vocab.det_for(c.vocab.is_plural_noun(noun), rng.below(4));
+    let prompt = vec![det, noun];
+    let mut options = vec![vec![verb_of_class(c, rng, class)]];
+    for k in 1..n_opts {
+        // near-class distractors differ by 1..3; far by anything ≠ class.
+        let wrong = if near {
+            (class + k) % N_CLASSES
+        } else {
+            (class + N_CLASSES / 2) % N_CLASSES
+        };
+        options.push(vec![verb_of_class(c, rng, wrong)]);
+    }
+    shuffle_to_task(rng, prompt, options, false)
+}
+
+/// Longer context with an interleaved distractor clause, 4-way verb choice.
+fn mixed_rule_task(c: &Corpus, rng: &mut Pcg64) -> Task {
+    let mut prompt = c.sentence(rng); // distractor sentence
+    let class = rng.below(N_CLASSES);
+    let noun = noun_of_class(c, rng, class);
+    prompt.push(c.vocab.det_for(c.vocab.is_plural_noun(noun), rng.below(4)));
+    prompt.push(noun);
+    let mut options = vec![vec![verb_of_class(c, rng, class)]];
+    for k in 1..4 {
+        options.push(vec![verb_of_class(c, rng, (class + k) % N_CLASSES)]);
+    }
+    shuffle_to_task(rng, prompt, options, false)
+}
+
+/// Multi-token completion: correct = [VERB_c, DET, NOUN]; distractors break
+/// agreement or structure. Length-normalized.
+fn completion_task(c: &Corpus, rng: &mut Pcg64) -> Task {
+    let class = rng.below(N_CLASSES);
+    let noun = noun_of_class(c, rng, class);
+    let det = c.vocab.det_for(c.vocab.is_plural_noun(noun), rng.below(4));
+    let prompt = vec![det, noun];
+    let obj_class = rng.below(N_CLASSES);
+    let obj = noun_of_class(c, rng, obj_class);
+    let obj_det = c.vocab.det_for(c.vocab.is_plural_noun(obj), rng.below(4));
+    let good = vec![verb_of_class(c, rng, class), obj_det, obj];
+    let bad1 = vec![verb_of_class(c, rng, (class + 3) % N_CLASSES), obj_det, obj];
+    // structure-breaking: verb verb noun
+    let rand_class = rng.below(N_CLASSES);
+    let bad2 = vec![
+        verb_of_class(c, rng, class),
+        verb_of_class(c, rng, rand_class),
+        obj,
+    ];
+    // number-breaking object determiner
+    let wrong_det = c.vocab.det_for(!c.vocab.is_plural_noun(obj), rng.below(4));
+    let bad3 = vec![verb_of_class(c, rng, class), wrong_det, obj];
+    shuffle_to_task(rng, prompt, vec![good, bad1, bad2, bad3], true)
+}
+
+/// Determiner-number agreement, 2-way.
+fn number_task(c: &Corpus, rng: &mut Pcg64) -> Task {
+    let class = rng.below(N_CLASSES);
+    let noun = noun_of_class(c, rng, class);
+    let plural = c.vocab.is_plural_noun(noun);
+    let prompt = vec![c.vocab.det_for(plural, rng.below(4))];
+    let good = vec![noun];
+    // distractor: same class, opposite number
+    let mut other = noun;
+    for k in 0..c.vocab.count(Cat::Noun) {
+        let cand = c.vocab.nth(Cat::Noun, k);
+        if c.vocab.class_of(cand) == class && c.vocab.is_plural_noun(cand) != plural {
+            other = cand;
+            break;
+        }
+    }
+    shuffle_to_task(rng, prompt, vec![good, vec![other]], false)
+}
+
+/// Long-horizon: subject sentence, then 1-2 distractor sentences, then the
+/// subject's determiner repeats and the verb must agree with the *original*
+/// class.
+fn chain_task(c: &Corpus, rng: &mut Pcg64) -> Task {
+    let class = rng.below(N_CLASSES);
+    let noun = noun_of_class(c, rng, class);
+    let det = c.vocab.det_for(c.vocab.is_plural_noun(noun), rng.below(4));
+    let mut prompt = vec![det, noun, verb_of_class(c, rng, class), c.vocab.nth(Cat::Punct, 0)];
+    for _ in 0..1 + rng.below(2) {
+        prompt.extend(c.sentence(rng));
+    }
+    prompt.push(det);
+    prompt.push(noun);
+    let mut options = vec![vec![verb_of_class(c, rng, class)]];
+    for k in 1..4 {
+        options.push(vec![verb_of_class(c, rng, (class + k) % N_CLASSES)]);
+    }
+    shuffle_to_task(rng, prompt, options, false)
+}
+
+/// Structural validity: after "DET ADJ? NOUN VERB DET", the continuation
+/// must be a NOUN (valid) vs VERB/DET/PUNCT (invalid).
+fn structure_task(c: &Corpus, rng: &mut Pcg64) -> Task {
+    let class = rng.below(N_CLASSES);
+    let noun = noun_of_class(c, rng, class);
+    let obj_class = rng.below(N_CLASSES);
+    let obj = noun_of_class(c, rng, obj_class);
+    let prompt = vec![
+        c.vocab.det_for(c.vocab.is_plural_noun(noun), rng.below(4)),
+        noun,
+        verb_of_class(c, rng, class),
+        c.vocab.det_for(c.vocab.is_plural_noun(obj), rng.below(4)),
+    ];
+    let good = vec![obj];
+    let bad1_class = rng.below(N_CLASSES);
+    let bad1 = vec![verb_of_class(c, rng, bad1_class)];
+    let bad2 = vec![c.vocab.det_for(rng.f64() < 0.5, rng.below(4))];
+    let bad3 = vec![c.vocab.nth(Cat::Punct, rng.below(5))];
+    shuffle_to_task(rng, prompt, vec![good, bad1, bad2, bad3], false)
+}
+
+fn shuffle_to_task(rng: &mut Pcg64, prompt: Vec<u32>, options: Vec<Vec<u32>>, norm: bool) -> Task {
+    // options[0] is correct; shuffle positions.
+    let n = options.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&i| i == 0).unwrap();
+    let options = order.into_iter().map(|i| options[i].clone()).collect();
+    Task { prompt, options, correct, norm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus;
+    use crate::model::synthetic_model;
+
+    fn test_corpus() -> Corpus {
+        corpus(512, "wiki").unwrap()
+    }
+
+    #[test]
+    fn generators_produce_valid_tasks() {
+        let c = test_corpus();
+        for name in task_names() {
+            let set = generate(&c, name, 20, 3).unwrap();
+            assert_eq!(set.tasks.len(), 20, "{name}");
+            for t in &set.tasks {
+                assert!(!t.prompt.is_empty());
+                assert!(t.options.len() >= 2);
+                assert!(t.correct < t.options.len());
+                assert!(t.options.iter().all(|o| !o.is_empty()));
+                // options must be distinct
+                for i in 0..t.options.len() {
+                    for j in i + 1..t.options.len() {
+                        assert_ne!(t.options[i], t.options[j], "{name}: dup options");
+                    }
+                }
+            }
+        }
+        assert!(generate(&c, "nope", 1, 0).is_err());
+    }
+
+    #[test]
+    fn correct_option_respects_agreement() {
+        let c = test_corpus();
+        let set = generate(&c, "arc_e", 50, 7).unwrap();
+        for t in &set.tasks {
+            let noun = t.prompt[1];
+            let correct_verb = t.options[t.correct][0];
+            assert_eq!(c.vocab.class_of(noun), c.vocab.class_of(correct_verb));
+            for (i, opt) in t.options.iter().enumerate() {
+                if i != t.correct {
+                    assert_ne!(c.vocab.class_of(noun), c.vocab.class_of(opt[0]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn untrained_model_near_chance() {
+        let c = test_corpus();
+        let model = synthetic_model("micro", 21).unwrap();
+        // micro model has vocab 128 but corpus vocab is 512 — build matching corpus
+        let c128 = corpus(128, "wiki").unwrap();
+        let _ = c;
+        let set = generate(&c128, "arc_e", 40, 9).unwrap();
+        let acc = evaluate(&model, &set);
+        // 2-way chance = 50%; untrained model should be within a wide band.
+        assert!((20.0..80.0).contains(&acc), "acc={acc}");
+    }
+
+    #[test]
+    fn cached_and_reference_scorers_agree() {
+        let c128 = corpus(128, "wiki").unwrap();
+        let model = synthetic_model("micro", 22).unwrap();
+        for name in ["arc_e", "hella", "gsm"] {
+            let set = generate(&c128, name, 15, 4).unwrap();
+            let a = evaluate(&model, &set);
+            let b = evaluate_reference(&model, &set);
+            assert!((a - b).abs() < 1e-9, "{name}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let c = test_corpus();
+        let a = generate(&c, "hella", 10, 42).unwrap();
+        let b = generate(&c, "hella", 10, 42).unwrap();
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! # ASER — Activation Smoothing and Error Reconstruction
+//!
+//! Full-system reproduction of "ASER: Activation Smoothing and Error
+//! Reconstruction for Large Language Model Quantization" (AAAI 2025).
+//!
+//! Architecture (three layers, python never on the request path):
+//! - **L3 (this crate)**: quantization pipeline coordinator, serving runtime
+//!   (router / batcher / KV-cache), evaluation + benchmark harness, and every
+//!   substrate they need (tensor/linalg/quant/model/data), all std-only.
+//! - **L2/L1 (python/compile)**: JAX model + Pallas kernels, AOT-lowered to
+//!   HLO text artifacts loaded by [`runtime`] through PJRT.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod analysis;
+pub mod calib;
+pub mod cli_entry;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod methods;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,265 @@
+//! Cholesky factorization and triangular utilities (f64 internals).
+//!
+//! The ASER whitening step needs `S` with `X Xᵀ = S Sᵀ` (paper Eq. 5, via
+//! Cholesky of the calibration Gram matrix) and then `S⁻¹`. Gram matrices
+//! from finite calibration sets are frequently rank-deficient, so we provide
+//! a jittered factorization that escalates diagonal damping until the
+//! factorization succeeds — the standard PTQ trick (GPTQ uses the same on
+//! its Hessian).
+
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor stored dense row-major, f64.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    pub n: usize,
+    /// Row-major n×n; entries above the diagonal are zero.
+    pub l: Vec<f64>,
+    /// The damping that was actually applied to the diagonal (0 if none).
+    pub jitter: f64,
+}
+
+impl Cholesky {
+    /// Plain factorization of a symmetric positive-definite matrix `a`
+    /// (row-major n×n). Fails on non-PD input.
+    pub fn new(a: &[f64], n: usize) -> Result<Cholesky> {
+        Self::with_jitter(a, n, 0.0)
+    }
+
+    fn with_jitter(a: &[f64], n: usize, jitter: f64) -> Result<Cholesky> {
+        assert_eq!(a.len(), n * n);
+        let mut l = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[i * n + j];
+                if i == j {
+                    sum += jitter;
+                }
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        bail!("matrix not positive definite at pivot {i} (sum={sum})");
+                    }
+                    l[i * n + j] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky { n, l, jitter })
+    }
+
+    /// Factorize with escalating diagonal jitter (relative to mean diagonal)
+    /// until success. Mirrors GPTQ's `percdamp` practice.
+    pub fn damped(a: &[f64], n: usize) -> Result<Cholesky> {
+        let mean_diag = (0..n).map(|i| a[i * n + i]).sum::<f64>() / n as f64;
+        let base = mean_diag.abs().max(1e-12);
+        let mut rel = 0.0f64;
+        for attempt in 0..12 {
+            let jitter = base * rel;
+            match Self::with_jitter(a, n, jitter) {
+                Ok(c) => return Ok(c),
+                Err(_) => {
+                    rel = if attempt == 0 { 1e-8 } else { rel * 10.0 };
+                }
+            }
+        }
+        bail!("cholesky failed even with jitter {:.3e}", base * rel)
+    }
+
+    /// Solve L y = b (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0f64; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[i * n + k] * y[k];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        y
+    }
+
+    /// Solve Lᵀ x = b (back substitution).
+    pub fn solve_upper_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut x = vec![0f64; n];
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in i + 1..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        x
+    }
+
+    /// Solve A x = b with A = L Lᵀ.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper_t(&self.solve_lower(b))
+    }
+
+    /// Dense inverse of the lower-triangular factor: L⁻¹ (row-major n×n).
+    /// Needed for the whitening matrices `S⁻¹` and `L_B = V_rᵀ S⁻¹`.
+    pub fn inverse_lower(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut inv = vec![0f64; n * n];
+        // Column by column: L · inv[:, j] = e_j; inv is lower triangular.
+        for j in 0..n {
+            inv[j * n + j] = 1.0 / self.l[j * n + j];
+            for i in j + 1..n {
+                let mut s = 0f64;
+                for k in j..i {
+                    s -= self.l[i * n + k] * inv[k * n + j];
+                }
+                inv[i * n + j] = s / self.l[i * n + i];
+            }
+        }
+        inv
+    }
+
+    /// log-determinant of A = L Lᵀ.
+    pub fn logdet(&self) -> f64 {
+        2.0 * (0..self.n).map(|i| self.l[i * self.n + i].ln()).sum::<f64>()
+    }
+}
+
+/// Dense lower-triangular matvec: y = L x.
+pub fn lower_matvec(l: &[f64], n: usize, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0f64; n];
+    for i in 0..n {
+        let mut s = 0f64;
+        for k in 0..=i {
+            s += l[i * n + k] * x[k];
+        }
+        y[i] = s;
+    }
+    y
+}
+
+/// C = A·B for dense row-major f64 (small helper for tests/whitening).
+pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f64; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Random SPD matrix A = B Bᵀ + n·I.
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal() as f64).collect();
+        let mut a = matmul_f64(&b, &transpose(&b, n, n), n, n, n);
+        for i in 0..n {
+            a[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    fn transpose(a: &[f64], m: usize, n: usize) -> Vec<f64> {
+        let mut t = vec![0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                t[j * m + i] = a[i * n + j];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Pcg64::seed(3);
+        for n in [1, 2, 5, 17, 40] {
+            let a = random_spd(&mut rng, n);
+            let ch = Cholesky::new(&a, n).unwrap();
+            let lt = transpose(&ch.l, n, n);
+            let back = matmul_f64(&ch.l, &lt, n, n, n);
+            let scale = a.iter().fold(0f64, |m, x| m.max(x.abs()));
+            for (x, y) in a.iter().zip(&back) {
+                assert!((x - y).abs() / scale < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Pcg64::seed(4);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let ch = Cholesky::new(&a, n).unwrap();
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 - 3.0) / 2.0).collect();
+        let b = matmul_f64(&a, &x_true, n, n, 1);
+        let x = ch.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inverse_lower_is_inverse() {
+        let mut rng = Pcg64::seed(5);
+        let n = 20;
+        let a = random_spd(&mut rng, n);
+        let ch = Cholesky::new(&a, n).unwrap();
+        let inv = ch.inverse_lower();
+        let prod = matmul_f64(&ch.l, &inv, n, n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[i * n + j] - want).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite_but_damped_succeeds() {
+        // Rank-1 Gram: singular, plain Cholesky must fail, damped must work.
+        let n = 4;
+        let v = [1.0, 2.0, 3.0, 4.0];
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = v[i] * v[j];
+            }
+        }
+        assert!(Cholesky::new(&a, n).is_err());
+        let ch = Cholesky::damped(&a, n).unwrap();
+        assert!(ch.jitter > 0.0);
+        // Still close to the original on the dominant direction.
+        let y = lower_matvec(&ch.l, n, &ch.solve_lower(&v.to_vec()));
+        for (yi, vi) in y.iter().zip(&v) {
+            assert!((yi - vi).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn logdet_identity_zero() {
+        let n = 6;
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let ch = Cholesky::new(&a, n).unwrap();
+        assert!(ch.logdet().abs() < 1e-12);
+    }
+}

@@ -1,0 +1,193 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and the Gram-trick SVD.
+//!
+//! The ASER pipeline takes one SVD per linear layer; for tall error
+//! matrices (e.g. fc1: 1024×256) one-sided Jacobi costs
+//! O(sweeps · m · n²). The Gram trick — eigh of AᵀA (n×n) followed by
+//! U = A·V·Σ⁻¹ — costs O(m·n² + sweeps·n³), a ~sweeps·m/n speedup, at the
+//! price of squaring the condition number. Quantization-error spectra are
+//! flat enough (σ₁/σₙ ≲ 1e3) that f64 internals keep the top-r components
+//! we truncate to accurate; the §Perf log records the cross-check against
+//! the one-sided reference.
+
+use crate::tensor::Matrix;
+
+/// Eigendecomposition of a symmetric matrix (row-major f64, n×n).
+/// Returns (eigenvalues descending, eigenvectors as rows of V: V[k] is the
+/// k-th eigenvector).
+pub fn eigh_jacobi(a: &[f64], n: usize) -> (Vec<f64>, Vec<Vec<f64>>) {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    let mut v: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..n).map(|j| if i == j { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let scale = a.iter().fold(0f64, |acc, x| acc.max(x.abs())).max(1e-300);
+    let eps = 1e-14 * scale;
+    for _sweep in 0..60 {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[p * n + q];
+                off = off.max(apq.abs());
+                if apq.abs() <= eps {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Update rows/cols p and q of the symmetric matrix.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vpk = v[p][k];
+                    let vqk = v[q][k];
+                    v[p][k] = c * vpk - s * vqk;
+                    v[q][k] = s * vpk + c * vqk;
+                }
+            }
+        }
+        if off <= eps {
+            break;
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let vecs: Vec<Vec<f64>> = order.iter().map(|&i| v[i].clone()).collect();
+    (vals, vecs)
+}
+
+/// Gram-trick SVD: fast path used by the quantization pipeline.
+/// Semantics match [`super::svd::svd`] (thin SVD, σ descending).
+pub fn svd_gram(a: &Matrix) -> super::svd::Svd {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        let t = svd_gram(&a.transpose());
+        return super::svd::Svd {
+            u: t.vt.transpose(),
+            s: t.s,
+            vt: t.u.transpose(),
+            sweeps: t.sweeps,
+        };
+    }
+    // G = AᵀA in f64.
+    let g = crate::tensor::gram_cols_f64(a);
+    let (vals, vecs) = eigh_jacobi(&g, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Matrix::zeros(n, n);
+    for k in 0..n {
+        s.push(vals[k].max(0.0).sqrt() as f32);
+        for j in 0..n {
+            vt[(k, j)] = vecs[k][j] as f32;
+        }
+    }
+    // U = A V Σ⁻¹, column by column; zero for negligible σ.
+    let mut u = Matrix::zeros(m, n);
+    let sigma_floor = s.first().copied().unwrap_or(0.0) as f64 * 1e-7;
+    for k in 0..n {
+        let sk = s[k] as f64;
+        if sk <= sigma_floor || sk == 0.0 {
+            continue;
+        }
+        let inv = (1.0 / sk) as f32;
+        for i in 0..m {
+            let mut acc = 0f32;
+            let row = a.row(i);
+            let vk = vt.row(k);
+            acc += crate::tensor::dot(row, vk);
+            u[(i, k)] = acc * inv;
+        }
+    }
+    super::svd::Svd { u, s, vt, sweeps: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn eigh_identity() {
+        let n = 5;
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = (i + 1) as f64;
+        }
+        let (vals, vecs) = eigh_jacobi(&a, n);
+        assert!((vals[0] - 5.0).abs() < 1e-12);
+        assert!((vals[4] - 1.0).abs() < 1e-12);
+        // eigenvectors orthonormal
+        for i in 0..n {
+            for j in 0..n {
+                let dot: f64 = vecs[i].iter().zip(&vecs[j]).map(|(a, b)| a * b).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_reconstructs_symmetric() {
+        let mut rng = Pcg64::seed(201);
+        let n = 12;
+        let b = Matrix::randn(&mut rng, n, n, 1.0);
+        let g = crate::tensor::gram_cols_f64(&b);
+        let (vals, vecs) = eigh_jacobi(&g, n);
+        // A = Σ λ_k v_k v_kᵀ
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for k in 0..n {
+                    acc += vals[k] * vecs[k][i] * vecs[k][j];
+                }
+                assert!((acc - g[i * n + j]).abs() < 1e-8 * vals[0].abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn svd_gram_matches_jacobi_on_spectra() {
+        let mut rng = Pcg64::seed(202);
+        for (m, n) in [(20, 20), (48, 16), (16, 48)] {
+            let a = Matrix::randn(&mut rng, m, n, 1.0);
+            let f1 = svd(&a);
+            let f2 = svd_gram(&a);
+            for k in 0..m.min(n) {
+                let rel = (f1.s[k] - f2.s[k]).abs() / f1.s[0].max(1e-9);
+                assert!(rel < 1e-4, "({m},{n}) σ{k}: {} vs {}", f1.s[k], f2.s[k]);
+            }
+            // rank-r reconstruction must match the reference reconstruction
+            let r = 4.min(m.min(n));
+            let r1 = f1.reconstruct(r);
+            let r2 = f2.reconstruct(r);
+            assert!(r1.max_diff(&r2) < 1e-3, "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn svd_gram_handles_rank_deficient() {
+        let mut rng = Pcg64::seed(203);
+        let u = Matrix::randn(&mut rng, 30, 3, 1.0);
+        let v = Matrix::randn(&mut rng, 3, 18, 1.0);
+        let a = crate::tensor::matmul(&u, &v);
+        let f = svd_gram(&a);
+        assert!(f.s[3] < 1e-3 * f.s[0]);
+        let r3 = f.reconstruct(3);
+        assert!(a.max_diff(&r3) < 1e-2);
+    }
+}

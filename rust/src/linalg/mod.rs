@@ -1,0 +1,13 @@
+//! Dense linear algebra substrate: Cholesky factorization (with GPTQ-style
+//! damping), one-sided Jacobi SVD, whitening transforms, effective rank and
+//! the paper's rank-selection rule.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod svd;
+pub mod whiten;
+
+pub use cholesky::Cholesky;
+pub use eigh::{eigh_jacobi, svd_gram};
+pub use svd::{effective_rank, rank_for_threshold, svd, Svd};
+pub use whiten::Whitener;

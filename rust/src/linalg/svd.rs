@@ -1,0 +1,304 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! ASER's whitening SVD (paper Eq. 6) factors `E_q S = U Σ Vᵀ` with
+//! `E_q S` square (d×d, d = hidden dim). One-sided Jacobi is simple,
+//! numerically robust (it computes small singular values to high relative
+//! accuracy) and O(d³ · sweeps); fast enough for d ≤ 512 at calibration
+//! time. Internals are f64; inputs/outputs are the f32 `Matrix` type.
+
+use crate::tensor::Matrix;
+
+/// Thin SVD result: `a ≈ u · diag(s) · vt` with `u`: m×k, `s`: k, `vt`: k×n,
+/// k = min(m, n), singular values descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub vt: Matrix,
+    pub sweeps: usize,
+}
+
+/// One-sided Jacobi SVD. Orthogonalizes the *columns* of a working copy of
+/// `A` by plane rotations accumulated into V; at convergence the column
+/// norms are the singular values and the normalized columns are U.
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    // For tall-thin inputs work as-is; for wide inputs factor the transpose
+    // and swap (U,V) — one-sided Jacobi wants m >= n for efficiency.
+    if m < n {
+        let t = svd(&a.transpose());
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose(), sweeps: t.sweeps };
+    }
+    // Working copy in f64, column-major for cheap column ops.
+    let mut w: Vec<Vec<f64>> = (0..n).map(|j| (0..m).map(|i| a[(i, j)] as f64).collect()).collect();
+    let mut v: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..n).map(|i| if i == j { 1.0 } else { 0.0 }).collect())
+        .collect();
+
+    let scale = a.max_abs().max(f32::MIN_POSITIVE) as f64;
+    let eps = 1e-15 * scale * scale * m as f64;
+    let max_sweeps = 60;
+    let mut sweeps = 0;
+    for sweep in 0..max_sweeps {
+        sweeps = sweep + 1;
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // 2x2 Gram block of columns p, q.
+                let (mut app, mut aqq, mut apq) = (0f64, 0f64, 0f64);
+                for i in 0..m {
+                    app += w[p][i] * w[p][i];
+                    aqq += w[q][i] * w[q][i];
+                    apq += w[p][i] * w[q][i];
+                }
+                off = off.max(apq.abs());
+                if apq.abs() <= eps || apq.abs() <= 1e-14 * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation annihilating apq.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[p][i];
+                    let wq = w[q][i];
+                    w[p][i] = c * wp - s * wq;
+                    w[q][i] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[p][i];
+                    let vq = v[q][i];
+                    v[p][i] = c * vp - s * vq;
+                    v[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off <= eps {
+            break;
+        }
+    }
+
+    // Column norms = singular values; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = w.iter().map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (k, &j) in order.iter().enumerate() {
+        let norm = norms[j];
+        s.push(norm as f32);
+        if norm > 0.0 {
+            for i in 0..m {
+                u[(i, k)] = (w[j][i] / norm) as f32;
+            }
+        } else {
+            // Null direction: leave U column zero (callers truncate anyway).
+        }
+        for i in 0..n {
+            vt[(k, i)] = v[j][i] as f32;
+        }
+    }
+    Svd { u, s, vt, sweeps }
+}
+
+impl Svd {
+    /// Reconstruct the rank-r approximation U_r Σ_r V_rᵀ.
+    pub fn reconstruct(&self, r: usize) -> Matrix {
+        let r = r.min(self.s.len());
+        let mut out = Matrix::zeros(self.u.rows, self.vt.cols);
+        for k in 0..r {
+            let sk = self.s[k];
+            if sk == 0.0 {
+                continue;
+            }
+            for i in 0..out.rows {
+                let uik = self.u[(i, k)] * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                let vrow = self.vt.row(k);
+                for (o, &v) in orow.iter_mut().zip(vrow) {
+                    *o += uik * v;
+                }
+            }
+        }
+        out
+    }
+
+    /// `L_A = U_r Σ_r` (m×r).
+    pub fn factor_a(&self, r: usize) -> Matrix {
+        let r = r.min(self.s.len());
+        Matrix::from_fn(self.u.rows, r, |i, k| self.u[(i, k)] * self.s[k])
+    }
+
+    /// `V_rᵀ` (r×n).
+    pub fn factor_vt(&self, r: usize) -> Matrix {
+        let r = r.min(self.s.len());
+        self.vt.rows_slice(0, r)
+    }
+}
+
+/// Effective rank (Roy & Vetterli 2007; paper Eq. 3-4): exp of the entropy
+/// of the normalized singular-value distribution.
+pub fn effective_rank(s: &[f32]) -> f32 {
+    let total: f64 = s.iter().map(|&x| x.max(0.0) as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let eps = 1e-12;
+    let mut h = 0f64;
+    for &x in s {
+        let p = (x.max(0.0) as f64) / total + eps;
+        h -= p * p.ln();
+    }
+    h.exp() as f32
+}
+
+/// Smallest r with cumsum(σ)/sum(σ) ≥ α — the paper's rank-selection rule
+/// (Eq. 9: the largest r with ratio < α, plus one to reach the threshold).
+pub fn rank_for_threshold(s: &[f32], alpha: f64) -> usize {
+    let total: f64 = s.iter().map(|&x| x as f64).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0f64;
+    for (i, &x) in s.iter().enumerate() {
+        acc += x as f64;
+        if acc / total >= alpha {
+            return i + 1;
+        }
+    }
+    s.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::rng::Pcg64;
+
+    fn check_orthonormal_cols(m: &Matrix, k: usize, tol: f32) {
+        for a in 0..k {
+            for b in a..k {
+                let mut dot = 0f32;
+                for i in 0..m.rows {
+                    dot += m[(i, a)] * m[(i, b)];
+                }
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < tol, "cols {a},{b}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstructs_random_square() {
+        let mut rng = Pcg64::seed(21);
+        for n in [1, 2, 8, 33] {
+            let a = Matrix::randn(&mut rng, n, n, 1.0);
+            let f = svd(&a);
+            let full = f.reconstruct(n);
+            assert!(a.max_diff(&full) < 1e-3 * a.max_abs().max(1.0), "n={n}");
+            check_orthonormal_cols(&f.u, n, 1e-4);
+            check_orthonormal_cols(&f.vt.transpose(), n, 1e-4);
+            // descending
+            for i in 1..f.s.len() {
+                assert!(f.s[i - 1] >= f.s[i] - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn reconstructs_rectangular_both_ways() {
+        let mut rng = Pcg64::seed(22);
+        for (m, n) in [(20, 7), (7, 20), (31, 16)] {
+            let a = Matrix::randn(&mut rng, m, n, 1.0);
+            let f = svd(&a);
+            assert_eq!(f.u.rows, m);
+            assert_eq!(f.vt.cols, n);
+            let full = f.reconstruct(m.min(n));
+            assert!(a.max_diff(&full) < 2e-3, "({m},{n}) diff={}", a.max_diff(&full));
+        }
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) → σ = 3,2,1.
+        let a = Matrix::diag(&[1.0, 3.0, 2.0]);
+        let f = svd(&a);
+        assert!((f.s[0] - 3.0).abs() < 1e-5);
+        assert!((f.s[1] - 2.0).abs() < 1e-5);
+        assert!((f.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn low_rank_input_recovered_exactly() {
+        let mut rng = Pcg64::seed(23);
+        let u = Matrix::randn(&mut rng, 24, 3, 1.0);
+        let v = Matrix::randn(&mut rng, 3, 24, 1.0);
+        let a = matmul(&u, &v);
+        let f = svd(&a);
+        // rank 3: σ₄..= ~0
+        assert!(f.s[3] < 1e-4 * f.s[0]);
+        let r3 = f.reconstruct(3);
+        assert!(a.max_diff(&r3) < 1e-3);
+    }
+
+    #[test]
+    fn eckart_young_truncation_error() {
+        let mut rng = Pcg64::seed(24);
+        let a = Matrix::randn(&mut rng, 16, 16, 1.0);
+        let f = svd(&a);
+        for r in [4usize, 8, 12] {
+            let ar = f.reconstruct(r);
+            let err = a.sub(&ar).frob_norm();
+            let want: f32 = f.s[r..].iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((err - want).abs() / want.max(1e-6) < 1e-3, "r={r} err={err} want={want}");
+        }
+    }
+
+    #[test]
+    fn factors_match_reconstruct() {
+        let mut rng = Pcg64::seed(25);
+        let a = Matrix::randn(&mut rng, 12, 12, 1.0);
+        let f = svd(&a);
+        let r = 5;
+        let approx = matmul(&f.factor_a(r), &f.factor_vt(r));
+        assert!(approx.max_diff(&f.reconstruct(r)) < 1e-4);
+    }
+
+    #[test]
+    fn effective_rank_extremes() {
+        // All-equal σ ⇒ eff rank = n. One dominant ⇒ close to 1.
+        let flat = vec![1.0f32; 10];
+        assert!((effective_rank(&flat) - 10.0).abs() < 0.01);
+        let spike = {
+            let mut v = vec![1e-9f32; 10];
+            v[0] = 1.0;
+            v
+        };
+        assert!(effective_rank(&spike) < 1.1);
+        assert_eq!(effective_rank(&[]), 0.0);
+    }
+
+    #[test]
+    fn rank_threshold_rule() {
+        let s = [4.0f32, 3.0, 2.0, 1.0]; // total 10
+        assert_eq!(rank_for_threshold(&s, 0.39), 1); // 0.4 >= 0.39
+        assert_eq!(rank_for_threshold(&s, 0.41), 2); // need 0.7
+        assert_eq!(rank_for_threshold(&s, 1.0), 4);
+        assert_eq!(rank_for_threshold(&s, 0.0), 1);
+        assert_eq!(rank_for_threshold(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(5, 5);
+        let f = svd(&a);
+        assert!(f.s.iter().all(|&x| x == 0.0));
+        assert_eq!(f.reconstruct(5), a);
+    }
+}

@@ -1,0 +1,100 @@
+//! Whitening transform for ASER's Error Reconstruction (paper Eq. 5-6).
+//!
+//! Given the calibration Gram matrix `G = X Xᵀ` over input channels
+//! (d×d, accumulated in f64 by `calib`), compute a lower-triangular `S`
+//! with `G = S Sᵀ` so that `S⁻¹ X` has identity second moment, plus `S⁻¹`
+//! for building `L_B = V_rᵀ S⁻¹`.
+
+use crate::linalg::cholesky::Cholesky;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// The whitening pair (S, S⁻¹) as f32 matrices, plus diagnostics.
+#[derive(Clone, Debug)]
+pub struct Whitener {
+    pub s: Matrix,
+    pub s_inv: Matrix,
+    /// Diagonal damping that Cholesky needed (0 for healthy Grams).
+    pub jitter: f64,
+}
+
+impl Whitener {
+    /// Build from a row-major f64 Gram matrix (d×d).
+    pub fn from_gram(gram: &[f64], d: usize) -> Result<Whitener> {
+        let ch = Cholesky::damped(gram, d)?;
+        let inv = ch.inverse_lower();
+        let s = Matrix::from_fn(d, d, |i, j| ch.l[i * d + j] as f32);
+        let s_inv = Matrix::from_fn(d, d, |i, j| inv[i * d + j] as f32);
+        Ok(Whitener { s, s_inv, jitter: ch.jitter })
+    }
+
+    /// Build directly from an activation sample matrix X (tokens×d):
+    /// G = Xᵀ X scaled by 1/tokens (scaling cancels in L_A·L_B but keeps
+    /// the Cholesky well-conditioned).
+    pub fn from_activations(x: &Matrix) -> Result<Whitener> {
+        let d = x.cols;
+        let mut g = crate::tensor::gram_cols_f64(x);
+        let scale = 1.0 / x.rows.max(1) as f64;
+        for v in &mut g {
+            *v *= scale;
+        }
+        Whitener::from_gram(&g, d)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.s.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{gram_cols_f64, matmul};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn whitened_activations_have_identity_gram() {
+        let mut rng = Pcg64::seed(31);
+        let d = 16;
+        // Anisotropic activations: per-channel scales spanning 3 decades.
+        let mut x = Matrix::randn(&mut rng, 400, d, 1.0);
+        for c in 0..d {
+            let s = 10f32.powf(rng.range_f32(-1.5, 1.5));
+            for r in 0..400 {
+                x[(r, c)] *= s;
+            }
+        }
+        let w = Whitener::from_activations(&x).unwrap();
+        // (S⁻¹ Xᵀ) (S⁻¹ Xᵀ)ᵀ / tokens = I   (X here is tokens×d so Xᵀ is d×tokens)
+        let xt = x.transpose();
+        let wx = matmul(&w.s_inv, &xt);
+        let g = gram_cols_f64(&wx.transpose());
+        for i in 0..d {
+            for j in 0..d {
+                let got = g[i * d + j] / 400.0;
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((got - want).abs() < 1e-2, "({i},{j}): {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn s_times_sinv_is_identity() {
+        let mut rng = Pcg64::seed(32);
+        let x = Matrix::randn(&mut rng, 100, 12, 1.0);
+        let w = Whitener::from_activations(&x).unwrap();
+        let prod = matmul(&w.s, &w.s_inv);
+        assert!(prod.max_diff(&Matrix::eye(12)) < 1e-4);
+    }
+
+    #[test]
+    fn degenerate_gram_gets_jitter() {
+        // Fewer samples than channels ⇒ singular Gram.
+        let mut rng = Pcg64::seed(33);
+        let x = Matrix::randn(&mut rng, 4, 16, 1.0);
+        let w = Whitener::from_activations(&x).unwrap();
+        assert!(w.jitter > 0.0);
+        assert!(w.s.is_finite());
+        assert!(w.s_inv.is_finite());
+    }
+}

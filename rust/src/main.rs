@@ -1,0 +1,21 @@
+//! `repro` — the L3 coordinator CLI.
+//!
+//! Subcommands (see `repro help`):
+//!   gen-corpus   write training token streams for the python pretrain step
+//!   calibrate    capture per-layer calibration statistics
+//!   quantize     run a PTQ method over a model, save the quantized model
+//!   eval         perplexity + zero-shot accuracy of a (quantized) model
+//!   serve        run the batching server demo over a quantized model
+//!   bench-table  regenerate a paper table (t1..t8)
+//!   figure       regenerate a paper figure (f2..f8)
+//!   runtime-check load + execute the AOT HLO artifacts via PJRT
+
+use aser::cli_entry;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cli_entry::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,346 @@
+//! ASER — the paper's method (Algorithm 1).
+//!
+//! **Error Reconstruction (ER)**: whiten the calibration activations with
+//! the Cholesky factor `S` of the Gram matrix (`(S⁻¹X)(S⁻¹X)ᵀ = I`, Eq. 5),
+//! run SVD on `E_q S`, and keep the top-r components. Under whitening the
+//! i-th singular value *equals* its contribution to the integral loss
+//! `‖(E_q − Ẽ_q)X‖_F` (Eq. 8), so truncation is loss-optimal. Factors:
+//! `L_A = U_rΣ_r`, `L_B = V_rᵀS⁻¹` (Eq. 6).
+//!
+//! **Activation Smoothing (AS)**: rank channels by `X̄ ⊙ W̄`; for the top-f
+//! outlier set `I_f`, migrate activation magnitude into the weight with
+//! `m_i = X̄_i / X̄_min` (Eq. 11), split the scaled weight into `W_s + W_o`
+//! (outlier columns), quantize only `W_s`, and fold `W_o` into the error
+//! that ER reconstructs (Eq. 12–13). The outliers thus ride the fp low-rank
+//! branch instead of polluting the int grid.
+
+use super::{LayerCalib, PtqMethod, QuantizedLinear, RankPolicy};
+use crate::linalg::{svd_gram as svd, Whitener};
+use crate::quant::{Precision, QuantizedWeight};
+use crate::tensor::{matmul, Matrix};
+
+#[derive(Clone, Debug)]
+pub struct Aser {
+    pub rank: RankPolicy,
+    /// Outlier budget f (paper default 32). 0 disables extraction even when
+    /// `smooth` is set.
+    pub outlier_f: usize,
+    /// Enable Activation Smoothing (the "w/ A.S." rows).
+    pub smooth: bool,
+    /// Epsilon floor for X̄ when forming smoothing ratios.
+    pub eps: f32,
+}
+
+impl Default for Aser {
+    fn default() -> Self {
+        Aser { rank: RankPolicy::Fixed(64), outlier_f: 32, smooth: true, eps: 1e-6 }
+    }
+}
+
+/// Outcome of the smoothing analysis — exposed for figures (Fig. 4/7).
+#[derive(Clone, Debug)]
+pub struct SmoothingPlan {
+    /// Outlier channel indices I_f (sorted ascending).
+    pub outliers: Vec<usize>,
+    /// Per-channel multiplier m (applied to W columns; runtime divides x).
+    pub m: Vec<f32>,
+}
+
+impl Aser {
+    /// Identify I_f and build M (Eq. 11).
+    pub fn smoothing_plan(&self, w: &Matrix, calib: &LayerCalib) -> SmoothingPlan {
+        let d = w.cols;
+        let f = self.outlier_f.min(d);
+        let x_bar = &calib.x_abs_mean;
+        let w_bar = w.col_abs_mean();
+        let mut score: Vec<(usize, f32)> =
+            (0..d).map(|i| (i, x_bar[i] * w_bar[i])).collect();
+        score.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut outliers: Vec<usize> =
+            score[..f].iter().filter(|(_, s)| *s > 0.0).map(|(i, _)| *i).collect();
+        outliers.sort_unstable();
+        // X̄_min over the outlier set.
+        let x_min = outliers
+            .iter()
+            .map(|&i| x_bar[i])
+            .fold(f32::INFINITY, f32::min)
+            .max(self.eps);
+        let mut m = vec![1.0f32; d];
+        for &i in &outliers {
+            m[i] = (x_bar[i] / x_min).max(1.0);
+        }
+        SmoothingPlan { outliers, m }
+    }
+
+    /// ER core: build (L_A, L_B) approximating `err` against the whitener of
+    /// the (possibly smoothed) activations. Returns the factors and the
+    /// whitened singular values (for rank diagnostics / Fig. 8).
+    pub fn reconstruct(
+        &self,
+        err: &Matrix,
+        whitener: &Whitener,
+    ) -> (Matrix, Matrix, Vec<f32>, usize) {
+        let es = matmul(err, &whitener.s);
+        let f = svd(&es);
+        let r = self.rank.pick(&f.s).max(1);
+        let la = f.factor_a(r);
+        let lb = matmul(&f.factor_vt(r), &whitener.s_inv);
+        (la, lb, f.s.clone(), r)
+    }
+}
+
+/// Scale a Gram matrix by a diagonal on both sides: G' = D G D with
+/// D = diag(d). Used to whiten the *smoothed* activations M⁻¹X without
+/// re-streaming calibration data (Gram of M⁻¹X = M⁻¹ · Gram(X) · M⁻¹).
+pub fn scale_gram(gram: &[f64], d: usize, diag: &[f32]) -> Vec<f64> {
+    assert_eq!(diag.len(), d);
+    let mut out = vec![0f64; d * d];
+    for i in 0..d {
+        let di = diag[i] as f64;
+        for j in 0..d {
+            out[i * d + j] = gram[i * d + j] * di * diag[j] as f64;
+        }
+    }
+    out
+}
+
+impl PtqMethod for Aser {
+    fn name(&self) -> String {
+        if self.smooth {
+            "aser".into()
+        } else {
+            "aser-er".into()
+        }
+    }
+
+    fn quantize_layer(&self, w: &Matrix, calib: &LayerCalib, prec: Precision) -> QuantizedLinear {
+        let d = w.cols;
+        if self.smooth && self.outlier_f > 0 {
+            // ---- Activation Smoothing path (Algorithm 1, lines 6-9) ----
+            let plan = self.smoothing_plan(w, calib);
+            // W·M, then split into W_s (quantized) + W_o (outlier columns).
+            let wm = w.scale_cols(&plan.m);
+            let (w_s, w_o) = wm.split_cols(&plan.outliers);
+            let qw = QuantizedWeight::quantize(&w_s, prec.wbits);
+            // Integral error to reconstruct: E = W·M − Q(W_s) = E_q + W_o.
+            let err = wm.sub(&qw.dequantize());
+            debug_assert!({
+                let e_alt = w_s.sub(&qw.dequantize()).add(&w_o);
+                err.max_diff(&e_alt) < 1e-4
+            });
+            // Whitener of the smoothed activations M⁻¹X.
+            let m_inv: Vec<f32> = plan.m.iter().map(|&v| 1.0 / v).collect();
+            let gram_s = scale_gram(&calib.gram, d, &m_inv);
+            let whitener = match Whitener::from_gram(&gram_s, d) {
+                Ok(wh) => wh,
+                Err(_) => {
+                    // Should not happen thanks to damping; degrade to ER-only.
+                    return Aser { smooth: false, ..self.clone() }
+                        .quantize_layer(w, calib, prec);
+                }
+            };
+            let (la, lb, _s, _r) = self.reconstruct(&err, &whitener);
+            QuantizedLinear {
+                weight: qw,
+                act_smooth: Some(plan.m),
+                low_rank: Some((la, lb)),
+                fp_cols: Vec::new(),
+                abits: prec.abits,
+                method: self.name(),
+            }
+        } else {
+            // ---- ER-only path (lines 10-11) ----
+            let qw = QuantizedWeight::quantize(w, prec.wbits);
+            let err = w.sub(&qw.dequantize());
+            let whitener = match Whitener::from_gram(&calib.gram, d) {
+                Ok(wh) => wh,
+                Err(_) => {
+                    return super::lowrank::Lorc { rank: self.rank }
+                        .quantize_layer(w, calib, prec)
+                }
+            };
+            let (la, lb, _s, _r) = self.reconstruct(&err, &whitener);
+            QuantizedLinear {
+                weight: qw,
+                act_smooth: None,
+                low_rank: Some((la, lb)),
+                fp_cols: Vec::new(),
+                abits: prec.abits,
+                method: self.name(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::lowrank::{tests::aniso_setup, L2Qer, Lorc};
+    use crate::methods::{layer_error, rtn::Rtn};
+    use crate::tensor::matmul_bt;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn whitening_theorem_truncation_loss_equals_sigma() {
+        // Paper Eq. 8: dropping the i-th whitened component costs exactly
+        // σ_i (×√tokens with our Gram normalization).
+        let mut rng = Pcg64::seed(121);
+        let d = 24;
+        let tokens = 300;
+        let x = {
+            let mut x = Matrix::randn(&mut rng, tokens, d, 1.0);
+            for c in 0..d {
+                let s = 10f32.powf(rng.range_f32(-1.0, 1.0));
+                for r in 0..tokens {
+                    x[(r, c)] *= s;
+                }
+            }
+            x
+        };
+        let calib = crate::methods::LayerCalib::from_sample(x.clone());
+        let err = Matrix::randn(&mut rng, d, d, 0.02);
+        let wh = Whitener::from_gram(&calib.gram, d).unwrap();
+        let es = matmul(&err, &wh.s);
+        let f = svd(&es);
+        // Reconstruct with all but component i, for a few i.
+        for &i in &[0usize, 3, 10] {
+            let mut approx = Matrix::zeros(d, d);
+            for k in 0..d {
+                if k == i {
+                    continue;
+                }
+                let sk = f.s[k];
+                for r in 0..d {
+                    let u = f.u[(r, k)] * sk;
+                    for c in 0..d {
+                        approx[(r, c)] += u * f.vt[(k, c)];
+                    }
+                }
+            }
+            let e_tilde = matmul(&approx, &wh.s_inv);
+            // ‖(E − Ẽ)X‖_F with X = xᵀ (d×tokens)
+            let resid = err.sub(&e_tilde);
+            let loss = matmul_bt(&x, &resid).frob_norm(); // tokens×d
+            let want = f.s[i] * (tokens as f32).sqrt();
+            let rel = (loss - want).abs() / want.max(1e-9);
+            assert!(rel < 0.05, "i={i}: loss={loss} want={want} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn aser_er_beats_lorc_and_l2qer_at_same_rank() {
+        let (w, calib) = aniso_setup(122, 48);
+        let prec = Precision::w4a8();
+        let rank = RankPolicy::Fixed(8);
+        let e_lorc = layer_error(&w, &Lorc { rank }.quantize_layer(&w, &calib, prec), &calib.x);
+        let e_l2 = layer_error(&w, &L2Qer { rank }.quantize_layer(&w, &calib, prec), &calib.x);
+        let aser = Aser { rank, smooth: false, ..Default::default() };
+        let e_aser = layer_error(&w, &aser.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_aser < e_lorc, "aser {e_aser} !< lorc {e_lorc}");
+        assert!(e_aser < e_l2, "aser {e_aser} !< l2qer {e_l2}");
+    }
+
+    #[test]
+    fn smoothing_helps_at_low_act_bits() {
+        let (w, calib) = aniso_setup(123, 48);
+        let prec = Precision::w4a6();
+        let rank = RankPolicy::Fixed(8);
+        let er_only = Aser { rank, smooth: false, ..Default::default() };
+        let with_as = Aser { rank, outlier_f: 6, smooth: true, ..Default::default() };
+        let e_er = layer_error(&w, &er_only.quantize_layer(&w, &calib, prec), &calib.x);
+        let e_as = layer_error(&w, &with_as.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_as < e_er, "w/AS {e_as} !< w/o {e_er}");
+    }
+
+    #[test]
+    fn aser_beats_rtn_by_wide_margin() {
+        let (w, calib) = aniso_setup(124, 40);
+        let prec = Precision::w4a8();
+        let aser = Aser { rank: RankPolicy::Fixed(8), outlier_f: 6, ..Default::default() };
+        let e_aser = layer_error(&w, &aser.quantize_layer(&w, &calib, prec), &calib.x);
+        let e_rtn = layer_error(&w, &Rtn.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_aser < 0.6 * e_rtn, "aser {e_aser} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn smoothing_plan_finds_joint_outliers() {
+        let mut rng = Pcg64::seed(125);
+        let d = 32;
+        let mut w = Matrix::randn(&mut rng, d, d, 0.05);
+        let mut x = Matrix::randn(&mut rng, 128, d, 1.0);
+        // Channel 5: big acts AND big weights → top outlier.
+        for r in 0..x.rows {
+            x[(r, 5)] *= 50.0;
+        }
+        for r in 0..d {
+            w[(r, 5)] *= 5.0;
+        }
+        let calib = crate::methods::LayerCalib::from_sample(x);
+        let aser = Aser { outlier_f: 4, ..Default::default() };
+        let plan = aser.smoothing_plan(&w, &calib);
+        assert!(plan.outliers.contains(&5));
+        assert!(plan.m[5] > 1.0);
+        // Non-outliers untouched.
+        let untouched = (0..d).filter(|i| !plan.outliers.contains(i)).all(|i| plan.m[i] == 1.0);
+        assert!(untouched);
+    }
+
+    #[test]
+    fn m_ratios_match_eq11() {
+        let mut rng = Pcg64::seed(126);
+        let d = 16;
+        let w = Matrix::randn(&mut rng, d, d, 0.1);
+        let mut x = Matrix::randn(&mut rng, 64, d, 1.0);
+        for (k, &c) in [2usize, 7, 11].iter().enumerate() {
+            for r in 0..x.rows {
+                x[(r, c)] *= 10.0 * (k + 1) as f32;
+            }
+        }
+        let calib = crate::methods::LayerCalib::from_sample(x);
+        let aser = Aser { outlier_f: 3, ..Default::default() };
+        let plan = aser.smoothing_plan(&w, &calib);
+        let x_bar = &calib.x_abs_mean;
+        let x_min = plan.outliers.iter().map(|&i| x_bar[i]).fold(f32::INFINITY, f32::min);
+        for &i in &plan.outliers {
+            let want = x_bar[i] / x_min;
+            assert!((plan.m[i] - want).abs() / want < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forward_is_function_preserving_without_quant_error() {
+        // If W quantization is (nearly) exact (8-bit) and acts stay fp, the
+        // smoothed + compensated forward ≈ plain WX.
+        let (w, calib) = aniso_setup(127, 24);
+        let prec = Precision::new(8, 16);
+        let aser = Aser { rank: RankPolicy::Fixed(24), outlier_f: 4, ..Default::default() };
+        let q = aser.quantize_layer(&w, &calib, prec);
+        let want = matmul_bt(&calib.x, &w);
+        let got = q.forward_matrix(&calib.x);
+        let rel = want.sub(&got).frob_norm() / want.frob_norm();
+        assert!(rel < 2e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn scale_gram_matches_direct() {
+        let mut rng = Pcg64::seed(128);
+        let x = Matrix::randn(&mut rng, 60, 10, 1.0);
+        let calib = crate::methods::LayerCalib::from_sample(x.clone());
+        let diag: Vec<f32> = (0..10).map(|i| 0.5 + i as f32 * 0.3).collect();
+        let scaled = scale_gram(&calib.gram, 10, &diag);
+        let x_scaled = x.scale_cols(&diag);
+        let direct = crate::methods::LayerCalib::from_sample(x_scaled);
+        for (a, b) in scaled.iter().zip(&direct.gram) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn rank_threshold_gives_small_ranks_for_lowrank_errors() {
+        let (w, calib) = aniso_setup(129, 32);
+        let aser = Aser { rank: RankPolicy::Threshold(0.3), smooth: false, ..Default::default() };
+        let q = aser.quantize_layer(&w, &calib, Precision::w4a8());
+        assert!(q.rank() >= 1);
+        assert!(q.rank() < 32);
+    }
+}

@@ -1,0 +1,150 @@
+//! AWQ — Activation-aware Weight Quantization (Lin et al. 2024).
+//!
+//! Weight-only method: protects salient weight channels (those multiplying
+//! large activations) by scaling them up before quantization,
+//! `W' = W·diag(s)`, `s = X̄^α`, with α chosen per layer by grid search on
+//! the reconstruction error, plus a per-channel clipping search on the
+//! quantization range.
+
+use super::{layer_error, LayerCalib, PtqMethod, QuantizedLinear};
+use crate::quant::{BitWidth, Precision, QuantizedWeight};
+use crate::tensor::Matrix;
+
+pub struct Awq {
+    /// α grid for the scale search (AWQ uses 20 points in [0,1]).
+    pub grid_steps: usize,
+    /// Shrink factors for the max-clip search; 1.0 = no clipping.
+    pub clip_grid: Vec<f32>,
+}
+
+impl Default for Awq {
+    fn default() -> Self {
+        Awq { grid_steps: 10, clip_grid: vec![1.0, 0.95, 0.9, 0.85, 0.8] }
+    }
+}
+
+impl Awq {
+    fn quantize_scaled(
+        &self,
+        w: &Matrix,
+        s: &[f32],
+        prec: Precision,
+        calib: &LayerCalib,
+    ) -> QuantizedLinear {
+        let w_s = w.scale_cols(s);
+        // Per-row clip search: pick the shrink factor minimizing row-wise
+        // weight reconstruction error against the calibration second moment.
+        let qmax = BitWidth(prec.wbits).qmax();
+        let mut scales = vec![0f32; w_s.rows];
+        for r in 0..w_s.rows {
+            let row = w_s.row(r);
+            let amax = row.iter().fold(0f32, |m, x| m.max(x.abs()));
+            if amax == 0.0 {
+                scales[r] = 1.0;
+                continue;
+            }
+            let mut best = (f64::INFINITY, amax / qmax);
+            for &c in &self.clip_grid {
+                let scale = amax * c / qmax;
+                // weighted SSE with channel second moments (diag of Gram)
+                let mut sse = 0f64;
+                for (j, &x) in row.iter().enumerate() {
+                    let q = (x / scale).round().clamp(-qmax, qmax) * scale;
+                    let wgt = calib.gram[j * w.cols + j].max(1e-12);
+                    let d = (x - q) as f64;
+                    sse += d * d * wgt;
+                }
+                if sse < best.0 {
+                    best = (sse, scale);
+                }
+            }
+            scales[r] = best.1;
+        }
+        QuantizedLinear {
+            weight: QuantizedWeight::quantize_with_scales(&w_s, prec.wbits, &scales),
+            act_smooth: Some(s.to_vec()),
+            low_rank: None,
+            fp_cols: Vec::new(),
+            abits: prec.abits,
+            method: self.name(),
+        }
+    }
+}
+
+impl PtqMethod for Awq {
+    fn name(&self) -> String {
+        "awq".into()
+    }
+
+    fn quantize_layer(&self, w: &Matrix, calib: &LayerCalib, prec: Precision) -> QuantizedLinear {
+        let eps = 1e-5f32;
+        let mut best: Option<(f32, QuantizedLinear)> = None;
+        for step in 0..self.grid_steps {
+            let alpha = step as f32 / self.grid_steps as f32;
+            let s: Vec<f32> =
+                calib.x_abs_mean.iter().map(|&xa| xa.max(eps).powf(alpha).max(1e-4)).collect();
+            let q = self.quantize_scaled(w, &s, prec, calib);
+            let e = layer_error(w, &q, &calib.x);
+            if best.as_ref().map(|(be, _)| e < *be).unwrap_or(true) {
+                best = Some((e, q));
+            }
+        }
+        best.expect("grid non-empty").1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::rtn::Rtn;
+    use crate::util::rng::Pcg64;
+
+    fn salient_setup() -> (Matrix, LayerCalib) {
+        let mut rng = Pcg64::seed(91);
+        let d = 64;
+        let mut w = Matrix::randn(&mut rng, 32, d, 0.05);
+        let mut x = Matrix::randn(&mut rng, 256, d, 1.0);
+        // Salient channels: large activations AND meaningful weights.
+        for &c in &[10usize, 33] {
+            for r in 0..x.rows {
+                x[(r, c)] *= 25.0;
+            }
+            for r in 0..w.rows {
+                w[(r, c)] *= 0.2; // small weights × big acts = classic AWQ case
+            }
+        }
+        (w, LayerCalib::from_sample(x))
+    }
+
+    #[test]
+    fn awq_beats_rtn_weight_only() {
+        let (w, calib) = salient_setup();
+        let prec = Precision::w4a16();
+        let e_awq = layer_error(&w, &Awq::default().quantize_layer(&w, &calib, prec), &calib.x);
+        let e_rtn = layer_error(&w, &Rtn.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_awq < e_rtn, "awq {e_awq} !< rtn {e_rtn}");
+    }
+
+    #[test]
+    fn alpha_zero_in_grid_bounds_regression() {
+        // Grid includes α=0 (identity scaling, clip only) so AWQ can never be
+        // catastrophically worse than clipped RTN on any layer.
+        let mut rng = Pcg64::seed(92);
+        let w = Matrix::randn(&mut rng, 16, 32, 0.05);
+        let x = Matrix::randn(&mut rng, 128, 32, 1.0);
+        let calib = LayerCalib::from_sample(x);
+        let prec = Precision::w4a16();
+        let e_awq = layer_error(&w, &Awq::default().quantize_layer(&w, &calib, prec), &calib.x);
+        let e_rtn = layer_error(&w, &Rtn.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_awq < e_rtn * 1.2, "awq {e_awq} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn smoothing_vector_attached() {
+        let (w, calib) = salient_setup();
+        let q = Awq::default().quantize_layer(&w, &calib, Precision::w4a16());
+        let s = q.act_smooth.as_ref().unwrap();
+        assert_eq!(s.len(), 64);
+        assert!(s.iter().all(|&v| v > 0.0));
+    }
+}

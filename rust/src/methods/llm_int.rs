@@ -1,0 +1,132 @@
+//! LLM.int8()-style mixed-precision decomposition (Dettmers et al. 2022),
+//! with int4 weights — the tables' "LLM.int4()" baseline.
+//!
+//! Activation channels whose calibration magnitude exceeds a threshold are
+//! routed through a full-precision side GEMM (their weight columns are kept
+//! fp and excluded from the int grid); everything else goes through the
+//! quantized path.
+
+use super::{LayerCalib, PtqMethod, QuantizedLinear};
+use crate::quant::{Precision, QuantizedWeight};
+use crate::tensor::Matrix;
+
+pub struct LlmInt {
+    /// Channels with X̄ ≥ `threshold_mult` × mean(X̄) are outliers.
+    pub threshold_mult: f32,
+    /// Cap on the number of fp channels (keeps the side GEMM skinny).
+    pub max_outliers: usize,
+}
+
+impl Default for LlmInt {
+    fn default() -> Self {
+        // ~matches the 6.0-ish magnitude criterion of LLM.int8() scaled to
+        // mean-relative form; ≤1% channels in our models.
+        LlmInt { threshold_mult: 6.0, max_outliers: 64 }
+    }
+}
+
+impl LlmInt {
+    /// Pick outlier channel indices from calibration statistics.
+    pub fn outlier_channels(&self, calib: &LayerCalib) -> Vec<usize> {
+        let xm = &calib.x_abs_mean;
+        let mean = xm.iter().sum::<f32>() / xm.len().max(1) as f32;
+        let thr = mean * self.threshold_mult;
+        let mut idx: Vec<usize> =
+            (0..xm.len()).filter(|&i| xm[i] >= thr && xm[i] > 0.0).collect();
+        // Keep the largest if over budget.
+        idx.sort_by(|&a, &b| xm[b].partial_cmp(&xm[a]).unwrap());
+        idx.truncate(self.max_outliers);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+impl PtqMethod for LlmInt {
+    fn name(&self) -> String {
+        "llm_int".into()
+    }
+
+    fn quantize_layer(&self, w: &Matrix, calib: &LayerCalib, prec: Precision) -> QuantizedLinear {
+        let outliers = self.outlier_channels(calib);
+        // Split W into int part (outlier cols zeroed) + fp columns.
+        let (w_int, _) = w.split_cols(&outliers);
+        let fp_cols: Vec<(usize, Vec<f32>)> =
+            outliers.iter().map(|&c| (c, w.col(c))).collect();
+        QuantizedLinear {
+            weight: QuantizedWeight::quantize(&w_int, prec.wbits),
+            act_smooth: None,
+            low_rank: None,
+            fp_cols,
+            abits: prec.abits,
+            method: self.name(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::layer_error;
+    use crate::methods::rtn::Rtn;
+    use crate::util::rng::Pcg64;
+
+    /// Calibration with strong outlier channels — the regime this method is
+    /// built for.
+    fn outlier_setup() -> (Matrix, LayerCalib) {
+        let mut rng = Pcg64::seed(71);
+        let d_in = 64;
+        let w = Matrix::randn(&mut rng, 32, d_in, 0.05);
+        let mut x = Matrix::randn(&mut rng, 256, d_in, 1.0);
+        for &c in &[5usize, 17, 40] {
+            for r in 0..x.rows {
+                x[(r, c)] *= 40.0;
+            }
+        }
+        (w, LayerCalib::from_sample(x))
+    }
+
+    #[test]
+    fn finds_planted_outliers() {
+        let (_, calib) = outlier_setup();
+        let m = LlmInt::default();
+        let idx = m.outlier_channels(&calib);
+        assert_eq!(idx, vec![5, 17, 40]);
+    }
+
+    #[test]
+    fn beats_rtn_with_act_outliers() {
+        let (w, calib) = outlier_setup();
+        let prec = Precision::w4a8();
+        let e_mixed = layer_error(&w, &LlmInt::default().quantize_layer(&w, &calib, prec), &calib.x);
+        let e_rtn = layer_error(&w, &Rtn.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_mixed < e_rtn, "mixed {e_mixed} !< rtn {e_rtn}");
+    }
+
+    #[test]
+    fn respects_outlier_budget() {
+        let mut rng = Pcg64::seed(72);
+        let d = 128;
+        let _w = Matrix::randn(&mut rng, 16, d, 0.05);
+        let mut x = Matrix::randn(&mut rng, 64, d, 1.0);
+        for c in 0..d / 2 {
+            for r in 0..x.rows {
+                x[(r, c)] *= 50.0;
+            }
+        }
+        let calib = LayerCalib::from_sample(x);
+        let m = LlmInt { threshold_mult: 2.0, max_outliers: 8 };
+        assert!(m.outlier_channels(&calib).len() <= 8);
+    }
+
+    #[test]
+    fn no_outliers_degenerates_to_rtn() {
+        let mut rng = Pcg64::seed(73);
+        let w = Matrix::randn(&mut rng, 8, 24, 0.05);
+        let x = Matrix::randn(&mut rng, 64, 24, 1.0);
+        let calib = LayerCalib::from_sample(x);
+        let q = LlmInt::default().quantize_layer(&w, &calib, Precision::w4a8());
+        assert!(q.fp_cols.is_empty());
+        let q_rtn = Rtn.quantize_layer(&w, &calib, Precision::w4a8());
+        assert!(q.forward_matrix(&calib.x).max_diff(&q_rtn.forward_matrix(&calib.x)) < 1e-6);
+    }
+}

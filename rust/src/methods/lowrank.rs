@@ -1,0 +1,158 @@
+//! Low-rank error-compensation baselines: LoRC and L²QER.
+//!
+//! Both quantize with RTN and then append LoRA-style factors approximating
+//! the weight quantization error `E_q = W − Q(W)`:
+//! - **LoRC** (Yao et al. 2024): plain `SVD(E_q)` — activation-agnostic.
+//! - **L²QER** (Zhang et al. 2024): `SVD(E_q · D)` with the empirical
+//!   diagonal `D = diag(X̄)`, compensation `U_rΣ_r · V_rᵀD⁻¹` — activation-
+//!   scaled but not whitened. ASER replaces `D` with the Cholesky whitener
+//!   `S`, which is the paper's core claim.
+
+use super::{LayerCalib, PtqMethod, QuantizedLinear, RankPolicy};
+use crate::linalg::svd_gram as svd;
+use crate::quant::{Precision, QuantizedWeight};
+use crate::tensor::Matrix;
+
+/// LoRC: rank-r SVD of the raw weight error.
+pub struct Lorc {
+    pub rank: RankPolicy,
+}
+
+impl PtqMethod for Lorc {
+    fn name(&self) -> String {
+        "lorc".into()
+    }
+
+    fn quantize_layer(&self, w: &Matrix, _calib: &LayerCalib, prec: Precision) -> QuantizedLinear {
+        let qw = QuantizedWeight::quantize(w, prec.wbits);
+        let e_q = w.sub(&qw.dequantize());
+        let f = svd(&e_q);
+        let r = self.rank.pick(&f.s).max(1);
+        let la = f.factor_a(r);
+        let lb = f.factor_vt(r);
+        QuantizedLinear {
+            weight: qw,
+            act_smooth: None,
+            low_rank: Some((la, lb)),
+            fp_cols: Vec::new(),
+            abits: prec.abits,
+            method: self.name(),
+        }
+    }
+}
+
+/// L²QER: rank-r SVD of the activation-scaled weight error.
+pub struct L2Qer {
+    pub rank: RankPolicy,
+}
+
+impl PtqMethod for L2Qer {
+    fn name(&self) -> String {
+        "l2qer".into()
+    }
+
+    fn quantize_layer(&self, w: &Matrix, calib: &LayerCalib, prec: Precision) -> QuantizedLinear {
+        let qw = QuantizedWeight::quantize(w, prec.wbits);
+        let e_q = w.sub(&qw.dequantize());
+        // D = diag(X̄) with an epsilon floor so D⁻¹ stays bounded.
+        let eps = 1e-4f32;
+        let d: Vec<f32> = calib.x_abs_mean.iter().map(|&x| x.max(eps)).collect();
+        let scaled = e_q.scale_cols(&d);
+        let f = svd(&scaled);
+        let r = self.rank.pick(&f.s).max(1);
+        let la = f.factor_a(r);
+        let d_inv: Vec<f32> = d.iter().map(|&x| 1.0 / x).collect();
+        let lb = f.factor_vt(r).scale_cols(&d_inv);
+        QuantizedLinear {
+            weight: qw,
+            act_smooth: None,
+            low_rank: Some((la, lb)),
+            fp_cols: Vec::new(),
+            abits: prec.abits,
+            method: self.name(),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::methods::{layer_error, rtn::Rtn};
+    use crate::util::rng::Pcg64;
+
+    /// Anisotropic calibration: a few hot channels (where error matters) —
+    /// the setting that separates the three compensation schemes.
+    pub(crate) fn aniso_setup(seed: u64, d: usize) -> (Matrix, LayerCalib) {
+        let mut rng = Pcg64::seed(seed);
+        let w = Matrix::randn(&mut rng, d, d, 0.05);
+        let mut x = Matrix::randn(&mut rng, 4 * d, d, 1.0);
+        for c in 0..d {
+            // log-uniform channel scales + a few hard outliers
+            let s = 10f32.powf(rng.range_f32(-1.0, 0.5));
+            for r in 0..x.rows {
+                x[(r, c)] *= s;
+            }
+        }
+        for &c in &[1usize, d / 2, d - 3] {
+            for r in 0..x.rows {
+                x[(r, c)] *= 20.0;
+            }
+        }
+        (w, LayerCalib::from_sample(x))
+    }
+
+    #[test]
+    fn lorc_beats_rtn() {
+        let (w, calib) = aniso_setup(111, 40);
+        let prec = Precision::w4a8();
+        let q = Lorc { rank: RankPolicy::Fixed(8) }.quantize_layer(&w, &calib, prec);
+        let e_lorc = layer_error(&w, &q, &calib.x);
+        let e_rtn = layer_error(&w, &Rtn.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_lorc < e_rtn, "lorc {e_lorc} !< rtn {e_rtn}");
+        assert_eq!(q.rank(), 8);
+    }
+
+    #[test]
+    fn l2qer_beats_lorc_on_anisotropic_acts() {
+        let (w, calib) = aniso_setup(112, 48);
+        let prec = Precision::w4a8();
+        let rank = RankPolicy::Fixed(8);
+        let e_lorc =
+            layer_error(&w, &Lorc { rank }.quantize_layer(&w, &calib, prec), &calib.x);
+        let e_l2 =
+            layer_error(&w, &L2Qer { rank }.quantize_layer(&w, &calib, prec), &calib.x);
+        assert!(e_l2 < e_lorc, "l2qer {e_l2} !< lorc {e_lorc}");
+    }
+
+    #[test]
+    fn full_rank_lorc_recovers_weight_error_exactly() {
+        let (w, calib) = aniso_setup(113, 16);
+        // A16 so the only error is weight error; full rank ⇒ exact recovery.
+        let prec = Precision::w4a16();
+        let q = Lorc { rank: RankPolicy::Fixed(16) }.quantize_layer(&w, &calib, prec);
+        let e = layer_error(&w, &q, &calib.x);
+        let y_scale = crate::tensor::matmul_bt(&calib.x, &w).frob_norm();
+        assert!(e / y_scale < 1e-4, "rel={}", e / y_scale);
+    }
+
+    #[test]
+    fn extra_params_accounting() {
+        let (w, calib) = aniso_setup(114, 24);
+        let q = Lorc { rank: RankPolicy::Fixed(6) }.quantize_layer(&w, &calib, Precision::w4a8());
+        assert_eq!(q.extra_params(), 6 * 24 + 6 * 24);
+        assert_eq!(q.extra_flops_per_token(), 2 * 6 * (24 + 24));
+    }
+
+    #[test]
+    fn threshold_policy_monotone_in_alpha() {
+        let (w, calib) = aniso_setup(115, 32);
+        let prec = Precision::w4a8();
+        let r_small = Lorc { rank: RankPolicy::Threshold(0.05) }
+            .quantize_layer(&w, &calib, prec)
+            .rank();
+        let r_big = Lorc { rank: RankPolicy::Threshold(0.5) }
+            .quantize_layer(&w, &calib, prec)
+            .rank();
+        assert!(r_small <= r_big, "{r_small} > {r_big}");
+    }
+}

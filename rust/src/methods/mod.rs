@@ -1,0 +1,221 @@
+//! Post-training quantization methods.
+//!
+//! Every method implements [`PtqMethod`]: given a layer weight `W`
+//! (out×in), calibration statistics and a target [`Precision`], produce a
+//! [`QuantizedLinear`] — quantized weight + optional activation scaling
+//! (smoothing) + optional LoRA-style low-rank compensation + optional
+//! full-precision outlier columns.
+//!
+//! Implemented methods (paper baselines + contribution):
+//! - [`rtn::Rtn`] — plain round-to-nearest per-channel.
+//! - [`llm_int::LlmInt`] — LLM.int8()-style mixed-precision decomposition
+//!   ("LLM.int4()" in the tables): fp outlier channels, int the rest.
+//! - [`smoothquant::SmoothQuant`] — diag smoothing with α-blend of X̄/W̄.
+//! - [`smoothquant::SmoothQuantPlus`] — per-layer α grid search variant.
+//! - [`awq::Awq`] — activation-aware weight-only scaling (grid search).
+//! - [`gptq::Gptq`] — Hessian-based sequential quantization (OBQ closed form).
+//! - [`lowrank::Lorc`] — plain SVD low-rank correction of the weight error.
+//! - [`lowrank::L2Qer`] — activation-scaled SVD correction (diagonal X̄).
+//! - [`aser::Aser`] — the paper: whitening SVD error reconstruction
+//!   (± activation smoothing with outlier extraction).
+
+pub mod aser;
+pub mod awq;
+pub mod gptq;
+pub mod llm_int;
+pub mod lowrank;
+pub mod rtn;
+pub mod smoothquant;
+
+use crate::quant::{fake_quant_acts, Precision, QuantizedWeight, FP};
+use crate::tensor::{matmul, matmul_bt, Matrix};
+
+/// Calibration statistics for one linear layer, captured by `calib`.
+#[derive(Clone, Debug)]
+pub struct LayerCalib {
+    /// Subsample of input activations, tokens × in_features.
+    pub x: Matrix,
+    /// f64 Gram over channels: XᵀX / tokens (in×in), accumulated over the
+    /// full calibration stream (not just the subsample).
+    pub gram: Vec<f64>,
+    /// Per-channel mean |x| over the full stream (the paper's X̄).
+    pub x_abs_mean: Vec<f32>,
+    /// Total tokens seen.
+    pub tokens: usize,
+}
+
+impl LayerCalib {
+    /// Build directly from a sample matrix (tests + small pipelines).
+    pub fn from_sample(x: Matrix) -> LayerCalib {
+        let mut gram = crate::tensor::gram_cols_f64(&x);
+        let scale = 1.0 / x.rows.max(1) as f64;
+        for v in &mut gram {
+            *v *= scale;
+        }
+        let x_abs_mean = x.col_abs_mean();
+        let tokens = x.rows;
+        LayerCalib { x, gram, x_abs_mean, tokens }
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.x.cols
+    }
+}
+
+/// Result of quantizing one linear layer.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    /// Quantized (possibly smoothed/split) weight, out×in.
+    pub weight: QuantizedWeight,
+    /// Per-input-channel divisor `m` from smoothing: the runtime computes
+    /// `x' = x / m` before quantizing the activation. `None` = no smoothing.
+    pub act_smooth: Option<Vec<f32>>,
+    /// LoRA-style compensation `(L_A, L_B)`: out×r and r×in. The correction
+    /// term is `L_A · (L_B · x')` on the *smoothed, full-precision* input —
+    /// the skinny branch runs in fp just like deployed LoRA adapters.
+    pub low_rank: Option<(Matrix, Matrix)>,
+    /// Full-precision outlier columns kept outside the int grid
+    /// (LLM.int8()-style decomposition). Stored as (col_index, column of W).
+    pub fp_cols: Vec<(usize, Vec<f32>)>,
+    /// Activation bits for the main GEMM input (FP = no act quant).
+    pub abits: u8,
+    /// Method label for reports.
+    pub method: String,
+}
+
+impl QuantizedLinear {
+    pub fn out_features(&self) -> usize {
+        self.weight.rows
+    }
+    pub fn in_features(&self) -> usize {
+        self.weight.cols
+    }
+    pub fn rank(&self) -> usize {
+        self.low_rank.as_ref().map(|(_, b)| b.rows).unwrap_or(0)
+    }
+
+    /// Extra parameters introduced vs the plain quantized weight
+    /// (low-rank factors + fp outlier columns), for the overhead tables.
+    pub fn extra_params(&self) -> usize {
+        let lr = self
+            .low_rank
+            .as_ref()
+            .map(|(a, b)| a.rows * a.cols + b.rows * b.cols)
+            .unwrap_or(0);
+        lr + self.fp_cols.len() * self.weight.rows
+    }
+
+    /// Extra FLOPs per token vs the plain `d_out × d_in` GEMM
+    /// (2·r·(d_in+d_out) for the skinny branch + outlier columns).
+    pub fn extra_flops_per_token(&self) -> usize {
+        let r = self.rank();
+        2 * r * (self.in_features() + self.out_features())
+            + 2 * self.fp_cols.len() * self.out_features()
+    }
+
+    /// Reference forward over a batch of activations X (tokens × in):
+    /// returns tokens × out. This is the semantics contract the serving hot
+    /// path (`model::qlinear`) and the Pallas kernel must match.
+    pub fn forward_matrix(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.in_features());
+        // 1. smooth
+        let xs = match &self.act_smooth {
+            Some(m) => {
+                let inv: Vec<f32> = m.iter().map(|&v| 1.0 / v).collect();
+                x.scale_cols(&inv)
+            }
+            None => x.clone(),
+        };
+        // 2. main GEMM on quantized acts × quantized weight
+        let xq = if self.abits == FP { xs.clone() } else { fake_quant_acts(&xs, self.abits) };
+        let wq = self.weight.dequantize();
+        let mut y = matmul_bt(&xq, &wq);
+        // 3. fp outlier columns (decomposition methods): they act on the
+        //    *unquantized* smoothed activation.
+        for (c, wcol) in &self.fp_cols {
+            for t in 0..xs.rows {
+                let xv = xs[(t, *c)];
+                if xv == 0.0 {
+                    continue;
+                }
+                let yrow = y.row_mut(t);
+                for (o, &wv) in yrow.iter_mut().zip(wcol) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        // 4. low-rank correction on the fp smoothed activation
+        if let Some((la, lb)) = &self.low_rank {
+            let z = matmul_bt(&xs, lb); // tokens × r
+            let corr = matmul(&z, &la.transpose()); // tokens × out
+            y = y.add(&corr);
+        }
+        y
+    }
+}
+
+/// Integral layer error `‖W X − ŷ(X)‖_F` on calibration activations — the
+/// paper's objective (Eq. 1) and the quantity plotted in Fig. 6.
+pub fn layer_error(w: &Matrix, q: &QuantizedLinear, x: &Matrix) -> f32 {
+    let y_ref = matmul_bt(x, w);
+    let y_q = q.forward_matrix(x);
+    y_ref.sub(&y_q).frob_norm()
+}
+
+/// Relative layer error, normalized by ‖WX‖_F.
+pub fn layer_error_rel(w: &Matrix, q: &QuantizedLinear, x: &Matrix) -> f32 {
+    let y_ref = matmul_bt(x, w);
+    let y_q = q.forward_matrix(x);
+    y_ref.sub(&y_q).frob_norm() / y_ref.frob_norm().max(1e-20)
+}
+
+/// A quantization method: layer-local, calibration-driven.
+pub trait PtqMethod: Send + Sync {
+    fn name(&self) -> String;
+    fn quantize_layer(&self, w: &Matrix, calib: &LayerCalib, prec: Precision) -> QuantizedLinear;
+}
+
+/// Rank policy shared by the compensation methods (LoRC / L²QER / ASER).
+#[derive(Clone, Copy, Debug)]
+pub enum RankPolicy {
+    /// Same rank everywhere (the paper's main-table setup: r = 64).
+    Fixed(usize),
+    /// Per-layer rank from the cumulative singular-value threshold α
+    /// (paper Eq. 9 / Table 4).
+    Threshold(f64),
+}
+
+impl RankPolicy {
+    pub fn pick(&self, singular_values: &[f32]) -> usize {
+        match *self {
+            RankPolicy::Fixed(r) => r.min(singular_values.len()),
+            RankPolicy::Threshold(alpha) => {
+                crate::linalg::rank_for_threshold(singular_values, alpha)
+            }
+        }
+    }
+}
+
+/// Construct a method by name — the CLI/benchmark registry.
+pub fn method_by_name(name: &str, rank: RankPolicy, outlier_f: usize) -> anyhow::Result<Box<dyn PtqMethod>> {
+    Ok(match name {
+        "rtn" => Box::new(rtn::Rtn),
+        "llm_int" | "llm.int4" | "llm.int8" => Box::new(llm_int::LlmInt::default()),
+        "smoothquant" | "sq" => Box::new(smoothquant::SmoothQuant::default()),
+        "smoothquant+" | "sqp" => Box::new(smoothquant::SmoothQuantPlus::default()),
+        "awq" => Box::new(awq::Awq::default()),
+        "gptq" => Box::new(gptq::Gptq::default()),
+        "lorc" => Box::new(lowrank::Lorc { rank }),
+        "l2qer" | "lqer" => Box::new(lowrank::L2Qer { rank }),
+        "aser" => Box::new(aser::Aser { rank, outlier_f, smooth: true, ..Default::default() }),
+        "aser-er" | "aser_no_as" => {
+            Box::new(aser::Aser { rank, outlier_f, smooth: false, ..Default::default() })
+        }
+        other => anyhow::bail!("unknown method '{other}'"),
+    })
+}
+
+/// All method names in table order.
+pub fn table_methods() -> Vec<&'static str> {
+    vec!["llm_int", "smoothquant", "smoothquant+", "lorc", "l2qer", "aser-er", "aser"]
+}

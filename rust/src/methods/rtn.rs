@@ -1,0 +1,78 @@
+//! Round-To-Nearest — the no-frills baseline every table starts from.
+
+use super::{LayerCalib, PtqMethod, QuantizedLinear};
+use crate::quant::{Precision, QuantizedWeight};
+use crate::tensor::Matrix;
+
+/// Plain per-channel symmetric RTN; per-token activation quantization.
+pub struct Rtn;
+
+impl PtqMethod for Rtn {
+    fn name(&self) -> String {
+        "rtn".into()
+    }
+
+    fn quantize_layer(&self, w: &Matrix, _calib: &LayerCalib, prec: Precision) -> QuantizedLinear {
+        QuantizedLinear {
+            weight: QuantizedWeight::quantize(w, prec.wbits),
+            act_smooth: None,
+            low_rank: None,
+            fp_cols: Vec::new(),
+            abits: prec.abits,
+            method: self.name(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::{layer_error, layer_error_rel};
+    use crate::util::rng::Pcg64;
+
+    fn setup(d_in: usize, d_out: usize) -> (Matrix, LayerCalib) {
+        let mut rng = Pcg64::seed(61);
+        let w = Matrix::randn(&mut rng, d_out, d_in, 0.05);
+        let x = Matrix::randn(&mut rng, 128, d_in, 1.0);
+        (w, LayerCalib::from_sample(x))
+    }
+
+    #[test]
+    fn forward_matches_fake_quant_semantics() {
+        let (w, calib) = setup(32, 16);
+        let q = Rtn.quantize_layer(&w, &calib, Precision::w4a16());
+        // W4A16: forward == X · Q(W)ᵀ exactly.
+        let want = crate::tensor::matmul_bt(&calib.x, &q.weight.dequantize());
+        let got = q.forward_matrix(&calib.x);
+        assert!(want.max_diff(&got) < 1e-5);
+    }
+
+    #[test]
+    fn error_grows_as_bits_shrink() {
+        let (w, calib) = setup(48, 24);
+        let mut last = 0.0;
+        for (wb, ab) in [(8, 8), (4, 8), (4, 6), (3, 6)] {
+            let q = Rtn.quantize_layer(&w, &calib, Precision::new(wb, ab));
+            let e = layer_error(&w, &q, &calib.x);
+            assert!(e > last, "W{wb}A{ab}: {e} <= {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn rel_error_sane_at_w8a8() {
+        let (w, calib) = setup(64, 32);
+        let q = Rtn.quantize_layer(&w, &calib, Precision::new(8, 8));
+        let rel = layer_error_rel(&w, &q, &calib.x);
+        assert!(rel < 0.02, "rel={rel}");
+    }
+
+    #[test]
+    fn no_extra_params() {
+        let (w, calib) = setup(16, 16);
+        let q = Rtn.quantize_layer(&w, &calib, Precision::w4a8());
+        assert_eq!(q.extra_params(), 0);
+        assert_eq!(q.extra_flops_per_token(), 0);
+        assert_eq!(q.rank(), 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Model configurations.
+//!
+//! The evaluation grid uses six tiny LLaMA-style configs standing in for the
+//! paper's model zoo (see DESIGN.md §3 for the substitution argument). Each
+//! linear layer matches the paper's per-block naming: `qkv_proj`,
+//! `out_proj`, `fc1`, `fc2`.
+
+use crate::util::json::{num, obj, s, Json};
+use anyhow::Result;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// SwiGLU inner width (fc1 produces 2×d_ff, fc2 maps d_ff→d_model).
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_base: f32,
+    pub norm_eps: f32,
+    /// Channels per layer boosted by function-preserving outlier injection
+    /// (fraction of d_model; see `model::init`).
+    pub outlier_frac: f32,
+    /// Outlier magnitude multiplier.
+    pub outlier_gain: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameter count of the transformer (excl. embeddings).
+    pub fn block_params(&self) -> usize {
+        let d = self.d_model;
+        self.n_layers * (3 * d * d + d * d + d * 2 * self.d_ff + self.d_ff * d)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.block_params() + 2 * self.vocab_size * self.d_model
+    }
+
+    /// The registry standing in for the paper's model zoo. Letters map to
+    /// tables: A=LLaMA3-8B, B=Qwen1.5-7B, C=Qwen-72B, D=LLaMA2-13B,
+    /// E=Qwen-14B, F=Qwen1.5-32B.
+    pub fn by_name(name: &str) -> Result<ModelConfig> {
+        let base = ModelConfig {
+            name: name.to_string(),
+            vocab_size: 512,
+            d_model: 256,
+            n_layers: 8,
+            n_heads: 8,
+            d_ff: 512,
+            max_seq: 256,
+            rope_base: 10_000.0,
+            norm_eps: 1e-5,
+            outlier_frac: 0.01,
+            outlier_gain: 25.0,
+        };
+        Ok(match name {
+            // "LLaMA3-8B" stand-in: the main analysis model.
+            "A" | "llama3-8b" => base,
+            // "Qwen1.5-7B": different width/depth + hotter outliers (the
+            // Qwen family quantizes worse in the paper's tables).
+            "B" | "qwen1.5-7b" => ModelConfig {
+                d_model: 320,
+                n_layers: 6,
+                n_heads: 8,
+                d_ff: 640,
+                outlier_frac: 0.015,
+                outlier_gain: 45.0,
+                ..base
+            },
+            // "Qwen-72B": the large config.
+            "C" | "qwen-72b" => ModelConfig {
+                d_model: 512,
+                n_layers: 8,
+                n_heads: 8,
+                d_ff: 1024,
+                outlier_frac: 0.01,
+                outlier_gain: 30.0,
+                ..base
+            },
+            // "LLaMA2-13B"
+            "D" | "llama2-13b" => ModelConfig {
+                d_model: 384,
+                n_layers: 7,
+                n_heads: 8,
+                d_ff: 768,
+                outlier_gain: 18.0,
+                ..base
+            },
+            // "Qwen-14B"
+            "E" | "qwen-14b" => ModelConfig {
+                d_model: 448,
+                n_layers: 6,
+                n_heads: 8,
+                d_ff: 896,
+                outlier_frac: 0.012,
+                outlier_gain: 35.0,
+                ..base
+            },
+            // "Qwen1.5-32B"
+            "F" | "qwen1.5-32b" => ModelConfig {
+                d_model: 512,
+                n_layers: 7,
+                n_heads: 16,
+                d_ff: 1024,
+                outlier_frac: 0.012,
+                outlier_gain: 40.0,
+                ..base
+            },
+            // Micro config for fast tests.
+            "micro" => ModelConfig {
+                vocab_size: 128,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                d_ff: 128,
+                max_seq: 64,
+                ..base
+            },
+            other => anyhow::bail!("unknown model config '{other}'"),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("vocab_size", num(self.vocab_size as f64)),
+            ("d_model", num(self.d_model as f64)),
+            ("n_layers", num(self.n_layers as f64)),
+            ("n_heads", num(self.n_heads as f64)),
+            ("d_ff", num(self.d_ff as f64)),
+            ("max_seq", num(self.max_seq as f64)),
+            ("rope_base", num(self.rope_base as f64)),
+            ("norm_eps", num(self.norm_eps as f64)),
+            ("outlier_frac", num(self.outlier_frac as f64)),
+            ("outlier_gain", num(self.outlier_gain as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.str_field("name")?.to_string(),
+            vocab_size: j.int("vocab_size")?,
+            d_model: j.int("d_model")?,
+            n_layers: j.int("n_layers")?,
+            n_heads: j.int("n_heads")?,
+            d_ff: j.int("d_ff")?,
+            max_seq: j.int("max_seq")?,
+            rope_base: j.num("rope_base")? as f32,
+            norm_eps: j.num("norm_eps")? as f32,
+            outlier_frac: j.num("outlier_frac")? as f32,
+            outlier_gain: j.num("outlier_gain")? as f32,
+        })
+    }
+}
+
+/// Names of the quantizable linear layers in one block, matching Fig. 2.
+pub const LINEAR_NAMES: [&str; 4] = ["qkv_proj", "out_proj", "fc1", "fc2"];
+
+/// Stable layer key "L{idx}.{name}" used by calibration and the pipeline.
+pub fn layer_key(block: usize, linear: &str) -> String {
+    format!("L{block}.{linear}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_configs_consistent() {
+        for name in ["A", "B", "C", "D", "E", "F", "micro"] {
+            let c = ModelConfig::by_name(name).unwrap();
+            assert_eq!(c.d_model % c.n_heads, 0, "{name}");
+            assert!(c.total_params() > 0);
+        }
+        assert!(ModelConfig::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        let a = ModelConfig::by_name("A").unwrap();
+        let a2 = ModelConfig::by_name("llama3-8b").unwrap();
+        assert_eq!(a.d_model, a2.d_model);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::by_name("B").unwrap();
+        let j = c.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(back.d_model, c.d_model);
+        assert_eq!(back.rope_base, c.rope_base);
+        let reparsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(ModelConfig::from_json(&reparsed).unwrap().d_ff, c.d_ff);
+    }
+
+    #[test]
+    fn layer_keys() {
+        assert_eq!(layer_key(3, "fc1"), "L3.fc1");
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let c = ModelConfig::by_name("micro").unwrap();
+        let d = 64;
+        let per_block = 3 * d * d + d * d + d * 2 * 128 + 128 * d;
+        assert_eq!(c.block_params(), 2 * per_block);
+    }
+}

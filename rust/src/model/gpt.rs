@@ -1,0 +1,476 @@
+//! LLaMA-style decoder-only transformer (fp32, CPU) — the evaluation
+//! substrate the quantization pipeline operates on.
+//!
+//! Structure per block: RMSNorm → fused `qkv_proj` → rotary → causal MHSA →
+//! `out_proj` → residual; RMSNorm → fused `fc1` (gate‖up) → SwiGLU → `fc2` →
+//! residual. The four named linears match the paper's Fig. 2. Embeddings and
+//! the LM head stay fp (standard PTQ practice).
+//!
+//! Two forward paths:
+//! - [`Gpt::forward_logits`] — teacher-forced batch forward (PPL/eval,
+//!   calibration capture via [`ActSink`]).
+//! - [`Gpt::forward_step`] — incremental decode against a [`KvCache`]
+//!   (the serving hot path).
+
+use super::config::{layer_key, ModelConfig};
+use super::linear::Linear;
+use crate::tensor::Matrix;
+
+/// Receives the input activations of every quantizable linear layer.
+pub trait ActSink {
+    fn record(&mut self, key: &str, x: &Matrix);
+}
+
+/// No-op sink.
+pub struct NullSink;
+impl ActSink for NullSink {
+    fn record(&mut self, _key: &str, _x: &Matrix) {}
+}
+
+pub struct Block {
+    pub attn_norm: Vec<f32>,
+    pub qkv: Linear,      // (3·d) × d
+    pub out_proj: Linear, // d × d
+    pub ffn_norm: Vec<f32>,
+    pub fc1: Linear, // (2·d_ff) × d   (gate ‖ up)
+    pub fc2: Linear, // d × d_ff
+}
+
+pub struct Gpt {
+    pub cfg: ModelConfig,
+    pub embed: Matrix,   // vocab × d
+    pub blocks: Vec<Block>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Matrix, // vocab × d
+}
+
+#[derive(Clone)]
+/// Per-layer KV cache for incremental decoding.
+pub struct KvCache {
+    /// keys[layer]: seen × d_model (heads packed contiguously).
+    pub keys: Vec<Vec<f32>>,
+    pub values: Vec<Vec<f32>>,
+    pub seen: usize,
+    d_model: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            keys: vec![Vec::new(); cfg.n_layers],
+            values: vec![Vec::new(); cfg.n_layers],
+            seen: 0,
+            d_model: cfg.d_model,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Bytes held (for the serving cache manager's accounting).
+    pub fn bytes(&self) -> usize {
+        self.keys.iter().chain(&self.values).map(|v| v.len() * 4).sum()
+    }
+
+    /// Drop everything after position `n` (prefix reuse).
+    pub fn truncate(&mut self, n: usize) {
+        for k in &mut self.keys {
+            k.truncate(n * self.d_model);
+        }
+        for v in &mut self.values {
+            v.truncate(n * self.d_model);
+        }
+        self.seen = self.seen.min(n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// RMSNorm with learned gain.
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32) -> Vec<f32> {
+    debug_assert_eq!(x.len(), gain.len());
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + eps as f64).sqrt() as f32;
+    x.iter().zip(gain).map(|(&v, &g)| v * inv * g).collect()
+}
+
+fn rmsnorm_rows(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        out.row_mut(r).copy_from_slice(&rmsnorm(x.row(r), gain, eps));
+    }
+    out
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Apply rotary position embedding to one head vector in place
+/// (half-split convention, matching the JAX build path).
+pub fn rope_inplace(v: &mut [f32], pos: usize, base: f32) {
+    let hd = v.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = base.powf(-2.0 * i as f32 / hd as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let a = v[i];
+        let b = v[half + i];
+        v[i] = a * cos - b * sin;
+        v[half + i] = a * sin + b * cos;
+    }
+}
+
+fn softmax_inplace(x: &mut [f32]) {
+    let max = x.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+impl Gpt {
+    /// Teacher-forced forward: logits for every position (T × vocab).
+    pub fn forward_logits(&self, tokens: &[u32], sink: &mut dyn ActSink) -> Matrix {
+        let h = self.forward_hidden(tokens, sink);
+        crate::tensor::matmul_bt(&h, &self.lm_head)
+    }
+
+    /// Final hidden states (T × d), post final norm.
+    pub fn forward_hidden(&self, tokens: &[u32], sink: &mut dyn ActSink) -> Matrix {
+        let t_len = tokens.len();
+        let d = self.cfg.d_model;
+        assert!(t_len <= self.cfg.max_seq, "sequence {} > max_seq", t_len);
+        let mut h = Matrix::zeros(t_len, d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            h.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for (l, block) in self.blocks.iter().enumerate() {
+            h = self.block_forward(block, l, &h, sink);
+        }
+        rmsnorm_rows(&h, &self.final_norm, self.cfg.norm_eps)
+    }
+
+    fn block_forward(&self, block: &Block, l: usize, h: &Matrix, sink: &mut dyn ActSink) -> Matrix {
+        let cfg = &self.cfg;
+        let (t_len, d) = (h.rows, cfg.d_model);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+
+        // ---- attention ----
+        let x_norm = rmsnorm_rows(h, &block.attn_norm, cfg.norm_eps);
+        sink.record(&layer_key(l, "qkv_proj"), &x_norm);
+        let qkv = block.qkv.forward(&x_norm); // T × 3d
+        // Split and apply rope per head.
+        let mut q = qkv.cols_slice(0, d);
+        let mut k = qkv.cols_slice(d, 2 * d);
+        let v = qkv.cols_slice(2 * d, 3 * d);
+        for t in 0..t_len {
+            for head in 0..nh {
+                let s = head * hd;
+                rope_inplace(&mut q.row_mut(t)[s..s + hd], t, cfg.rope_base);
+                rope_inplace(&mut k.row_mut(t)[s..s + hd], t, cfg.rope_base);
+            }
+        }
+        // Causal attention per head.
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn_out = Matrix::zeros(t_len, d);
+        let mut scores = vec![0f32; t_len];
+        for head in 0..nh {
+            let s = head * hd;
+            for tq in 0..t_len {
+                let qrow = &q.row(tq)[s..s + hd];
+                for tk in 0..=tq {
+                    scores[tk] = crate::tensor::dot(qrow, &k.row(tk)[s..s + hd]) * scale;
+                }
+                softmax_inplace(&mut scores[..=tq]);
+                let orow = &mut attn_out.row_mut(tq)[s..s + hd];
+                for tk in 0..=tq {
+                    let w = scores[tk];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(tk)[s..s + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        sink.record(&layer_key(l, "out_proj"), &attn_out);
+        let attn_proj = block.out_proj.forward(&attn_out);
+        let h1 = h.add(&attn_proj);
+
+        // ---- feed-forward (SwiGLU) ----
+        let x_norm2 = rmsnorm_rows(&h1, &block.ffn_norm, cfg.norm_eps);
+        sink.record(&layer_key(l, "fc1"), &x_norm2);
+        let gate_up = block.fc1.forward(&x_norm2); // T × 2·dff
+        let dff = cfg.d_ff;
+        let mut act = Matrix::zeros(t_len, dff);
+        for t in 0..t_len {
+            let gu = gate_up.row(t);
+            let arow = act.row_mut(t);
+            for i in 0..dff {
+                arow[i] = silu(gu[i]) * gu[dff + i];
+            }
+        }
+        sink.record(&layer_key(l, "fc2"), &act);
+        let ffn = block.fc2.forward(&act);
+        h1.add(&ffn)
+    }
+
+    /// Incremental decode: push one token, return logits for the next.
+    pub fn forward_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let pos = cache.seen;
+        assert!(pos < cfg.max_seq, "kv cache full");
+        let mut h: Vec<f32> = self.embed.row(token as usize).to_vec();
+
+        for (l, block) in self.blocks.iter().enumerate() {
+            // attention
+            let x_norm = rmsnorm(&h, &block.attn_norm, cfg.norm_eps);
+            let qkv = block.qkv.forward_token(&x_norm);
+            let mut q = qkv[0..d].to_vec();
+            let mut k = qkv[d..2 * d].to_vec();
+            let v = &qkv[2 * d..3 * d];
+            for head in 0..nh {
+                let s = head * hd;
+                rope_inplace(&mut q[s..s + hd], pos, cfg.rope_base);
+                rope_inplace(&mut k[s..s + hd], pos, cfg.rope_base);
+            }
+            cache.keys[l].extend_from_slice(&k);
+            cache.values[l].extend_from_slice(v);
+            let t_seen = pos + 1;
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn_out = vec![0f32; d];
+            let mut scores = vec![0f32; t_seen];
+            for head in 0..nh {
+                let s = head * hd;
+                let qh = &q[s..s + hd];
+                for tk in 0..t_seen {
+                    let krow = &cache.keys[l][tk * d + s..tk * d + s + hd];
+                    scores[tk] = crate::tensor::dot(qh, krow) * scale;
+                }
+                softmax_inplace(&mut scores);
+                let orow = &mut attn_out[s..s + hd];
+                for tk in 0..t_seen {
+                    let w = scores[tk];
+                    let vrow = &cache.values[l][tk * d + s..tk * d + s + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            let attn_proj = block.out_proj.forward_token(&attn_out);
+            for (hi, p) in h.iter_mut().zip(&attn_proj) {
+                *hi += p;
+            }
+            // ffn
+            let x_norm2 = rmsnorm(&h, &block.ffn_norm, cfg.norm_eps);
+            let gate_up = block.fc1.forward_token(&x_norm2);
+            let dff = cfg.d_ff;
+            let mut act = vec![0f32; dff];
+            for i in 0..dff {
+                act[i] = silu(gate_up[i]) * gate_up[dff + i];
+            }
+            let ffn = block.fc2.forward_token(&act);
+            for (hi, f) in h.iter_mut().zip(&ffn) {
+                *hi += f;
+            }
+        }
+        cache.seen += 1;
+        let hn = rmsnorm(&h, &self.final_norm, cfg.norm_eps);
+        crate::tensor::matvec(&self.lm_head, &hn)
+    }
+
+    /// Greedy generation from a prompt; returns generated token ids.
+    pub fn generate_greedy(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        let mut cache = KvCache::new(&self.cfg);
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.forward_step(t, &mut cache);
+        }
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            if cache.seen >= self.cfg.max_seq {
+                break;
+            }
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            logits = self.forward_step(next, &mut cache);
+        }
+        out
+    }
+
+    /// Swap one linear layer (the pipeline applies quantization results).
+    pub fn set_linear(&mut self, block: usize, name: &str, lin: Linear) {
+        let b = &mut self.blocks[block];
+        match name {
+            "qkv_proj" => b.qkv = lin,
+            "out_proj" => b.out_proj = lin,
+            "fc1" => b.fc1 = lin,
+            "fc2" => b.fc2 = lin,
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+
+    pub fn get_linear(&self, block: usize, name: &str) -> &Linear {
+        let b = &self.blocks[block];
+        match name {
+            "qkv_proj" => &b.qkv,
+            "out_proj" => &b.out_proj,
+            "fc1" => &b.fc1,
+            "fc2" => &b.fc2,
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::synthetic_model;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn batch_and_incremental_forward_agree() {
+        let model = synthetic_model("micro", 7).unwrap();
+        let tokens: Vec<u32> = vec![3, 17, 42, 9, 100, 55];
+        let batch = model.forward_logits(&tokens, &mut NullSink);
+        let mut cache = KvCache::new(&model.cfg);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let step = model.forward_step(tok, &mut cache);
+            let brow = batch.row(t);
+            let maxdiff = step
+                .iter()
+                .zip(brow)
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(maxdiff < 2e-3, "pos {t}: maxdiff {maxdiff}");
+        }
+        assert_eq!(cache.len(), tokens.len());
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_position_dependent() {
+        let mut rng = Pcg64::seed(141);
+        let v0: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let norm0: f32 = v0.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let mut v1 = v0.clone();
+        rope_inplace(&mut v1, 5, 10_000.0);
+        let norm1: f32 = v1.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm0 - norm1).abs() < 1e-4);
+        let mut v2 = v0.clone();
+        rope_inplace(&mut v2, 6, 10_000.0);
+        assert!(v1.iter().zip(&v2).any(|(a, b)| (a - b).abs() > 1e-4));
+        // pos 0 = identity
+        let mut v3 = v0.clone();
+        rope_inplace(&mut v3, 0, 10_000.0);
+        for (a, b) in v3.iter().zip(&v0) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Logits at position t must not depend on tokens after t.
+        let model = synthetic_model("micro", 8).unwrap();
+        let t1: Vec<u32> = vec![5, 9, 13, 70, 2];
+        let t2: Vec<u32> = vec![5, 9, 13, 1, 127];
+        let l1 = model.forward_logits(&t1, &mut NullSink);
+        let l2 = model.forward_logits(&t2, &mut NullSink);
+        for t in 0..3 {
+            let d = l1
+                .row(t)
+                .iter()
+                .zip(l2.row(t))
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-5, "pos {t} differs: {d}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32; 8];
+        let gain = vec![1.0f32; 8];
+        let y = rmsnorm(&x, &gain, 1e-5);
+        for v in y {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_bounded() {
+        let model = synthetic_model("micro", 9).unwrap();
+        let out1 = model.generate_greedy(&[1, 2, 3], 10);
+        let out2 = model.generate_greedy(&[1, 2, 3], 10);
+        assert_eq!(out1, out2);
+        assert_eq!(out1.len(), 10);
+        assert!(out1.iter().all(|&t| (t as usize) < model.cfg.vocab_size));
+    }
+
+    #[test]
+    fn kv_cache_truncate() {
+        let model = synthetic_model("micro", 10).unwrap();
+        let mut cache = KvCache::new(&model.cfg);
+        for &t in &[1u32, 2, 3, 4] {
+            model.forward_step(t, &mut cache);
+        }
+        let bytes4 = cache.bytes();
+        cache.truncate(2);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.bytes() < bytes4);
+        // Continuing from truncated prefix == fresh replay.
+        let l_cont = model.forward_step(9, &mut cache);
+        let mut fresh = KvCache::new(&model.cfg);
+        for &t in &[1u32, 2, 9] {
+            let _ = model.forward_step(t, &mut fresh);
+        }
+        let mut fresh2 = KvCache::new(&model.cfg);
+        let mut l_fresh = Vec::new();
+        for &t in &[1u32, 2, 9] {
+            l_fresh = model.forward_step(t, &mut fresh2);
+        }
+        let d = l_cont.iter().zip(&l_fresh).fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+        assert!(d < 1e-5);
+    }
+
+    #[test]
+    fn act_sink_sees_all_layers() {
+        struct Counter(Vec<String>);
+        impl ActSink for Counter {
+            fn record(&mut self, key: &str, x: &Matrix) {
+                assert!(x.rows > 0);
+                self.0.push(key.to_string());
+            }
+        }
+        let model = synthetic_model("micro", 11).unwrap();
+        let mut sink = Counter(Vec::new());
+        model.forward_logits(&[1, 2, 3, 4], &mut sink);
+        assert_eq!(sink.0.len(), model.cfg.n_layers * 4);
+        assert!(sink.0.contains(&"L0.qkv_proj".to_string()));
+        assert!(sink.0.contains(&"L1.fc2".to_string()));
+    }
+}

@@ -1,0 +1,272 @@
+//! Model construction: synthetic initialization with function-preserving
+//! outlier injection, and (de)serialization against the ATNS tensor format
+//! shared with the python pretraining path.
+//!
+//! **Outlier injection** (DESIGN.md §3): real pretrained LLMs develop a
+//! small set of high-magnitude activation channels, which is precisely the
+//! phenomenon ASER exploits. We reproduce it deterministically: boost the
+//! RMSNorm gain of ~`outlier_frac` of channels by `outlier_gain` and divide
+//! the consuming linear's columns by the same factor. The transform is
+//! exact at fp32 — the model function is unchanged — but the activations
+//! entering `qkv_proj`/`fc1` now carry genuine outlier channels, so
+//! quantization error concentrates exactly as in Fig. 4 of the paper.
+
+use super::config::ModelConfig;
+use super::gpt::{Block, Gpt};
+use super::linear::Linear;
+use crate::tensor::Matrix;
+use crate::util::io::TensorFile;
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Build a model with random (untrained) weights + outlier structure.
+/// Used by unit tests, figures and benches; the evaluation pipeline prefers
+/// pretrained weights from `artifacts/models/<name>/weights.atns`.
+pub fn synthetic_model(config_name: &str, seed: u64) -> Result<Gpt> {
+    let cfg = ModelConfig::by_name(config_name)?;
+    let root = Pcg64::new(seed, 0xA5E1);
+    let d = cfg.d_model;
+    let std = 0.02f32;
+    // Residual-branch scaling à la GPT-2 init.
+    let resid_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+
+    let mut rng_e = root.fork("embed");
+    let embed = Matrix::randn(&mut rng_e, cfg.vocab_size, d, std);
+    let mut rng_h = root.fork("head");
+    let lm_head = Matrix::randn(&mut rng_h, cfg.vocab_size, d, std);
+
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let mut rng = root.fork(&format!("block{l}"));
+        let qkv = Matrix::randn(&mut rng, 3 * d, d, std);
+        let out_proj = Matrix::randn(&mut rng, d, d, resid_std);
+        let fc1 = Matrix::randn(&mut rng, 2 * cfg.d_ff, d, std);
+        let fc2 = Matrix::randn(&mut rng, d, cfg.d_ff, resid_std);
+        blocks.push(Block {
+            attn_norm: vec![1.0; d],
+            qkv: Linear::Dense(qkv),
+            out_proj: Linear::Dense(out_proj),
+            ffn_norm: vec![1.0; d],
+            fc1: Linear::Dense(fc1),
+            fc2: Linear::Dense(fc2),
+        });
+    }
+    let mut model = Gpt { cfg, embed, blocks, final_norm: vec![1.0; d], lm_head };
+    inject_outliers(&mut model, &root.fork("outliers"));
+    Ok(model)
+}
+
+/// Function-preserving outlier injection (see module docs). Operates on
+/// dense (fp) models only — call before quantization.
+pub fn inject_outliers(model: &mut Gpt, rng: &Pcg64) {
+    let cfg = model.cfg.clone();
+    let d = cfg.d_model;
+    let n_out = ((d as f32 * cfg.outlier_frac).round() as usize).max(1);
+    for l in 0..cfg.n_layers {
+        let mut r = rng.fork(&format!("layer{l}"));
+        // Distinct channel sets per norm so layers differ (as in Fig. 3).
+        for (norm_name, lin_name) in [("attn", "qkv_proj"), ("ffn", "fc1")] {
+            let mut rr = r.fork(norm_name);
+            let channels = rr.choose(d, n_out);
+            let block = &mut model.blocks[l];
+            let (norm, lin) = match norm_name {
+                "attn" => (&mut block.attn_norm, &mut block.qkv),
+                _ => (&mut block.ffn_norm, &mut block.fc1),
+            };
+            let w = match lin {
+                Linear::Dense(w) => w,
+                Linear::Quant(_) => panic!("inject_outliers on quantized model"),
+            };
+            for &c in &channels {
+                // Log-spread gains around the configured magnitude.
+                let gain = cfg.outlier_gain * (rr.normal() * 0.4).exp();
+                norm[c] *= gain;
+                let inv = 1.0 / gain;
+                for row in 0..w.rows {
+                    w[(row, c)] *= inv;
+                }
+            }
+            let _ = lin_name;
+        }
+        let _ = &mut r;
+    }
+}
+
+// -- persistence ------------------------------------------------------------
+
+/// Save a dense model to the ATNS tensor format.
+pub fn save_model(model: &Gpt, path: &Path) -> Result<()> {
+    let mut tf = TensorFile::default();
+    let cfg = &model.cfg;
+    tf.insert_f32("embed", vec![cfg.vocab_size, cfg.d_model], &model.embed.data);
+    tf.insert_f32("lm_head", vec![cfg.vocab_size, cfg.d_model], &model.lm_head.data);
+    tf.insert_f32("final_norm", vec![cfg.d_model], &model.final_norm);
+    for (l, b) in model.blocks.iter().enumerate() {
+        let dense = |lin: &Linear| -> Result<Vec<f32>> {
+            lin.dense_weight()
+                .map(|w| w.data.clone())
+                .context("save_model requires dense weights")
+        };
+        tf.insert_f32(&format!("L{l}.attn_norm"), vec![cfg.d_model], &b.attn_norm);
+        tf.insert_f32(&format!("L{l}.ffn_norm"), vec![cfg.d_model], &b.ffn_norm);
+        tf.insert_f32(&format!("L{l}.qkv_proj"), vec![3 * cfg.d_model, cfg.d_model], &dense(&b.qkv)?);
+        tf.insert_f32(&format!("L{l}.out_proj"), vec![cfg.d_model, cfg.d_model], &dense(&b.out_proj)?);
+        tf.insert_f32(&format!("L{l}.fc1"), vec![2 * cfg.d_ff, cfg.d_model], &dense(&b.fc1)?);
+        tf.insert_f32(&format!("L{l}.fc2"), vec![cfg.d_model, cfg.d_ff], &dense(&b.fc2)?);
+    }
+    tf.save(path)
+}
+
+/// Load a dense model from ATNS written either by [`save_model`] or by the
+/// python pretraining exporter.
+pub fn load_model(cfg: ModelConfig, path: &Path) -> Result<Gpt> {
+    let tf = TensorFile::load(path)?;
+    let mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+        let (dims, data) = tf.get_f32(name)?;
+        anyhow::ensure!(
+            dims == vec![rows, cols],
+            "tensor '{name}': dims {dims:?} != [{rows}, {cols}]"
+        );
+        Ok(Matrix::from_vec(rows, cols, data))
+    };
+    let vecf = |name: &str, n: usize| -> Result<Vec<f32>> {
+        let (dims, data) = tf.get_f32(name)?;
+        anyhow::ensure!(dims == vec![n], "tensor '{name}': dims {dims:?} != [{n}]");
+        Ok(data)
+    };
+    let mat_any = |name: &str| -> Result<Matrix> {
+        let (dims, data) = tf.get_f32(name)?;
+        anyhow::ensure!(dims.len() == 2, "tensor '{name}' not 2-D");
+        Ok(Matrix::from_vec(dims[0], dims[1], data))
+    };
+    let d = cfg.d_model;
+    let embed = mat("embed", cfg.vocab_size, d)?;
+    let lm_head = mat("lm_head", cfg.vocab_size, d)?;
+    let final_norm = vecf("final_norm", d)?;
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        blocks.push(Block {
+            attn_norm: vecf(&format!("L{l}.attn_norm"), d)?,
+            qkv: Linear::Dense(mat(&format!("L{l}.qkv_proj"), 3 * d, d)?),
+            out_proj: Linear::Dense(mat(&format!("L{l}.out_proj"), d, d)?),
+            ffn_norm: vecf(&format!("L{l}.ffn_norm"), d)?,
+            fc1: Linear::Dense(mat(&format!("L{l}.fc1"), 2 * cfg.d_ff, d)?),
+            fc2: Linear::Dense(
+                mat_any(&format!("L{l}.fc2"))?.transposed_if_needed(cfg.d_model, cfg.d_ff)?,
+            ),
+        });
+    }
+    Ok(Gpt { cfg, embed, blocks, final_norm, lm_head })
+}
+
+trait FixShape: Sized {
+    fn transposed_if_needed(self, d_model: usize, d_ff: usize) -> Result<Matrix>;
+}
+impl FixShape for Matrix {
+    /// fc2 is d_model × d_ff; accept either orientation from exporters.
+    fn transposed_if_needed(self, d_model: usize, d_ff: usize) -> Result<Matrix> {
+        if self.rows == d_model && self.cols == d_ff {
+            Ok(self)
+        } else if self.rows == d_ff && self.cols == d_model {
+            Ok(self.transpose())
+        } else {
+            anyhow::bail!("fc2 shape {}x{} incompatible", self.rows, self.cols)
+        }
+    }
+}
+
+/// Load a model whose weights file may not exist: fall back to synthetic.
+pub fn load_or_synthetic(config_name: &str, artifacts_dir: &Path, seed: u64) -> Result<(Gpt, bool)> {
+    let cfg = ModelConfig::by_name(config_name)?;
+    let path = artifacts_dir.join("models").join(&cfg.name).join("weights.atns");
+    if path.exists() {
+        Ok((load_model(cfg, &path)?, true))
+    } else {
+        Ok((synthetic_model(config_name, seed)?, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::NullSink;
+
+    #[test]
+    fn injection_preserves_function() {
+        // Build twice with identical weights; inject in one; logits equal.
+        let cfg = ModelConfig::by_name("micro").unwrap();
+        let mut with = synthetic_model("micro", 77).unwrap();
+        // Rebuild the un-injected version manually by undoing: easier —
+        // construct fresh and compare to a clone prior to injection.
+        let root = Pcg64::new(77, 0xA5E1);
+        // synthetic_model already injected; construct a non-injected twin:
+        let mut plain = synthetic_model("micro", 77).unwrap();
+        // Undo injection on `plain` by re-deriving gains? Instead: verify
+        // directly that injecting *again* (with a different fork) keeps
+        // logits identical — the property we rely on.
+        let tokens = [1u32, 5, 9, 33];
+        let before = with.forward_logits(&tokens, &mut NullSink);
+        inject_outliers(&mut with, &root.fork("again"));
+        let after = with.forward_logits(&tokens, &mut NullSink);
+        let rel = before.sub(&after).frob_norm() / before.frob_norm().max(1e-9);
+        assert!(rel < 1e-3, "rel={rel}");
+        let _ = &mut plain;
+    }
+
+    #[test]
+    fn injection_creates_activation_outliers() {
+        use crate::model::gpt::ActSink;
+        struct Grab(Option<Matrix>);
+        impl ActSink for Grab {
+            fn record(&mut self, key: &str, x: &Matrix) {
+                if key == "L0.qkv_proj" && self.0.is_none() {
+                    self.0 = Some(x.clone());
+                }
+            }
+        }
+        let model = synthetic_model("micro", 78).unwrap();
+        let mut sink = Grab(None);
+        let tokens: Vec<u32> = (0..32).map(|i| (i * 3) % 128).collect();
+        model.forward_logits(&tokens, &mut sink);
+        let x = sink.0.unwrap();
+        let means = x.col_abs_mean();
+        let mut sorted = means.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // Kurtosis check: top channel dominates the median by the gain.
+        let median = sorted[sorted.len() / 2];
+        assert!(sorted[0] > 5.0 * median, "top {} median {median}", sorted[0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("aser_model_io");
+        let path = dir.join("m.atns");
+        let model = synthetic_model("micro", 79).unwrap();
+        save_model(&model, &path).unwrap();
+        let back = load_model(model.cfg.clone(), &path).unwrap();
+        let tokens = [2u32, 4, 8];
+        let a = model.forward_logits(&tokens, &mut NullSink);
+        let b = back.forward_logits(&tokens, &mut NullSink);
+        assert!(a.max_diff(&b) < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_synthetic_fallback() {
+        let dir = std::env::temp_dir().join("aser_no_artifacts");
+        let (m, pretrained) = load_or_synthetic("micro", &dir, 5).unwrap();
+        assert!(!pretrained);
+        assert_eq!(m.cfg.name, "micro");
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let a = synthetic_model("micro", 99).unwrap();
+        let b = synthetic_model("micro", 99).unwrap();
+        assert_eq!(a.embed.data, b.embed.data);
+        let wa = a.blocks[1].fc1.dense_weight().unwrap();
+        let wb = b.blocks[1].fc1.dense_weight().unwrap();
+        assert_eq!(wa.data, wb.data);
+    }
+}

@@ -1,0 +1,203 @@
+//! The linear-layer abstraction the quantization pipeline swaps in place.
+//!
+//! `Linear::Dense` is the fp32 reference; `Linear::Quant` wraps a
+//! [`QuantizedLinear`] produced by any PTQ method. The quantized forward here
+//! is the *optimized serving path* (int8 token quant + integer-ish dot with
+//! per-row scales + fused low-rank branch); `QuantizedLinear::forward_matrix`
+//! in `methods` is the reference semantics it must match (see tests).
+
+use crate::methods::QuantizedLinear;
+use crate::quant::{quantize_token, FP};
+use crate::tensor::{matvec, Matrix};
+
+pub enum Linear {
+    Dense(Matrix),
+    Quant(QuantizedLinear),
+}
+
+impl Linear {
+    pub fn out_features(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.rows,
+            Linear::Quant(q) => q.out_features(),
+        }
+    }
+
+    pub fn in_features(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.cols,
+            Linear::Quant(q) => q.in_features(),
+        }
+    }
+
+    /// Dense reference weight if fp.
+    pub fn dense_weight(&self) -> Option<&Matrix> {
+        match self {
+            Linear::Dense(w) => Some(w),
+            Linear::Quant(_) => None,
+        }
+    }
+
+    /// Forward for a batch of token activations (tokens × in → tokens × out).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        match self {
+            Linear::Dense(w) => crate::tensor::matmul_bt(x, w),
+            Linear::Quant(q) => {
+                let mut out = Matrix::zeros(x.rows, q.out_features());
+                for t in 0..x.rows {
+                    let y = forward_quant_token(q, x.row(t));
+                    out.row_mut(t).copy_from_slice(&y);
+                }
+                out
+            }
+        }
+    }
+
+    /// Single-token forward (serving hot path).
+    pub fn forward_token(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            Linear::Dense(w) => matvec(w, x),
+            Linear::Quant(q) => forward_quant_token(q, x),
+        }
+    }
+}
+
+/// Optimized quantized single-token forward:
+/// 1. smooth: x' = x / m
+/// 2. per-token quantize x' to `abits`; integer codes dot int weight codes
+///    row-wise, then apply the combined scale (token_scale × row_scale)
+/// 3. fp outlier columns
+/// 4. low-rank branch on fp x'
+pub fn forward_quant_token(q: &QuantizedLinear, x: &[f32]) -> Vec<f32> {
+    let d_in = q.in_features();
+    let d_out = q.out_features();
+    debug_assert_eq!(x.len(), d_in);
+    // 1. smoothing
+    let xs: Vec<f32> = match &q.act_smooth {
+        Some(m) => x.iter().zip(m).map(|(&v, &mi)| v / mi).collect(),
+        None => x.to_vec(),
+    };
+    let mut y = vec![0f32; d_out];
+    if q.abits == FP {
+        // fp activation × dequantized row — still avoids materializing W.
+        for r in 0..d_out {
+            let codes = &q.weight.codes[r * d_in..(r + 1) * d_in];
+            let mut acc = 0f32;
+            for (c, &xv) in codes.iter().zip(&xs) {
+                acc += *c as f32 * xv;
+            }
+            y[r] = acc * q.weight.scales[r];
+        }
+    } else {
+        // 2. per-token activation quantization, integer dot in i32.
+        let qt = quantize_token(&xs, q.abits);
+        for r in 0..d_out {
+            let codes = &q.weight.codes[r * d_in..(r + 1) * d_in];
+            let acc = dot_i8(codes, &qt.codes);
+            y[r] = acc as f32 * (qt.scale * q.weight.scales[r]);
+        }
+    }
+    // 3. fp outlier columns act on the *unquantized* smoothed activation.
+    for (c, wcol) in &q.fp_cols {
+        let xv = xs[*c];
+        if xv != 0.0 {
+            for (yo, &wv) in y.iter_mut().zip(wcol) {
+                *yo += xv * wv;
+            }
+        }
+    }
+    // 4. low-rank correction (fp skinny GEMMs): y += L_A · (L_B · x).
+    if let Some((la, lb)) = &q.low_rank {
+        let z = matvec(lb, &xs); // r
+        let corr = matvec(la, &z); // out  (la: out×r)
+        for (yo, c) in y.iter_mut().zip(corr) {
+            *yo += c;
+        }
+    }
+    y
+}
+
+/// i8·i8 → i32 dot, 8-wide unrolled.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0i32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for k in 0..8 {
+            acc[k] += a[i + k] as i32 * b[i + k] as i32;
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for i in chunks * 8..n {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::{aser::Aser, rtn::Rtn, LayerCalib, PtqMethod, RankPolicy};
+    use crate::quant::Precision;
+    use crate::util::rng::Pcg64;
+
+    fn setup(seed: u64) -> (Matrix, LayerCalib) {
+        let mut rng = Pcg64::seed(seed);
+        let d = 40;
+        let w = Matrix::randn(&mut rng, 24, d, 0.05);
+        let mut x = Matrix::randn(&mut rng, 64, d, 1.0);
+        for r in 0..x.rows {
+            x[(r, 3)] *= 20.0;
+        }
+        (w, LayerCalib::from_sample(x))
+    }
+
+    #[test]
+    fn hot_path_matches_reference_semantics_rtn() {
+        let (w, calib) = setup(131);
+        for prec in [Precision::w4a8(), Precision::w4a6(), Precision::w4a16()] {
+            let q = Rtn.quantize_layer(&w, &calib, prec);
+            let want = q.forward_matrix(&calib.x);
+            let lin = Linear::Quant(q);
+            let got = lin.forward(&calib.x);
+            assert!(
+                want.max_diff(&got) < 1e-3 * want.max_abs().max(1.0),
+                "{prec}: diff {}",
+                want.max_diff(&got)
+            );
+        }
+    }
+
+    #[test]
+    fn hot_path_matches_reference_semantics_aser() {
+        let (w, calib) = setup(132);
+        let aser = Aser { rank: RankPolicy::Fixed(8), outlier_f: 4, ..Default::default() };
+        let q = aser.quantize_layer(&w, &calib, Precision::w4a8());
+        let want = q.forward_matrix(&calib.x);
+        let lin = Linear::Quant(q);
+        let got = lin.forward(&calib.x);
+        assert!(want.max_diff(&got) < 1e-3 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn dense_token_and_batch_agree() {
+        let (w, calib) = setup(133);
+        let lin = Linear::Dense(w);
+        let batch = lin.forward(&calib.x);
+        for t in [0usize, 5, 63] {
+            let y = lin.forward_token(calib.x.row(t));
+            assert_eq!(batch.row(t), &y[..]);
+        }
+    }
+
+    #[test]
+    fn dot_i8_exact() {
+        let a: Vec<i8> = (-20..21).collect();
+        let b: Vec<i8> = (0..41).map(|i| (i % 7 - 3) as i8).collect();
+        let want: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+        assert_eq!(dot_i8(&a, &b), want);
+    }
+}

@@ -1,0 +1,14 @@
+//! LLaMA-style transformer substrate: config registry, the fp/quantized
+//! linear abstraction, the decoder model with batch + incremental (KV-cache)
+//! forward paths, and synthetic-weight construction with function-preserving
+//! outlier injection.
+
+pub mod config;
+pub mod gpt;
+pub mod init;
+pub mod linear;
+
+pub use config::{layer_key, ModelConfig, LINEAR_NAMES};
+pub use gpt::{argmax, ActSink, Block, Gpt, KvCache, NullSink};
+pub use init::{inject_outliers, load_model, load_or_synthetic, save_model, synthetic_model};
+pub use linear::Linear;

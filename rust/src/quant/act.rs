@@ -1,0 +1,142 @@
+//! Per-token activation quantization.
+//!
+//! Activations are quantized **per token** (per row of the activation
+//! matrix) to symmetric int-`bits`. The serving hot path quantizes on the
+//! fly; PTQ methods use [`fake_quant_acts`] when measuring the integral
+//! error `‖WX − W_q X_q‖_F`.
+
+use super::spec::{clamp_q, rtn, BitWidth, FP};
+use crate::tensor::Matrix;
+
+/// One token-row quantized: int codes + scale.
+#[derive(Clone, Debug)]
+pub struct QuantizedToken {
+    pub codes: Vec<i8>,
+    pub scale: f32,
+}
+
+/// Quantize a single token activation vector.
+pub fn quantize_token(x: &[f32], bits: u8) -> QuantizedToken {
+    let qmax = BitWidth(bits).qmax();
+    let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+    let inv = 1.0 / scale;
+    let codes = x.iter().map(|&v| clamp_q(rtn(v * inv), qmax) as i8).collect();
+    QuantizedToken { codes, scale }
+}
+
+impl QuantizedToken {
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.codes.iter().map(|&c| c as f32 * self.scale).collect()
+    }
+}
+
+/// Fake-quantize every row of an activation matrix (tokens × d).
+/// `bits == FP(16)` returns the input unchanged.
+pub fn fake_quant_acts(x: &Matrix, bits: u8) -> Matrix {
+    if bits == FP {
+        return x.clone();
+    }
+    let qmax = BitWidth(bits).qmax();
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let amax = row.iter().fold(0f32, |m, v| m.max(v.abs()));
+        if amax == 0.0 {
+            continue;
+        }
+        let scale = amax / qmax;
+        let inv = 1.0 / scale;
+        for v in row.iter_mut() {
+            *v = clamp_q(rtn(*v * inv), qmax) * scale;
+        }
+    }
+    out
+}
+
+/// In-place fake quant of a single vector; returns the scale used.
+pub fn fake_quant_vec(x: &mut [f32], bits: u8) -> f32 {
+    if bits == FP {
+        return 1.0;
+    }
+    let qmax = BitWidth(bits).qmax();
+    let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if amax == 0.0 {
+        return 1.0;
+    }
+    let scale = amax / qmax;
+    let inv = 1.0 / scale;
+    for v in x.iter_mut() {
+        *v = clamp_q(rtn(*v * inv), qmax) * scale;
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn token_roundtrip_bound() {
+        let mut rng = Pcg64::seed(51);
+        for bits in [4u8, 6, 8] {
+            let x: Vec<f32> = (0..64).map(|_| rng.heavy_tailed(0.05, 20.0)).collect();
+            let q = quantize_token(&x, bits);
+            let back = q.dequantize();
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() <= 0.5 * q.scale + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_token_inflates_everyone_elses_error() {
+        // The core motivation for smoothing: one outlier channel forces a
+        // large scale, coarsening all other channels in that token.
+        let mut x = vec![0.5f32; 32];
+        x[7] = 100.0;
+        let q = quantize_token(&x, 8);
+        let back = q.dequantize();
+        // relative error of the small entries is large
+        let rel = ((back[0] - 0.5) / 0.5).abs();
+        assert!(q.scale > 0.5, "scale={}", q.scale);
+        assert!(rel > 0.1, "rel={rel}");
+    }
+
+    #[test]
+    fn fp16_passthrough() {
+        let mut rng = Pcg64::seed(52);
+        let x = Matrix::randn(&mut rng, 5, 8, 1.0);
+        assert_eq!(fake_quant_acts(&x, FP), x);
+    }
+
+    #[test]
+    fn matrix_and_vec_paths_agree() {
+        let mut rng = Pcg64::seed(53);
+        let x = Matrix::randn(&mut rng, 6, 16, 2.0);
+        let m = fake_quant_acts(&x, 6);
+        for r in 0..x.rows {
+            let mut v = x.row(r).to_vec();
+            fake_quant_vec(&mut v, 6);
+            assert_eq!(m.row(r), &v[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn zero_vector_untouched() {
+        let mut v = vec![0f32; 8];
+        let s = fake_quant_vec(&mut v, 8);
+        assert_eq!(s, 1.0);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn lower_bits_higher_error() {
+        let mut rng = Pcg64::seed(54);
+        let x = Matrix::randn(&mut rng, 20, 64, 1.0);
+        let err = |bits| fake_quant_acts(&x, bits).sub(&x).frob_norm();
+        assert!(err(4) > err(6));
+        assert!(err(6) > err(8));
+    }
+}

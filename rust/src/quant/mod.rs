@@ -1,0 +1,10 @@
+//! Quantization primitives: bit-grid specs, per-channel weight quantization
+//! with int4 packing, and per-token activation quantization.
+
+pub mod act;
+pub mod spec;
+pub mod weight;
+
+pub use act::{fake_quant_acts, fake_quant_vec, quantize_token, QuantizedToken};
+pub use spec::{BitWidth, Precision, FP};
+pub use weight::{fake_quant_weight, pack_int4, unpack_int4, QuantizedWeight};

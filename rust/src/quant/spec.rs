@@ -1,0 +1,128 @@
+//! Quantization specifications shared by all PTQ methods.
+//!
+//! Conventions (matching the paper):
+//! - weights `W` are (out_features × in_features); `y = W x`.
+//! - weight quantization is **per-channel** = per output row, symmetric.
+//! - activation quantization is **per-token** = per activation row, symmetric.
+//! - "WxAy" means x-bit weights, y-bit activations; A16 disables activation
+//!   quantization.
+
+use std::fmt;
+
+/// Integer grid for `bits`-bit symmetric quantization: [-qmax, qmax].
+/// Uses the symmetric-around-zero grid (e.g. int8 → ±127) as SmoothQuant,
+/// AWQ and friends do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitWidth(pub u8);
+
+impl BitWidth {
+    pub fn qmax(self) -> f32 {
+        ((1i32 << (self.0 - 1)) - 1) as f32
+    }
+    pub fn levels(self) -> usize {
+        1usize << self.0
+    }
+}
+
+/// Full precision sentinel for "A16" style configs.
+pub const FP: u8 = 16;
+
+/// A weight/activation precision pair, e.g. W4A8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Precision {
+    pub wbits: u8,
+    pub abits: u8,
+}
+
+impl Precision {
+    pub fn new(wbits: u8, abits: u8) -> Self {
+        assert!((2..=8).contains(&wbits), "wbits {wbits} out of range");
+        assert!((2..=8).contains(&abits) || abits == FP, "abits {abits} out of range");
+        Precision { wbits, abits }
+    }
+    pub fn w4a8() -> Self {
+        Precision::new(4, 8)
+    }
+    pub fn w4a6() -> Self {
+        Precision::new(4, 6)
+    }
+    pub fn w4a16() -> Self {
+        Precision::new(4, FP)
+    }
+    pub fn quantize_acts(&self) -> bool {
+        self.abits != FP
+    }
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        // formats: "w4a8", "W4A8", "4:8"
+        let lower = s.to_ascii_lowercase();
+        let (w, a) = if let Some(rest) = lower.strip_prefix('w') {
+            let mut parts = rest.splitn(2, 'a');
+            let w = parts.next().unwrap_or("");
+            let a = parts.next().unwrap_or("16");
+            (w.to_string(), a.to_string())
+        } else if lower.contains(':') {
+            let mut parts = lower.splitn(2, ':');
+            (parts.next().unwrap().to_string(), parts.next().unwrap().to_string())
+        } else {
+            anyhow::bail!("cannot parse precision '{s}' (use w4a8)");
+        };
+        let wbits: u8 = w.parse().map_err(|_| anyhow::anyhow!("bad wbits in '{s}'"))?;
+        let abits: u8 = a.parse().map_err(|_| anyhow::anyhow!("bad abits in '{s}'"))?;
+        Ok(Precision::new(wbits, abits))
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.abits == FP {
+            write!(f, "W{}A16", self.wbits)
+        } else {
+            write!(f, "W{}A{}", self.wbits, self.abits)
+        }
+    }
+}
+
+/// Round-to-nearest-even free function used everywhere; ties away from zero
+/// (matches `f32::round`, the convention in the reference int-quant stacks).
+#[inline]
+pub fn rtn(x: f32) -> f32 {
+    x.round()
+}
+
+/// Clamp to the symmetric grid.
+#[inline]
+pub fn clamp_q(x: f32, qmax: f32) -> f32 {
+    x.clamp(-qmax, qmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(BitWidth(8).qmax(), 127.0);
+        assert_eq!(BitWidth(4).qmax(), 7.0);
+        assert_eq!(BitWidth(6).qmax(), 31.0);
+        assert_eq!(BitWidth(2).qmax(), 1.0);
+        assert_eq!(BitWidth(4).levels(), 16);
+    }
+
+    #[test]
+    fn precision_parse_display() {
+        let p = Precision::parse("W4A8").unwrap();
+        assert_eq!(p, Precision::w4a8());
+        assert_eq!(p.to_string(), "W4A8");
+        assert_eq!(Precision::parse("w4a16").unwrap(), Precision::w4a16());
+        assert_eq!(Precision::parse("4:6").unwrap(), Precision::w4a6());
+        assert!(Precision::parse("junk").is_err());
+        assert!(!Precision::w4a16().quantize_acts());
+        assert!(Precision::w4a6().quantize_acts());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_silly_bits() {
+        Precision::new(1, 8);
+    }
+}

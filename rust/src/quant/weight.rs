@@ -1,0 +1,211 @@
+//! Per-channel symmetric weight quantization + packed storage.
+//!
+//! `QuantizedWeight` is the storage format the serving path consumes:
+//! int4/int8 codes packed 2-per-byte (for ≤4 bits) with one f32 scale per
+//! output channel. `fake_quant_*` helpers produce the dequantized f32 view
+//! used by the PTQ methods when computing quantization errors.
+
+use super::spec::{clamp_q, rtn, BitWidth};
+use crate::tensor::Matrix;
+
+/// Quantized weight matrix: codes are stored as i8 (unpacked) plus an
+/// optionally packed nibble buffer for 4-bit storage accounting.
+#[derive(Clone, Debug)]
+pub struct QuantizedWeight {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u8,
+    /// Integer codes, row-major, one i8 per element (sign-extended).
+    pub codes: Vec<i8>,
+    /// Per-output-channel (row) scales.
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedWeight {
+    /// Per-channel symmetric RTN quantization of `w` (out×in).
+    pub fn quantize(w: &Matrix, bits: u8) -> QuantizedWeight {
+        let qmax = BitWidth(bits).qmax();
+        let mut codes = vec![0i8; w.rows * w.cols];
+        let mut scales = vec![0f32; w.rows];
+        for r in 0..w.rows {
+            let row = w.row(r);
+            let amax = row.iter().fold(0f32, |m, x| m.max(x.abs()));
+            let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+            scales[r] = scale;
+            let inv = 1.0 / scale;
+            let dst = &mut codes[r * w.cols..(r + 1) * w.cols];
+            for (d, &x) in dst.iter_mut().zip(row) {
+                *d = clamp_q(rtn(x * inv), qmax) as i8;
+            }
+        }
+        QuantizedWeight { rows: w.rows, cols: w.cols, bits, codes, scales }
+    }
+
+    /// Quantize with externally chosen per-row scales (used by grid-search
+    /// methods like AWQ that tune the clipping range).
+    pub fn quantize_with_scales(w: &Matrix, bits: u8, scales: &[f32]) -> QuantizedWeight {
+        assert_eq!(scales.len(), w.rows);
+        let qmax = BitWidth(bits).qmax();
+        let mut codes = vec![0i8; w.rows * w.cols];
+        for r in 0..w.rows {
+            let scale = if scales[r] > 0.0 { scales[r] } else { 1.0 };
+            let inv = 1.0 / scale;
+            let dst = &mut codes[r * w.cols..(r + 1) * w.cols];
+            for (d, &x) in dst.iter_mut().zip(w.row(r)) {
+                *d = clamp_q(rtn(x * inv), qmax) as i8;
+            }
+        }
+        QuantizedWeight { rows: w.rows, cols: w.cols, bits, codes, scales: scales.to_vec() }
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            let src = &self.codes[r * self.cols..(r + 1) * self.cols];
+            for (o, &c) in out.row_mut(r).iter_mut().zip(src) {
+                *o = c as f32 * s;
+            }
+        }
+        out
+    }
+
+    /// Pack 4-bit codes two per byte (low nibble first). Errors if bits > 4.
+    pub fn pack_nibbles(&self) -> anyhow::Result<Vec<u8>> {
+        if self.bits > 4 {
+            anyhow::bail!("cannot nibble-pack {}-bit codes", self.bits);
+        }
+        Ok(pack_int4(&self.codes))
+    }
+
+    /// Storage bytes for this representation (packed if ≤4 bits).
+    pub fn storage_bytes(&self) -> usize {
+        let code_bytes = if self.bits <= 4 {
+            self.codes.len().div_ceil(2)
+        } else {
+            self.codes.len()
+        };
+        code_bytes + self.scales.len() * 4
+    }
+}
+
+/// Pack i8 codes in [-8, 7] two-per-byte, low nibble first.
+pub fn pack_int4(codes: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = (pair[0] as u8) & 0x0F;
+        let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack nibble-packed int4 codes (sign-extended), producing `n` values.
+pub fn unpack_int4(packed: &[u8], n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    for (i, &b) in packed.iter().enumerate() {
+        let lo = sign_extend_4(b & 0x0F);
+        out.push(lo);
+        if 2 * i + 1 < n {
+            out.push(sign_extend_4(b >> 4));
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+#[inline]
+pub fn sign_extend_4(nib: u8) -> i8 {
+    ((nib << 4) as i8) >> 4
+}
+
+/// Fake-quantize a weight matrix per-channel (round-trip through the grid)
+/// — the canonical `Q(W)` in the paper's equations.
+pub fn fake_quant_weight(w: &Matrix, bits: u8) -> Matrix {
+    QuantizedWeight::quantize(w, bits).dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Pcg64::seed(41);
+        for bits in [2u8, 3, 4, 6, 8] {
+            let w = Matrix::randn(&mut rng, 10, 32, 1.0);
+            let q = QuantizedWeight::quantize(&w, bits);
+            let back = q.dequantize();
+            for r in 0..w.rows {
+                let step = q.scales[r];
+                for c in 0..w.cols {
+                    let err = (w[(r, c)] - back[(r, c)]).abs();
+                    assert!(err <= 0.5 * step + 1e-6, "bits={bits} err={err} step={step}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codes_within_grid() {
+        let mut rng = Pcg64::seed(42);
+        let w = Matrix::randn(&mut rng, 8, 16, 3.0);
+        for bits in [2u8, 4, 8] {
+            let q = QuantizedWeight::quantize(&w, bits);
+            let qmax = BitWidth(bits).qmax() as i8;
+            assert!(q.codes.iter().all(|&c| -qmax <= c && c <= qmax));
+        }
+    }
+
+    #[test]
+    fn zero_row_safe() {
+        let mut w = Matrix::zeros(2, 4);
+        w[(1, 0)] = 1.0;
+        let q = QuantizedWeight::quantize(&w, 4);
+        let back = q.dequantize();
+        assert!(back.row(0).iter().all(|&x| x == 0.0));
+        assert!((back[(1, 0)] - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn int4_pack_unpack_roundtrip() {
+        let codes: Vec<i8> = vec![-8, -1, 0, 1, 7, 3, -5]; // odd length
+        let packed = pack_int4(&codes);
+        assert_eq!(packed.len(), 4);
+        let back = unpack_int4(&packed, codes.len());
+        assert_eq!(back, codes);
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend_4(0x0F), -1);
+        assert_eq!(sign_extend_4(0x08), -8);
+        assert_eq!(sign_extend_4(0x07), 7);
+        assert_eq!(sign_extend_4(0x00), 0);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let mut rng = Pcg64::seed(43);
+        let w = Matrix::randn(&mut rng, 4, 10, 1.0);
+        let q4 = QuantizedWeight::quantize(&w, 4);
+        assert_eq!(q4.storage_bytes(), 20 + 16); // 40 codes/2 + 4 scales*4
+        let q8 = QuantizedWeight::quantize(&w, 8);
+        assert_eq!(q8.storage_bytes(), 40 + 16);
+        assert!(q8.pack_nibbles().is_err());
+        assert_eq!(q4.pack_nibbles().unwrap().len(), 20);
+    }
+
+    #[test]
+    fn external_scales_respected() {
+        let w = Matrix::from_vec(1, 2, vec![1.0, -2.0]);
+        let q = QuantizedWeight::quantize_with_scales(&w, 4, &[0.5]);
+        // 1.0/0.5 = 2, -2.0/0.5 = -4
+        assert_eq!(q.codes, vec![2, -4]);
+    }
+}

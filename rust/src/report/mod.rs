@@ -1,0 +1,237 @@
+//! Report emission: paper-style ASCII tables + CSV/JSON artifacts.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// A simple column-aligned table builder.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Row indices to mark bold-equivalent (best results) per column.
+    pub best: Vec<(usize, usize)>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            best: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Mark the best row per numeric column (`min` or not) over data rows
+    /// `from..` (skipping e.g. the fp16 reference row). Non-numeric cells
+    /// are ignored.
+    pub fn mark_best(&mut self, col: usize, minimize: bool, from_row: usize) {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, row) in self.rows.iter().enumerate().skip(from_row) {
+            if let Ok(v) = row[col].trim_end_matches('*').parse::<f64>() {
+                let better = match best {
+                    None => true,
+                    Some((_, b)) => {
+                        if minimize {
+                            v < b
+                        } else {
+                            v > b
+                        }
+                    }
+                };
+                if better {
+                    best = Some((i, v));
+                }
+            }
+        }
+        if let Some((i, _)) = best {
+            self.best.push((i, col));
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut rows = self.rows.clone();
+        for &(r, c) in &self.best {
+            rows[r][c] = format!("{}*", rows[r][c]);
+        }
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = format!("## {}\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:>w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &rows {
+            out.push_str(&line(row, &widths));
+        }
+        out.push_str("(* = best in column)\n");
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.txt")), self.render())?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// A named (x, series...) dataset for figures; rendered as aligned columns +
+/// an ASCII sparkline per series, saved as CSV + JSON.
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<f64>,
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl Figure {
+    pub fn new(title: &str, x_label: &str, x: Vec<f64>) -> Figure {
+        Figure { title: title.to_string(), x_label: x_label.to_string(), x, series: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.x.len(), "series '{name}' length");
+        self.series.push((name.to_string(), ys));
+    }
+
+    pub fn sparkline(ys: &[f64]) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let (lo, hi) = ys.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        let span = (hi - lo).max(1e-12);
+        ys.iter()
+            .map(|&v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("## {}  (x = {})\n", self.title, self.x_label);
+        for (name, ys) in &self.series {
+            let (lo, hi) = ys.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+                (l.min(v), h.max(v))
+            });
+            out.push_str(&format!(
+                "{name:<24} {}  [min {lo:.4}, max {hi:.4}]\n",
+                Self::sparkline(ys)
+            ));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("{}", self.x_label);
+        for (name, _) in &self.series {
+            out.push_str(&format!(",{name}"));
+        }
+        out.push('\n');
+        for (i, &x) in self.x.iter().enumerate() {
+            out.push_str(&format!("{x}"));
+            for (_, ys) in &self.series {
+                out.push_str(&format!(",{}", ys[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::{arr_f64, obj, s};
+        let mut series = Vec::new();
+        for (name, ys) in &self.series {
+            series.push(obj(vec![("name", s(name)), ("y", arr_f64(ys))]));
+        }
+        obj(vec![
+            ("title", s(&self.title)),
+            ("x_label", s(&self.x_label)),
+            ("x", arr_f64(&self.x)),
+            ("series", Json::Arr(series)),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.txt")), self.render())?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.json")), self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_and_marks_best() {
+        let mut t = Table::new("demo", &["method", "ppl", "acc"]);
+        t.row(vec!["fp16".into(), "6.14".into(), "64.86".into()]);
+        t.row(vec!["rtn".into(), "10.21".into(), "47.85".into()]);
+        t.row(vec!["aser".into(), "7.43".into(), "55.93".into()]);
+        t.mark_best(1, true, 1);
+        t.mark_best(2, false, 1);
+        let s = t.render();
+        assert!(s.contains("7.43*"));
+        assert!(s.contains("55.93*"));
+        assert!(!s.contains("6.14*"), "reference row excluded");
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    fn figure_roundtrip() {
+        let mut f = Figure::new("eff rank", "layer", vec![0.0, 1.0, 2.0]);
+        f.add("qkv", vec![5.0, 4.0, 3.0]);
+        f.add("fc1", vec![7.0, 8.0, 9.0]);
+        let s = f.render();
+        assert!(s.contains("qkv"));
+        let csv = f.to_csv();
+        assert!(csv.starts_with("layer,qkv,fc1"));
+        let j = f.to_json();
+        assert_eq!(j.get("x").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = Figure::sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        let chars: Vec<char> = s.chars().collect();
+        assert!(chars[0] < chars[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime — loads AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the rust request path.
+//!
+//! Python never runs at serve time: `make artifacts` lowers the Pallas
+//! kernel + block forward to HLO text once; this module compiles them with
+//! the PJRT CPU client (the `xla` crate wraps xla_extension 0.5.1) and
+//! caches the loaded executables keyed by artifact file.
+//!
+//! Interchange is HLO *text*, not serialized protos — see
+//! /opt/xla-example/README.md for the 64-bit-instruction-id gotcha.
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Manifest entry for one compiled quantized-linear kernel.
+#[derive(Clone, Debug)]
+pub struct QlinearArtifact {
+    pub file: String,
+    pub config: String,
+    pub layer: String,
+    pub t: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub rank: usize,
+    pub abits: usize,
+}
+
+/// Parsed artifacts manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub qlinear: Vec<QlinearArtifact>,
+    pub block_fwd: Vec<(String, String)>, // (file, config)
+}
+
+impl Manifest {
+    pub fn load(hlo_dir: &Path) -> Result<Manifest> {
+        let path = hlo_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut m = Manifest::default();
+        if let Some(arr) = j.get("qlinear").and_then(Json::as_arr) {
+            for e in arr {
+                m.qlinear.push(QlinearArtifact {
+                    file: e.str_field("file")?.to_string(),
+                    config: e.str_field("config")?.to_string(),
+                    layer: e.str_field("layer")?.to_string(),
+                    t: e.int("t")?,
+                    d_in: e.int("d_in")?,
+                    d_out: e.int("d_out")?,
+                    rank: e.int("rank")?,
+                    abits: e.int("abits")?,
+                });
+            }
+        }
+        if let Some(arr) = j.get("block_fwd").and_then(Json::as_arr) {
+            for e in arr {
+                m.block_fwd
+                    .push((e.str_field("file")?.to_string(), e.str_field("config")?.to_string()));
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    hlo_dir: PathBuf,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(hlo_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(Runtime { client, hlo_dir: hlo_dir.to_path_buf(), cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an HLO-text artifact.
+    pub fn load(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(file) {
+            let path = self.hlo_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(anyhow_xla)
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(anyhow_xla)?;
+            self.cache.insert(file.to_string(), exe);
+        }
+        Ok(self.cache.get(file).unwrap())
+    }
+
+    pub fn loaded(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute a compiled qlinear artifact:
+    /// inputs (x, m, w_packed, w_scales, la, lb) → y (t × d_out).
+    pub fn run_qlinear(
+        &mut self,
+        art: &QlinearArtifact,
+        x: &Matrix,
+        m: &[f32],
+        w_packed: &[u8],
+        w_scales: &[f32],
+        la: &Matrix,
+        lb: &Matrix,
+    ) -> Result<Matrix> {
+        anyhow::ensure!(x.rows == art.t && x.cols == art.d_in, "x shape mismatch");
+        anyhow::ensure!(la.rows == art.d_out && la.cols == art.rank, "la shape mismatch");
+        anyhow::ensure!(lb.rows == art.rank && lb.cols == art.d_in, "lb shape mismatch");
+        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(data).reshape(dims).map_err(anyhow_xla)
+        };
+        let x_l = lit(&x.data, &[art.t as i64, art.d_in as i64])?;
+        let m_l = xla::Literal::vec1(m);
+        // u8 has no NativeType impl in the crate; build the literal from
+        // untyped bytes instead.
+        let wp_l = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[art.d_out, art.d_in / 2],
+            w_packed,
+        )
+        .map_err(anyhow_xla)?;
+        let ws_l = xla::Literal::vec1(w_scales);
+        let la_l = lit(&la.data, &[art.d_out as i64, art.rank as i64])?;
+        let lb_l = lit(&lb.data, &[art.rank as i64, art.d_in as i64])?;
+        let exe = self.load(&art.file)?;
+        let result = exe
+            .execute::<xla::Literal>(&[x_l, m_l, wp_l, ws_l, la_l, lb_l])
+            .map_err(anyhow_xla)?[0][0]
+            .to_literal_sync()
+            .map_err(anyhow_xla)?;
+        let out = result.to_tuple1().map_err(anyhow_xla)?;
+        let values = out.to_vec::<f32>().map_err(anyhow_xla)?;
+        anyhow::ensure!(values.len() == art.t * art.d_out, "output size mismatch");
+        Ok(Matrix::from_vec(art.t, art.d_out, values))
+    }
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// Reference semantics the compiled kernel must match (mirrors
+/// `QuantizedLinear::forward_matrix` for the smooth+quant+lowrank case) —
+/// used by `runtime-check` and the integration tests.
+pub fn qlinear_reference(
+    x: &Matrix,
+    m: &[f32],
+    w_codes: &[i8],
+    d_out: usize,
+    w_scales: &[f32],
+    la: &Matrix,
+    lb: &Matrix,
+    abits: u8,
+) -> Matrix {
+    let d_in = x.cols;
+    let inv: Vec<f32> = m.iter().map(|&v| 1.0 / v).collect();
+    let xs = x.scale_cols(&inv);
+    let mut y = Matrix::zeros(x.rows, d_out);
+    for t in 0..x.rows {
+        let q = crate::quant::quantize_token(xs.row(t), abits);
+        for o in 0..d_out {
+            let codes = &w_codes[o * d_in..(o + 1) * d_in];
+            let acc = crate::model::linear::dot_i8(codes, &q.codes);
+            y[(t, o)] = acc as f32 * q.scale * w_scales[o];
+        }
+    }
+    let z = crate::tensor::matmul_bt(&xs, lb);
+    let corr = crate::tensor::matmul(&z, &la.transpose());
+    y.add(&corr)
+}

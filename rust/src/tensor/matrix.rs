@@ -1,0 +1,385 @@
+//! Dense row-major f32 matrix — the numeric core of the library.
+//!
+//! Everything downstream (linalg, quantizers, the transformer) works on this
+//! type. The GEMM is a cache-blocked, 8-wide-unrolled kernel over the
+//! transposed RHS; see `gemm.rs` for the hot-path variants.
+
+use crate::util::rng::Pcg64;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows <= 8 && self.cols <= 8 {
+            writeln!(f)?;
+            for r in 0..self.rows {
+                write!(f, "  [")?;
+                for c in 0..self.cols {
+                    write!(f, "{:>10.4}", self[(r, c)])?;
+                }
+                writeln!(f, " ]")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape {rows}x{cols} != len {}", data.len());
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Matrix::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    pub fn diag(d: &[f32]) -> Self {
+        let n = d.len();
+        Matrix::from_fn(n, n, |r, c| if r == c { d[r] } else { 0.0 })
+    }
+
+    pub fn randn(rng: &mut Pcg64, rows: usize, cols: usize, std: f32) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            self[(r, c)] = v[r];
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    // -- elementwise -------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn zip(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        self.map(|x| x * s)
+    }
+
+    /// Scale column j by s[j] (i.e. right-multiply by diag(s)).
+    pub fn scale_cols(&self, s: &[f32]) -> Matrix {
+        assert_eq!(s.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            for (x, &sc) in row.iter_mut().zip(s) {
+                *x *= sc;
+            }
+        }
+        out
+    }
+
+    /// Scale row i by s[i] (i.e. left-multiply by diag(s)).
+    pub fn scale_rows(&self, s: &[f32]) -> Matrix {
+        assert_eq!(s.len(), self.rows);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            let sc = s[r];
+            for x in out.row_mut(r) {
+                *x *= sc;
+            }
+        }
+        out
+    }
+
+    // -- reductions ----------------------------------------------------------
+
+    pub fn frob_norm(&self) -> f32 {
+        // Two-pass scaled sum to avoid overflow on large values.
+        let maxabs = self.data.iter().fold(0f32, |m, x| m.max(x.abs()));
+        if maxabs == 0.0 {
+            return 0.0;
+        }
+        let inv = 1.0 / maxabs;
+        let mut acc = 0f64;
+        for &x in &self.data {
+            let v = (x * inv) as f64;
+            acc += v * v;
+        }
+        (acc.sqrt() * maxabs as f64) as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Per-column mean of absolute values (the paper's X̄ / W̄ statistic,
+    /// computed over rows).
+    pub fn col_abs_mean(&self) -> Vec<f32> {
+        let mut acc = vec![0f64; self.cols];
+        for r in 0..self.rows {
+            for (a, &x) in acc.iter_mut().zip(self.row(r)) {
+                *a += x.abs() as f64;
+            }
+        }
+        acc.iter().map(|&a| (a / self.rows as f64) as f32).collect()
+    }
+
+    /// Per-row mean of absolute values.
+    pub fn row_abs_mean(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| {
+                let s: f64 = self.row(r).iter().map(|x| x.abs() as f64).sum();
+                (s / self.cols as f64) as f32
+            })
+            .collect()
+    }
+
+    /// Per-row max of absolute values (per-token quant scale basis).
+    pub fn row_abs_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().fold(0f32, |m, x| m.max(x.abs())))
+            .collect()
+    }
+
+    /// Per-column max of absolute values (per-channel quant scale basis).
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        let mut m = vec![0f32; self.cols];
+        for r in 0..self.rows {
+            for (mx, &x) in m.iter_mut().zip(self.row(r)) {
+                *mx = mx.max(x.abs());
+            }
+        }
+        m
+    }
+
+    // -- slicing -------------------------------------------------------------
+
+    /// Copy of columns [c0, c1).
+    pub fn cols_slice(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(self.rows, c1 - c0);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Copy of rows [r0, r1).
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+    }
+
+    /// Select a subset of columns into a new matrix.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (k, &c) in idx.iter().enumerate() {
+                dst[k] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Zero out the listed columns, returning the extracted part so that
+    /// `self == kept + extracted` (used by outlier splitting).
+    pub fn split_cols(&self, idx: &[usize]) -> (Matrix, Matrix) {
+        let mut kept = self.clone();
+        let mut extracted = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for &c in idx {
+                extracted[(r, c)] = kept[(r, c)];
+                kept[(r, c)] = 0.0;
+            }
+        }
+        (kept, extracted)
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Max |a-b| over entries.
+    pub fn max_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_index() {
+        let m = Matrix::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed(1);
+        let m = Matrix::randn(&mut rng, 37, 53, 1.0);
+        let t = m.transpose();
+        assert_eq!(t.rows, 53);
+        assert_eq!(t[(5, 7)], m[(7, 5)]);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn frob_norm_matches_naive() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-6);
+        let z = Matrix::zeros(3, 3);
+        assert_eq!(z.frob_norm(), 0.0);
+    }
+
+    #[test]
+    fn frob_norm_large_values_no_overflow() {
+        let m = Matrix::from_vec(1, 2, vec![1e20, 1e20]);
+        let n = m.frob_norm();
+        assert!(n.is_finite());
+        assert!((n - (2f32).sqrt() * 1e20).abs() / n < 1e-5);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let m = Matrix::from_fn(2, 3, |_, _| 1.0);
+        let sc = m.scale_cols(&[1.0, 2.0, 3.0]);
+        assert_eq!(sc.row(0), &[1.0, 2.0, 3.0]);
+        let sr = m.scale_rows(&[5.0, 7.0]);
+        assert_eq!(sr.row(1), &[7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn abs_stats() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, -3.0, -5.0, 7.0]);
+        assert_eq!(m.col_abs_mean(), vec![3.0, 5.0]);
+        assert_eq!(m.row_abs_mean(), vec![2.0, 6.0]);
+        assert_eq!(m.row_abs_max(), vec![3.0, 7.0]);
+        assert_eq!(m.col_abs_max(), vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn split_cols_reassembles() {
+        let mut rng = Pcg64::seed(2);
+        let m = Matrix::randn(&mut rng, 5, 8, 1.0);
+        let (kept, ext) = m.split_cols(&[1, 6]);
+        assert_eq!(kept.add(&ext), m);
+        assert!(kept.col(1).iter().all(|&x| x == 0.0));
+        assert!(ext.col(0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn select_and_slice() {
+        let m = Matrix::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        let s = m.select_cols(&[4, 0]);
+        assert_eq!(s.row(1), &[9.0, 5.0]);
+        let cs = m.cols_slice(1, 3);
+        assert_eq!(cs.row(0), &[1.0, 2.0]);
+        let rs = m.rows_slice(1, 2);
+        assert_eq!(rs.row(0), m.row(1));
+    }
+
+    #[test]
+    fn diag_and_eye() {
+        let d = Matrix::diag(&[2.0, 3.0]);
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+        assert_eq!(Matrix::eye(3)[(2, 2)], 1.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Dense f32 tensor substrate: the `Matrix` type plus GEMM kernels.
+
+pub mod gemm;
+pub mod matrix;
+
+pub use gemm::{dot, gram_cols_f64, gram_rows, matmul, matmul_at, matmul_bt, matvec, matvec_t};
+pub use matrix::Matrix;

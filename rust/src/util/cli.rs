@@ -1,0 +1,187 @@
+//! Hand-rolled CLI argument parser (no clap in the offline dep closure).
+//!
+//! Supports: subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! args, typed accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text and validation.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub kv: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token without a leading `-` is the
+    /// subcommand; the rest is options/positionals.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.cmd = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.kv.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        // treat as a bare flag even if undeclared
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.kv.insert(body.to_string(), it.next().unwrap().clone());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if tok == "-h" {
+                out.flags.push("help".to_string());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))
+    }
+
+    /// Parse a comma-separated list, e.g. `--alphas 0.015,0.03,0.05`.
+    pub fn list_f64(&self, key: &str) -> anyhow::Result<Option<Vec<f64>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let mut out = Vec::new();
+                for part in v.split(',') {
+                    out.push(
+                        part.trim()
+                            .parse::<f64>()
+                            .map_err(|_| anyhow::anyhow!("--{key}: bad number '{part}'"))?,
+                    );
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, summary: &str, opts: &[OptSpec]) -> String {
+    let mut out = format!("usage: repro {cmd} [options]\n\n{summary}\n\noptions:\n");
+    for o in opts {
+        let lhs = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <v>", o.name)
+        };
+        let def = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+        out.push_str(&format!("{lhs:<28}{}{def}\n", o.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        let a = Args::parse(&argv("quantize --model A --wbits 4 --verbose --alpha=0.05"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.cmd, "quantize");
+        assert_eq!(a.get("model"), Some("A"));
+        assert_eq!(a.usize_or("wbits", 8).unwrap(), 4);
+        assert_eq!(a.f64_or("alpha", 0.1).unwrap(), 0.05);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positional_and_defaults() {
+        let a = Args::parse(&argv("eval path/to/run --seed 7"), &[]).unwrap();
+        assert_eq!(a.positional, vec!["path/to/run"]);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn undeclared_trailing_flag() {
+        let a = Args::parse(&argv("run --fast"), &[]).unwrap();
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv("t --alphas 0.1,0.2,0.3"), &[]).unwrap();
+        assert_eq!(a.list_f64("alphas").unwrap().unwrap(), vec![0.1, 0.2, 0.3]);
+        let bad = Args::parse(&argv("t --alphas 0.1,x"), &[]).unwrap();
+        assert!(bad.list_f64("alphas").is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = Args::parse(&argv("t --n abc"), &[]).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.require("missing").is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! Binary tensor serialization shared with the python build path.
+//!
+//! Format ("ATNS" v1, little-endian):
+//!   magic   4 bytes  b"ATNS"
+//!   version u32      1
+//!   ntens   u32
+//!   repeated per tensor:
+//!     name_len u32, name utf-8 bytes
+//!     ndim u32, dims u64 × ndim
+//!     dtype u8 (0 = f32, 1 = i8, 2 = u8/packed-int4, 3 = i32)
+//!     payload bytes (row-major)
+//!
+//! `python/compile/export.py` writes the same layout for pretrained weights.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"ATNS";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I8 = 1,
+    U8 = 2,
+    I32 = 3,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+    fn from_u8(x: u8) -> Result<Self> {
+        Ok(match x {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::U8,
+            3 => DType::I32,
+            _ => bail!("unknown dtype tag {x}"),
+        })
+    }
+}
+
+/// A named tensor blob with shape; payload is raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct RawTensor {
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+    pub bytes: Vec<u8>,
+}
+
+impl RawTensor {
+    pub fn from_f32(dims: Vec<usize>, data: &[f32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        RawTensor { dims, dtype: DType::F32, bytes }
+    }
+
+    pub fn from_u8(dims: Vec<usize>, data: Vec<u8>) -> Self {
+        RawTensor { dims, dtype: DType::U8, bytes: data }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Ordered collection of named tensors.
+#[derive(Default, Debug)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, RawTensor>,
+}
+
+impl TensorFile {
+    pub fn insert_f32(&mut self, name: &str, dims: Vec<usize>, data: &[f32]) {
+        self.tensors.insert(name.to_string(), RawTensor::from_f32(dims, data));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&RawTensor> {
+        self.tensors.get(name).with_context(|| format!("tensor '{name}' not in file"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let t = self.get(name)?;
+        Ok((t.dims.clone(), t.to_f32()?))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for d in &t.dims {
+                w.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            w.write_all(&[t.dtype as u8])?;
+            let expect = t.numel() * t.dtype.size();
+            if t.bytes.len() != expect {
+                bail!("tensor '{name}': payload {} != dims*dtype {expect}", t.bytes.len());
+            }
+            w.write_all(&t.bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TensorFile> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("unsupported ATNS version {version}");
+        }
+        let n = read_u32(&mut r)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            r.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes).context("tensor name utf-8")?;
+            let ndim = read_u32(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                dims.push(u64::from_le_bytes(b) as usize);
+            }
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            let dtype = DType::from_u8(tag[0])?;
+            let nbytes = dims.iter().product::<usize>() * dtype.size();
+            let mut bytes = vec![0u8; nbytes];
+            r.read_exact(&mut bytes)?;
+            tensors.insert(name, RawTensor { dims, dtype, bytes });
+        }
+        Ok(TensorFile { tensors })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("aser_io_test");
+        let path = dir.join("t.atns");
+        let mut tf = TensorFile::default();
+        tf.insert_f32("w", vec![2, 3], &[1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        tf.tensors.insert("packed".into(), RawTensor::from_u8(vec![4], vec![1, 2, 3, 255]));
+        tf.save(&path).unwrap();
+        let back = TensorFile::load(&path).unwrap();
+        let (dims, data) = back.get_f32("w").unwrap();
+        assert_eq!(dims, vec![2, 3]);
+        assert_eq!(data, vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        assert_eq!(back.get("packed").unwrap().bytes, vec![1, 2, 3, 255]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let tf = TensorFile::default();
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("aser_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.atns");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(TensorFile::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_dtype_access() {
+        let t = RawTensor::from_u8(vec![2], vec![0, 1]);
+        assert!(t.to_f32().is_err());
+    }
+}

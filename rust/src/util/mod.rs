@@ -1,0 +1,12 @@
+//! std-only substrate utilities: deterministic RNG, JSON, thread pool,
+//! CLI parsing, bench statistics, tensor-file IO, and a mini property-test
+//! harness. These exist because the offline build environment only vendors
+//! the `xla` crate's dependency closure (no serde/clap/rayon/criterion).
+
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

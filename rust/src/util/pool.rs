@@ -1,0 +1,177 @@
+//! A small work-stealing-free thread pool (std-only).
+//!
+//! The coordinator parallelizes per-layer quantization jobs and serving
+//! worker loops. With no rayon/tokio in the offline dep closure we use a
+//! fixed pool of `std::thread` workers over an mpsc channel, plus a
+//! `scope_map` helper that applies a closure over an index range and
+//! collects results in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// `n == 0` picks the available parallelism (min 1).
+    pub fn new(n: usize) -> Self {
+        let n = if n == 0 {
+            thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            n
+        };
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let queued = Arc::clone(&queued);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("aser-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, queued }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("pool worker alive");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Apply `f` to every index in `0..n` on `threads` scoped threads and return
+/// results in index order. Panics in workers propagate. This borrows `f`'s
+/// captures for the duration of the call (no 'static bound), so it is the
+/// workhorse for data-parallel numeric loops.
+pub fn scope_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots_ptr = &slots_ptr;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index is claimed exactly once via the atomic
+                // counter, so writes to distinct slots never alias; the
+                // scope guarantees the threads finish before `slots` is read.
+                unsafe {
+                    *slots_ptr.0.add(i) = Some(v);
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|x| x.expect("slot filled")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: see scope_map — disjoint index writes only.
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_ordered() {
+        let out = scope_map(257, 8, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn scope_map_empty_and_single() {
+        assert!(scope_map(0, 4, |i| i).is_empty());
+        assert_eq!(scope_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn scope_map_borrows_environment() {
+        let data: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let sums = scope_map(10, 4, |chunk| {
+            data[chunk * 100..(chunk + 1) * 100].iter().sum::<f64>()
+        });
+        let total: f64 = sums.iter().sum();
+        assert_eq!(total, (0..1000).sum::<usize>() as f64);
+    }
+}

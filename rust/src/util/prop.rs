@@ -1,0 +1,164 @@
+//! Miniature property-testing harness (proptest is not in the offline dep
+//! closure). Provides seeded random-case generation with failure shrinking
+//! for numeric vectors and integers — enough for the invariant suites in
+//! `rust/tests/`.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xA5E12, max_shrink: 200 }
+    }
+}
+
+/// Outcome of a single case.
+pub enum CaseResult {
+    Pass,
+    Fail(String),
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` draws an input from the
+/// RNG; `shrink` proposes smaller candidates for a failing input. Panics with
+/// a reproducible report on failure.
+pub fn check<T, G, S, P>(name: &str, cfg: &Config, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> CaseResult,
+{
+    let mut rng = Pcg64::new(cfg.seed, crate::util::rng::hash_label(name));
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let CaseResult::Fail(msg) = prop(&input) {
+            // Shrink: greedily accept any smaller failing candidate.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrink;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    budget -= 1;
+                    if let CaseResult::Fail(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {:#x}):\n  input: {best:?}\n  {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Assertion helper producing CaseResult.
+pub fn ensure(cond: bool, msg: impl Fn() -> String) -> CaseResult {
+    if cond {
+        CaseResult::Pass
+    } else {
+        CaseResult::Fail(msg())
+    }
+}
+
+/// Combine sub-checks: first failure wins.
+pub fn all(results: Vec<CaseResult>) -> CaseResult {
+    for r in results {
+        if let CaseResult::Fail(m) = r {
+            return CaseResult::Fail(m);
+        }
+    }
+    CaseResult::Pass
+}
+
+// -- standard generators ---------------------------------------------------
+
+/// Random f32 vector with mixed magnitudes (including outliers + zeros).
+pub fn gen_vec_f32(rng: &mut Pcg64, max_len: usize) -> Vec<f32> {
+    let len = 1 + rng.below(max_len.max(1));
+    (0..len)
+        .map(|_| match rng.below(10) {
+            0 => 0.0,
+            1 => rng.heavy_tailed(0.5, 100.0),
+            _ => rng.normal(),
+        })
+        .collect()
+}
+
+/// Shrinker for vectors: halves, then element simplification toward 0.
+pub fn shrink_vec_f32(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    for i in 0..v.len().min(8) {
+        if v[i] != 0.0 {
+            let mut c = v.clone();
+            c[i] = 0.0;
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Shrinker for sized inputs (usize): halving ladder.
+pub fn shrink_usize(n: &usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut x = *n;
+    while x > 1 {
+        x /= 2;
+        out.push(x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config { cases: 50, ..Default::default() };
+        check(
+            "abs_nonneg",
+            &cfg,
+            |rng| gen_vec_f32(rng, 32),
+            shrink_vec_f32,
+            |v| ensure(v.iter().all(|x| x.abs() >= 0.0), || "abs < 0".into()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        let cfg = Config { cases: 5, ..Default::default() };
+        check(
+            "always_fails",
+            &cfg,
+            |rng| gen_vec_f32(rng, 64),
+            shrink_vec_f32,
+            |v| ensure(v.len() > 100, || format!("len {} <= 100", v.len())),
+        );
+    }
+
+    #[test]
+    fn shrinkers_reduce() {
+        let v = vec![1.0f32; 16];
+        let cands = shrink_vec_f32(&v);
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+        assert_eq!(shrink_usize(&8), vec![4, 2, 1]);
+    }
+}

@@ -1,0 +1,367 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The whole reproduction must be bit-deterministic across runs (corpora,
+//! model init, outlier injection, calibration sampling), so we carry our own
+//! PRNG instead of depending on the `rand` ecosystem. The generator is
+//! PCG-XSH-RR 64/32 (O'Neill 2014) with a SplitMix64 seeding stage; it is
+//! fast, has good statistical quality for simulation purposes, and supports
+//! cheap independent streams keyed by a string label.
+
+/// SplitMix64 step — used for seeding and for hashing labels into streams.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash an arbitrary byte string to a 64-bit stream key (FNV-1a + SplitMix).
+pub fn hash_label(label: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in label.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    let mut s = h;
+    splitmix64(&mut s)
+}
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output, user-selectable stream.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let init = splitmix64(&mut sm);
+        let inc = (stream << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = init.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Seed-only constructor (stream 0).
+    pub fn seed(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent generator for a named sub-purpose.
+    /// `rng.fork("weights.layer3")` is stable across runs and independent of
+    /// the parent's consumption position only through the label, so forks
+    /// must be taken before drawing from the parent when order matters.
+    pub fn fork(&self, label: &str) -> Self {
+        let mut s = self.state ^ hash_label(label);
+        let seed = splitmix64(&mut s);
+        Self::new(seed, hash_label(label) >> 1)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached second value omitted for
+    /// simplicity; determinism matters more than speed here).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Heavy-tailed draw: normal mixed with a log-normal outlier component.
+    /// Used to synthesize activation-like channel statistics.
+    pub fn heavy_tailed(&mut self, outlier_prob: f64, outlier_scale: f32) -> f32 {
+        let base = self.normal();
+        if self.f64() < outlier_prob {
+            let mag = (self.normal() * 0.75).exp() * outlier_scale;
+            base * mag
+        } else {
+            base
+        }
+    }
+
+    /// Sample from a Zipf distribution over [0, n) with exponent `s` using
+    /// inverse-CDF over precomputed weights is O(n); for repeated sampling use
+    /// [`ZipfSampler`]. This one-shot version is for tests.
+    pub fn zipf_once(&mut self, n: usize, s: f64) -> usize {
+        let mut total = 0.0;
+        for k in 1..=n {
+            total += 1.0 / (k as f64).powf(s);
+        }
+        let mut target = self.f64() * total;
+        for k in 1..=n {
+            target -= 1.0 / (k as f64).powf(s);
+            if target <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose k distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Precomputed-alias Zipf sampler for corpus generation (O(1) per draw).
+pub struct ZipfSampler {
+    /// Alias-method tables.
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64) -> Self {
+        let w: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
+        Self::from_weights(&w)
+    }
+
+    /// Build an alias table (Walker/Vose) from arbitrary non-negative weights.
+    pub fn from_weights(w: &[f64]) -> Self {
+        let n = w.len();
+        assert!(n > 0);
+        let total: f64 = w.iter().sum();
+        assert!(total > 0.0);
+        let mut prob: Vec<f64> = w.iter().map(|x| x * n as f64 / total).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, p) in prob.iter().enumerate() {
+            if *p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        let mut p = prob.clone();
+        while let (Some(s_i), Some(l_i)) = (small.pop(), large.pop()) {
+            prob[s_i] = p[s_i];
+            alias[s_i] = l_i;
+            p[l_i] = p[l_i] + p[s_i] - 1.0;
+            if p[l_i] < 1.0 {
+                small.push(l_i);
+            } else {
+                large.push(l_i);
+            }
+        }
+        for i in large {
+            prob[i] = 1.0;
+        }
+        for i in small {
+            prob[i] = 1.0;
+        }
+        ZipfSampler { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n);
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_constructions() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_streams_diverge() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn fork_is_stable() {
+        let root = Pcg64::seed(1);
+        let mut f1 = root.fork("corpus");
+        let mut f2 = root.fork("corpus");
+        assert_eq!(f1.next_u64(), f2.next_u64());
+        let mut f3 = root.fork("weights");
+        assert_ne!(f1.next_u64(), f3.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut rng = Pcg64::seed(9);
+        let mut counts = [0usize; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[rng.below(5)] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.2).abs() < 0.02, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed(17);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut rng = Pcg64::seed(5);
+        let picks = rng.choose(50, 10);
+        let mut dedup = picks.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 10);
+        assert!(picks.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn zipf_alias_matches_rank_ordering() {
+        let z = ZipfSampler::new(64, 1.1);
+        let mut rng = Pcg64::seed(11);
+        let mut counts = vec![0usize; 64];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Rank 0 should dominate rank 10 which should dominate rank 40.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[40]);
+    }
+
+    #[test]
+    fn heavy_tailed_has_outliers() {
+        let mut rng = Pcg64::seed(23);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.heavy_tailed(0.01, 30.0)).collect();
+        let max = xs.iter().fold(0f32, |m, x| m.max(x.abs()));
+        // Pure N(0,1) max over 50k draws is ~4.5; outlier mixture must exceed.
+        assert!(max > 10.0, "max={max}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Timing + summary statistics for the bench harness.
+//!
+//! criterion is not in the offline dep closure, so the `cargo bench`
+//! binaries use this module: warmup, repeated timed runs, and robust summary
+//! stats (median, MAD, percentiles, mean±std, throughput).
+
+use std::time::{Duration, Instant};
+
+/// Summary of a set of duration samples.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn from_durations(samples: &[Duration]) -> Summary {
+        assert!(!samples.is_empty());
+        let mut ns: Vec<f64> = samples.iter().map(|d| d.as_nanos() as f64).collect();
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            median_ns: percentile_sorted(&ns, 50.0),
+            p10_ns: percentile_sorted(&ns, 10.0),
+            p90_ns: percentile_sorted(&ns, 90.0),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+
+    /// Human-readable one-liner: `median 1.23ms  (p10 1.1ms, p90 1.4ms, n=30)`.
+    pub fn line(&self) -> String {
+        format!(
+            "median {}  mean {} ± {}  (p10 {}, p90 {}, n={})",
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.n
+        )
+    }
+
+    /// items/sec given items processed per sample run.
+    pub fn throughput(&self, items_per_run: f64) -> f64 {
+        items_per_run / (self.median_ns / 1e9)
+    }
+}
+
+/// Percentile of an ascending-sorted slice (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Run `f` with warmup then timed iterations; adaptively picks the iteration
+/// count so total timed work is ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Summary {
+    // Warmup + pilot measurement.
+    let t0 = Instant::now();
+    f();
+    let pilot = t0.elapsed().max(Duration::from_nanos(100));
+    let target_samples = 30usize;
+    let per_sample = budget.as_secs_f64() / target_samples as f64;
+    let iters_per_sample = (per_sample / pilot.as_secs_f64()).max(1.0).min(1e6) as usize;
+    let mut samples = Vec::with_capacity(target_samples);
+    for _ in 0..target_samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(t.elapsed() / iters_per_sample as u32);
+    }
+    let s = Summary::from_durations(&samples);
+    println!("bench {name:<44} {}", s.line());
+    s
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Simple wall-clock scope timer for pipeline phase logging.
+pub struct ScopeTimer {
+    label: String,
+    start: Instant,
+    quiet: bool,
+}
+
+impl ScopeTimer {
+    pub fn new(label: &str) -> Self {
+        ScopeTimer { label: label.to_string(), start: Instant::now(), quiet: false }
+    }
+    pub fn quiet(label: &str) -> Self {
+        ScopeTimer { label: label.to_string(), start: Instant::now(), quiet: true }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        if !self.quiet {
+            eprintln!("[time] {}: {}", self.label, fmt_ns(self.start.elapsed().as_nanos() as f64));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_samples() {
+        let s = Summary::from_durations(&[Duration::from_micros(10); 8]);
+        assert_eq!(s.median_ns, 10_000.0);
+        assert_eq!(s.std_ns, 0.0);
+        assert_eq!(s.min_ns, s.max_ns);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 4.0);
+        assert!((percentile_sorted(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut acc = 0u64;
+        let s = bench("noop", Duration::from_millis(20), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.n > 0);
+        assert!(s.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let s = Summary::from_durations(&[Duration::from_millis(1); 4]);
+        let t = s.throughput(1000.0);
+        assert!((t - 1_000_000.0).abs() / 1_000_000.0 < 0.01);
+    }
+}

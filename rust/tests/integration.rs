@@ -1,0 +1,197 @@
+//! Integration tests across modules: cross-language model parity, the full
+//! calibrate→quantize→eval pipeline, serving end-to-end, and the PJRT
+//! runtime bridge. Tests that need `make artifacts` outputs skip gracefully
+//! when the artifacts are absent (CI without the python step).
+
+use aser::calib::CalibConfig;
+use aser::coordinator::{
+    calibrate_model, run_ptq, serve_requests, synthetic_requests, ServerConfig,
+};
+use aser::eval::{perplexity, tasks};
+use aser::methods::{method_by_name, RankPolicy};
+use aser::model::{load_model, synthetic_model, ModelConfig, NullSink};
+use aser::quant::Precision;
+use aser::util::io::TensorFile;
+use std::path::Path;
+
+fn artifacts() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+/// Cross-language contract: the rust forward of the python-pretrained model
+/// must reproduce the JAX logits that were exported next to the weights.
+#[test]
+fn rust_forward_matches_jax_reference_logits() {
+    let dir = artifacts().join("models").join("A");
+    if !dir.join("ref_logits.atns").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = ModelConfig::by_name("A").unwrap();
+    let model = load_model(cfg, &dir.join("weights.atns")).unwrap();
+    let tf = TensorFile::load(&dir.join("ref_logits.atns")).unwrap();
+    let tokens_raw = tf.get("tokens").unwrap();
+    let tokens: Vec<u32> = tokens_raw
+        .bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u32)
+        .collect();
+    let (dims, want) = tf.get_f32("logits").unwrap();
+    let got = model.forward_logits(&tokens, &mut NullSink);
+    assert_eq!(got.rows, dims[0]);
+    assert_eq!(got.cols, dims[1]);
+    // f32 accumulation order differs across stacks; compare relative.
+    let mut max_rel = 0f32;
+    let scale = want.iter().fold(0f32, |m, x| m.max(x.abs()));
+    for (a, b) in got.data.iter().zip(&want) {
+        max_rel = max_rel.max((a - b).abs() / scale);
+    }
+    assert!(max_rel < 2e-3, "rust vs jax logits max_rel {max_rel}");
+}
+
+/// Full pipeline on a pretrained model (skips without artifacts): ASER at
+/// W4A8 must (a) beat RTN on perplexity, (b) stay close to fp16.
+#[test]
+fn e2e_aser_recovers_ppl_on_pretrained_model() {
+    let dir = artifacts().join("models").join("A");
+    if !dir.join("weights.atns").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = ModelConfig::by_name("A").unwrap();
+    let load = || load_model(cfg.clone(), &dir.join("weights.atns")).unwrap();
+    let ccfg = CalibConfig { n_seqs: 16, seq_len: 48, max_sample: 192, seed: 7 };
+    let model = load();
+    let stats = calibrate_model(&model, "wiki", &ccfg).unwrap();
+    let corpus = aser::data::corpus(cfg.vocab_size, "wiki").unwrap();
+    let mut rng = aser::util::rng::Pcg64::seed(99);
+    let stream = corpus.stream(&mut rng, 384);
+
+    let ppl_fp = perplexity(&model, &stream, 64);
+    let prec = Precision::w4a8();
+    let aser_m = method_by_name("aser", RankPolicy::Fixed(16), 8).unwrap();
+    let (qm_aser, _) = run_ptq(load(), &stats, aser_m.as_ref(), prec, 1).unwrap();
+    let ppl_aser = perplexity(&qm_aser, &stream, 64);
+    let rtn = method_by_name("rtn", RankPolicy::Fixed(16), 8).unwrap();
+    let (qm_rtn, _) = run_ptq(load(), &stats, rtn.as_ref(), prec, 1).unwrap();
+    let ppl_rtn = perplexity(&qm_rtn, &stream, 64);
+
+    assert!(ppl_aser < ppl_rtn, "aser {ppl_aser} !< rtn {ppl_rtn}");
+    assert!(
+        ppl_aser < ppl_fp * 1.25,
+        "aser ppl {ppl_aser} strays too far from fp16 {ppl_fp}"
+    );
+}
+
+/// Quantized serving end-to-end: batched greedy outputs must match the
+/// unbatched quantized model exactly, and all requests complete.
+#[test]
+fn e2e_quantized_serving_matches_offline_generation() {
+    let model = synthetic_model("micro", 401).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 3 };
+    let stats = calibrate_model(&model, "wiki", &ccfg).unwrap();
+    let method = method_by_name("aser", RankPolicy::Fixed(8), 4).unwrap();
+    let (qmodel, _) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 1).unwrap();
+
+    let reqs = synthetic_requests(qmodel.cfg.vocab_size, 8, 5, 6, 11).unwrap();
+    let offline: Vec<Vec<u32>> =
+        reqs.iter().map(|r| qmodel.generate_greedy(&r.prompt, r.max_new)).collect();
+    let qmodel = std::sync::Arc::new(qmodel);
+    let cfg = ServerConfig { workers: 2, kv_tokens: 4096, ..Default::default() };
+    let run = serve_requests(qmodel, &cfg, reqs.clone());
+    assert_eq!(run.responses.len(), 8);
+    for resp in &run.responses {
+        let want = &offline[resp.id as usize];
+        assert!(
+            want.starts_with(&resp.tokens) || *want == resp.tokens,
+            "req {}: batched {:?} vs offline {:?}",
+            resp.id,
+            resp.tokens,
+            want
+        );
+    }
+}
+
+/// PJRT bridge (skips without artifacts): manifest loads, a kernel runs.
+#[test]
+fn pjrt_runtime_executes_artifacts() {
+    let hlo = artifacts().join("hlo");
+    if !hlo.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = aser::runtime::Manifest::load(&hlo).unwrap();
+    assert!(!manifest.qlinear.is_empty());
+    let mut rt = aser::runtime::Runtime::new(&hlo).unwrap();
+    let art = &manifest.qlinear[0];
+    let mut rng = aser::util::rng::Pcg64::seed(5);
+    let x = aser::tensor::Matrix::randn(&mut rng, art.t, art.d_in, 1.0);
+    let w = aser::tensor::Matrix::randn(&mut rng, art.d_out, art.d_in, 0.05);
+    let qw = aser::quant::QuantizedWeight::quantize(&w, 4);
+    let packed = aser::quant::pack_int4(&qw.codes);
+    let m = vec![1.0f32; art.d_in];
+    let la = aser::tensor::Matrix::zeros(art.d_out, art.rank);
+    let lb = aser::tensor::Matrix::zeros(art.rank, art.d_in);
+    let y = rt.run_qlinear(art, &x, &m, &packed, &qw.scales, &la, &lb).unwrap();
+    let want = aser::runtime::qlinear_reference(
+        &x,
+        &m,
+        &qw.codes,
+        art.d_out,
+        &qw.scales,
+        &la,
+        &lb,
+        art.abits as u8,
+    );
+    let rel = y.sub(&want).frob_norm() / want.frob_norm();
+    assert!(rel < 1e-4, "rel {rel}");
+}
+
+/// Property: the whole method registry produces models that generate valid
+/// tokens for every precision (failure-injection style sweep).
+#[test]
+fn every_method_every_precision_generates() {
+    let ccfg = CalibConfig { n_seqs: 3, seq_len: 16, max_sample: 48, seed: 13 };
+    let base = synthetic_model("micro", 402).unwrap();
+    let stats = calibrate_model(&base, "c4", &ccfg).unwrap();
+    for m in ["rtn", "llm_int", "smoothquant", "smoothquant+", "awq", "gptq", "lorc", "l2qer", "aser-er", "aser"] {
+        for prec in [Precision::w4a8(), Precision::w4a6(), Precision::w4a16(), Precision::new(3, 8)] {
+            let model = synthetic_model("micro", 402).unwrap();
+            let method = method_by_name(m, RankPolicy::Fixed(4), 2).unwrap();
+            let (qm, report) = run_ptq(model, &stats, method.as_ref(), prec, 1).unwrap();
+            assert!(report.mean_rel_error().is_finite(), "{m}@{prec}");
+            let out = qm.generate_greedy(&[1, 2], 3);
+            assert_eq!(out.len(), 3, "{m}@{prec}");
+            assert!(out.iter().all(|&t| (t as usize) < qm.cfg.vocab_size), "{m}@{prec}");
+        }
+    }
+}
+
+/// Task accuracy of the pretrained model must be clearly above chance —
+/// the precondition for the accuracy tables to mean anything.
+#[test]
+fn pretrained_model_beats_chance_on_tasks() {
+    let dir = artifacts().join("models").join("A");
+    if !dir.join("weights.atns").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = ModelConfig::by_name("A").unwrap();
+    let model = load_model(cfg.clone(), &dir.join("weights.atns")).unwrap();
+    let corpus = aser::data::corpus(cfg.vocab_size, "wiki").unwrap();
+    let arc_e = tasks::generate(&corpus, "arc_e", 30, 5).unwrap();
+    let acc = tasks::evaluate(&model, &arc_e);
+    assert!(acc > 75.0, "arc_e accuracy {acc} not above chance band");
+    let arc_c = tasks::generate(&corpus, "arc_c", 30, 5).unwrap();
+    let acc_c = tasks::evaluate(&model, &arc_c);
+    assert!(acc_c > 35.0, "arc_c accuracy {acc_c} (chance 25)");
+}

@@ -1,0 +1,285 @@
+//! Property-based invariant suites (hand-rolled harness in `util::prop`):
+//! quantizer grid bounds, smoothing function-preservation, rank selection
+//! monotonicity, batcher/KV-pool safety, SVD contracts.
+
+use aser::linalg::{rank_for_threshold, svd, svd_gram};
+use aser::methods::aser::Aser;
+use aser::methods::{LayerCalib, PtqMethod, RankPolicy};
+use aser::quant::{fake_quant_vec, quantize_token, BitWidth, Precision, QuantizedWeight};
+use aser::tensor::Matrix;
+use aser::util::prop::{all, check, ensure, gen_vec_f32, shrink_vec_f32, CaseResult, Config};
+use aser::util::rng::Pcg64;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+#[test]
+fn prop_weight_codes_always_in_grid() {
+    check(
+        "weight_codes_in_grid",
+        &cfg(64),
+        |rng| {
+            let rows = 1 + rng.below(6);
+            let cols = 1 + rng.below(24);
+            let bits = [2u8, 3, 4, 6, 8][rng.below(5)];
+            let data: Vec<f32> = (0..rows * cols).map(|_| rng.heavy_tailed(0.2, 50.0)).collect();
+            (rows, cols, bits, data)
+        },
+        |_| Vec::new(),
+        |(rows, cols, bits, data)| {
+            let w = Matrix::from_vec(*rows, *cols, data.clone());
+            let q = QuantizedWeight::quantize(&w, *bits);
+            let qmax = BitWidth(*bits).qmax() as i8;
+            all(vec![
+                ensure(q.codes.iter().all(|&c| -qmax <= c && c <= qmax), || {
+                    "code out of grid".into()
+                }),
+                ensure(q.scales.iter().all(|&s| s > 0.0 && s.is_finite()), || {
+                    "bad scale".into()
+                }),
+                ensure(q.dequantize().is_finite(), || "non-finite dequant".into()),
+            ])
+        },
+    );
+}
+
+#[test]
+fn prop_act_quant_error_bounded_by_half_step() {
+    check(
+        "act_quant_bound",
+        &cfg(128),
+        |rng| gen_vec_f32(rng, 64),
+        shrink_vec_f32,
+        |v| {
+            let q = quantize_token(v, 8);
+            let back = q.dequantize();
+            let ok = v
+                .iter()
+                .zip(&back)
+                .all(|(a, b)| (a - b).abs() <= 0.5 * q.scale + 1e-6);
+            ensure(ok, || format!("roundtrip error exceeds step/2 (scale {})", q.scale))
+        },
+    );
+}
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    // Quantizing an already-quantized vector must be exact (same grid).
+    check(
+        "fake_quant_idempotent",
+        &cfg(96),
+        |rng| gen_vec_f32(rng, 48),
+        shrink_vec_f32,
+        |v| {
+            let mut once = v.clone();
+            fake_quant_vec(&mut once, 6);
+            let mut twice = once.clone();
+            fake_quant_vec(&mut twice, 6);
+            let ok = once
+                .iter()
+                .zip(&twice)
+                .all(|(a, b)| (a - b).abs() <= 1e-5 * a.abs().max(1.0));
+            ensure(ok, || "second quantization moved values".into())
+        },
+    );
+}
+
+#[test]
+fn prop_smoothing_function_preserving_at_fp() {
+    check(
+        "smoothing_preserves_function",
+        &cfg(24),
+        |rng| {
+            let d = 8 + rng.below(24);
+            let out = 4 + rng.below(12);
+            let w = Matrix::randn(rng, out, d, 0.1);
+            let mut x = Matrix::randn(rng, 40, d, 1.0);
+            let hot = rng.below(d);
+            for r in 0..x.rows {
+                x[(r, hot)] *= 10.0 + rng.f32() * 40.0;
+            }
+            (w, x)
+        },
+        |_| Vec::new(),
+        |(w, x)| {
+            let calib = LayerCalib::from_sample(x.clone());
+            let aser = Aser { outlier_f: 4, ..Default::default() };
+            let plan = aser.smoothing_plan(w, &calib);
+            let wm = w.scale_cols(&plan.m);
+            let inv: Vec<f32> = plan.m.iter().map(|&v| 1.0 / v).collect();
+            let xs = x.scale_cols(&inv);
+            let y1 = aser::tensor::matmul_bt(x, w);
+            let y2 = aser::tensor::matmul_bt(&xs, &wm);
+            let rel = y1.sub(&y2).frob_norm() / y1.frob_norm().max(1e-12);
+            ensure(rel < 1e-3, || format!("smoothing changed function: rel {rel}"))
+        },
+    );
+}
+
+#[test]
+fn prop_rank_threshold_monotone_and_bounded() {
+    check(
+        "rank_threshold_monotone",
+        &cfg(128),
+        |rng| {
+            let n = 1 + rng.below(64);
+            let mut s: Vec<f32> = (0..n).map(|_| rng.f32() + 1e-3).collect();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            s
+        },
+        shrink_vec_f32,
+        |s| {
+            let mut last = 0usize;
+            for alpha in [0.05, 0.2, 0.5, 0.8, 1.0] {
+                let r = rank_for_threshold(s, alpha);
+                if r < last || r > s.len() {
+                    return CaseResult::Fail(format!("alpha {alpha}: r {r} (last {last})"));
+                }
+                last = r;
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_svd_fast_matches_reference_spectrum() {
+    check(
+        "svd_gram_vs_jacobi",
+        &cfg(16),
+        |rng| {
+            let m = 4 + rng.below(28);
+            let n = 4 + rng.below(28);
+            Matrix::randn(rng, m, n, 1.0)
+        },
+        |_| Vec::new(),
+        |a| {
+            let f1 = svd(a);
+            let f2 = svd_gram(a);
+            let k = a.rows.min(a.cols);
+            for i in 0..k {
+                let rel = (f1.s[i] - f2.s[i]).abs() / f1.s[0].max(1e-9);
+                if rel > 1e-3 {
+                    return CaseResult::Fail(format!("σ{i}: {} vs {}", f1.s[i], f2.s[i]));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_aser_never_worse_than_rtn_on_calib() {
+    // The compensation is built to minimize exactly this error, so on the
+    // calibration sample ASER(W4A16) ≤ RTN(W4A16) must hold universally.
+    check(
+        "aser_le_rtn",
+        &cfg(12),
+        |rng| {
+            let d = 12 + rng.below(20);
+            let w = Matrix::randn(rng, d, d, 0.08);
+            let mut x = Matrix::randn(rng, 3 * d, d, 1.0);
+            for c in 0..d {
+                let s = 10f32.powf(rng.range_f32(-0.8, 0.8));
+                for r in 0..x.rows {
+                    x[(r, c)] *= s;
+                }
+            }
+            (w, x)
+        },
+        |_| Vec::new(),
+        |(w, x)| {
+            let calib = LayerCalib::from_sample(x.clone());
+            let prec = Precision::w4a16();
+            let aser = Aser { rank: RankPolicy::Fixed(6), smooth: false, ..Default::default() };
+            let q_aser = aser.quantize_layer(w, &calib, prec);
+            let q_rtn = aser::methods::rtn::Rtn.quantize_layer(w, &calib, prec);
+            let e_aser = aser::methods::layer_error(w, &q_aser, x);
+            let e_rtn = aser::methods::layer_error(w, &q_rtn, x);
+            ensure(e_aser <= e_rtn * 1.001, || format!("aser {e_aser} > rtn {e_rtn}"))
+        },
+    );
+}
+
+#[test]
+fn prop_kv_pool_never_overcommits() {
+    use aser::coordinator::KvPool;
+    check(
+        "kv_pool_invariants",
+        &cfg(64),
+        |rng| {
+            let cap = 16 + rng.below(200);
+            let ops: Vec<(bool, usize)> =
+                (0..rng.below(64)).map(|_| (rng.f32() < 0.6, 1 + rng.below(40))).collect();
+            (cap, ops)
+        },
+        |_| Vec::new(),
+        |(cap, ops)| {
+            let pool = KvPool::new(*cap, 8);
+            let mut held = Vec::new();
+            for (is_alloc, n) in ops {
+                if *is_alloc {
+                    if let Some(l) = pool.alloc(*n) {
+                        held.push(l);
+                    }
+                } else if !held.is_empty() {
+                    pool.free(held.swap_remove(0));
+                }
+                if pool.used_tokens() > pool.capacity_tokens() {
+                    return CaseResult::Fail("overcommit".into());
+                }
+            }
+            for l in held {
+                pool.free(l);
+            }
+            ensure(pool.used_tokens() == 0, || "leak after drain".into())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_preserves_request_ids() {
+    use aser::coordinator::{BatchConfig, KvPool, Request};
+    use aser::model::synthetic_model;
+    use std::time::Instant;
+    let model = synthetic_model("micro", 501).unwrap();
+    check(
+        "batcher_completeness",
+        &cfg(8),
+        |rng| {
+            let n = 1 + rng.below(10);
+            (0..n)
+                .map(|i| Request {
+                    id: i as u64,
+                    prompt: (0..1 + rng.below(5)).map(|_| rng.below(128) as u32).collect(),
+                    max_new: 1 + rng.below(5),
+                    submitted: Instant::now(),
+                })
+                .collect::<Vec<_>>()
+        },
+        |_| Vec::new(),
+        |reqs| {
+            let pool = KvPool::new(4096, 8);
+            let (tx, rx) = std::sync::mpsc::channel();
+            for r in reqs.clone() {
+                tx.send(r).unwrap();
+            }
+            drop(tx);
+            let mut got = Vec::new();
+            aser::coordinator::batcher::run_batcher(
+                &model,
+                &pool,
+                &BatchConfig::default(),
+                rx,
+                |resp| got.push(resp.id),
+            );
+            got.sort_unstable();
+            let want: Vec<u64> = (0..reqs.len() as u64).collect();
+            all(vec![
+                ensure(got == want, || format!("ids {got:?} != {want:?}")),
+                ensure(pool.used_tokens() == 0, || "kv leak".into()),
+            ])
+        },
+    );
+}
