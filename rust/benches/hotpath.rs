@@ -1,21 +1,36 @@
 //! Hot-path microbenches (§Perf): the quantized linear forward in all its
-//! variants vs the dense fp32 GEMM of the same shape, the int8 dot kernel,
-//! and SVD variants. `cargo bench --offline` (criterion is not vendored;
+//! variants vs the dense fp32 GEMM of the same shape, the packed batched
+//! qgemm kernel vs the scalar token loop, the int8 dot kernel, and SVD
+//! variants. `cargo bench --offline` (criterion is not vendored;
 //! `util::stats::bench` provides warmup + robust summaries).
+//!
+//! Emits machine-readable `BENCH_hotpath.json` (median ns per benchmark plus
+//! the batched-vs-scalar speedups) for cross-PR perf tracking.
 
 use aser::methods::aser::Aser;
 use aser::methods::{LayerCalib, PtqMethod, RankPolicy};
 use aser::model::linear::{dot_i8, forward_quant_token};
 use aser::model::Linear;
 use aser::quant::Precision;
-use aser::tensor::{matmul, matvec, Matrix};
-use aser::util::rng::Pcg64;
-use aser::util::stats::{bench, black_box};
+use aser::tensor::{matmul, matvec, Matrix, QGemmArena};
+use aser::util::json::{num, obj, s, Json};
+use aser::util::stats::{bench, black_box, Summary};
 use std::time::Duration;
 
 fn main() {
     let budget = Duration::from_millis(400);
-    let mut rng = Pcg64::seed(7);
+    let mut rng = aser::util::rng::Pcg64::seed(7);
+    let mut records: Vec<Json> = Vec::new();
+    let mut record = |name: &str, sm: &Summary| {
+        records.push(obj(vec![
+            ("name", s(name)),
+            ("median_ns", num(sm.median_ns)),
+            ("mean_ns", num(sm.mean_ns)),
+            ("p90_ns", num(sm.p90_ns)),
+            ("n", num(sm.n as f64)),
+        ]));
+    };
+    let mut speedups: Vec<Json> = Vec::new();
 
     // ---- shapes of model A's four linears ----
     for (label, d_in, d_out) in
@@ -34,12 +49,14 @@ fn main() {
         let s_dense = bench(&format!("dense    matvec {label}"), budget, || {
             black_box(dense.forward_token(black_box(&x)));
         });
+        record(&format!("dense_matvec {label}"), &s_dense);
 
         // RTN W4A8 (no compensation)
         let rtn = aser::methods::rtn::Rtn.quantize_layer(&w, &calib, Precision::w4a8());
-        bench(&format!("w4a8 rtn  token  {label}"), budget, || {
+        let s_rtn = bench(&format!("w4a8 rtn  token  {label}"), budget, || {
             black_box(forward_quant_token(black_box(&rtn), black_box(&x)));
         });
+        record(&format!("w4a8_rtn_token {label}"), &s_rtn);
 
         // full ASER W4A8 (smooth + low-rank r=16)
         let aser = Aser { rank: RankPolicy::Fixed(16), outlier_f: 8, ..Default::default() }
@@ -47,31 +64,69 @@ fn main() {
         let s_aser = bench(&format!("w4a8 aser token  {label}"), budget, || {
             black_box(forward_quant_token(black_box(&aser), black_box(&x)));
         });
+        record(&format!("w4a8_aser_token {label}"), &s_aser);
         println!(
             "  -> aser/dense ratio {:.2}x (target ≤ 1.5x: compensation ~free)",
             s_aser.median_ns / s_dense.median_ns
         );
+
+        // packed batched kernel vs the scalar token loop at batch 8
+        let batch = 8usize;
+        let xb = Matrix::randn(&mut rng, batch, d_in, 1.0);
+        let lin = Linear::quantized(aser.clone());
+        let mut arena = QGemmArena::new();
+        let s_scalar8 = bench(&format!("w4a8 aser tok×{batch} {label}"), budget, || {
+            for t in 0..batch {
+                black_box(forward_quant_token(black_box(&aser), black_box(xb.row(t))));
+            }
+        });
+        record(&format!("w4a8_aser_scalar_b{batch} {label}"), &s_scalar8);
+        let s_qgemm8 = bench(&format!("w4a8 aser qgemm{batch} {label}"), budget, || {
+            black_box(lin.forward_with(black_box(&xb), &mut arena));
+        });
+        record(&format!("w4a8_aser_qgemm_b{batch} {label}"), &s_qgemm8);
+        let sp = s_scalar8.median_ns / s_qgemm8.median_ns;
+        println!("  -> qgemm batch-{batch} speedup over scalar loop: {sp:.2}x");
+        speedups.push(obj(vec![
+            ("shape", s(label)),
+            ("batch", num(batch as f64)),
+            ("scalar_median_ns", num(s_scalar8.median_ns)),
+            ("qgemm_median_ns", num(s_qgemm8.median_ns)),
+            ("speedup", num(sp)),
+        ]));
     }
 
     // ---- int8 dot kernel ----
     let a: Vec<i8> = (0..1024).map(|i| (i % 15 - 7) as i8).collect();
     let b: Vec<i8> = (0..1024).map(|i| (i % 13 - 6) as i8).collect();
-    let s = bench("dot_i8 1024", budget, || {
+    let sm = bench("dot_i8 1024", budget, || {
         black_box(dot_i8(black_box(&a), black_box(&b)));
     });
-    println!("  -> {:.2} G i8-madd/s", 1024.0 / s.median_ns);
+    println!("  -> {:.2} G i8-madd/s", 1024.0 / sm.median_ns);
+    record("dot_i8_1024", &sm);
 
     // ---- f32 GEMM ----
     let ma = Matrix::randn(&mut rng, 256, 256, 1.0);
     let mb = Matrix::randn(&mut rng, 256, 256, 1.0);
-    let s = bench("gemm 256x256x256", budget, || {
+    let sm = bench("gemm 256x256x256", budget, || {
         black_box(matmul(black_box(&ma), black_box(&mb)));
     });
-    println!("  -> {:.2} GFLOP/s", 2.0 * 256f64.powi(3) / s.median_ns);
+    println!("  -> {:.2} GFLOP/s", 2.0 * 256f64.powi(3) / sm.median_ns);
+    record("gemm_256", &sm);
     let v: Vec<f32> = (0..256).map(|i| i as f32).collect();
-    bench("matvec 256x256", budget, || {
+    let sm = bench("matvec 256x256", budget, || {
         black_box(matvec(black_box(&ma), black_box(&v)));
     });
+    record("matvec_256", &sm);
+
+    // ---- blocked A·Bᵀ (the PPL batch-forward kernel) ----
+    let bt_a = Matrix::randn(&mut rng, 128, 512, 1.0);
+    let bt_b = Matrix::randn(&mut rng, 256, 512, 1.0);
+    let sm = bench("matmul_bt 128x512x256", budget, || {
+        black_box(aser::tensor::matmul_bt(black_box(&bt_a), black_box(&bt_b)));
+    });
+    println!("  -> {:.2} GFLOP/s blocked A·Bᵀ", 2.0 * 128.0 * 512.0 * 256.0 / sm.median_ns);
+    record("matmul_bt_128x512x256", &sm);
 
     // ---- SVD variants (the quantization-pipeline bottleneck) ----
     for (m, n) in [(256usize, 256usize), (1024, 256)] {
@@ -83,5 +138,16 @@ fn main() {
             black_box(aser::linalg::svd_gram(black_box(&a)));
         });
         println!("  -> gram speedup {:.1}x", s_j.median_ns / s_g.median_ns);
+        record(&format!("svd_jacobi_{m}x{n}"), &s_j);
+        record(&format!("svd_gram_{m}x{n}"), &s_g);
     }
+
+    let report = obj(vec![
+        ("bench", s("hotpath")),
+        ("records", Json::Arr(records)),
+        ("batched_vs_scalar", Json::Arr(speedups)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", report.to_string_pretty())
+        .expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
 }

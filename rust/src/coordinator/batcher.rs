@@ -1,16 +1,32 @@
-//! Continuous (iteration-level) dynamic batcher — Orca-style scheduling.
+//! Continuous (iteration-level) dynamic batcher — Orca-style scheduling on
+//! top of the packed quantized execution engine.
 //!
 //! The decode loop keeps an *active set* of sequences. Every iteration it
 //! (1) admits queued requests while there is batch room AND the KV pool
 //! grants a lease (backpressure), (2) advances every active sequence by one
 //! token (prompt tokens first — chunked prefill — then greedy decode), and
 //! (3) retires finished sequences, freeing their KV lease. New requests
-//! therefore join between *iterations*, not between requests — the property
-//! that gives continuous batching its throughput.
+//! therefore join between *iterations*, not between requests.
+//!
+//! Step (2) is where the throughput property is actually realized: all
+//! advancing sequences are stacked into one [`Gpt::forward_step_batch`]
+//! call, so each transformer layer runs ONE batched quantized GEMM per
+//! iteration (tile-packed int8 weight panels streamed once per batch)
+//! instead of one scalar token forward per sequence. The per-token
+//! activation-quantization scratch lives in a loop-owned
+//! [`QGemmArena`], so the steady-state decode loop does not allocate
+//! quantization buffers.
+//!
+//! Determinism scope: for decode batches under 32 sequences (the default
+//! `max_batch` is 8) the batched step is bitwise identical to per-sequence
+//! `forward_step`, so greedy outputs match single-sequence generation
+//! token-for-token (see `tensor::gemm::matmul_bt_acc`). Larger batches take
+//! the split-K blocked kernels and agree only to f32 tolerance.
 
 use super::kvpool::{KvPool, Lease};
 use crate::data::vocab::EOS;
 use crate::model::{argmax, Gpt, KvCache};
+use crate::tensor::QGemmArena;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -83,6 +99,8 @@ pub fn run_batcher(
     let mut metrics = BatchMetrics::default();
     let mut channel_open = true;
     let mut pending: Vec<Request> = Vec::new();
+    // Reusable activation-quantization scratch for the batched decode step.
+    let mut arena = QGemmArena::new();
 
     while channel_open || !active.is_empty() || !pending.is_empty() {
         // ---- admission ----
@@ -135,14 +153,19 @@ pub fn run_batcher(
             continue;
         }
 
-        // ---- one iteration: advance every active sequence by one token ----
+        // ---- one iteration: advance every active sequence by one token,
+        //      all stacked into a single batched step (one quantized GEMM
+        //      per layer per iteration, not per sequence) ----
         metrics.iterations += 1;
-        for a in active.iter_mut() {
+        let mut step_tokens: Vec<u32> = Vec::with_capacity(active.len());
+        let mut step_idx: Vec<usize> = Vec::with_capacity(active.len());
+        for (i, a) in active.iter_mut().enumerate() {
             if a.fed < a.req.prompt.len() {
                 let tok = a.req.prompt[a.fed];
-                a.last_logits = model.forward_step(tok, &mut a.cache);
                 a.fed += 1;
                 metrics.prefill_tokens += 1;
+                step_tokens.push(tok);
+                step_idx.push(i);
             } else {
                 let next = argmax(&a.last_logits) as u32;
                 a.generated.push(next);
@@ -154,8 +177,27 @@ pub fn run_batcher(
                     || (cfg.stop_on_eos && next == EOS)
                     || a.cache.len() + 1 >= model.cfg.max_seq;
                 if !done {
-                    a.last_logits = model.forward_step(next, &mut a.cache);
+                    step_tokens.push(next);
+                    step_idx.push(i);
                 }
+            }
+        }
+        if !step_tokens.is_empty() {
+            let logits = {
+                // Gather &mut caches for exactly the advancing sequences
+                // (step_idx is ascending by construction).
+                let mut want = step_idx.iter().copied().peekable();
+                let mut caches: Vec<&mut KvCache> = Vec::with_capacity(step_idx.len());
+                for (i, a) in active.iter_mut().enumerate() {
+                    if want.peek() == Some(&i) {
+                        want.next();
+                        caches.push(&mut a.cache);
+                    }
+                }
+                model.forward_step_batch(&step_tokens, &mut caches, &mut arena)
+            };
+            for (row, &i) in step_idx.iter().enumerate() {
+                active[i].last_logits = logits.row(row).to_vec();
             }
         }
 

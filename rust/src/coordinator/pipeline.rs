@@ -111,7 +111,9 @@ pub fn quantize_model(
     for ((_, l, name), (q, rep)) in jobs.iter().zip(results) {
         total_extra += rep.extra_params;
         layers.push(rep);
-        model.set_linear(*l, name, Linear::Quant(q));
+        // `quantized` tile-packs the weight for the batched serve kernel
+        // once here, off the request path.
+        model.set_linear(*l, name, Linear::quantized(q));
     }
     Ok(PipelineReport {
         method: method.name(),

@@ -28,7 +28,7 @@ pub mod rtn;
 pub mod smoothquant;
 
 use crate::quant::{fake_quant_acts, Precision, QuantizedWeight, FP};
-use crate::tensor::{matmul, matmul_bt, Matrix};
+use crate::tensor::{matmul, matmul_bt, Matrix, PackedQWeight};
 
 /// Calibration statistics for one linear layer, captured by `calib`.
 #[derive(Clone, Debug)]
@@ -103,6 +103,24 @@ impl QuantizedLinear {
             .map(|(a, b)| a.rows * a.cols + b.rows * b.cols)
             .unwrap_or(0);
         lr + self.fp_cols.len() * self.weight.rows
+    }
+
+    /// Build the serve-time packed-kernel weight (tile-packed codes,
+    /// smoothing reciprocals, gathered outlier columns, low-rank factors) —
+    /// done once when the layer is installed into a model, consumed by
+    /// `tensor::qgemm` on every batched forward.
+    pub fn pack(&self) -> PackedQWeight {
+        PackedQWeight::pack(
+            &self.weight.codes,
+            self.weight.rows,
+            self.weight.cols,
+            self.weight.bits,
+            self.abits,
+            &self.weight.scales,
+            self.act_smooth.as_deref(),
+            &self.fp_cols,
+            self.low_rank.as_ref().map(|(a, b)| (a, b)),
+        )
     }
 
     /// Extra FLOPs per token vs the plain `d_out × d_in` GEMM

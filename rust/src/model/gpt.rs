@@ -6,15 +6,19 @@
 //! residual. The four named linears match the paper's Fig. 2. Embeddings and
 //! the LM head stay fp (standard PTQ practice).
 //!
-//! Two forward paths:
+//! Three forward paths:
 //! - [`Gpt::forward_logits`] — teacher-forced batch forward (PPL/eval,
 //!   calibration capture via [`ActSink`]).
-//! - [`Gpt::forward_step`] — incremental decode against a [`KvCache`]
-//!   (the serving hot path).
+//! - [`Gpt::forward_step`] — single-sequence incremental decode against a
+//!   [`KvCache`] (greedy generation).
+//! - [`Gpt::forward_step_batch`] — the serving hot path: advance N
+//!   independent sequences by one token each, stacking every per-layer
+//!   linear into one batched (packed quantized) GEMM while attention runs
+//!   per-sequence against each sequence's own cache/position.
 
 use super::config::{layer_key, ModelConfig};
 use super::linear::Linear;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, QGemmArena};
 
 /// Receives the input activations of every quantizable linear layer.
 pub trait ActSink {
@@ -93,16 +97,28 @@ impl KvCache {
 
 /// RMSNorm with learned gain.
 pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    rmsnorm_into(x, gain, eps, &mut out);
+    out
+}
+
+/// RMSNorm writing into caller storage — the batched decode path normalizes
+/// straight into its stacked row matrices instead of allocating a `Vec` per
+/// sequence per layer.
+pub fn rmsnorm_into(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
     debug_assert_eq!(x.len(), gain.len());
+    debug_assert_eq!(x.len(), out.len());
     let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
     let inv = 1.0 / (ms + eps as f64).sqrt() as f32;
-    x.iter().zip(gain).map(|(&v, &g)| v * inv * g).collect()
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = v * inv * g;
+    }
 }
 
 fn rmsnorm_rows(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
     let mut out = Matrix::zeros(x.rows, x.cols);
     for r in 0..x.rows {
-        out.row_mut(r).copy_from_slice(&rmsnorm(x.row(r), gain, eps));
+        rmsnorm_into(x.row(r), gain, eps, out.row_mut(r));
     }
     out
 }
@@ -230,50 +246,61 @@ impl Gpt {
         h1.add(&ffn)
     }
 
-    /// Incremental decode: push one token, return logits for the next.
-    pub fn forward_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+    /// One sequence's attention for layer `l` against its KV cache: split
+    /// the fused qkv row, rope at the cache position, append k/v, attend
+    /// over everything seen. Writes the concatenated head outputs into the
+    /// zeroed `out` (length d_model). Shared by the single-token and batched
+    /// decode paths so they stay numerically identical.
+    fn attn_cached(&self, l: usize, cache: &mut KvCache, qkv: &[f32], out: &mut [f32]) {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let (nh, hd) = (cfg.n_heads, cfg.head_dim());
         let pos = cache.seen;
-        assert!(pos < cfg.max_seq, "kv cache full");
+        let mut q = qkv[0..d].to_vec();
+        let mut k = qkv[d..2 * d].to_vec();
+        let v = &qkv[2 * d..3 * d];
+        for head in 0..nh {
+            let s = head * hd;
+            rope_inplace(&mut q[s..s + hd], pos, cfg.rope_base);
+            rope_inplace(&mut k[s..s + hd], pos, cfg.rope_base);
+        }
+        cache.keys[l].extend_from_slice(&k);
+        cache.values[l].extend_from_slice(v);
+        let t_seen = pos + 1;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0f32; t_seen];
+        for head in 0..nh {
+            let s = head * hd;
+            let qh = &q[s..s + hd];
+            for tk in 0..t_seen {
+                let krow = &cache.keys[l][tk * d + s..tk * d + s + hd];
+                scores[tk] = crate::tensor::dot(qh, krow) * scale;
+            }
+            softmax_inplace(&mut scores);
+            let orow = &mut out[s..s + hd];
+            for tk in 0..t_seen {
+                let w = scores[tk];
+                let vrow = &cache.values[l][tk * d + s..tk * d + s + hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+
+    /// Incremental decode: push one token, return logits for the next.
+    pub fn forward_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        assert!(cache.seen < cfg.max_seq, "kv cache full");
         let mut h: Vec<f32> = self.embed.row(token as usize).to_vec();
 
         for (l, block) in self.blocks.iter().enumerate() {
             // attention
             let x_norm = rmsnorm(&h, &block.attn_norm, cfg.norm_eps);
             let qkv = block.qkv.forward_token(&x_norm);
-            let mut q = qkv[0..d].to_vec();
-            let mut k = qkv[d..2 * d].to_vec();
-            let v = &qkv[2 * d..3 * d];
-            for head in 0..nh {
-                let s = head * hd;
-                rope_inplace(&mut q[s..s + hd], pos, cfg.rope_base);
-                rope_inplace(&mut k[s..s + hd], pos, cfg.rope_base);
-            }
-            cache.keys[l].extend_from_slice(&k);
-            cache.values[l].extend_from_slice(v);
-            let t_seen = pos + 1;
-            let scale = 1.0 / (hd as f32).sqrt();
             let mut attn_out = vec![0f32; d];
-            let mut scores = vec![0f32; t_seen];
-            for head in 0..nh {
-                let s = head * hd;
-                let qh = &q[s..s + hd];
-                for tk in 0..t_seen {
-                    let krow = &cache.keys[l][tk * d + s..tk * d + s + hd];
-                    scores[tk] = crate::tensor::dot(qh, krow) * scale;
-                }
-                softmax_inplace(&mut scores);
-                let orow = &mut attn_out[s..s + hd];
-                for tk in 0..t_seen {
-                    let w = scores[tk];
-                    let vrow = &cache.values[l][tk * d + s..tk * d + s + hd];
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += w * vv;
-                    }
-                }
-            }
+            self.attn_cached(l, cache, &qkv, &mut attn_out);
             let attn_proj = block.out_proj.forward_token(&attn_out);
             for (hi, p) in h.iter_mut().zip(&attn_proj) {
                 *hi += p;
@@ -294,6 +321,73 @@ impl Gpt {
         cache.seen += 1;
         let hn = rmsnorm(&h, &self.final_norm, cfg.norm_eps);
         crate::tensor::matvec(&self.lm_head, &hn)
+    }
+
+    /// Batched incremental decode — the continuous batcher's hot path.
+    ///
+    /// Advances `tokens.len()` independent sequences by one token each. All
+    /// per-layer linears run as ONE batched (packed quantized) GEMM over the
+    /// stacked token rows; attention runs per sequence against its own
+    /// cache/position via the same [`Gpt::attn_cached`] used by
+    /// [`Gpt::forward_step`], so per-sequence results match the scalar path.
+    /// `arena` holds the reusable activation-quantization scratch. Returns
+    /// logits, batch × vocab (row i belongs to `tokens[i]` / `caches[i]`).
+    pub fn forward_step_batch(
+        &self,
+        tokens: &[u32],
+        caches: &mut [&mut KvCache],
+        arena: &mut QGemmArena,
+    ) -> Matrix {
+        let cfg = &self.cfg;
+        let b = tokens.len();
+        assert_eq!(b, caches.len(), "token/cache count mismatch");
+        let d = cfg.d_model;
+        for c in caches.iter() {
+            assert!(c.seen < cfg.max_seq, "kv cache full");
+        }
+        let mut h = Matrix::zeros(b, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            h.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for (l, block) in self.blocks.iter().enumerate() {
+            // ---- attention: one batched qkv/out_proj GEMM, per-seq attend ----
+            let mut x_norm = Matrix::zeros(b, d);
+            for i in 0..b {
+                rmsnorm_into(h.row(i), &block.attn_norm, cfg.norm_eps, x_norm.row_mut(i));
+            }
+            let qkv = block.qkv.forward_with(&x_norm, arena); // b × 3d
+            let mut attn_out = Matrix::zeros(b, d);
+            for i in 0..b {
+                self.attn_cached(l, &mut *caches[i], qkv.row(i), attn_out.row_mut(i));
+            }
+            let attn_proj = block.out_proj.forward_with(&attn_out, arena);
+            let h1 = h.add(&attn_proj);
+            // ---- feed-forward: batched fc1/fc2, rowwise SwiGLU ----
+            let mut x_norm2 = Matrix::zeros(b, d);
+            for i in 0..b {
+                rmsnorm_into(h1.row(i), &block.ffn_norm, cfg.norm_eps, x_norm2.row_mut(i));
+            }
+            let gate_up = block.fc1.forward_with(&x_norm2, arena); // b × 2·dff
+            let dff = cfg.d_ff;
+            let mut act = Matrix::zeros(b, dff);
+            for i in 0..b {
+                let gu = gate_up.row(i);
+                let arow = act.row_mut(i);
+                for j in 0..dff {
+                    arow[j] = silu(gu[j]) * gu[dff + j];
+                }
+            }
+            let ffn = block.fc2.forward_with(&act, arena);
+            h = h1.add(&ffn);
+        }
+        for c in caches.iter_mut() {
+            c.seen += 1;
+        }
+        let mut hn = Matrix::zeros(b, d);
+        for i in 0..b {
+            rmsnorm_into(h.row(i), &self.final_norm, cfg.norm_eps, hn.row_mut(i));
+        }
+        crate::tensor::matmul_bt(&hn, &self.lm_head)
     }
 
     /// Greedy generation from a prompt; returns generated token ids.
@@ -371,6 +465,59 @@ mod tests {
             assert!(maxdiff < 2e-3, "pos {t}: maxdiff {maxdiff}");
         }
         assert_eq!(cache.len(), tokens.len());
+    }
+
+    #[test]
+    fn batched_step_matches_single_step() {
+        let model = synthetic_model("micro", 12).unwrap();
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8], &[40, 41, 42, 43]];
+        // Scalar path: each sequence fed token-at-a-time.
+        let mut single: Vec<Vec<f32>> = Vec::new();
+        for p in &prompts {
+            let mut cache = KvCache::new(&model.cfg);
+            let mut lg = Vec::new();
+            for &t in *p {
+                lg = model.forward_step(t, &mut cache);
+            }
+            single.push(lg);
+        }
+        // Batched path: feed position-by-position, batching the sequences
+        // that still have a token at this position (ragged lengths).
+        let mut caches: Vec<KvCache> =
+            prompts.iter().map(|_| KvCache::new(&model.cfg)).collect();
+        let mut arena = crate::tensor::QGemmArena::new();
+        let maxlen = prompts.iter().map(|p| p.len()).max().unwrap();
+        let mut last: Vec<Vec<f32>> = vec![Vec::new(); prompts.len()];
+        for pos in 0..maxlen {
+            let mut toks = Vec::new();
+            let mut idx = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                if pos < p.len() {
+                    toks.push(p[pos]);
+                    idx.push(i);
+                }
+            }
+            let mut want = idx.iter().copied().peekable();
+            let mut refs: Vec<&mut KvCache> = Vec::with_capacity(idx.len());
+            for (i, c) in caches.iter_mut().enumerate() {
+                if want.peek() == Some(&i) {
+                    want.next();
+                    refs.push(c);
+                }
+            }
+            let lg = model.forward_step_batch(&toks, &mut refs, &mut arena);
+            for (row, &i) in idx.iter().enumerate() {
+                last[i] = lg.row(row).to_vec();
+            }
+        }
+        for (i, p) in prompts.iter().enumerate() {
+            assert_eq!(caches[i].seen, p.len());
+            let d = single[i]
+                .iter()
+                .zip(&last[i])
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-5, "seq {i}: maxdiff {d}");
+        }
     }
 
     #[test]

@@ -1,32 +1,54 @@
-//! The linear-layer abstraction the quantization pipeline swaps in place.
+//! The linear-layer abstraction the quantization pipeline swaps in place —
+//! now fronting the packed-kernel architecture.
 //!
-//! `Linear::Dense` is the fp32 reference; `Linear::Quant` wraps a
-//! [`QuantizedLinear`] produced by any PTQ method. The quantized forward here
-//! is the *optimized serving path* (int8 token quant + integer-ish dot with
-//! per-row scales + fused low-rank branch); `QuantizedLinear::forward_matrix`
-//! in `methods` is the reference semantics it must match (see tests).
+//! `Linear::Dense` is the fp32 reference (batch forward = cache-blocked
+//! `matmul_bt`). `Linear::Quant` holds a [`PackedQWeight`] built once at
+//! install time (`Linear::quantized`) from the method-produced
+//! [`QuantizedLinear`] — only the tile-packed form is kept resident, so a
+//! served model carries one copy of the weight codes, not two. Both
+//! `forward` (batched) and `forward_token` route through `tensor::qgemm` —
+//! one cache-blocked i8×i8→i32 GEMM with fused
+//! smoothing/scales/outliers/low-rank per call, with per-batch activation
+//! quantization staged in a caller-supplied [`QGemmArena`] (`forward_with` /
+//! `forward_token_with`) so the serving decode loop performs no steady-state
+//! allocation.
+//!
+//! `QuantizedLinear::forward_matrix` in `methods` remains the reference
+//! semantics the kernel must match; [`forward_quant_token`] here is the
+//! scalar (token-at-a-time) reference the serving benches compare against.
+//! Equivalence across methods × precisions × batch sizes is pinned by
+//! `tests/properties.rs`.
 
 use crate::methods::QuantizedLinear;
 use crate::quant::{quantize_token, FP};
-use crate::tensor::{matvec, Matrix};
+use crate::tensor::qgemm::{auto_threads, qgemm_forward, qgemm_forward_token};
+use crate::tensor::{matvec, Matrix, PackedQWeight, QGemmArena};
 
 pub enum Linear {
     Dense(Matrix),
-    Quant(QuantizedLinear),
+    Quant(PackedQWeight),
 }
 
 impl Linear {
+    /// Install a method-produced quantized layer, packing it for the batched
+    /// kernel once here rather than on every forward. The unpacked
+    /// `QuantizedLinear` is dropped: the serving paths only ever read the
+    /// packed form, and keeping both would double weight-code memory.
+    pub fn quantized(q: QuantizedLinear) -> Linear {
+        Linear::Quant(q.pack())
+    }
+
     pub fn out_features(&self) -> usize {
         match self {
             Linear::Dense(w) => w.rows,
-            Linear::Quant(q) => q.out_features(),
+            Linear::Quant(q) => q.d_out,
         }
     }
 
     pub fn in_features(&self) -> usize {
         match self {
             Linear::Dense(w) => w.cols,
-            Linear::Quant(q) => q.in_features(),
+            Linear::Quant(q) => q.d_in,
         }
     }
 
@@ -38,31 +60,37 @@ impl Linear {
         }
     }
 
-    /// Forward for a batch of token activations (tokens × in → tokens × out).
+    /// Forward for a batch of token activations (tokens × in → tokens × out),
+    /// allocating throwaway scratch. Eval/calibration paths use this; hot
+    /// loops should hold a [`QGemmArena`] and call [`Linear::forward_with`].
     pub fn forward(&self, x: &Matrix) -> Matrix {
+        self.forward_with(x, &mut QGemmArena::new())
+    }
+
+    /// Batched forward with caller-owned scratch (the serving path).
+    pub fn forward_with(&self, x: &Matrix, arena: &mut QGemmArena) -> Matrix {
         match self {
             Linear::Dense(w) => crate::tensor::matmul_bt(x, w),
-            Linear::Quant(q) => {
-                let mut out = Matrix::zeros(x.rows, q.out_features());
-                for t in 0..x.rows {
-                    let y = forward_quant_token(q, x.row(t));
-                    out.row_mut(t).copy_from_slice(&y);
-                }
-                out
-            }
+            Linear::Quant(q) => qgemm_forward(q, x, arena, auto_threads(x.rows, q.d_out)),
         }
     }
 
-    /// Single-token forward (serving hot path).
+    /// Single-token forward (greedy generation, single-sequence decode).
     pub fn forward_token(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_token_with(x, &mut QGemmArena::new())
+    }
+
+    /// Single-token forward with caller-owned scratch.
+    pub fn forward_token_with(&self, x: &[f32], arena: &mut QGemmArena) -> Vec<f32> {
         match self {
             Linear::Dense(w) => matvec(w, x),
-            Linear::Quant(q) => forward_quant_token(q, x),
+            Linear::Quant(q) => qgemm_forward_token(q, x, arena),
         }
     }
 }
 
-/// Optimized quantized single-token forward:
+/// Scalar reference for the quantized single-token forward (kept as the
+/// baseline the packed kernel is benchmarked and property-tested against):
 /// 1. smooth: x' = x / m
 /// 2. per-token quantize x' to `abits`; integer codes dot int weight codes
 ///    row-wise, then apply the combined scale (token_scale × row_scale)
@@ -117,24 +145,12 @@ pub fn forward_quant_token(q: &QuantizedLinear, x: &[f32]) -> Vec<f32> {
     y
 }
 
-/// i8·i8 → i32 dot, 8-wide unrolled.
+/// i8·i8 → i32 dot, 8-wide unrolled via the shared `dot_unrolled` kernel
+/// (same unroll as `tensor::gemm::dot`).
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0i32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        for k in 0..8 {
-            acc[k] += a[i + k] as i32 * b[i + k] as i32;
-        }
-    }
-    let mut s: i32 = acc.iter().sum();
-    for i in chunks * 8..n {
-        s += a[i] as i32 * b[i] as i32;
-    }
-    s
+    crate::tensor::gemm::dot_unrolled!(a, b, 0i32, |acc: i32, x: i8, y: i8| acc
+        + x as i32 * y as i32)
 }
 
 #[cfg(test)]
@@ -161,7 +177,7 @@ mod tests {
         for prec in [Precision::w4a8(), Precision::w4a6(), Precision::w4a16()] {
             let q = Rtn.quantize_layer(&w, &calib, prec);
             let want = q.forward_matrix(&calib.x);
-            let lin = Linear::Quant(q);
+            let lin = Linear::quantized(q);
             let got = lin.forward(&calib.x);
             assert!(
                 want.max_diff(&got) < 1e-3 * want.max_abs().max(1.0),
@@ -177,9 +193,27 @@ mod tests {
         let aser = Aser { rank: RankPolicy::Fixed(8), outlier_f: 4, ..Default::default() };
         let q = aser.quantize_layer(&w, &calib, Precision::w4a8());
         let want = q.forward_matrix(&calib.x);
-        let lin = Linear::Quant(q);
+        let lin = Linear::quantized(q);
         let got = lin.forward(&calib.x);
         assert!(want.max_diff(&got) < 1e-3 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn batched_kernel_matches_scalar_token_reference() {
+        let (w, calib) = setup(134);
+        let aser = Aser { rank: RankPolicy::Fixed(8), outlier_f: 4, ..Default::default() };
+        let q = aser.quantize_layer(&w, &calib, Precision::w4a8());
+        let lin = Linear::quantized(q.clone());
+        let batch = lin.forward(&calib.x);
+        for t in [0usize, 7, 63] {
+            let want = forward_quant_token(&q, calib.x.row(t));
+            let d = batch
+                .row(t)
+                .iter()
+                .zip(&want)
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-3 * batch.max_abs().max(1.0), "token {t}: diff {d}");
+        }
     }
 
     #[test]
@@ -191,6 +225,22 @@ mod tests {
             let y = lin.forward_token(calib.x.row(t));
             assert_eq!(batch.row(t), &y[..]);
         }
+    }
+
+    #[test]
+    fn arena_reuse_across_layers_and_calls() {
+        let (w, calib) = setup(135);
+        let q1 = Rtn.quantize_layer(&w, &calib, Precision::w4a8());
+        let wide = Matrix::randn(&mut Pcg64::seed(9), 16, 40, 0.05);
+        let q2 = Rtn.quantize_layer(&wide, &calib, Precision::w4a8());
+        let l1 = Linear::quantized(q1);
+        let l2 = Linear::quantized(q2);
+        let mut arena = QGemmArena::new();
+        let a1 = l1.forward_with(&calib.x, &mut arena);
+        let a2 = l2.forward_with(&calib.x, &mut arena);
+        // Shared arena across alternating layers must not corrupt results.
+        assert_eq!(a1, l1.forward(&calib.x));
+        assert_eq!(a2, l2.forward(&calib.x));
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod linear;
 pub use config::{layer_key, ModelConfig, LINEAR_NAMES};
 pub use gpt::{argmax, ActSink, Block, Gpt, KvCache, NullSink};
 pub use init::{inject_outliers, load_model, load_or_synthetic, save_model, synthetic_model};
-pub use linear::Linear;
+pub use linear::{forward_quant_token, Linear};

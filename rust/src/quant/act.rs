@@ -17,12 +17,25 @@ pub struct QuantizedToken {
 
 /// Quantize a single token activation vector.
 pub fn quantize_token(x: &[f32], bits: u8) -> QuantizedToken {
+    let mut codes = vec![0i8; x.len()];
+    let scale = quantize_token_into(x, bits, &mut codes);
+    QuantizedToken { codes, scale }
+}
+
+/// Quantize a token into caller-provided storage, returning the scale — the
+/// no-allocation variant the batched serving path (`tensor::qgemm`) uses for
+/// its arena, and the single source of truth for per-token quantization
+/// semantics (token and batch paths stay bitwise identical by construction).
+pub fn quantize_token_into(x: &[f32], bits: u8, codes: &mut [i8]) -> f32 {
+    debug_assert_eq!(x.len(), codes.len());
     let qmax = BitWidth(bits).qmax();
     let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
     let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
     let inv = 1.0 / scale;
-    let codes = x.iter().map(|&v| clamp_q(rtn(v * inv), qmax) as i8).collect();
-    QuantizedToken { codes, scale }
+    for (c, &v) in codes.iter_mut().zip(x) {
+        *c = clamp_q(rtn(v * inv), qmax) as i8;
+    }
+    scale
 }
 
 impl QuantizedToken {
@@ -120,6 +133,19 @@ mod tests {
             let mut v = x.row(r).to_vec();
             fake_quant_vec(&mut v, 6);
             assert_eq!(m.row(r), &v[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn into_and_alloc_paths_agree() {
+        let mut rng = Pcg64::seed(55);
+        let x: Vec<f32> = (0..37).map(|_| rng.heavy_tailed(0.1, 15.0)).collect();
+        for bits in [4u8, 6, 8] {
+            let q = quantize_token(&x, bits);
+            let mut codes = vec![0i8; x.len()];
+            let scale = quantize_token_into(&x, bits, &mut codes);
+            assert_eq!(scale, q.scale);
+            assert_eq!(codes, q.codes);
         }
     }
 

@@ -5,6 +5,8 @@ pub mod act;
 pub mod spec;
 pub mod weight;
 
-pub use act::{fake_quant_acts, fake_quant_vec, quantize_token, QuantizedToken};
+pub use act::{
+    fake_quant_acts, fake_quant_vec, quantize_token, quantize_token_into, QuantizedToken,
+};
 pub use spec::{BitWidth, Precision, FP};
 pub use weight::{fake_quant_weight, pack_int4, unpack_int4, QuantizedWeight};

@@ -3,8 +3,10 @@
 //! `matmul` is the general cache-blocked kernel (A · B). It packs B's panel
 //! transposed so the inner loop is two contiguous streams, and unrolls the K
 //! loop 8-wide to give the autovectorizer clean SIMD lanes. Variants:
-//! `matmul_at` (Aᵀ·B, used for Gram matrices), `matvec`, and `gram` (X·Xᵀ,
-//! exploiting symmetry).
+//! `matmul_at` (Aᵀ·B, used for Gram matrices), `matmul_bt` / `matmul_bt_acc`
+//! (A·Bᵀ with the same MC/NC/KC tiling), `matvec`, and `gram` (X·Xᵀ,
+//! exploiting symmetry). The 8-wide unroll itself lives in the
+//! [`dot_unrolled`] macro, shared with the int8 kernel in `model::linear`.
 
 use super::matrix::Matrix;
 
@@ -12,6 +14,38 @@ use super::matrix::Matrix;
 const MC: usize = 64; // rows of A per block
 const NC: usize = 128; // cols of B per block
 const KC: usize = 256; // shared dim per block
+
+/// 8-wide unrolled dot product over two equal-length slices — the one unroll
+/// shared by the f32 kernel ([`dot`]) and the i8×i8→i32 kernel
+/// (`model::linear::dot_i8`). `$zero` is the accumulator identity and
+/// `$madd(acc, a, b)` the fused multiply-accumulate for the element type.
+/// Eight independent accumulator lanes give the autovectorizer clean SIMD
+/// lanes; the tail accumulates separately and is added last (this exact
+/// summation order is load-bearing for bitwise reproducibility tests).
+macro_rules! dot_unrolled {
+    ($a:expr, $b:expr, $zero:expr, $madd:expr) => {{
+        let a_ = $a;
+        let b_ = $b;
+        debug_assert_eq!(a_.len(), b_.len());
+        let n = a_.len();
+        let chunks = n / 8;
+        let mut acc = [$zero; 8];
+        for c in 0..chunks {
+            let i = c * 8;
+            let mut k = 0usize;
+            while k < 8 {
+                acc[k] = $madd(acc[k], a_[i + k], b_[i + k]);
+                k += 1;
+            }
+        }
+        let mut tail = $zero;
+        for i in chunks * 8..n {
+            tail = $madd(tail, a_[i], b_[i]);
+        }
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+    }};
+}
+pub(crate) use dot_unrolled;
 
 /// C = A·B.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -53,28 +87,7 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// Unrolled dot product over equal-length slices.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    let (mut s4, mut s5, mut s6, mut s7) = (0f32, 0f32, 0f32, 0f32);
-    for c in 0..chunks {
-        let i = c * 8;
-        // SAFETY-free: plain indexing; bounds known to the optimizer.
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-        s4 += a[i + 4] * b[i + 4];
-        s5 += a[i + 5] * b[i + 5];
-        s6 += a[i + 6] * b[i + 6];
-        s7 += a[i + 7] * b[i + 7];
-    }
-    let mut tail = 0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7)) + tail
+    dot_unrolled!(a, b, 0f32, |acc: f32, x: f32, y: f32| acc + x * y)
 }
 
 /// C = Aᵀ·B without materializing Aᵀ.
@@ -99,18 +112,57 @@ pub fn matmul_at(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// C = A·Bᵀ without materializing Bᵀ. Rows of A dot rows of B.
+///
+/// Cache-blocked with the same MC/NC/KC tiling as [`matmul`]; since B's rows
+/// are already contiguous along K no pack buffer is needed. This is the
+/// eval/PPL batch-forward kernel (`Linear::Dense` with large activation
+/// matrices) and the skinny low-rank branch of the quantized path.
 pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_bt_acc(a, b, &mut c);
+    c
+}
+
+/// C += A·Bᵀ (accumulating variant; lets callers fuse the low-rank
+/// correction into an existing output without a temporary).
+pub fn matmul_bt_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.cols, "matmul_bt dims");
-    let (m, n) = (a.rows, b.rows);
-    let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            crow[j] = dot(arow, b.row(j));
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (m, n), "matmul_bt_acc output shape");
+    if m < 32 {
+        // Decode-sized batches (the batcher's default max_batch is 8 and the
+        // serving benches go to 16): blocking amortizes little at this m, and
+        // the plain full-K row dot keeps results bitwise identical to the
+        // per-token `matvec` path — which is what pins batched greedy decode
+        // to single-sequence decode token-for-token. The K-split below would
+        // reorder f32 sums whenever k > KC. Eval/PPL batches (≥ 32 rows) take
+        // the blocked path, where only tolerance-level agreement is promised.
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += dot(arow, b.row(j));
+            }
+        }
+        return;
+    }
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for nb in (0..n).step_by(NC) {
+            let nend = (nb + NC).min(n);
+            for mb in (0..m).step_by(MC) {
+                let mend = (mb + MC).min(m);
+                for i in mb..mend {
+                    let arow = &a.data[i * k + kb..i * k + kend];
+                    let crow = &mut c.data[i * n + nb..i * n + nend];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        let brow = &b.data[(nb + j) * k + kb..(nb + j) * k + kend];
+                        *cv += dot(arow, brow);
+                    }
+                }
+            }
         }
     }
-    c
 }
 
 /// y += alpha * x.
@@ -140,8 +192,9 @@ pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
     y
 }
 
-/// G = X·Xᵀ for row-major X (rows are samples⇒ G is cols x cols? No —
-/// G[i][j] = row_i · row_j, shape rows x rows), exploiting symmetry.
+/// G = X·Xᵀ for row-major X: G[i][j] = row_i · row_j, so for X of shape
+/// samples × channels the Gram is samples × samples. Exploits symmetry by
+/// computing the upper triangle and mirroring.
 pub fn gram_rows(x: &Matrix) -> Matrix {
     let n = x.rows;
     let mut g = Matrix::zeros(n, n);
@@ -230,6 +283,49 @@ mod tests {
         let f1 = matmul_bt(&d, &e);
         let f2 = matmul(&d, &e.transpose());
         assert!(f1.max_diff(&f2) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_bt_blocked_matches_naive_awkward_shapes() {
+        // Shapes straddling every block boundary: m < 32 (plain exact path),
+        // m ≥ 32 with k > KC (split-K path), n > NC.
+        let mut rng = Pcg64::seed(81);
+        for (m, k, n) in [(3, 40, 5), (40, 257, 9), (70, 300, 140), (64, 256, 128), (33, 513, 7)] {
+            let a = Matrix::randn(&mut rng, m, k, 1.0);
+            let b = Matrix::randn(&mut rng, n, k, 1.0);
+            let c = matmul_bt(&a, &b);
+            let c0 = matmul(&a, &b.transpose());
+            let scale = c0.max_abs().max(1.0);
+            assert!(c.max_diff(&c0) / scale < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_decode_batches_bitwise_match_matvec() {
+        // The serving guarantee: decode-sized batches (m < 32) must equal
+        // the per-token matvec path bit-for-bit even when k exceeds KC —
+        // this is what keeps batched greedy decode token-identical to
+        // single-sequence decode.
+        let mut rng = Pcg64::seed(83);
+        let a = Matrix::randn(&mut rng, 16, 520, 1.0);
+        let b = Matrix::randn(&mut rng, 24, 520, 1.0);
+        let c = matmul_bt(&a, &b);
+        for i in 0..a.rows {
+            let y = matvec(&b, a.row(i));
+            assert_eq!(c.row(i), &y[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_acc_accumulates() {
+        let mut rng = Pcg64::seed(82);
+        let a = Matrix::randn(&mut rng, 12, 33, 1.0);
+        let b = Matrix::randn(&mut rng, 17, 33, 1.0);
+        let base = Matrix::randn(&mut rng, 12, 17, 1.0);
+        let mut c = base.clone();
+        matmul_bt_acc(&a, &b, &mut c);
+        let want = base.add(&matmul_bt(&a, &b));
+        assert!(c.max_diff(&want) < 1e-4);
     }
 
     #[test]

@@ -1,7 +1,12 @@
-//! Dense f32 tensor substrate: the `Matrix` type plus GEMM kernels.
+//! Dense f32 tensor substrate: the `Matrix` type, fp32 GEMM kernels, and the
+//! packed quantized GEMM layer (`qgemm`) the serving path runs on.
 
 pub mod gemm;
 pub mod matrix;
+pub mod qgemm;
 
-pub use gemm::{dot, gram_cols_f64, gram_rows, matmul, matmul_at, matmul_bt, matvec, matvec_t};
+pub use gemm::{
+    dot, gram_cols_f64, gram_rows, matmul, matmul_at, matmul_bt, matmul_bt_acc, matvec, matvec_t,
+};
 pub use matrix::Matrix;
+pub use qgemm::{qgemm_forward, qgemm_forward_token, PackedQWeight, QGemmArena};

@@ -1,0 +1,541 @@
+//! Batched quantized GEMM — the packed-kernel layer of the serving path.
+//!
+//! This is where W4A8-class inference stops being a scalar token loop:
+//! [`PackedQWeight`] is built **once at quantize time** (tile-packed int
+//! codes, per-row scales, precomputed smoothing reciprocals, gathered fp
+//! outlier columns, low-rank factors) and [`qgemm_forward`] then runs the
+//! whole batch through one cache-blocked i8×i8→i32 GEMM per layer call:
+//!
+//! 1. smooth the batch with the precomputed reciprocals (`x' = x · (1/m)`),
+//! 2. per-token quantize the batch into a reusable [`QGemmArena`] (no
+//!    per-token `Vec` allocations on the steady-state decode path),
+//! 3. integer micro-kernel: [`QR`]-row interleaved weight panels × one token
+//!    row at a time, i32 accumulators, blocked over tokens ([`TB`]) and
+//!    output rows ([`RB`], the `scope_map` parallel unit) mirroring the
+//!    MC/NC/KC tiling of `gemm::matmul`,
+//! 4. fused scale application (`token_scale × row_scale`) at write-out,
+//! 5. fp outlier columns on the unquantized smoothed batch,
+//! 6. blocked skinny-GEMM low-rank branch `Y += (X'·L_Bᵀ)·L_Aᵀ` via
+//!    `matmul_bt_acc`.
+//!
+//! `QuantizedLinear::forward_matrix` (methods layer) remains the reference
+//! semantics; the equivalence property tests in `tests/properties.rs` pin
+//! this kernel against it and against the scalar token path.
+
+use super::gemm::{axpy, matmul_bt_acc};
+use super::matrix::Matrix;
+use crate::quant::act::quantize_token_into;
+use crate::quant::spec::FP;
+use crate::util::pool::scope_map;
+
+/// Register-tile height: output rows computed together per micro-kernel call.
+pub const QR: usize = 4;
+/// Token rows per cache block (the MC analog).
+const TB: usize = 64;
+/// Output rows per `scope_map` job (the NC analog; must be a multiple of QR).
+const RB: usize = 64;
+
+/// Weight in the layout the batched kernel consumes, built once at quantize
+/// time from a `QuantizedLinear`'s parts (see `QuantizedLinear::pack`).
+#[derive(Clone, Debug)]
+pub struct PackedQWeight {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub wbits: u8,
+    /// Activation bits for the main GEMM input (`quant::FP` = fp main GEMM).
+    pub abits: u8,
+    /// Codes packed in QR-row panels: panel `p` holds output rows
+    /// `[p·QR, (p+1)·QR)`, k-major interleaved so the micro-kernel streams
+    /// one buffer: `packed[p·QR·d_in + k·QR + j] = codes[(p·QR+j)·d_in + k]`.
+    /// Ragged final panels are zero-padded.
+    packed: Vec<i8>,
+    /// Per-output-row weight scales.
+    pub scales: Vec<f32>,
+    /// Precomputed smoothing reciprocals `1/m` (None = no smoothing).
+    pub smooth_recip: Option<Vec<f32>>,
+    /// Full-precision outlier columns, (input col index, column of W).
+    pub fp_cols: Vec<(usize, Vec<f32>)>,
+    /// Low-rank factors (L_A: out×r, L_B: r×in) applied to the smoothed fp
+    /// activations.
+    pub low_rank: Option<(Matrix, Matrix)>,
+}
+
+impl PackedQWeight {
+    /// Tile-pack quantized codes plus all fused serve-time operands.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack(
+        codes: &[i8],
+        d_out: usize,
+        d_in: usize,
+        wbits: u8,
+        abits: u8,
+        scales: &[f32],
+        act_smooth: Option<&[f32]>,
+        fp_cols: &[(usize, Vec<f32>)],
+        low_rank: Option<(&Matrix, &Matrix)>,
+    ) -> PackedQWeight {
+        assert_eq!(codes.len(), d_out * d_in, "code count");
+        assert_eq!(scales.len(), d_out, "scale count");
+        let n_panels = d_out.div_ceil(QR);
+        let mut packed = vec![0i8; n_panels * QR * d_in];
+        for p in 0..n_panels {
+            let panel = &mut packed[p * QR * d_in..(p + 1) * QR * d_in];
+            for j in 0..QR {
+                let r = p * QR + j;
+                if r >= d_out {
+                    break;
+                }
+                let src = &codes[r * d_in..(r + 1) * d_in];
+                for (k, &cv) in src.iter().enumerate() {
+                    panel[k * QR + j] = cv;
+                }
+            }
+        }
+        let smooth_recip = act_smooth.map(|m| {
+            assert_eq!(m.len(), d_in, "smoothing vector length");
+            m.iter().map(|&v| 1.0 / v).collect()
+        });
+        PackedQWeight {
+            d_out,
+            d_in,
+            wbits,
+            abits,
+            packed,
+            scales: scales.to_vec(),
+            smooth_recip,
+            fp_cols: fp_cols.to_vec(),
+            low_rank: low_rank.map(|(a, b)| (a.clone(), b.clone())),
+        }
+    }
+
+    /// Bytes held by the packed code buffer (overhead accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len()
+    }
+}
+
+/// Reusable per-caller scratch for the batched forward: smoothed fp
+/// activations, int activation codes, per-token scales, low-rank
+/// intermediate. Buffers are `resize`d per call, so capacity sticks at the
+/// high-water mark and the steady-state decode loop performs no allocation.
+#[derive(Default)]
+pub struct QGemmArena {
+    /// Smoothed fp activations, t × d_in row-major.
+    xs: Vec<f32>,
+    /// Per-token int codes, t × d_in row-major.
+    codes: Vec<i8>,
+    /// Per-token activation scales.
+    tok_scales: Vec<f32>,
+    /// Low-rank intermediate z = X'·L_Bᵀ, t × r.
+    z: Vec<f32>,
+}
+
+impl QGemmArena {
+    pub fn new() -> QGemmArena {
+        QGemmArena::default()
+    }
+
+    fn prepare(&mut self, t: usize, d_in: usize, int_path: bool) {
+        // resize-only (no clear): stale prefixes are fine because every
+        // element is overwritten before it is read (smoothing copy /
+        // quantize_token_into / per-token scale stores), and skipping the
+        // re-fill avoids an O(t·d_in) memset per layer per decode iteration.
+        self.xs.resize(t * d_in, 0.0);
+        if int_path {
+            self.codes.resize(t * d_in, 0);
+            self.tok_scales.resize(t, 1.0);
+        }
+    }
+}
+
+/// Batched quantized forward: fp activations (t × d_in) → (t × d_out),
+/// applying smoothing, per-token activation quantization, the packed int
+/// GEMM, fp outlier columns, and the low-rank correction.
+pub fn qgemm_forward(
+    pw: &PackedQWeight,
+    x: &Matrix,
+    arena: &mut QGemmArena,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(x.cols, pw.d_in, "qgemm input width");
+    forward_rows(pw, &x.data, x.rows, arena, threads)
+}
+
+/// Single-token forward through the same packed kernel (serving decode with
+/// batch 1, `generate_greedy`, the KV-cache prefill path).
+pub fn qgemm_forward_token(pw: &PackedQWeight, x: &[f32], arena: &mut QGemmArena) -> Vec<f32> {
+    assert_eq!(x.len(), pw.d_in, "qgemm input width");
+    forward_rows(pw, x, 1, arena, 1).data
+}
+
+fn forward_rows(
+    pw: &PackedQWeight,
+    x: &[f32],
+    t: usize,
+    arena: &mut QGemmArena,
+    threads: usize,
+) -> Matrix {
+    let d_in = pw.d_in;
+    let d_out = pw.d_out;
+    debug_assert_eq!(x.len(), t * d_in);
+    let int_path = pw.abits != FP;
+    arena.prepare(t, d_in, int_path);
+
+    // 1. smoothing with precomputed reciprocals (or plain copy).
+    match &pw.smooth_recip {
+        Some(recip) => {
+            for ti in 0..t {
+                let src = &x[ti * d_in..(ti + 1) * d_in];
+                let dst = &mut arena.xs[ti * d_in..(ti + 1) * d_in];
+                for ((d, &v), &rc) in dst.iter_mut().zip(src).zip(recip) {
+                    *d = v * rc;
+                }
+            }
+        }
+        None => arena.xs.copy_from_slice(x),
+    }
+
+    let mut y = Matrix::zeros(t, d_out);
+    if int_path {
+        // 2. batch-level per-token activation quantization into the arena
+        //    (same `quantize_token_into` the scalar path is built on, so the
+        //    two paths produce identical codes/scales by construction).
+        for ti in 0..t {
+            let row = &arena.xs[ti * d_in..(ti + 1) * d_in];
+            let dst = &mut arena.codes[ti * d_in..(ti + 1) * d_in];
+            arena.tok_scales[ti] = quantize_token_into(row, pw.abits, dst);
+        }
+        // 3.+4. packed integer main GEMM with fused scale application.
+        int_main(pw, &arena.codes, &arena.tok_scales, t, &mut y, threads);
+    } else {
+        // A16: fp activations × int codes, row scale applied at write-out.
+        fp_main(pw, &arena.xs, t, &mut y, threads);
+    }
+
+    // 5. fp outlier columns act on the *unquantized* smoothed activations.
+    for (c, wcol) in &pw.fp_cols {
+        for ti in 0..t {
+            let xv = arena.xs[ti * d_in + c];
+            if xv != 0.0 {
+                axpy(xv, wcol, y.row_mut(ti));
+            }
+        }
+    }
+
+    // 6. low-rank branch on the smoothed fp activations: Y += (X'·L_Bᵀ)·L_Aᵀ,
+    //    both skinny GEMMs through the blocked matmul_bt kernel.
+    if let Some((la, lb)) = &pw.low_rank {
+        let xs_m = Matrix { rows: t, cols: d_in, data: std::mem::take(&mut arena.xs) };
+        let mut z = Matrix { rows: t, cols: lb.rows, data: std::mem::take(&mut arena.z) };
+        z.data.clear();
+        z.data.resize(t * lb.rows, 0.0);
+        matmul_bt_acc(&xs_m, lb, &mut z);
+        matmul_bt_acc(&z, la, &mut y);
+        arena.xs = xs_m.data;
+        arena.z = z.data;
+    }
+    y
+}
+
+/// QR output rows × one token row, i8×i8→i32, k unrolled 4-wide (16 madds
+/// per iteration). `panel` is the k-major interleaved QR-row tile.
+#[inline]
+fn dot_i8_panel(a: &[i8], panel: &[i8]) -> [i32; QR] {
+    debug_assert_eq!(panel.len(), a.len() * QR);
+    let n = a.len();
+    let mut acc = [0i32; QR];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let p = &panel[i * QR..(i + 4) * QR];
+        let mut u = 0usize;
+        while u < 4 {
+            let av = a[i + u] as i32;
+            let base = u * QR;
+            acc[0] += av * p[base] as i32;
+            acc[1] += av * p[base + 1] as i32;
+            acc[2] += av * p[base + 2] as i32;
+            acc[3] += av * p[base + 3] as i32;
+            u += 1;
+        }
+    }
+    for i in chunks * 4..n {
+        let av = a[i] as i32;
+        let p = &panel[i * QR..(i + 1) * QR];
+        for (j, s) in acc.iter_mut().enumerate() {
+            *s += av * p[j] as i32;
+        }
+    }
+    acc
+}
+
+/// Same tile shape for the fp-activation (A16) main GEMM.
+#[inline]
+fn dot_f32_panel(a: &[f32], panel: &[i8]) -> [f32; QR] {
+    debug_assert_eq!(panel.len(), a.len() * QR);
+    let n = a.len();
+    let mut acc = [0f32; QR];
+    for (i, &av) in a.iter().enumerate().take(n) {
+        let p = &panel[i * QR..(i + 1) * QR];
+        acc[0] += av * p[0] as f32;
+        acc[1] += av * p[1] as f32;
+        acc[2] += av * p[2] as f32;
+        acc[3] += av * p[3] as f32;
+    }
+    acc
+}
+
+/// Split `d_out` into RB jobs, run them on `threads` scoped workers, and
+/// scatter each job's (t × nr) column chunk into the row-major output.
+fn run_row_jobs<F>(d_out: usize, t: usize, y: &mut Matrix, threads: usize, job: F)
+where
+    F: Fn(usize, usize) -> Vec<f32> + Sync,
+{
+    let n_jobs = d_out.div_ceil(RB);
+    let chunks: Vec<Vec<f32>> = scope_map(n_jobs, threads, |jb| {
+        let r0 = jb * RB;
+        let r1 = (r0 + RB).min(d_out);
+        job(r0, r1)
+    });
+    for (jb, chunk) in chunks.iter().enumerate() {
+        let r0 = jb * RB;
+        let nr = (r0 + RB).min(d_out) - r0;
+        debug_assert_eq!(chunk.len(), t * nr);
+        for ti in 0..t {
+            y.row_mut(ti)[r0..r0 + nr].copy_from_slice(&chunk[ti * nr..(ti + 1) * nr]);
+        }
+    }
+}
+
+fn int_main(
+    pw: &PackedQWeight,
+    codes: &[i8],
+    tok_scales: &[f32],
+    t: usize,
+    y: &mut Matrix,
+    threads: usize,
+) {
+    let d_in = pw.d_in;
+    run_row_jobs(pw.d_out, t, y, threads, |r0, r1| {
+        let nr = r1 - r0;
+        let mut out = vec![0f32; t * nr];
+        for tb in (0..t).step_by(TB) {
+            let tend = (tb + TB).min(t);
+            let mut r = r0;
+            while r < r1 {
+                let p = r / QR; // r0 is RB-aligned and RB % QR == 0
+                let panel = &pw.packed[p * QR * d_in..(p + 1) * QR * d_in];
+                let pr = QR.min(r1 - r);
+                for ti in tb..tend {
+                    let a = &codes[ti * d_in..(ti + 1) * d_in];
+                    let acc = dot_i8_panel(a, panel);
+                    let ts = tok_scales[ti];
+                    let orow = &mut out[ti * nr + (r - r0)..ti * nr + (r - r0) + pr];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = acc[j] as f32 * (ts * pw.scales[r + j]);
+                    }
+                }
+                r += QR;
+            }
+        }
+        out
+    });
+}
+
+fn fp_main(pw: &PackedQWeight, xs: &[f32], t: usize, y: &mut Matrix, threads: usize) {
+    let d_in = pw.d_in;
+    run_row_jobs(pw.d_out, t, y, threads, |r0, r1| {
+        let nr = r1 - r0;
+        let mut out = vec![0f32; t * nr];
+        for tb in (0..t).step_by(TB) {
+            let tend = (tb + TB).min(t);
+            let mut r = r0;
+            while r < r1 {
+                let p = r / QR;
+                let panel = &pw.packed[p * QR * d_in..(p + 1) * QR * d_in];
+                let pr = QR.min(r1 - r);
+                for ti in tb..tend {
+                    let a = &xs[ti * d_in..(ti + 1) * d_in];
+                    let acc = dot_f32_panel(a, panel);
+                    let orow = &mut out[ti * nr + (r - r0)..ti * nr + (r - r0) + pr];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = acc[j] * pw.scales[r + j];
+                    }
+                }
+                r += QR;
+            }
+        }
+        out
+    });
+}
+
+/// Thread count heuristic for a (t × d_out) quantized GEMM: stay inline for
+/// decode-sized work (scoped-thread spawn costs more than the kernel), fan
+/// out over row blocks for eval/prefill-sized calls.
+pub fn auto_threads(t: usize, d_out: usize) -> usize {
+    if t * d_out >= (1 << 16) {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Straight-line reference: dequantize-free scalar loop with the same
+    /// quantization semantics.
+    fn reference_forward(
+        codes: &[i8],
+        scales: &[f32],
+        d_out: usize,
+        d_in: usize,
+        abits: u8,
+        x: &Matrix,
+    ) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, d_out);
+        for ti in 0..x.rows {
+            let row = x.row(ti);
+            if abits == FP {
+                for r in 0..d_out {
+                    let wr = &codes[r * d_in..(r + 1) * d_in];
+                    let mut acc = 0f32;
+                    for (&c, &v) in wr.iter().zip(row) {
+                        acc += c as f32 * v;
+                    }
+                    y[(ti, r)] = acc * scales[r];
+                }
+            } else {
+                let qt = crate::quant::quantize_token(row, abits);
+                for r in 0..d_out {
+                    let wr = &codes[r * d_in..(r + 1) * d_in];
+                    let mut acc = 0i32;
+                    for (&c, &a) in wr.iter().zip(&qt.codes) {
+                        acc += c as i32 * a as i32;
+                    }
+                    y[(ti, r)] = acc as f32 * (qt.scale * scales[r]);
+                }
+            }
+        }
+        y
+    }
+
+    fn random_codes(rng: &mut Pcg64, n: usize, qmax: i8) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(2 * qmax as usize + 1) as i8) - qmax).collect()
+    }
+
+    #[test]
+    fn int_kernel_matches_reference_awkward_shapes() {
+        let mut rng = Pcg64::seed(601);
+        // d_out straddling QR and RB boundaries, batch straddling TB.
+        for (t, d_in, d_out) in [(1, 17, 3), (7, 40, 24), (65, 33, 66), (9, 128, 130)] {
+            let codes = random_codes(&mut rng, d_out * d_in, 7);
+            let scales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.05).collect();
+            let x = Matrix::randn(&mut rng, t, d_in, 1.0);
+            let pw = PackedQWeight::pack(&codes, d_out, d_in, 4, 8, &scales, None, &[], None);
+            let mut arena = QGemmArena::new();
+            let got = qgemm_forward(&pw, &x, &mut arena, 1);
+            let want = reference_forward(&codes, &scales, d_out, d_in, 8, &x);
+            assert!(
+                got.max_diff(&want) < 1e-5 * want.max_abs().max(1.0),
+                "({t},{d_in},{d_out}) diff {}",
+                got.max_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn fp_kernel_matches_reference() {
+        let mut rng = Pcg64::seed(602);
+        let (t, d_in, d_out) = (11, 37, 29);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        let scales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.05).collect();
+        let x = Matrix::randn(&mut rng, t, d_in, 1.0);
+        let pw = PackedQWeight::pack(&codes, d_out, d_in, 4, FP, &scales, None, &[], None);
+        let mut arena = QGemmArena::new();
+        let got = qgemm_forward(&pw, &x, &mut arena, 1);
+        let want = reference_forward(&codes, &scales, d_out, d_in, FP, &x);
+        assert!(got.max_diff(&want) < 1e-4 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn threaded_matches_single_threaded() {
+        let mut rng = Pcg64::seed(603);
+        let (t, d_in, d_out) = (33, 64, 200);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        let scales: Vec<f32> = (0..d_out).map(|_| 0.02 + rng.f32() * 0.02).collect();
+        let x = Matrix::randn(&mut rng, t, d_in, 1.0);
+        let pw = PackedQWeight::pack(&codes, d_out, d_in, 4, 8, &scales, None, &[], None);
+        let mut a1 = QGemmArena::new();
+        let mut a4 = QGemmArena::new();
+        let y1 = qgemm_forward(&pw, &x, &mut a1, 1);
+        let y4 = qgemm_forward(&pw, &x, &mut a4, 4);
+        assert_eq!(y1, y4, "row-block parallelism must be bitwise deterministic");
+    }
+
+    #[test]
+    fn token_and_batch_paths_agree_with_all_branches() {
+        let mut rng = Pcg64::seed(604);
+        let (d_in, d_out, r) = (40, 24, 5);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        let scales: Vec<f32> = (0..d_out).map(|_| 0.02 + rng.f32() * 0.03).collect();
+        let smooth: Vec<f32> = (0..d_in).map(|_| 0.5 + rng.f32() * 2.0).collect();
+        let fp_cols = vec![
+            (3usize, (0..d_out).map(|_| rng.normal() * 0.1).collect::<Vec<f32>>()),
+            (17usize, (0..d_out).map(|_| rng.normal() * 0.1).collect::<Vec<f32>>()),
+        ];
+        let la = Matrix::randn(&mut rng, d_out, r, 0.05);
+        let lb = Matrix::randn(&mut rng, r, d_in, 0.05);
+        let pw = PackedQWeight::pack(
+            &codes,
+            d_out,
+            d_in,
+            4,
+            8,
+            &scales,
+            Some(&smooth),
+            &fp_cols,
+            Some((&la, &lb)),
+        );
+        let x = Matrix::randn(&mut rng, 6, d_in, 1.0);
+        let mut arena = QGemmArena::new();
+        let batch = qgemm_forward(&pw, &x, &mut arena, 1);
+        for ti in 0..x.rows {
+            let y = qgemm_forward_token(&pw, x.row(ti), &mut arena);
+            let d = batch
+                .row(ti)
+                .iter()
+                .zip(&y)
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-5, "token {ti}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn arena_reuse_is_deterministic() {
+        let mut rng = Pcg64::seed(605);
+        let (d_in, d_out) = (32, 48);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        let scales = vec![0.03f32; d_out];
+        let pw = PackedQWeight::pack(&codes, d_out, d_in, 4, 8, &scales, None, &[], None);
+        let mut arena = QGemmArena::new();
+        // Big call grows the arena; subsequent smaller calls must be
+        // unaffected by stale capacity.
+        let xb = Matrix::randn(&mut rng, 50, d_in, 1.0);
+        let _ = qgemm_forward(&pw, &xb, &mut arena, 1);
+        let xs = Matrix::randn(&mut rng, 3, d_in, 1.0);
+        let y1 = qgemm_forward(&pw, &xs, &mut arena, 1);
+        let y2 = qgemm_forward(&pw, &xs, &mut QGemmArena::new(), 1);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn zero_input_quantizes_safely() {
+        let pw = PackedQWeight::pack(&[1, -2, 3, -4], 2, 2, 4, 8, &[0.1, 0.2], None, &[], None);
+        let x = Matrix::zeros(2, 2);
+        let y = qgemm_forward(&pw, &x, &mut QGemmArena::new(), 1);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -4,7 +4,8 @@
 
 use aser::linalg::{rank_for_threshold, svd, svd_gram};
 use aser::methods::aser::Aser;
-use aser::methods::{LayerCalib, PtqMethod, RankPolicy};
+use aser::methods::{method_by_name, LayerCalib, PtqMethod, RankPolicy};
+use aser::model::{forward_quant_token, Linear};
 use aser::quant::{fake_quant_vec, quantize_token, BitWidth, Precision, QuantizedWeight};
 use aser::tensor::Matrix;
 use aser::util::prop::{all, check, ensure, gen_vec_f32, shrink_vec_f32, CaseResult, Config};
@@ -200,6 +201,61 @@ fn prop_aser_never_worse_than_rtn_on_calib() {
             ensure(e_aser <= e_rtn * 1.001, || format!("aser {e_aser} > rtn {e_rtn}"))
         },
     );
+}
+
+#[test]
+fn prop_batched_quant_forward_matches_token_and_reference() {
+    // The packed batched kernel (Linear::forward → tensor::qgemm) must
+    // reproduce both the scalar token path (`forward_quant_token`) and the
+    // reference semantics (`QuantizedLinear::forward_matrix`) within 1e-3
+    // relative, across the serving method/precision grid and awkward batch
+    // sizes (1 = degenerate batch, 7 = ragged vs the QR/TB tiles, 64 = a
+    // full token block).
+    let mut rng = Pcg64::seed(907);
+    let (d_in, d_out) = (40usize, 24usize);
+    let w = Matrix::randn(&mut rng, d_out, d_in, 0.05);
+    let mut x_all = Matrix::randn(&mut rng, 64, d_in, 1.0);
+    for r in 0..x_all.rows {
+        x_all[(r, 3)] *= 20.0; // hot channel: exercises smoothing + outliers
+    }
+    let calib = LayerCalib::from_sample(x_all.clone());
+    for method in ["rtn", "aser", "aser-er", "smoothquant"] {
+        let m = method_by_name(method, RankPolicy::Fixed(8), 4).unwrap();
+        for prec in [Precision::w4a8(), Precision::w4a6(), Precision::w4a16()] {
+            let q = m.quantize_layer(&w, &calib, prec);
+            let lin = Linear::quantized(q.clone());
+            for t in [1usize, 7, 64] {
+                let x = x_all.rows_slice(0, t);
+                let got = lin.forward(&x);
+                let want_ref = q.forward_matrix(&x);
+                let tol = 1e-3 * want_ref.max_abs().max(1.0);
+                assert!(
+                    got.max_diff(&want_ref) < tol,
+                    "{method} {prec} t={t}: batched vs forward_matrix diff {}",
+                    got.max_diff(&want_ref)
+                );
+                let mut want_tok = Matrix::zeros(t, d_out);
+                for ti in 0..t {
+                    want_tok
+                        .row_mut(ti)
+                        .copy_from_slice(&forward_quant_token(&q, x.row(ti)));
+                }
+                assert!(
+                    got.max_diff(&want_tok) < tol,
+                    "{method} {prec} t={t}: batched vs scalar token diff {}",
+                    got.max_diff(&want_tok)
+                );
+                // The packed single-token entry point agrees with row 0.
+                let y0 = lin.forward_token(x.row(0));
+                let d0 = got
+                    .row(0)
+                    .iter()
+                    .zip(&y0)
+                    .fold(0f32, |mx, (&a, &b)| mx.max((a - b).abs()));
+                assert!(d0 < tol, "{method} {prec} t={t}: token entry diff {d0}");
+            }
+        }
+    }
 }
 
 #[test]
