@@ -53,8 +53,8 @@ fn main() -> anyhow::Result<()> {
         );
         for (i, m) in run.per_worker.iter().enumerate() {
             println!(
-                "    worker{i}: {} reqs, {} iters, peak batch {}, kv rejects {}",
-                m.requests, m.iterations, m.peak_batch, m.rejected_capacity
+                "    worker{i}: {} reqs, {} iters, peak batch {}, kv rejects {}, refused {}",
+                m.requests, m.iterations, m.peak_batch, m.rejected_capacity, m.rejected_impossible
             );
         }
     }

@@ -1,18 +1,21 @@
 //! Hot-path microbenches (§Perf): the quantized linear forward in all its
 //! variants vs the dense fp32 GEMM of the same shape, the packed batched
-//! qgemm kernel vs the scalar token loop, the int8 dot kernel, and SVD
-//! variants. `cargo bench --offline` (criterion is not vendored;
+//! qgemm kernel vs the scalar token loop, the auto-detected SIMD int8
+//! microkernel vs the pinned scalar microkernel, the int8 dot kernel, and
+//! SVD variants. `cargo bench --offline` (criterion is not vendored;
 //! `util::stats::bench` provides warmup + robust summaries).
 //!
-//! Emits machine-readable `BENCH_hotpath.json` (median ns per benchmark plus
-//! the batched-vs-scalar speedups) for cross-PR perf tracking.
+//! Emits machine-readable `BENCH_hotpath.json` (median ns per benchmark,
+//! the batched-vs-scalar speedups, and per-kernel int-GEMM speedups under
+//! `int_kernel_speedup`) for cross-PR perf tracking — compare runs with
+//! `scripts/bench_diff`.
 
 use aser::methods::aser::Aser;
 use aser::methods::{LayerCalib, PtqMethod, RankPolicy};
 use aser::model::linear::{dot_i8, forward_quant_token};
 use aser::model::Linear;
 use aser::quant::Precision;
-use aser::tensor::{matmul, matvec, Matrix, QGemmArena};
+use aser::tensor::{detect_kernel, matmul, matvec, Matrix, QGemmArena, QKernelKind};
 use aser::util::json::{num, obj, s, Json};
 use aser::util::stats::{bench, black_box, Summary};
 use std::time::Duration;
@@ -31,6 +34,9 @@ fn main() {
         ]));
     };
     let mut speedups: Vec<Json> = Vec::new();
+    let mut kernel_speedups: Vec<Json> = Vec::new();
+    let auto_kernel = detect_kernel();
+    println!("int8 microkernel: {auto_kernel} (scalar fallback pinned for comparison)");
 
     // ---- shapes of model A's four linears ----
     for (label, d_in, d_out) in
@@ -94,6 +100,46 @@ fn main() {
             ("qgemm_median_ns", num(s_qgemm8.median_ns)),
             ("speedup", num(sp)),
         ]));
+
+        // Auto-detected SIMD microkernel vs the pinned scalar microkernel
+        // on the same packed path (the int-GEMM acceptance bar: ≥1.5x on a
+        // SIMD-capable host). Two variants: full ASER (smoothing + outliers
+        // + low-rank dilute the int GEMM) and plain RTN (pure int path —
+        // the cleanest read on the microkernel itself). Skipped entirely on
+        // scalar-only hosts: benching the same kernel twice would emit
+        // duplicate record names and ~1.0x speedup rows that pollute
+        // bench_diff's geomean.
+        if auto_kernel == QKernelKind::Scalar {
+            println!("  -> no SIMD kernel on this host; skipping per-kernel comparison");
+        }
+        let all_variants = [("aser", &aser), ("rtn", &rtn)];
+        let kernel_variants: &[(&str, &aser::methods::QuantizedLinear)] =
+            if auto_kernel == QKernelKind::Scalar { &[] } else { &all_variants };
+        for &(variant, q) in kernel_variants {
+            let lin_auto = Linear::quantized_with(q.clone(), auto_kernel);
+            let lin_sk = Linear::quantized_with(q.clone(), QKernelKind::Scalar);
+            let mut arena_a = QGemmArena::new();
+            let mut arena_s = QGemmArena::new();
+            let s_auto = bench(&format!("w4a8 {variant} qgemm{batch} {auto_kernel} {label}"), budget, || {
+                black_box(lin_auto.forward_with(black_box(&xb), &mut arena_a));
+            });
+            record(&format!("w4a8_{variant}_qgemm_b{batch}_kernel_{auto_kernel} {label}"), &s_auto);
+            let s_sk = bench(&format!("w4a8 {variant} qgemm{batch} scalar-kernel {label}"), budget, || {
+                black_box(lin_sk.forward_with(black_box(&xb), &mut arena_s));
+            });
+            record(&format!("w4a8_{variant}_qgemm_b{batch}_kernel_scalar {label}"), &s_sk);
+            let ksp = s_sk.median_ns / s_auto.median_ns;
+            println!("  -> int8 microkernel {auto_kernel} vs scalar kernel ({variant}): {ksp:.2}x");
+            kernel_speedups.push(obj(vec![
+                ("shape", s(label)),
+                ("variant", s(variant)),
+                ("batch", num(batch as f64)),
+                ("kernel", s(auto_kernel.name())),
+                ("scalar_kernel_median_ns", num(s_sk.median_ns)),
+                ("simd_kernel_median_ns", num(s_auto.median_ns)),
+                ("speedup", num(ksp)),
+            ]));
+        }
     }
 
     // ---- int8 dot kernel ----
@@ -144,8 +190,10 @@ fn main() {
 
     let report = obj(vec![
         ("bench", s("hotpath")),
+        ("kernel", s(auto_kernel.name())),
         ("records", Json::Arr(records)),
         ("batched_vs_scalar", Json::Arr(speedups)),
+        ("int_kernel_speedup", Json::Arr(kernel_speedups)),
     ]);
     std::fs::write("BENCH_hotpath.json", report.to_string_pretty())
         .expect("write BENCH_hotpath.json");

@@ -142,6 +142,7 @@ fn main() {
     let report = obj(vec![
         ("bench", s("serving")),
         ("model", s("micro")),
+        ("kernel", s(aser::tensor::detect_kernel().name())),
         ("configs", Json::Arr(config_rows)),
         ("batched_vs_scalar", Json::Arr(speedup_rows)),
     ]);

@@ -62,8 +62,9 @@ pub fn run(args: &Args) -> Result<()> {
     );
     for (i, m) in run.per_worker.iter().enumerate() {
         println!(
-            "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, kv-rejects {}",
-            m.requests, m.generated_tokens, m.iterations, m.peak_batch, m.rejected_capacity
+            "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, kv-rejects {}, refused {}",
+            m.requests, m.generated_tokens, m.iterations, m.peak_batch, m.rejected_capacity,
+            m.rejected_impossible
         );
     }
     Ok(())

@@ -8,6 +8,24 @@
 //! (3) retires finished sequences, freeing their KV lease. New requests
 //! therefore join between *iterations*, not between requests.
 //!
+//! Admission distinguishes **transient** capacity pushback (the pool is
+//! full right now; the request is re-queued and admitted when leases free
+//! up — `BatchMetrics::rejected_capacity`) from **impossible** requests
+//! that could never run: empty prompts, prompts that cannot fit in the KV
+//! window with at least one generated token, and clamped KV demands larger
+//! than the whole pool. Those are refused immediately with an explicit
+//! [`Response`] carrying `rejected: true` and an empty token list
+//! (`BatchMetrics::rejected_impossible`) — re-queueing them forever was an
+//! admission livelock, and over-long prompts used to be prefilled
+//! token-by-token straight past the KV-cache bound. With impossible
+//! requests refused up front, `run_batcher` terminates on any finite
+//! request stream.
+//!
+//! TTFT (`Response::ttft`) is stamped when the batched forward that ends a
+//! sequence's prefill writes its logits back — the instant its first
+//! generated token is determined — not when the next iteration argmaxes
+//! that token.
+//!
 //! Step (2) is where the throughput property is actually realized: all
 //! advancing sequences are stacked into one [`Gpt::forward_step_batch`]
 //! call, so each transformer layer runs ONE batched quantized GEMM per
@@ -42,11 +60,17 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<u32>,
-    /// Time from submit to first generated token.
+    /// Time from submit to first generated token (stamped when the logits
+    /// of the prefill-final forward are written back). For rejected
+    /// requests this equals `total` (time to rejection).
     pub ttft: Duration,
     /// Time from submit to completion.
     pub total: Duration,
     pub prompt_len: usize,
+    /// True when the request was refused at admission because it could
+    /// never run (empty prompt, prompt too long for the KV window, or KV
+    /// demand beyond total pool capacity); `tokens` is empty.
+    pub rejected: bool,
 }
 
 struct Active {
@@ -83,7 +107,12 @@ pub struct BatchMetrics {
     pub prefill_tokens: usize,
     pub iterations: usize,
     pub peak_batch: usize,
+    /// Transient pool pushback: the request was re-queued and admitted
+    /// later.
     pub rejected_capacity: usize,
+    /// Requests refused outright with a `rejected` response because they
+    /// could never run (see the module doc's admission rules).
+    pub rejected_impossible: usize,
 }
 
 /// Run the batching loop until the request channel closes and the active
@@ -123,9 +152,35 @@ pub fn run_batcher(
                 still_pending.push(req);
                 continue;
             }
-            // Lease the full prompt + expected generation upfront.
-            let want = req.prompt.len() + req.max_new;
-            match pool.alloc(want.min(model.cfg.max_seq)) {
+            // Lease the full prompt + expected generation upfront, clamped
+            // to the model's KV window.
+            let want = (req.prompt.len() + req.max_new).min(model.cfg.max_seq);
+            // Requests that can NEVER run are refused with an explicit
+            // rejected response instead of being re-queued forever:
+            //  - empty prompts (no logits to decode from),
+            //  - prompts that don't fit the KV window with ≥1 generated
+            //    token (they used to be prefilled token-by-token straight
+            //    past the KV-cache bound),
+            //  - clamped KV demands beyond the whole pool (they used to be
+            //    re-queued forever: admission livelock once the channel
+            //    closed).
+            if req.prompt.is_empty()
+                || req.prompt.len() + 1 > model.cfg.max_seq
+                || want > pool.capacity_tokens()
+            {
+                metrics.rejected_impossible += 1;
+                let waited = Instant::now() - req.submitted;
+                respond(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    ttft: waited,
+                    total: waited,
+                    prompt_len: req.prompt.len(),
+                    rejected: true,
+                });
+                continue;
+            }
+            match pool.alloc(want) {
                 Some(lease) => {
                     active.push(Active {
                         cache: KvCache::new(&model.cfg),
@@ -150,6 +205,12 @@ pub fn run_batcher(
             if !channel_open && pending.is_empty() {
                 break;
             }
+            if !pending.is_empty() {
+                // Feasible requests are waiting on pool space held outside
+                // this loop (externally shared pool): back off instead of
+                // spinning the admission loop hot.
+                std::thread::sleep(cfg.idle_wait);
+            }
             continue;
         }
 
@@ -170,9 +231,6 @@ pub fn run_batcher(
                 let next = argmax(&a.last_logits) as u32;
                 a.generated.push(next);
                 metrics.generated_tokens += 1;
-                if a.first_token_at.is_none() {
-                    a.first_token_at = Some(Instant::now());
-                }
                 let done = a.generated.len() >= a.req.max_new
                     || (cfg.stop_on_eos && next == EOS)
                     || a.cache.len() + 1 >= model.cfg.max_seq;
@@ -196,8 +254,17 @@ pub fn run_batcher(
                 }
                 model.forward_step_batch(&step_tokens, &mut caches, &mut arena)
             };
+            // Logits are materialized now: any sequence that just fed its
+            // final prompt token has its first generated token determined
+            // at this instant, so TTFT is stamped here — not one iteration
+            // later when the decode branch argmaxes it.
+            let logits_at = Instant::now();
             for (row, &i) in step_idx.iter().enumerate() {
-                active[i].last_logits = logits.row(row).to_vec();
+                let a = &mut active[i];
+                a.last_logits = logits.row(row).to_vec();
+                if a.first_token_at.is_none() && a.fed >= a.req.prompt.len() {
+                    a.first_token_at = Some(logits_at);
+                }
             }
         }
 
@@ -224,6 +291,7 @@ pub fn run_batcher(
                         .map(|t| t - a.req.submitted)
                         .unwrap_or_else(|| now - a.req.submitted),
                     total: now - a.req.submitted,
+                    rejected: false,
                 });
             } else {
                 i += 1;
@@ -296,6 +364,81 @@ mod tests {
         let (out, m) = serve(reqs, 4, 6);
         assert_eq!(out.len(), 6);
         assert!(m.rejected_capacity > 0, "expected capacity pushback");
+    }
+
+    #[test]
+    fn impossible_kv_demand_rejected_not_livelocked() {
+        // Pool holds 4 tokens total; id 1 wants 2+10=12 — it can never be
+        // admitted. Before the fix it was re-queued forever and, once the
+        // channel closed with nothing active, run_batcher spun without
+        // terminating. Now it must be refused with an explicit rejected
+        // response while the feasible request still completes.
+        let reqs = vec![req(0, vec![2, 3], 2), req(1, vec![2, 3], 10)];
+        let (out, m) = serve(reqs, 4, 4);
+        assert_eq!(out.len(), 2, "every request gets exactly one response");
+        let served = out.iter().find(|r| r.id == 0).unwrap();
+        assert!(!served.rejected);
+        assert!(!served.tokens.is_empty());
+        let rejected = out.iter().find(|r| r.id == 1).unwrap();
+        assert!(rejected.rejected);
+        assert!(rejected.tokens.is_empty());
+        assert_eq!(rejected.ttft, rejected.total);
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.rejected_impossible, 1);
+    }
+
+    #[test]
+    fn over_long_prompt_rejected_at_admission() {
+        // micro's max_seq is 64. A 70-token prompt used to be prefilled
+        // token-by-token past the KV-cache bound (the done-check requires
+        // fed >= prompt.len() first), tripping the kv-cache-full assert.
+        // It must be rejected at admission instead; a prompt that just fits
+        // (63 tokens, room for exactly one generated token) still runs.
+        let long: Vec<u32> = (0..70).map(|i| 1 + (i % 100) as u32).collect();
+        let edge: Vec<u32> = (0..63).map(|i| 1 + (i % 100) as u32).collect();
+        let (out, m) =
+            serve(vec![req(0, long, 3), req(1, edge, 5), req(2, vec![1, 2], 2)], 3, 10_000);
+        assert_eq!(out.len(), 3);
+        let r0 = out.iter().find(|r| r.id == 0).unwrap();
+        assert!(r0.rejected, "over-long prompt must be rejected");
+        let r1 = out.iter().find(|r| r.id == 1).unwrap();
+        assert!(!r1.rejected);
+        assert_eq!(r1.tokens.len(), 1, "KV window leaves room for exactly one token");
+        assert!(!out.iter().find(|r| r.id == 2).unwrap().rejected);
+        assert_eq!(m.rejected_impossible, 1);
+    }
+
+    #[test]
+    fn empty_prompt_rejected() {
+        let (out, m) = serve(vec![req(0, Vec::new(), 4), req(1, vec![3], 2)], 2, 10_000);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().find(|r| r.id == 0).unwrap().rejected);
+        assert!(!out.iter().find(|r| r.id == 1).unwrap().rejected);
+        assert_eq!(m.rejected_impossible, 1);
+    }
+
+    #[test]
+    fn ttft_stamped_at_prefill_completion() {
+        // TTFT is stamped when the prefill-final forward writes its logits
+        // back. Invariants pinned: served responses have 0 < ttft <= total,
+        // and a longer prompt admitted in the same batch reaches its first
+        // token no earlier than a shorter one submitted at the same time.
+        let short = req(0, vec![2, 3], 6);
+        let long = req(1, (0..12).map(|i| 1 + i as u32).collect(), 6);
+        let (out, _) = serve(vec![short, long], 2, 10_000);
+        let r_short = out.iter().find(|r| r.id == 0).unwrap();
+        let r_long = out.iter().find(|r| r.id == 1).unwrap();
+        for r in [r_short, r_long] {
+            assert!(!r.rejected);
+            assert!(r.ttft > Duration::ZERO, "ttft must be stamped");
+            assert!(r.ttft <= r.total, "ttft {:?} > total {:?}", r.ttft, r.total);
+        }
+        assert!(
+            r_long.ttft >= r_short.ttft,
+            "longer prefill cannot reach its first token earlier (short {:?}, long {:?})",
+            r_short.ttft,
+            r_long.ttft
+        );
     }
 
     #[test]

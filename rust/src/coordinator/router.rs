@@ -41,17 +41,30 @@ impl ServerRun {
         toks as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
-    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
-        let mut ms: Vec<f64> =
-            self.responses.iter().map(|r| r.total.as_secs_f64() * 1e3).collect();
+    /// Responses that were actually served (admission-rejected requests are
+    /// in `responses` for completeness but carry no latency signal, so the
+    /// percentile accessors exclude them).
+    fn served_ms(&self, f: impl Fn(&Response) -> f64) -> Vec<f64> {
+        let mut ms: Vec<f64> = self.responses.iter().filter(|r| !r.rejected).map(f).collect();
         ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ms
+    }
+
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        let ms = self.served_ms(|r| r.total.as_secs_f64() * 1e3);
+        // 0.0, not NaN, when every request was rejected: NaN would serialize
+        // as invalid JSON in BENCH_serving.json.
+        if ms.is_empty() {
+            return 0.0;
+        }
         crate::util::stats::percentile_sorted(&ms, p)
     }
 
     pub fn ttft_percentile_ms(&self, p: f64) -> f64 {
-        let mut ms: Vec<f64> =
-            self.responses.iter().map(|r| r.ttft.as_secs_f64() * 1e3).collect();
-        ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ms = self.served_ms(|r| r.ttft.as_secs_f64() * 1e3);
+        if ms.is_empty() {
+            return 0.0;
+        }
         crate::util::stats::percentile_sorted(&ms, p)
     }
 }

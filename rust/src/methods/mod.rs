@@ -28,7 +28,7 @@ pub mod rtn;
 pub mod smoothquant;
 
 use crate::quant::{fake_quant_acts, Precision, QuantizedWeight, FP};
-use crate::tensor::{matmul, matmul_bt, Matrix, PackedQWeight};
+use crate::tensor::{detect_kernel, matmul, matmul_bt, Matrix, PackedQWeight, QKernelKind};
 
 /// Calibration statistics for one linear layer, captured by `calib`.
 #[derive(Clone, Debug)]
@@ -110,7 +110,15 @@ impl QuantizedLinear {
     /// done once when the layer is installed into a model, consumed by
     /// `tensor::qgemm` on every batched forward.
     pub fn pack(&self) -> PackedQWeight {
-        PackedQWeight::pack(
+        self.pack_with(detect_kernel())
+    }
+
+    /// [`QuantizedLinear::pack`] with an explicit microkernel choice — the
+    /// panel interleave is a property of the kernel, so the choice is fixed
+    /// here at pack time. Benches and property tests use this to pin the
+    /// scalar reference kernel against the auto-detected SIMD one.
+    pub fn pack_with(&self, kind: QKernelKind) -> PackedQWeight {
+        PackedQWeight::pack_with_kernel(
             &self.weight.codes,
             self.weight.rows,
             self.weight.cols,
@@ -120,6 +128,7 @@ impl QuantizedLinear {
             self.act_smooth.as_deref(),
             &self.fp_cols,
             self.low_rank.as_ref().map(|(a, b)| (a, b)),
+            kind,
         )
     }
 

@@ -11,7 +11,10 @@
 //! smoothing/scales/outliers/low-rank per call, with per-batch activation
 //! quantization staged in a caller-supplied [`QGemmArena`] (`forward_with` /
 //! `forward_token_with`) so the serving decode loop performs no steady-state
-//! allocation.
+//! allocation. The int microkernel (scalar / AVX2 / NEON, see
+//! `tensor::qgemm_kernel`) is selected at pack time: `Linear::quantized`
+//! auto-detects the host's best kernel, [`Linear::quantized_with`] pins one
+//! explicitly.
 //!
 //! `QuantizedLinear::forward_matrix` in `methods` remains the reference
 //! semantics the kernel must match; [`forward_quant_token`] here is the
@@ -22,7 +25,7 @@
 use crate::methods::QuantizedLinear;
 use crate::quant::{quantize_token, FP};
 use crate::tensor::qgemm::{auto_threads, qgemm_forward, qgemm_forward_token};
-use crate::tensor::{matvec, Matrix, PackedQWeight, QGemmArena};
+use crate::tensor::{matvec, Matrix, PackedQWeight, QGemmArena, QKernelKind};
 
 pub enum Linear {
     Dense(Matrix),
@@ -36,6 +39,21 @@ impl Linear {
     /// packed form, and keeping both would double weight-code memory.
     pub fn quantized(q: QuantizedLinear) -> Linear {
         Linear::Quant(q.pack())
+    }
+
+    /// Install with an explicit microkernel instead of auto-detection
+    /// (benches and property tests pin the scalar reference kernel against
+    /// the SIMD one this way).
+    pub fn quantized_with(q: QuantizedLinear, kind: QKernelKind) -> Linear {
+        Linear::Quant(q.pack_with(kind))
+    }
+
+    /// The microkernel a quantized layer was packed for (None for dense).
+    pub fn kernel(&self) -> Option<QKernelKind> {
+        match self {
+            Linear::Dense(_) => None,
+            Linear::Quant(q) => Some(q.kernel),
+        }
     }
 
     pub fn out_features(&self) -> usize {

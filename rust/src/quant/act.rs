@@ -26,6 +26,16 @@ pub fn quantize_token(x: &[f32], bits: u8) -> QuantizedToken {
 /// no-allocation variant the batched serving path (`tensor::qgemm`) uses for
 /// its arena, and the single source of truth for per-token quantization
 /// semantics (token and batch paths stay bitwise identical by construction).
+///
+/// Non-finite lanes: `amax` is NaN-immune (`f32::max` returns the other
+/// operand when one side is NaN), and the saturating float→int cast in
+/// `rtn`/`clamp_q` sends NaN to code 0 — so a NaN activation lane silently
+/// contributes nothing to the GEMM while the rest of the token quantizes
+/// normally (pinned by `nan_lane_is_contained`). An ∞ lane does poison the
+/// scale (amax = ∞ ⇒ every code rounds to 0); callers feeding untrusted fp
+/// inputs should pre-filter. The returned codes are always in
+/// `[-qmax, qmax]` with `qmax ≤ 127` — never −128, which the SIMD sign/abs
+/// kernels in `tensor::qgemm_kernel` rely on.
 pub fn quantize_token_into(x: &[f32], bits: u8, codes: &mut [i8]) -> f32 {
     debug_assert_eq!(x.len(), codes.len());
     let qmax = BitWidth(bits).qmax();
@@ -101,6 +111,27 @@ mod tests {
                 assert!((a - b).abs() <= 0.5 * q.scale + 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn nan_lane_is_contained() {
+        // Pins the documented non-finite semantics: a NaN lane does not
+        // perturb amax (f32::max ignores NaN), quantizes to code 0, and
+        // every other lane gets exactly the codes of the NaN-free token.
+        let x = [1.0f32, f32::NAN, -2.0, 0.5];
+        let mut codes = [0i8; 4];
+        let scale = quantize_token_into(&x, 8, &mut codes);
+        let clean = [1.0f32, 0.0, -2.0, 0.5];
+        let mut clean_codes = [0i8; 4];
+        let clean_scale = quantize_token_into(&clean, 8, &mut clean_codes);
+        assert_eq!(scale, clean_scale, "NaN perturbed the token scale");
+        assert_eq!(codes, clean_codes);
+        assert_eq!(codes[1], 0, "NaN lane must quantize to 0");
+        // The grid never emits -128 (the SIMD sign/abs kernels rely on it).
+        let neg = [-1e30f32, 1.0];
+        let mut neg_codes = [0i8; 2];
+        quantize_token_into(&neg, 8, &mut neg_codes);
+        assert_eq!(neg_codes[0], -127);
     }
 
     #[test]

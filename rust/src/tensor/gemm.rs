@@ -47,6 +47,41 @@ macro_rules! dot_unrolled {
 }
 pub(crate) use dot_unrolled;
 
+/// 4-row × 4-token register tile over a k-major interleaved weight panel —
+/// the widened micro-tile shared by the scalar int8 and f32 panel kernels
+/// in `tensor::qgemm_kernel` (QR is pinned to 4 there). `$a` is an array of
+/// 4 equal-length activation slices, `$panel` the interleaved panel
+/// (`panel[k·4 + j]`), `$madd(acc, a, w)` the element-type multiply-
+/// accumulate. Sixteen independent accumulators let the panel stream be
+/// loaded once per four tokens instead of once per token; each (row, token)
+/// accumulator walks k in ascending order — the same summation order as the
+/// QR×1 kernel, which keeps f32 results bitwise identical to it. Returns
+/// `acc[token][row]`.
+macro_rules! panel_tile4 {
+    ($panel:expr, $a:expr, $zero:expr, $madd:expr) => {{
+        let p_ = $panel;
+        let a_ = $a;
+        let n = a_[0].len();
+        debug_assert_eq!(p_.len(), n * 4);
+        debug_assert!(a_.iter().all(|r| r.len() == n));
+        let mut acc = [[$zero; 4]; 4];
+        for k in 0..n {
+            let w = &p_[k * 4..(k + 1) * 4];
+            let mut t = 0usize;
+            while t < 4 {
+                let av = a_[t][k];
+                acc[t][0] = $madd(acc[t][0], av, w[0]);
+                acc[t][1] = $madd(acc[t][1], av, w[1]);
+                acc[t][2] = $madd(acc[t][2], av, w[2]);
+                acc[t][3] = $madd(acc[t][3], av, w[3]);
+                t += 1;
+            }
+        }
+        acc
+    }};
+}
+pub(crate) use panel_tile4;
+
 /// C = A·B.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.rows, "matmul dims {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);

@@ -1,12 +1,16 @@
-//! Dense f32 tensor substrate: the `Matrix` type, fp32 GEMM kernels, and the
-//! packed quantized GEMM layer (`qgemm`) the serving path runs on.
+//! Dense f32 tensor substrate: the `Matrix` type, fp32 GEMM kernels, the
+//! packed quantized GEMM layer (`qgemm`) the serving path runs on, and the
+//! SIMD microkernels behind it (`qgemm_kernel`: runtime-dispatched
+//! AVX2/NEON int8 kernels with a portable scalar fallback).
 
 pub mod gemm;
 pub mod matrix;
 pub mod qgemm;
+pub mod qgemm_kernel;
 
 pub use gemm::{
     dot, gram_cols_f64, gram_rows, matmul, matmul_at, matmul_bt, matmul_bt_acc, matvec, matvec_t,
 };
 pub use matrix::Matrix;
 pub use qgemm::{qgemm_forward, qgemm_forward_token, PackedQWeight, QGemmArena};
+pub use qgemm_kernel::{detect_kernel, QKernelKind};

@@ -9,14 +9,38 @@
 //! 1. smooth the batch with the precomputed reciprocals (`x' = x · (1/m)`),
 //! 2. per-token quantize the batch into a reusable [`QGemmArena`] (no
 //!    per-token `Vec` allocations on the steady-state decode path),
-//! 3. integer micro-kernel: [`QR`]-row interleaved weight panels × one token
-//!    row at a time, i32 accumulators, blocked over tokens ([`TB`]) and
-//!    output rows ([`RB`], the `scope_map` parallel unit) mirroring the
-//!    MC/NC/KC tiling of `gemm::matmul`,
+//! 3. integer micro-kernel: [`QR`]-row weight panels × a widened token
+//!    tile, i32 accumulators, blocked over tokens (`TB`) and output rows
+//!    ([`RB`], the `scope_map` parallel unit) mirroring the MC/NC/KC tiling
+//!    of `gemm::matmul`,
 //! 4. fused scale application (`token_scale × row_scale`) at write-out,
 //! 5. fp outlier columns on the unquantized smoothed batch,
 //! 6. blocked skinny-GEMM low-rank branch `Y += (X'·L_Bᵀ)·L_Aᵀ` via
 //!    `matmul_bt_acc`.
+//!
+//! ## Kernel dispatch
+//!
+//! Step 3 dispatches to a microkernel selected **once at pack time**
+//! (`tensor::qgemm_kernel`): AVX2 `maddubs`/`madd` on x86-64, NEON
+//! `smull`/`sadalp` on aarch64 — both behind runtime feature detection —
+//! with the portable scalar kernel as the always-available fallback and
+//! reference. The panel interleave is a property of the selected kernel
+//! ([`PackedQWeight::kernel`] / [`PackedQWeight::k_pad`]): k-major
+//! QR-interleave for the scalar kernel, zero-padded row-major for the SIMD
+//! kernels, chosen when the layer is packed so the serving loop never
+//! re-dispatches per call.
+//!
+//! ## Determinism scope
+//!
+//! * The **int path (A≤8)** accumulates exact i32 everywhere, so results
+//!   are bitwise identical across kernels (scalar/AVX2/NEON), thread
+//!   counts, and batch sizes — pinned by `assert_eq` property tests.
+//! * The **fp path (A16)** promises bitwise equality across thread counts
+//!   and against the pre-widening QR×1 kernel (each (row, token)
+//!   accumulator walks k in ascending order), but only tolerance-level
+//!   agreement with other f32 orderings (`matmul_bt`, dense reference).
+//! * [`auto_threads`] is a shape heuristic only — it never changes values,
+//!   because row-block jobs partition disjoint output columns.
 //!
 //! `QuantizedLinear::forward_matrix` (methods layer) remains the reference
 //! semantics; the equivalence property tests in `tests/properties.rs` pin
@@ -24,14 +48,13 @@
 
 use super::gemm::{axpy, matmul_bt_acc};
 use super::matrix::Matrix;
+use super::qgemm_kernel::{self, detect_kernel, QKernelKind};
 use crate::quant::act::quantize_token_into;
 use crate::quant::spec::FP;
 use crate::util::pool::scope_map;
 
-/// Register-tile height: output rows computed together per micro-kernel call.
-pub const QR: usize = 4;
-/// Token rows per cache block (the MC analog).
-const TB: usize = 64;
+pub use super::qgemm_kernel::QR;
+
 /// Output rows per `scope_map` job (the NC analog; must be a multiple of QR).
 const RB: usize = 64;
 
@@ -44,10 +67,13 @@ pub struct PackedQWeight {
     pub wbits: u8,
     /// Activation bits for the main GEMM input (`quant::FP` = fp main GEMM).
     pub abits: u8,
-    /// Codes packed in QR-row panels: panel `p` holds output rows
-    /// `[p·QR, (p+1)·QR)`, k-major interleaved so the micro-kernel streams
-    /// one buffer: `packed[p·QR·d_in + k·QR + j] = codes[(p·QR+j)·d_in + k]`.
-    /// Ragged final panels are zero-padded.
+    /// Microkernel this weight was packed for; fixes the panel layout of
+    /// `packed` (see `tensor::qgemm_kernel::pack_codes`).
+    pub kernel: QKernelKind,
+    /// Panel row k-stride: `d_in` padded to the kernel's SIMD chunk
+    /// (== `d_in` for the scalar layout).
+    pub k_pad: usize,
+    /// Codes packed in QR-row panels in the layout `kernel` streams.
     packed: Vec<i8>,
     /// Per-output-row weight scales.
     pub scales: Vec<f32>,
@@ -61,7 +87,8 @@ pub struct PackedQWeight {
 }
 
 impl PackedQWeight {
-    /// Tile-pack quantized codes plus all fused serve-time operands.
+    /// Tile-pack quantized codes plus all fused serve-time operands, with
+    /// the microkernel auto-detected for the host.
     #[allow(clippy::too_many_arguments)]
     pub fn pack(
         codes: &[i8],
@@ -74,23 +101,42 @@ impl PackedQWeight {
         fp_cols: &[(usize, Vec<f32>)],
         low_rank: Option<(&Matrix, &Matrix)>,
     ) -> PackedQWeight {
+        Self::pack_with_kernel(
+            codes,
+            d_out,
+            d_in,
+            wbits,
+            abits,
+            scales,
+            act_smooth,
+            fp_cols,
+            low_rank,
+            detect_kernel(),
+        )
+    }
+
+    /// [`PackedQWeight::pack`] with an explicit kernel choice (benches and
+    /// property tests pin the scalar reference kernel this way). Panics if
+    /// `kind` is not available on this host. A16 layers always take the
+    /// scalar layout — the SIMD int kernels never run on the fp main GEMM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_with_kernel(
+        codes: &[i8],
+        d_out: usize,
+        d_in: usize,
+        wbits: u8,
+        abits: u8,
+        scales: &[f32],
+        act_smooth: Option<&[f32]>,
+        fp_cols: &[(usize, Vec<f32>)],
+        low_rank: Option<(&Matrix, &Matrix)>,
+        kind: QKernelKind,
+    ) -> PackedQWeight {
+        assert!(kind.available(), "kernel {kind:?} not available on this host");
         assert_eq!(codes.len(), d_out * d_in, "code count");
         assert_eq!(scales.len(), d_out, "scale count");
-        let n_panels = d_out.div_ceil(QR);
-        let mut packed = vec![0i8; n_panels * QR * d_in];
-        for p in 0..n_panels {
-            let panel = &mut packed[p * QR * d_in..(p + 1) * QR * d_in];
-            for j in 0..QR {
-                let r = p * QR + j;
-                if r >= d_out {
-                    break;
-                }
-                let src = &codes[r * d_in..(r + 1) * d_in];
-                for (k, &cv) in src.iter().enumerate() {
-                    panel[k * QR + j] = cv;
-                }
-            }
-        }
+        let kind = if abits == FP { QKernelKind::Scalar } else { kind };
+        let packed = qgemm_kernel::pack_codes(kind, codes, d_out, d_in);
         let smooth_recip = act_smooth.map(|m| {
             assert_eq!(m.len(), d_in, "smoothing vector length");
             m.iter().map(|&v| 1.0 / v).collect()
@@ -100,6 +146,8 @@ impl PackedQWeight {
             d_in,
             wbits,
             abits,
+            kernel: kind,
+            k_pad: kind.pad_k(d_in),
             packed,
             scales: scales.to_vec(),
             smooth_recip,
@@ -108,7 +156,8 @@ impl PackedQWeight {
         }
     }
 
-    /// Bytes held by the packed code buffer (overhead accounting).
+    /// Bytes held by the packed code buffer (overhead accounting; includes
+    /// the SIMD layouts' zero padding).
     pub fn packed_bytes(&self) -> usize {
         self.packed.len()
     }
@@ -122,7 +171,9 @@ impl PackedQWeight {
 pub struct QGemmArena {
     /// Smoothed fp activations, t × d_in row-major.
     xs: Vec<f32>,
-    /// Per-token int codes, t × d_in row-major.
+    /// Per-token int codes, t rows at the packed weight's `k_pad` stride
+    /// (tails beyond `d_in` are zeroed; the kernels' zero weight padding
+    /// makes them inert either way).
     codes: Vec<i8>,
     /// Per-token activation scales.
     tok_scales: Vec<f32>,
@@ -135,14 +186,14 @@ impl QGemmArena {
         QGemmArena::default()
     }
 
-    fn prepare(&mut self, t: usize, d_in: usize, int_path: bool) {
+    fn prepare(&mut self, t: usize, d_in: usize, stride: usize, int_path: bool) {
         // resize-only (no clear): stale prefixes are fine because every
         // element is overwritten before it is read (smoothing copy /
         // quantize_token_into / per-token scale stores), and skipping the
         // re-fill avoids an O(t·d_in) memset per layer per decode iteration.
         self.xs.resize(t * d_in, 0.0);
         if int_path {
-            self.codes.resize(t * d_in, 0);
+            self.codes.resize(t * stride, 0);
             self.tok_scales.resize(t, 1.0);
         }
     }
@@ -179,7 +230,8 @@ fn forward_rows(
     let d_out = pw.d_out;
     debug_assert_eq!(x.len(), t * d_in);
     let int_path = pw.abits != FP;
-    arena.prepare(t, d_in, int_path);
+    let stride = pw.k_pad;
+    arena.prepare(t, d_in, stride, int_path);
 
     // 1. smoothing with precomputed reciprocals (or plain copy).
     match &pw.smooth_recip {
@@ -202,10 +254,12 @@ fn forward_rows(
         //    two paths produce identical codes/scales by construction).
         for ti in 0..t {
             let row = &arena.xs[ti * d_in..(ti + 1) * d_in];
-            let dst = &mut arena.codes[ti * d_in..(ti + 1) * d_in];
-            arena.tok_scales[ti] = quantize_token_into(row, pw.abits, dst);
+            let dst = &mut arena.codes[ti * stride..(ti + 1) * stride];
+            arena.tok_scales[ti] = quantize_token_into(row, pw.abits, &mut dst[..d_in]);
+            dst[d_in..].fill(0); // SIMD pad lanes (≤ k_step-1 bytes per row)
         }
-        // 3.+4. packed integer main GEMM with fused scale application.
+        // 3.+4. packed integer main GEMM with fused scale application,
+        //       dispatched to the kernel this weight was packed for.
         int_main(pw, &arena.codes, &arena.tok_scales, t, &mut y, threads);
     } else {
         // A16: fp activations × int codes, row scale applied at write-out.
@@ -235,54 +289,6 @@ fn forward_rows(
         arena.z = z.data;
     }
     y
-}
-
-/// QR output rows × one token row, i8×i8→i32, k unrolled 4-wide (16 madds
-/// per iteration). `panel` is the k-major interleaved QR-row tile.
-#[inline]
-fn dot_i8_panel(a: &[i8], panel: &[i8]) -> [i32; QR] {
-    debug_assert_eq!(panel.len(), a.len() * QR);
-    let n = a.len();
-    let mut acc = [0i32; QR];
-    let chunks = n / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        let p = &panel[i * QR..(i + 4) * QR];
-        let mut u = 0usize;
-        while u < 4 {
-            let av = a[i + u] as i32;
-            let base = u * QR;
-            acc[0] += av * p[base] as i32;
-            acc[1] += av * p[base + 1] as i32;
-            acc[2] += av * p[base + 2] as i32;
-            acc[3] += av * p[base + 3] as i32;
-            u += 1;
-        }
-    }
-    for i in chunks * 4..n {
-        let av = a[i] as i32;
-        let p = &panel[i * QR..(i + 1) * QR];
-        for (j, s) in acc.iter_mut().enumerate() {
-            *s += av * p[j] as i32;
-        }
-    }
-    acc
-}
-
-/// Same tile shape for the fp-activation (A16) main GEMM.
-#[inline]
-fn dot_f32_panel(a: &[f32], panel: &[i8]) -> [f32; QR] {
-    debug_assert_eq!(panel.len(), a.len() * QR);
-    let n = a.len();
-    let mut acc = [0f32; QR];
-    for (i, &av) in a.iter().enumerate().take(n) {
-        let p = &panel[i * QR..(i + 1) * QR];
-        acc[0] += av * p[0] as f32;
-        acc[1] += av * p[1] as f32;
-        acc[2] += av * p[2] as f32;
-        acc[3] += av * p[3] as f32;
-    }
-    acc
 }
 
 /// Split `d_out` into RB jobs, run them on `threads` scoped workers, and
@@ -315,63 +321,34 @@ fn int_main(
     y: &mut Matrix,
     threads: usize,
 ) {
-    let d_in = pw.d_in;
     run_row_jobs(pw.d_out, t, y, threads, |r0, r1| {
-        let nr = r1 - r0;
-        let mut out = vec![0f32; t * nr];
-        for tb in (0..t).step_by(TB) {
-            let tend = (tb + TB).min(t);
-            let mut r = r0;
-            while r < r1 {
-                let p = r / QR; // r0 is RB-aligned and RB % QR == 0
-                let panel = &pw.packed[p * QR * d_in..(p + 1) * QR * d_in];
-                let pr = QR.min(r1 - r);
-                for ti in tb..tend {
-                    let a = &codes[ti * d_in..(ti + 1) * d_in];
-                    let acc = dot_i8_panel(a, panel);
-                    let ts = tok_scales[ti];
-                    let orow = &mut out[ti * nr + (r - r0)..ti * nr + (r - r0) + pr];
-                    for (j, o) in orow.iter_mut().enumerate() {
-                        *o = acc[j] as f32 * (ts * pw.scales[r + j]);
-                    }
-                }
-                r += QR;
-            }
-        }
+        let mut out = vec![0f32; t * (r1 - r0)];
+        qgemm_kernel::run_int_job(
+            pw.kernel, &pw.packed, pw.k_pad, pw.d_in, codes, tok_scales, &pw.scales, r0, r1, t,
+            &mut out,
+        );
         out
     });
 }
 
 fn fp_main(pw: &PackedQWeight, xs: &[f32], t: usize, y: &mut Matrix, threads: usize) {
-    let d_in = pw.d_in;
+    debug_assert_eq!(pw.kernel, QKernelKind::Scalar, "A16 packs force the scalar layout");
     run_row_jobs(pw.d_out, t, y, threads, |r0, r1| {
-        let nr = r1 - r0;
-        let mut out = vec![0f32; t * nr];
-        for tb in (0..t).step_by(TB) {
-            let tend = (tb + TB).min(t);
-            let mut r = r0;
-            while r < r1 {
-                let p = r / QR;
-                let panel = &pw.packed[p * QR * d_in..(p + 1) * QR * d_in];
-                let pr = QR.min(r1 - r);
-                for ti in tb..tend {
-                    let a = &xs[ti * d_in..(ti + 1) * d_in];
-                    let acc = dot_f32_panel(a, panel);
-                    let orow = &mut out[ti * nr + (r - r0)..ti * nr + (r - r0) + pr];
-                    for (j, o) in orow.iter_mut().enumerate() {
-                        *o = acc[j] * pw.scales[r + j];
-                    }
-                }
-                r += QR;
-            }
-        }
+        let mut out = vec![0f32; t * (r1 - r0)];
+        qgemm_kernel::fp_job(&pw.packed, pw.d_in, xs, &pw.scales, r0, r1, t, &mut out);
         out
     });
 }
 
-/// Thread count heuristic for a (t × d_out) quantized GEMM: stay inline for
-/// decode-sized work (scoped-thread spawn costs more than the kernel), fan
-/// out over row blocks for eval/prefill-sized calls.
+/// Thread count heuristic for a (t × d_out) quantized GEMM.
+///
+/// The `scope_map` workers are spawned per call (std scoped threads, no
+/// persistent pool on this path), which costs ~10µs — more than the whole
+/// int kernel for a decode-sized `t × d_out`. So: stay inline below
+/// `t·d_out = 2^16` (decode batches: t ≤ 16 and d_out ≤ 4096 stays inline),
+/// fan out over row blocks for eval/prefill-sized calls where the kernel
+/// dwarfs the spawn. Thread count never affects values — see the
+/// determinism notes in the module doc.
 pub fn auto_threads(t: usize, d_out: usize) -> usize {
     if t * d_out >= (1 << 16) {
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
@@ -429,8 +406,11 @@ mod tests {
     #[test]
     fn int_kernel_matches_reference_awkward_shapes() {
         let mut rng = Pcg64::seed(601);
-        // d_out straddling QR and RB boundaries, batch straddling TB.
-        for (t, d_in, d_out) in [(1, 17, 3), (7, 40, 24), (65, 33, 66), (9, 128, 130)] {
+        // d_out straddling QR and RB boundaries, batch straddling TB and the
+        // token tiles, d_in straddling the SIMD chunk.
+        for (t, d_in, d_out) in
+            [(1, 17, 3), (7, 40, 24), (65, 33, 66), (9, 128, 130), (3, 31, 5), (5, 65, 8)]
+        {
             let codes = random_codes(&mut rng, d_out * d_in, 7);
             let scales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.05).collect();
             let x = Matrix::randn(&mut rng, t, d_in, 1.0);
@@ -447,17 +427,50 @@ mod tests {
     }
 
     #[test]
+    fn auto_and_scalar_kernels_bitwise_identical() {
+        // The int path accumulates exact i32, so the auto-detected SIMD
+        // kernel must reproduce the scalar kernel bit for bit (trivially
+        // true when detection falls back to scalar).
+        let mut rng = Pcg64::seed(606);
+        for (t, d_in, d_out) in [(1, 31, 3), (2, 32, 5), (6, 33, 66), (7, 100, 24), (65, 64, 130)]
+        {
+            let codes = random_codes(&mut rng, d_out * d_in, 7);
+            let scales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.05).collect();
+            let x = Matrix::randn(&mut rng, t, d_in, 1.0);
+            let auto = PackedQWeight::pack(&codes, d_out, d_in, 4, 8, &scales, None, &[], None);
+            let scalar = PackedQWeight::pack_with_kernel(
+                &codes,
+                d_out,
+                d_in,
+                4,
+                8,
+                &scales,
+                None,
+                &[],
+                None,
+                QKernelKind::Scalar,
+            );
+            let ya = qgemm_forward(&auto, &x, &mut QGemmArena::new(), 1);
+            let ys = qgemm_forward(&scalar, &x, &mut QGemmArena::new(), 1);
+            assert_eq!(ya, ys, "kernel {:?} vs scalar ({t},{d_in},{d_out})", auto.kernel);
+        }
+    }
+
+    #[test]
     fn fp_kernel_matches_reference() {
         let mut rng = Pcg64::seed(602);
-        let (t, d_in, d_out) = (11, 37, 29);
-        let codes = random_codes(&mut rng, d_out * d_in, 7);
-        let scales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.05).collect();
-        let x = Matrix::randn(&mut rng, t, d_in, 1.0);
-        let pw = PackedQWeight::pack(&codes, d_out, d_in, 4, FP, &scales, None, &[], None);
-        let mut arena = QGemmArena::new();
-        let got = qgemm_forward(&pw, &x, &mut arena, 1);
-        let want = reference_forward(&codes, &scales, d_out, d_in, FP, &x);
-        assert!(got.max_diff(&want) < 1e-4 * want.max_abs().max(1.0));
+        // Token counts straddle the widened 4-token tile.
+        for (t, d_in, d_out) in [(11, 37, 29), (4, 40, 8), (3, 24, 5)] {
+            let codes = random_codes(&mut rng, d_out * d_in, 7);
+            let scales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.05).collect();
+            let x = Matrix::randn(&mut rng, t, d_in, 1.0);
+            let pw = PackedQWeight::pack(&codes, d_out, d_in, 4, FP, &scales, None, &[], None);
+            assert_eq!(pw.kernel, QKernelKind::Scalar, "A16 must take the scalar layout");
+            let mut arena = QGemmArena::new();
+            let got = qgemm_forward(&pw, &x, &mut arena, 1);
+            let want = reference_forward(&codes, &scales, d_out, d_in, FP, &x);
+            assert!(got.max_diff(&want) < 1e-4 * want.max_abs().max(1.0), "({t},{d_in},{d_out})");
+        }
     }
 
     #[test]
@@ -532,10 +545,66 @@ mod tests {
     }
 
     #[test]
+    fn arena_reuse_across_strides_is_deterministic() {
+        // A scalar-packed layer (stride == d_in) followed by a SIMD-packed
+        // layer (stride == k_pad) sharing one arena must not corrupt the
+        // padded tails.
+        let mut rng = Pcg64::seed(607);
+        let (d_in, d_out) = (33, 20);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        let scales = vec![0.03f32; d_out];
+        let auto = PackedQWeight::pack(&codes, d_out, d_in, 4, 8, &scales, None, &[], None);
+        let scalar = PackedQWeight::pack_with_kernel(
+            &codes,
+            d_out,
+            d_in,
+            4,
+            8,
+            &scales,
+            None,
+            &[],
+            None,
+            QKernelKind::Scalar,
+        );
+        let x = Matrix::randn(&mut rng, 5, d_in, 1.0);
+        let mut arena = QGemmArena::new();
+        let y_s1 = qgemm_forward(&scalar, &x, &mut arena, 1);
+        let y_a = qgemm_forward(&auto, &x, &mut arena, 1);
+        let y_s2 = qgemm_forward(&scalar, &x, &mut arena, 1);
+        assert_eq!(y_s1, y_s2, "arena stride switch corrupted the scalar path");
+        assert_eq!(y_a, qgemm_forward(&auto, &x, &mut QGemmArena::new(), 1));
+    }
+
+    #[test]
     fn zero_input_quantizes_safely() {
         let pw = PackedQWeight::pack(&[1, -2, 3, -4], 2, 2, 4, 8, &[0.1, 0.2], None, &[], None);
         let x = Matrix::zeros(2, 2);
         let y = qgemm_forward(&pw, &x, &mut QGemmArena::new(), 1);
         assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn nan_activation_row_stays_contained() {
+        // `quantize_token_into` maps NaN lanes to code 0 (amax ignores NaN
+        // via f32::max; the saturating float→int cast sends NaN to 0), so a
+        // NaN activation must zero its own lane only — the rest of the
+        // token and the other tokens stay finite and exact.
+        let mut rng = Pcg64::seed(608);
+        let (d_in, d_out) = (40, 12);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        let scales = vec![0.05f32; d_out];
+        let pw = PackedQWeight::pack(&codes, d_out, d_in, 4, 8, &scales, None, &[], None);
+        let mut x = Matrix::randn(&mut rng, 3, d_in, 1.0);
+        x[(1, 7)] = f32::NAN;
+        let y = qgemm_forward(&pw, &x, &mut QGemmArena::new(), 1);
+        assert!(y.data.iter().all(|v| v.is_finite()), "NaN leaked into the output");
+        // Token 1 must equal the same row with the NaN lane zeroed.
+        let mut x_fixed = x.clone();
+        x_fixed[(1, 7)] = 0.0;
+        let y_fixed = qgemm_forward(&pw, &x_fixed, &mut QGemmArena::new(), 1);
+        assert_eq!(y.row(1), y_fixed.row(1));
+        // Untouched tokens are bitwise unaffected.
+        assert_eq!(y.row(0), y_fixed.row(0));
+        assert_eq!(y.row(2), y_fixed.row(2));
     }
 }

@@ -1,0 +1,834 @@
+//! SIMD microkernels for the packed quantized GEMM (`tensor::qgemm`).
+//!
+//! PR 1's inner loop leaned on the autovectorizer over one fixed panel
+//! layout; this module makes the microkernel — and the panel interleave it
+//! streams — a property selected **once at pack time**:
+//!
+//! * [`QKernelKind::Scalar`] — portable reference kernel, always available.
+//!   Panels keep the k-major QR-row interleave (`panel[k·QR + j]`); the
+//!   register block is widened from QR×1 to a QR×4 token tile
+//!   ([`gemm::panel_tile4`]) with a single-token tail.
+//! * [`QKernelKind::Avx2`] — x86-64 `vpmaddubsw`/`vpmaddwd` i8×i8→i32
+//!   kernel behind `is_x86_feature_detected!("avx2")`. Panels are repacked
+//!   row-major with each row zero-padded to 32 bytes so the kernel streams
+//!   whole ymm registers. The register block is QR×2 tokens: 8 ymm
+//!   accumulators + 1 weight + 2 activation + 3 temp registers fill the
+//!   16-register budget (a QR×4 tile would spill accumulators every
+//!   k-step). Since `vpmaddubsw` takes an unsigned first operand, each
+//!   product is computed as `|w| · (a·sign(w))` via `vpabsb`/`vpsignb`;
+//!   pair sums are bounded by 2·128·127 = 32512 < i16::MAX, so the
+//!   saturating i16 stage is exact for any codes the quantizers emit
+//!   (activation codes are ≥ −127 by construction of `clamp_q`).
+//! * [`QKernelKind::Neon`] — aarch64 `smull`/`sadalp` kernel with the same
+//!   zero-padded row layout (16-byte chunks) and a full QR×4 token tile
+//!   (32 vector registers leave room for 16 accumulators).
+//!
+//! All int kernels accumulate exact i32 (products ≤ 127² overflow i32 only
+//! beyond d_in ≈ 1.3e5), so **every kernel produces bitwise-identical
+//! results** — the property tests pin SIMD against scalar with `assert_eq`.
+//! The zero-padded weight lanes contribute exactly 0 regardless of the
+//! activation bytes aligned with them, so activation rows only need to be
+//! allocated (not zeroed) out to the padded stride; `QGemmArena` zeroes the
+//! tail anyway for debuggability.
+
+// Index-heavy microkernels: indexed loops mirror the register tiling and
+// keep the scalar/SIMD variants visually aligned.
+#![allow(clippy::needless_range_loop)]
+
+use super::gemm::panel_tile4;
+
+/// Register-tile height: output rows computed together per micro-kernel
+/// call. Panel packing zero-pads ragged final panels to a full QR rows.
+pub const QR: usize = 4;
+/// Token rows per cache block (the MC analog) shared by all kernels.
+pub(crate) const TB: usize = 64;
+
+/// The microkernel a [`super::PackedQWeight`] was packed for. Selected once
+/// at pack time; fixes both the panel interleave layout and the inner-loop
+/// instruction sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QKernelKind {
+    /// Portable k-major interleaved kernel (the reference semantics).
+    Scalar,
+    /// x86-64 AVX2 `maddubs`/`madd` kernel, padded row-major panels.
+    Avx2,
+    /// aarch64 NEON `smull`/`sadalp` kernel, padded row-major panels.
+    Neon,
+}
+
+impl QKernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            QKernelKind::Scalar => "scalar",
+            QKernelKind::Avx2 => "avx2",
+            QKernelKind::Neon => "neon",
+        }
+    }
+
+    /// SIMD chunk (in i8 lanes) the kernel consumes per step; packed panel
+    /// rows and arena activation rows are padded to a multiple of this.
+    pub fn k_step(self) -> usize {
+        match self {
+            QKernelKind::Scalar => 1,
+            QKernelKind::Avx2 => 32,
+            QKernelKind::Neon => 16,
+        }
+    }
+
+    /// `d_in` rounded up to the kernel's chunk — the packed panel row stride.
+    pub fn pad_k(self, d_in: usize) -> usize {
+        let step = self.k_step();
+        d_in.div_ceil(step) * step
+    }
+
+    /// Width of the token tile of the widened register block.
+    pub fn token_tile(self) -> usize {
+        match self {
+            QKernelKind::Scalar => 4,
+            QKernelKind::Avx2 => 2,
+            QKernelKind::Neon => 4,
+        }
+    }
+
+    /// Whether this kernel can run on the current host (compile target arch
+    /// AND runtime CPU features).
+    pub fn available(self) -> bool {
+        match self {
+            QKernelKind::Scalar => true,
+            QKernelKind::Avx2 => avx2_available(),
+            QKernelKind::Neon => neon_available(),
+        }
+    }
+}
+
+impl std::fmt::Display for QKernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+/// Pick the fastest kernel available on this host. Called once per layer at
+/// pack time (feature detection results are cached by std, so this is
+/// cheap) — the serving loop never re-dispatches.
+pub fn detect_kernel() -> QKernelKind {
+    if QKernelKind::Avx2.available() {
+        QKernelKind::Avx2
+    } else if QKernelKind::Neon.available() {
+        QKernelKind::Neon
+    } else {
+        QKernelKind::Scalar
+    }
+}
+
+/// Pack quantized weight codes (`d_out × d_in`, row-major) into the panel
+/// layout `kind` streams. Panel `p` holds output rows `[p·QR, (p+1)·QR)`
+/// (ragged final panels zero-padded):
+///
+/// * Scalar: k-major interleave, `panel[k·QR + j] = codes[(p·QR+j)·d_in + k]`.
+/// * SIMD: row-major, row `j` at `panel[j·k_pad ..]`, zero-padded to
+///   `k_pad = kind.pad_k(d_in)` so the kernel loads whole registers.
+pub(crate) fn pack_codes(kind: QKernelKind, codes: &[i8], d_out: usize, d_in: usize) -> Vec<i8> {
+    assert_eq!(codes.len(), d_out * d_in, "code count");
+    let k_pad = kind.pad_k(d_in);
+    let n_panels = d_out.div_ceil(QR);
+    let mut packed = vec![0i8; n_panels * QR * k_pad];
+    for p in 0..n_panels {
+        let panel = &mut packed[p * QR * k_pad..(p + 1) * QR * k_pad];
+        for j in 0..QR {
+            let r = p * QR + j;
+            if r >= d_out {
+                break;
+            }
+            let src = &codes[r * d_in..(r + 1) * d_in];
+            match kind {
+                QKernelKind::Scalar => {
+                    for (k, &cv) in src.iter().enumerate() {
+                        panel[k * QR + j] = cv;
+                    }
+                }
+                QKernelKind::Avx2 | QKernelKind::Neon => {
+                    panel[j * k_pad..j * k_pad + d_in].copy_from_slice(src);
+                }
+            }
+        }
+    }
+    packed
+}
+
+/// Dispatch one row-block job `[r0, r1) × t tokens` to `kind`'s int8
+/// kernel. `codes` rows have stride `k_pad` (== `d_in` for the scalar
+/// layout); `out` is t-major `t × (r1-r0)` and fully overwritten with the
+/// scaled result.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_int_job(
+    kind: QKernelKind,
+    packed: &[i8],
+    k_pad: usize,
+    d_in: usize,
+    codes: &[i8],
+    tok_scales: &[f32],
+    wscales: &[f32],
+    r0: usize,
+    r1: usize,
+    t: usize,
+    out: &mut [f32],
+) {
+    match kind {
+        QKernelKind::Scalar => {
+            debug_assert_eq!(k_pad, d_in);
+            scalar_int_job(packed, d_in, codes, tok_scales, wscales, r0, r1, t, out)
+        }
+        #[cfg(target_arch = "x86_64")]
+        QKernelKind::Avx2 => {
+            // SAFETY: pack_with_kernel refuses kernels whose features are
+            // not present on this host, so AVX2 is available here.
+            unsafe { avx2::int_job(packed, k_pad, codes, tok_scales, wscales, r0, r1, t, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        QKernelKind::Neon => {
+            // SAFETY: as above — NEON availability checked at pack time.
+            unsafe { neon::int_job(packed, k_pad, codes, tok_scales, wscales, r0, r1, t, out) }
+        }
+        other => unreachable!("kernel {other:?} is not available on this target"),
+    }
+}
+
+/// QR output rows × one token row, i8×i8→i32, k unrolled 4-wide — the
+/// single-token tail of the scalar kernel and the layout reference for the
+/// interleaved panels.
+#[inline]
+pub(crate) fn dot_i8_panel(a: &[i8], panel: &[i8]) -> [i32; QR] {
+    debug_assert_eq!(panel.len(), a.len() * QR);
+    let n = a.len();
+    let mut acc = [0i32; QR];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let p = &panel[i * QR..(i + 4) * QR];
+        let mut u = 0usize;
+        while u < 4 {
+            let av = a[i + u] as i32;
+            let base = u * QR;
+            acc[0] += av * p[base] as i32;
+            acc[1] += av * p[base + 1] as i32;
+            acc[2] += av * p[base + 2] as i32;
+            acc[3] += av * p[base + 3] as i32;
+            u += 1;
+        }
+    }
+    for i in chunks * 4..n {
+        let av = a[i] as i32;
+        let p = &panel[i * QR..(i + 1) * QR];
+        for (j, s) in acc.iter_mut().enumerate() {
+            *s += av * p[j] as i32;
+        }
+    }
+    acc
+}
+
+/// Same tile shape for the fp-activation (A16) main GEMM, single-token tail.
+#[inline]
+pub(crate) fn dot_f32_panel(a: &[f32], panel: &[i8]) -> [f32; QR] {
+    debug_assert_eq!(panel.len(), a.len() * QR);
+    let mut acc = [0f32; QR];
+    for (i, &av) in a.iter().enumerate() {
+        let p = &panel[i * QR..(i + 1) * QR];
+        acc[0] += av * p[0] as f32;
+        acc[1] += av * p[1] as f32;
+        acc[2] += av * p[2] as f32;
+        acc[3] += av * p[3] as f32;
+    }
+    acc
+}
+
+/// Portable int8 job: QR×4 token tiles over interleaved panels, TB-blocked.
+/// This is the always-available fallback and the reference the property
+/// tests pin the SIMD kernels against (exact i32 accumulation makes all
+/// kernels bitwise identical).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scalar_int_job(
+    packed: &[i8],
+    d_in: usize,
+    codes: &[i8],
+    tok_scales: &[f32],
+    wscales: &[f32],
+    r0: usize,
+    r1: usize,
+    t: usize,
+    out: &mut [f32],
+) {
+    let nr = r1 - r0;
+    for tb in (0..t).step_by(TB) {
+        let tend = (tb + TB).min(t);
+        let mut r = r0;
+        while r < r1 {
+            let p = r / QR; // r0 is RB-aligned and RB % QR == 0
+            let panel = &packed[p * QR * d_in..(p + 1) * QR * d_in];
+            let pr = QR.min(r1 - r);
+            let mut ti = tb;
+            while ti + 4 <= tend {
+                let a = [
+                    &codes[ti * d_in..(ti + 1) * d_in],
+                    &codes[(ti + 1) * d_in..(ti + 2) * d_in],
+                    &codes[(ti + 2) * d_in..(ti + 3) * d_in],
+                    &codes[(ti + 3) * d_in..(ti + 4) * d_in],
+                ];
+                let acc =
+                    panel_tile4!(panel, a, 0i32, |s: i32, x: i8, w: i8| s + x as i32 * w as i32);
+                for u in 0..4 {
+                    let ts = tok_scales[ti + u];
+                    let orow = &mut out[(ti + u) * nr + (r - r0)..];
+                    for j in 0..pr {
+                        orow[j] = acc[u][j] as f32 * (ts * wscales[r + j]);
+                    }
+                }
+                ti += 4;
+            }
+            while ti < tend {
+                let a = &codes[ti * d_in..(ti + 1) * d_in];
+                let acc = dot_i8_panel(a, panel);
+                let ts = tok_scales[ti];
+                let orow = &mut out[ti * nr + (r - r0)..];
+                for j in 0..pr {
+                    orow[j] = acc[j] as f32 * (ts * wscales[r + j]);
+                }
+                ti += 1;
+            }
+            r += QR;
+        }
+    }
+}
+
+/// fp-activation (A16) job with the same QR×4 token tile widening. Always
+/// runs on the interleaved scalar layout (pack forces `Scalar` for FP
+/// abits). Each (row, token) accumulator walks k in ascending order — the
+/// exact summation order of the old QR×1 kernel, so A16 results are
+/// bitwise-unchanged by the widening.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fp_job(
+    packed: &[i8],
+    d_in: usize,
+    xs: &[f32],
+    wscales: &[f32],
+    r0: usize,
+    r1: usize,
+    t: usize,
+    out: &mut [f32],
+) {
+    let nr = r1 - r0;
+    for tb in (0..t).step_by(TB) {
+        let tend = (tb + TB).min(t);
+        let mut r = r0;
+        while r < r1 {
+            let p = r / QR;
+            let panel = &packed[p * QR * d_in..(p + 1) * QR * d_in];
+            let pr = QR.min(r1 - r);
+            let mut ti = tb;
+            while ti + 4 <= tend {
+                let a = [
+                    &xs[ti * d_in..(ti + 1) * d_in],
+                    &xs[(ti + 1) * d_in..(ti + 2) * d_in],
+                    &xs[(ti + 2) * d_in..(ti + 3) * d_in],
+                    &xs[(ti + 3) * d_in..(ti + 4) * d_in],
+                ];
+                let acc = panel_tile4!(panel, a, 0f32, |s: f32, x: f32, w: i8| s + x * w as f32);
+                for u in 0..4 {
+                    let orow = &mut out[(ti + u) * nr + (r - r0)..];
+                    for j in 0..pr {
+                        orow[j] = acc[u][j] * wscales[r + j];
+                    }
+                }
+                ti += 4;
+            }
+            while ti < tend {
+                let a = &xs[ti * d_in..(ti + 1) * d_in];
+                let acc = dot_f32_panel(a, panel);
+                let orow = &mut out[ti * nr + (r - r0)..];
+                for j in 0..pr {
+                    orow[j] = acc[j] * wscales[r + j];
+                }
+                ti += 1;
+            }
+            r += QR;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    //! AVX2 `vpmaddubsw`/`vpmaddwd` i8 microkernel over zero-padded
+    //! row-major panels. See the module doc for the sign/abs trick and the
+    //! saturation bound that makes the i16 stage exact.
+
+    use super::{QR, TB};
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the 8 i32 lanes of `v`.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn hsum_i32(v: __m256i) -> i32 {
+        // Explicit inner block: edition-2024-proof (unsafe_op_in_unsafe_fn).
+        unsafe {
+            let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+            let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32::<1>(s));
+            _mm_cvtsi128_si32(s)
+        }
+    }
+
+    /// QR rows × 2 tokens register tile: 8 ymm i32 accumulators, 32 i8
+    /// lanes per k-step. `panel` points at a padded row-major QR-row panel
+    /// (row stride `k_pad`), `a0`/`a1` at activation rows of `k_pad` bytes.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn panel_dot_4x2(
+        panel: *const i8,
+        k_pad: usize,
+        a0: *const i8,
+        a1: *const i8,
+    ) -> [[i32; 2]; QR] {
+        unsafe {
+            let ones = _mm256_set1_epi16(1);
+            let mut acc = [_mm256_setzero_si256(); 2 * QR];
+            let mut k = 0usize;
+            while k < k_pad {
+                let av0 = _mm256_loadu_si256(a0.add(k) as *const __m256i);
+                let av1 = _mm256_loadu_si256(a1.add(k) as *const __m256i);
+                let mut r = 0usize;
+                while r < QR {
+                    let wv = _mm256_loadu_si256(panel.add(r * k_pad + k) as *const __m256i);
+                    let wmag = _mm256_abs_epi8(wv);
+                    // |w| · (a·sign(w)) == a·w ; pairs sum exactly in i16.
+                    let p0 = _mm256_maddubs_epi16(wmag, _mm256_sign_epi8(av0, wv));
+                    acc[2 * r] = _mm256_add_epi32(acc[2 * r], _mm256_madd_epi16(p0, ones));
+                    let p1 = _mm256_maddubs_epi16(wmag, _mm256_sign_epi8(av1, wv));
+                    acc[2 * r + 1] = _mm256_add_epi32(acc[2 * r + 1], _mm256_madd_epi16(p1, ones));
+                    r += 1;
+                }
+                k += 32;
+            }
+            let mut res = [[0i32; 2]; QR];
+            let mut r = 0usize;
+            while r < QR {
+                res[r][0] = hsum_i32(acc[2 * r]);
+                res[r][1] = hsum_i32(acc[2 * r + 1]);
+                r += 1;
+            }
+            res
+        }
+    }
+
+    /// Single-token tail of the tile.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn panel_dot_4x1(panel: *const i8, k_pad: usize, a: *const i8) -> [i32; QR] {
+        unsafe {
+            let ones = _mm256_set1_epi16(1);
+            let mut acc = [_mm256_setzero_si256(); QR];
+            let mut k = 0usize;
+            while k < k_pad {
+                let av = _mm256_loadu_si256(a.add(k) as *const __m256i);
+                let mut r = 0usize;
+                while r < QR {
+                    let wv = _mm256_loadu_si256(panel.add(r * k_pad + k) as *const __m256i);
+                    let p = _mm256_maddubs_epi16(_mm256_abs_epi8(wv), _mm256_sign_epi8(av, wv));
+                    acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(p, ones));
+                    r += 1;
+                }
+                k += 32;
+            }
+            let mut res = [0i32; QR];
+            let mut r = 0usize;
+            while r < QR {
+                res[r] = hsum_i32(acc[r]);
+                r += 1;
+            }
+            res
+        }
+    }
+
+    /// AVX2 row-block job; layout as [`super::scalar_int_job`] but over the
+    /// padded row-major panels.
+    ///
+    /// # Safety
+    /// Caller must guarantee the `avx2` feature is present (checked at pack
+    /// time) and that `codes` holds `t` rows of `k_pad` bytes and `packed`
+    /// covers every panel touched by `[r0, r1)`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn int_job(
+        packed: &[i8],
+        k_pad: usize,
+        codes: &[i8],
+        tok_scales: &[f32],
+        wscales: &[f32],
+        r0: usize,
+        r1: usize,
+        t: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert!(codes.len() >= t * k_pad);
+        debug_assert_eq!(k_pad % 32, 0);
+        let nr = r1 - r0;
+        for tb in (0..t).step_by(TB) {
+            let tend = (tb + TB).min(t);
+            let mut r = r0;
+            while r < r1 {
+                // SAFETY: panel/code pointers stay within `packed`/`codes`
+                // (panel count and row strides are checked at pack time).
+                let panel = unsafe { packed.as_ptr().add(p_off(r, k_pad)) };
+                let pr = QR.min(r1 - r);
+                let mut ti = tb;
+                while ti + 2 <= tend {
+                    let acc = unsafe {
+                        panel_dot_4x2(
+                            panel,
+                            k_pad,
+                            codes.as_ptr().add(ti * k_pad),
+                            codes.as_ptr().add((ti + 1) * k_pad),
+                        )
+                    };
+                    let mut u = 0usize;
+                    while u < 2 {
+                        let ts = tok_scales[ti + u];
+                        let orow = &mut out[(ti + u) * nr + (r - r0)..];
+                        for j in 0..pr {
+                            orow[j] = acc[j][u] as f32 * (ts * wscales[r + j]);
+                        }
+                        u += 1;
+                    }
+                    ti += 2;
+                }
+                if ti < tend {
+                    let acc =
+                        unsafe { panel_dot_4x1(panel, k_pad, codes.as_ptr().add(ti * k_pad)) };
+                    let ts = tok_scales[ti];
+                    let orow = &mut out[ti * nr + (r - r0)..];
+                    for j in 0..pr {
+                        orow[j] = acc[j] as f32 * (ts * wscales[r + j]);
+                    }
+                }
+                r += QR;
+            }
+        }
+    }
+
+    /// Byte offset of the panel holding output row `r`.
+    #[inline]
+    fn p_off(r: usize, k_pad: usize) -> usize {
+        (r / QR) * QR * k_pad
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    //! NEON `smull`/`sadalp` i8 microkernel over zero-padded row-major
+    //! panels (16-byte chunks). `vmull_s8` widens i8×i8→i16 exactly
+    //! (≤ 127² < i16::MAX) and `vpadalq_s16` pairwise-accumulates into i32,
+    //! so accumulation is exact end to end. 32 vector registers leave room
+    //! for a full QR×4 token tile (16 accumulators).
+
+    use super::{QR, TB};
+    use std::arch::aarch64::*;
+
+    /// QR rows × 4 tokens register tile.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn panel_dot_4x4(
+        panel: *const i8,
+        k_pad: usize,
+        a: [*const i8; 4],
+    ) -> [[i32; 4]; QR] {
+        unsafe {
+            let mut acc = [[vdupq_n_s32(0); 4]; QR];
+            let mut k = 0usize;
+            while k < k_pad {
+                let av = [
+                    vld1q_s8(a[0].add(k)),
+                    vld1q_s8(a[1].add(k)),
+                    vld1q_s8(a[2].add(k)),
+                    vld1q_s8(a[3].add(k)),
+                ];
+                let mut r = 0usize;
+                while r < QR {
+                    let wv = vld1q_s8(panel.add(r * k_pad + k));
+                    let wlo = vget_low_s8(wv);
+                    let whi = vget_high_s8(wv);
+                    let mut t = 0usize;
+                    while t < 4 {
+                        acc[r][t] = vpadalq_s16(acc[r][t], vmull_s8(vget_low_s8(av[t]), wlo));
+                        acc[r][t] = vpadalq_s16(acc[r][t], vmull_s8(vget_high_s8(av[t]), whi));
+                        t += 1;
+                    }
+                    r += 1;
+                }
+                k += 16;
+            }
+            let mut res = [[0i32; 4]; QR];
+            let mut r = 0usize;
+            while r < QR {
+                let mut t = 0usize;
+                while t < 4 {
+                    res[r][t] = vaddvq_s32(acc[r][t]);
+                    t += 1;
+                }
+                r += 1;
+            }
+            res
+        }
+    }
+
+    /// Single-token tail of the tile.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn panel_dot_4x1(panel: *const i8, k_pad: usize, a: *const i8) -> [i32; QR] {
+        unsafe {
+            let mut acc = [vdupq_n_s32(0); QR];
+            let mut k = 0usize;
+            while k < k_pad {
+                let av = vld1q_s8(a.add(k));
+                let alo = vget_low_s8(av);
+                let ahi = vget_high_s8(av);
+                let mut r = 0usize;
+                while r < QR {
+                    let wv = vld1q_s8(panel.add(r * k_pad + k));
+                    acc[r] = vpadalq_s16(acc[r], vmull_s8(alo, vget_low_s8(wv)));
+                    acc[r] = vpadalq_s16(acc[r], vmull_s8(ahi, vget_high_s8(wv)));
+                    r += 1;
+                }
+                k += 16;
+            }
+            let mut res = [0i32; QR];
+            let mut r = 0usize;
+            while r < QR {
+                res[r] = vaddvq_s32(acc[r]);
+                r += 1;
+            }
+            res
+        }
+    }
+
+    /// NEON row-block job; layout as [`super::scalar_int_job`] but over the
+    /// padded row-major panels.
+    ///
+    /// # Safety
+    /// Caller must guarantee NEON is present (checked at pack time) and the
+    /// same buffer invariants as the AVX2 job.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn int_job(
+        packed: &[i8],
+        k_pad: usize,
+        codes: &[i8],
+        tok_scales: &[f32],
+        wscales: &[f32],
+        r0: usize,
+        r1: usize,
+        t: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert!(codes.len() >= t * k_pad);
+        debug_assert_eq!(k_pad % 16, 0);
+        let nr = r1 - r0;
+        for tb in (0..t).step_by(TB) {
+            let tend = (tb + TB).min(t);
+            let mut r = r0;
+            while r < r1 {
+                // SAFETY: panel/code pointers stay within `packed`/`codes`
+                // (panel count and row strides are checked at pack time).
+                let panel = unsafe { packed.as_ptr().add((r / QR) * QR * k_pad) };
+                let pr = QR.min(r1 - r);
+                let mut ti = tb;
+                while ti + 4 <= tend {
+                    let acc = unsafe {
+                        panel_dot_4x4(
+                            panel,
+                            k_pad,
+                            [
+                                codes.as_ptr().add(ti * k_pad),
+                                codes.as_ptr().add((ti + 1) * k_pad),
+                                codes.as_ptr().add((ti + 2) * k_pad),
+                                codes.as_ptr().add((ti + 3) * k_pad),
+                            ],
+                        )
+                    };
+                    let mut u = 0usize;
+                    while u < 4 {
+                        let ts = tok_scales[ti + u];
+                        let orow = &mut out[(ti + u) * nr + (r - r0)..];
+                        for j in 0..pr {
+                            orow[j] = acc[j][u] as f32 * (ts * wscales[r + j]);
+                        }
+                        u += 1;
+                    }
+                    ti += 4;
+                }
+                while ti < tend {
+                    let acc =
+                        unsafe { panel_dot_4x1(panel, k_pad, codes.as_ptr().add(ti * k_pad)) };
+                    let ts = tok_scales[ti];
+                    let orow = &mut out[ti * nr + (r - r0)..];
+                    for j in 0..pr {
+                        orow[j] = acc[j] as f32 * (ts * wscales[r + j]);
+                    }
+                    ti += 1;
+                }
+                r += QR;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_codes(rng: &mut Pcg64, n: usize, qmax: i8) -> Vec<i8> {
+        // Draw in i32 so the full ±127 activation grid doesn't overflow the
+        // i8 cast.
+        (0..n)
+            .map(|_| (rng.below(2 * qmax as usize + 1) as i32 - qmax as i32) as i8)
+            .collect()
+    }
+
+    /// Straight-line i32 reference for one row-block job.
+    #[allow(clippy::too_many_arguments)]
+    fn reference_job(
+        codes_w: &[i8],
+        d_in: usize,
+        codes_a: &[i8],
+        tok_scales: &[f32],
+        wscales: &[f32],
+        r0: usize,
+        r1: usize,
+        t: usize,
+    ) -> Vec<f32> {
+        let nr = r1 - r0;
+        let mut out = vec![0f32; t * nr];
+        for ti in 0..t {
+            for r in r0..r1 {
+                let mut acc = 0i32;
+                for k in 0..d_in {
+                    acc += codes_a[ti * d_in + k] as i32 * codes_w[r * d_in + k] as i32;
+                }
+                out[ti * nr + (r - r0)] = acc as f32 * (tok_scales[ti] * wscales[r]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_layouts_hold_the_same_codes() {
+        let mut rng = Pcg64::seed(71);
+        let (d_out, d_in) = (13, 37);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        for kind in [QKernelKind::Scalar, QKernelKind::Avx2, QKernelKind::Neon] {
+            let packed = pack_codes(kind, &codes, d_out, d_in);
+            let k_pad = kind.pad_k(d_in);
+            assert_eq!(packed.len(), d_out.div_ceil(QR) * QR * k_pad);
+            for r in 0..d_out {
+                let (p, j) = (r / QR, r % QR);
+                for k in 0..k_pad {
+                    let got = match kind {
+                        QKernelKind::Scalar => packed[p * QR * k_pad + k * QR + j],
+                        _ => packed[(p * QR + j) * k_pad + k],
+                    };
+                    let want = if k < d_in { codes[r * d_in + k] } else { 0 };
+                    assert_eq!(got, want, "{kind} r={r} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_job_matches_reference() {
+        let mut rng = Pcg64::seed(72);
+        for (t, d_in, d_out) in [(1, 1, 1), (3, 17, 5), (5, 40, 8), (9, 33, 13), (6, 64, 66)] {
+            let codes_w = random_codes(&mut rng, d_out * d_in, 7);
+            let codes_a = random_codes(&mut rng, t * d_in, 127);
+            let tok_scales: Vec<f32> = (0..t).map(|_| 0.01 + rng.f32() * 0.1).collect();
+            let wscales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.1).collect();
+            let packed = pack_codes(QKernelKind::Scalar, &codes_w, d_out, d_in);
+            let mut out = vec![0f32; t * d_out];
+            scalar_int_job(&packed, d_in, &codes_a, &tok_scales, &wscales, 0, d_out, t, &mut out);
+            let want = reference_job(&codes_w, d_in, &codes_a, &tok_scales, &wscales, 0, d_out, t);
+            assert_eq!(out, want, "({t},{d_in},{d_out})");
+        }
+    }
+
+    #[test]
+    fn simd_job_bitwise_matches_scalar() {
+        // Runs the host's SIMD kernel against the scalar reference across
+        // shapes that straddle the SIMD chunk (d_in), the QR panel (d_out),
+        // and the token tile (t). Exact i32 accumulation ⇒ assert_eq.
+        let kind = detect_kernel();
+        if kind == QKernelKind::Scalar {
+            return; // no SIMD on this host; scalar covered above
+        }
+        let mut rng = Pcg64::seed(73);
+        let k_step = kind.k_step();
+        for (t, d_in, d_out) in [
+            (1, 1, 1),
+            (2, k_step - 1, 5),
+            (3, k_step, 8),
+            (5, k_step + 1, 3),
+            (7, 2 * k_step + 3, 66),
+            (6, 100, 130),
+            (65, 33, 24), // t straddles TB
+        ] {
+            let codes_w = random_codes(&mut rng, d_out * d_in, 7);
+            let tok_scales: Vec<f32> = (0..t).map(|_| 0.01 + rng.f32() * 0.1).collect();
+            let wscales: Vec<f32> = (0..d_out).map(|_| 0.01 + rng.f32() * 0.1).collect();
+            // Activation codes at the scalar stride and the padded stride.
+            let a_plain = random_codes(&mut rng, t * d_in, 127);
+            let k_pad = kind.pad_k(d_in);
+            let mut a_padded = vec![0i8; t * k_pad];
+            for ti in 0..t {
+                a_padded[ti * k_pad..ti * k_pad + d_in]
+                    .copy_from_slice(&a_plain[ti * d_in..(ti + 1) * d_in]);
+            }
+            let p_scalar = pack_codes(QKernelKind::Scalar, &codes_w, d_out, d_in);
+            let p_simd = pack_codes(kind, &codes_w, d_out, d_in);
+            let mut want = vec![0f32; t * d_out];
+            scalar_int_job(&p_scalar, d_in, &a_plain, &tok_scales, &wscales, 0, d_out, t, &mut want);
+            let mut got = vec![0f32; t * d_out];
+            run_int_job(
+                kind, &p_simd, k_pad, d_in, &a_padded, &tok_scales, &wscales, 0, d_out, t, &mut got,
+            );
+            assert_eq!(got, want, "{kind} ({t},{d_in},{d_out})");
+        }
+    }
+
+    #[test]
+    fn detection_is_consistent() {
+        let kind = detect_kernel();
+        assert!(kind.available());
+        assert!(QKernelKind::Scalar.available());
+        assert_eq!(QKernelKind::Scalar.pad_k(33), 33);
+        assert_eq!(QKernelKind::Avx2.pad_k(33), 64);
+        assert_eq!(QKernelKind::Neon.pad_k(33), 48);
+        assert_eq!(QKernelKind::Avx2.pad_k(64), 64);
+        for kind in [QKernelKind::Scalar, QKernelKind::Avx2, QKernelKind::Neon] {
+            assert!(kind.token_tile() >= 2, "{kind} tile");
+        }
+    }
+}

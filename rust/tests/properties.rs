@@ -7,7 +7,7 @@ use aser::methods::aser::Aser;
 use aser::methods::{method_by_name, LayerCalib, PtqMethod, RankPolicy};
 use aser::model::{forward_quant_token, Linear};
 use aser::quant::{fake_quant_vec, quantize_token, BitWidth, Precision, QuantizedWeight};
-use aser::tensor::Matrix;
+use aser::tensor::{detect_kernel, Matrix, QKernelKind};
 use aser::util::prop::{all, check, ensure, gen_vec_f32, shrink_vec_f32, CaseResult, Config};
 use aser::util::rng::Pcg64;
 
@@ -259,6 +259,43 @@ fn prop_batched_quant_forward_matches_token_and_reference() {
 }
 
 #[test]
+fn prop_simd_and_scalar_kernels_bitwise_equal() {
+    // The int path accumulates exact i32, so the auto-detected SIMD kernel
+    // (AVX2/NEON) must agree with the pinned scalar kernel bit for bit —
+    // across the method grid, awkward d_in (straddling the SIMD chunk),
+    // d_out (straddling the QR panel and the RB job), and batch sizes
+    // (straddling the widened token tiles). On hosts without SIMD the auto
+    // kernel IS scalar and the property is trivially green.
+    let mut rng = Pcg64::seed(911);
+    let auto = detect_kernel();
+    for (d_in, d_out) in [(33usize, 24usize), (64, 66), (100, 13)] {
+        let w = Matrix::randn(&mut rng, d_out, d_in, 0.05);
+        let mut x_all = Matrix::randn(&mut rng, 65, d_in, 1.0);
+        for r in 0..x_all.rows {
+            x_all[(r, 3)] *= 20.0;
+        }
+        let calib = LayerCalib::from_sample(x_all.clone());
+        for method in ["rtn", "aser"] {
+            let m = method_by_name(method, RankPolicy::Fixed(6), 4).unwrap();
+            let q = m.quantize_layer(&w, &calib, Precision::w4a8());
+            let lin_auto = Linear::quantized(q.clone());
+            let lin_scalar = Linear::quantized_with(q, QKernelKind::Scalar);
+            assert_eq!(lin_scalar.kernel(), Some(QKernelKind::Scalar));
+            assert_eq!(lin_auto.kernel(), Some(auto));
+            for t in [1usize, 2, 3, 5, 7, 65] {
+                let x = x_all.rows_slice(0, t);
+                let ya = lin_auto.forward(&x);
+                let ys = lin_scalar.forward(&x);
+                assert_eq!(
+                    ya, ys,
+                    "{method} t={t} ({d_in}x{d_out}): {auto:?} kernel diverged from scalar"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_kv_pool_never_overcommits() {
     use aser::coordinator::KvPool;
     check(
@@ -296,6 +333,12 @@ fn prop_kv_pool_never_overcommits() {
 
 #[test]
 fn prop_batcher_preserves_request_ids() {
+    // Termination + completeness on ARBITRARY finite request streams,
+    // including impossible ones: prompts longer than the KV window
+    // (micro's max_seq is 64), KV demands beyond the whole (small) pool,
+    // and empty prompts. Every id must come back exactly once — served or
+    // explicitly rejected — and the pool must drain. Before the admission
+    // rejection fix, impossible requests livelocked run_batcher.
     use aser::coordinator::{BatchConfig, KvPool, Request};
     use aser::model::synthetic_model;
     use std::time::Instant;
@@ -308,33 +351,55 @@ fn prop_batcher_preserves_request_ids() {
             (0..n)
                 .map(|i| Request {
                     id: i as u64,
-                    prompt: (0..1 + rng.below(5)).map(|_| rng.below(128) as u32).collect(),
-                    max_new: 1 + rng.below(5),
+                    // 0..=79 tokens: some empty, some past max_seq = 64.
+                    prompt: (0..rng.below(80)).map(|_| rng.below(128) as u32).collect(),
+                    // Wants up to ~120 tokens vs a 48-token pool below.
+                    max_new: 1 + rng.below(40),
                     submitted: Instant::now(),
                 })
                 .collect::<Vec<_>>()
         },
         |_| Vec::new(),
         |reqs| {
-            let pool = KvPool::new(4096, 8);
+            let pool = KvPool::new(48, 8);
             let (tx, rx) = std::sync::mpsc::channel();
             for r in reqs.clone() {
                 tx.send(r).unwrap();
             }
             drop(tx);
             let mut got = Vec::new();
-            aser::coordinator::batcher::run_batcher(
+            let mut n_rejected = 0usize;
+            let metrics = aser::coordinator::batcher::run_batcher(
                 &model,
                 &pool,
                 &BatchConfig::default(),
                 rx,
-                |resp| got.push(resp.id),
+                |resp| {
+                    if resp.rejected {
+                        n_rejected += 1;
+                        assert!(resp.tokens.is_empty(), "rejected response with tokens");
+                    }
+                    got.push(resp.id);
+                },
             );
             got.sort_unstable();
             let want: Vec<u64> = (0..reqs.len() as u64).collect();
             all(vec![
                 ensure(got == want, || format!("ids {got:?} != {want:?}")),
                 ensure(pool.used_tokens() == 0, || "kv leak".into()),
+                ensure(metrics.rejected_impossible == n_rejected, || {
+                    format!(
+                        "rejected metric {} != rejected responses {n_rejected}",
+                        metrics.rejected_impossible
+                    )
+                }),
+                ensure(metrics.requests + n_rejected == reqs.len(), || {
+                    format!(
+                        "admitted {} + rejected {n_rejected} != {}",
+                        metrics.requests,
+                        reqs.len()
+                    )
+                }),
             ])
         },
     );
