@@ -1,20 +1,23 @@
 //! Serving benches (§Perf): decode throughput + latency of the continuous
 //! batcher vs batch size and worker count, on the W4A8-quantized model, plus
 //! a direct batched-vs-scalar decode comparison (the packed qgemm engine vs
-//! token-at-a-time `forward_step`). The paper's deployment claim is that the
-//! compensation branch adds negligible serving cost; compare the fp16 rows
-//! against the aser rows.
+//! token-at-a-time `forward_step`), chunked-vs-scalar **prefill** throughput
+//! (`prefill_tok_s`), and a long-prompt serving workload comparing TTFT
+//! under chunked prefill vs the old one-token-per-iteration schedule. The
+//! paper's deployment claim is that the compensation branch adds negligible
+//! serving cost; compare the fp16 rows against the aser rows.
 //!
 //! Emits machine-readable `BENCH_serving.json` so the perf trajectory is
-//! tracked across PRs: per-config tokens/s and p50/p95 TTFT, and the
-//! batched-vs-scalar speedup per batch size.
+//! tracked across PRs: per-config tokens/s and p50/p95 TTFT, the
+//! batched-vs-scalar speedup per batch size, `prefill` rows, and
+//! `long_prompt_ttft` rows (`scripts/bench_diff` gates on the latter).
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
     calibrate_model, run_ptq, serve_requests, synthetic_requests, BatchConfig, ServerConfig,
 };
 use aser::methods::{method_by_name, RankPolicy};
-use aser::model::{synthetic_model, Gpt, KvCache};
+use aser::model::{synthetic_model, ChunkLogits, Gpt, KvCache, SeqChunk};
 use aser::quant::Precision;
 use aser::tensor::QGemmArena;
 use aser::util::json::{num, obj, s, Json};
@@ -63,6 +66,40 @@ fn batched_decode_tok_s(model: &Gpt, proto: &[KvCache], steps: usize) -> f64 {
     (caches.len() * steps) as f64 / t0.elapsed().as_secs_f64().max(1e-9)
 }
 
+/// Prefill `prompt` token-by-token through the scalar `forward_step` loop.
+fn scalar_prefill_tok_s(model: &Gpt, prompt: &[u32], reps: usize) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut cache = KvCache::new(&model.cfg);
+        for &t in prompt {
+            black_box(model.forward_step(t, &mut cache));
+        }
+    }
+    (prompt.len() * reps) as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// Same prefill fed as `chunk`-token spans through `forward_chunk_batch`
+/// (only the final span pays the lm_head GEMM).
+fn chunked_prefill_tok_s(model: &Gpt, prompt: &[u32], chunk: usize, reps: usize) -> f64 {
+    let mut arena = QGemmArena::new();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut cache = KvCache::new(&model.cfg);
+        let mut fed = 0;
+        while fed < prompt.len() {
+            let end = (fed + chunk).min(prompt.len());
+            let last = end == prompt.len();
+            let span = [SeqChunk {
+                tokens: &prompt[fed..end],
+                logits: if last { ChunkLogits::Last } else { ChunkLogits::None },
+            }];
+            black_box(model.forward_chunk_batch(&span, &mut [&mut cache], &mut arena));
+            fed = end;
+        }
+    }
+    (prompt.len() * reps) as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
 fn main() {
     let base = synthetic_model("micro", 7).unwrap();
     let ccfg = CalibConfig { n_seqs: 6, seq_len: 24, max_sample: 96, seed: 3 };
@@ -70,6 +107,8 @@ fn main() {
 
     let mut config_rows: Vec<Json> = Vec::new();
     let mut speedup_rows: Vec<Json> = Vec::new();
+    let mut prefill_rows: Vec<Json> = Vec::new();
+    let mut long_prompt_rows: Vec<Json> = Vec::new();
 
     for variant in ["fp16", "aser-w4a8"] {
         let model = if variant == "fp16" {
@@ -137,6 +176,65 @@ fn main() {
                 ("speedup", num(speedup)),
             ]));
         }
+
+        // ---- chunked vs scalar prefill throughput (the TTFT lever) ----
+        let long_prompt: Vec<u32> =
+            (0..56).map(|i| ((i * 11) % (model.cfg.vocab_size - 1) + 1) as u32).collect();
+        println!("{:>6} {:>14} {:>14} {:>9}", "chunk", "scalar tok/s", "chunked tok/s", "speedup");
+        for &chunk in &[8usize, 16, 32, 56] {
+            let reps = 6;
+            let _ = scalar_prefill_tok_s(&model, &long_prompt, 1);
+            let _ = chunked_prefill_tok_s(&model, &long_prompt, chunk, 1);
+            let scalar = scalar_prefill_tok_s(&model, &long_prompt, reps);
+            let chunked = chunked_prefill_tok_s(&model, &long_prompt, chunk, reps);
+            let speedup = chunked / scalar.max(1e-9);
+            println!("{chunk:>6} {scalar:>14.1} {chunked:>14.1} {speedup:>8.2}x");
+            prefill_rows.push(obj(vec![
+                ("variant", s(variant)),
+                ("prompt_len", num(long_prompt.len() as f64)),
+                ("chunk", num(chunk as f64)),
+                ("scalar_prefill_tok_s", num(scalar)),
+                ("prefill_tok_s", num(chunked)),
+                ("speedup", num(speedup)),
+            ]));
+        }
+
+        // ---- long-prompt serving TTFT: chunked schedule vs the old
+        //      one-token-per-sequence-per-iteration schedule ----
+        println!(
+            "{:>10} {:>14} {:>10} {:>10}",
+            "schedule", "prefill tok/s", "p50 ttft", "p95 ttft"
+        );
+        for (mode, bcfg) in [
+            ("chunked", BatchConfig { max_batch: 8, ..Default::default() }),
+            (
+                "per-token",
+                BatchConfig {
+                    max_batch: 8,
+                    prefill_chunk: 1,
+                    token_budget: 8,
+                    ..Default::default()
+                },
+            ),
+        ] {
+            let reqs = synthetic_requests(model.cfg.vocab_size, 24, 48, 8, 17).unwrap();
+            let cfg = ServerConfig { workers: 1, batch: bcfg, kv_tokens: 1 << 14 };
+            let run = serve_requests(Arc::clone(&model), &cfg, reqs);
+            let (p50, p95) = (run.ttft_percentile_ms(50.0), run.ttft_percentile_ms(95.0));
+            println!(
+                "{mode:>10} {:>14.1} {p50:>9.0}ms {p95:>9.0}ms",
+                run.prefill_tok_s()
+            );
+            long_prompt_rows.push(obj(vec![
+                ("variant", s(variant)),
+                ("mode", s(mode)),
+                ("prompt_len", num(48.0)),
+                ("max_new", num(8.0)),
+                ("prefill_tok_s", num(run.prefill_tok_s())),
+                ("p50_ttft_ms", num(p50)),
+                ("p95_ttft_ms", num(p95)),
+            ]));
+        }
     }
 
     let report = obj(vec![
@@ -145,10 +243,13 @@ fn main() {
         ("kernel", s(aser::tensor::detect_kernel().name())),
         ("configs", Json::Arr(config_rows)),
         ("batched_vs_scalar", Json::Arr(speedup_rows)),
+        ("prefill", Json::Arr(prefill_rows)),
+        ("long_prompt_ttft", Json::Arr(long_prompt_rows)),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");
     println!("\nwrote BENCH_serving.json");
     println!("(throughput should rise with batch; aser ≈ fp16 = 'minor overhead';");
-    println!(" batched-vs-scalar ≥ 3x at batch ≥ 8 is the engine's acceptance bar)");
+    println!(" batched-vs-scalar ≥ 3x at batch ≥ 8, and chunked prefill ≥ 2x p50 TTFT");
+    println!(" on the long-prompt rows, are the engine's acceptance bars)");
 }

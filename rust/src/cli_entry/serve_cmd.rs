@@ -20,6 +20,13 @@ pub fn run(args: &Args) -> Result<()> {
     let max_new = args.usize_or("max-new", 24)?;
     let workers = args.usize_or("workers", 2)?;
     let max_batch = args.usize_or("batch", 8)?;
+    let default_cfg = BatchConfig::default();
+    // Chunked-prefill scheduling knobs: per-sequence prompt chunk width,
+    // per-iteration ragged-batch row budget, and the decode headroom the
+    // right-sized KV lease reserves at admission.
+    let prefill_chunk = args.usize_or("chunk", default_cfg.prefill_chunk)?;
+    let token_budget = args.usize_or("token-budget", default_cfg.token_budget)?;
+    let kv_reserve = args.usize_or("kv-reserve", default_cfg.kv_reserve)?;
 
     let model = ctx.model(&model_name)?;
     let model = if method_name == "fp16" {
@@ -41,15 +48,25 @@ pub fn run(args: &Args) -> Result<()> {
         synthetic_requests(model.cfg.vocab_size, n_requests, prompt_len, max_new, ctx.seed)?;
     let cfg = ServerConfig {
         workers,
-        batch: BatchConfig { max_batch, ..Default::default() },
+        batch: BatchConfig {
+            max_batch,
+            prefill_chunk,
+            token_budget,
+            kv_reserve,
+            ..Default::default()
+        },
         kv_tokens: args.usize_or("kv-tokens", 1 << 15)?,
     };
     let run = serve_requests(Arc::new(model), &cfg, requests);
 
-    println!("== serve: {n_requests} requests, {workers} workers, batch {max_batch} ==");
+    println!(
+        "== serve: {n_requests} requests, {workers} workers, batch {max_batch}, \
+         chunk {prefill_chunk}, budget {token_budget} =="
+    );
     println!("  completed      {}", run.responses.len());
     println!("  wall           {:.2}s", run.wall.as_secs_f64());
     println!("  throughput     {:.1} tok/s (decode)", run.throughput_tok_s());
+    println!("  prefill        {:.1} tok/s", run.prefill_tok_s());
     println!(
         "  latency p50/p95  {:.0} / {:.0} ms",
         run.latency_percentile_ms(50.0),
@@ -62,9 +79,17 @@ pub fn run(args: &Args) -> Result<()> {
     );
     for (i, m) in run.per_worker.iter().enumerate() {
         println!(
-            "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, kv-rejects {}, refused {}",
-            m.requests, m.generated_tokens, m.iterations, m.peak_batch, m.rejected_capacity,
-            m.rejected_impossible
+            "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, peak rows {}, \
+             kv-rejects {}, refused {}, kv-grows {}, truncated {}",
+            m.requests,
+            m.generated_tokens,
+            m.iterations,
+            m.peak_batch,
+            m.peak_iter_tokens,
+            m.rejected_capacity,
+            m.rejected_impossible,
+            m.kv_grows,
+            m.truncated_kv
         );
     }
     Ok(())

@@ -1,49 +1,71 @@
 //! Continuous (iteration-level) dynamic batcher — Orca-style scheduling on
-//! top of the packed quantized execution engine.
+//! top of the packed quantized execution engine, with chunked multi-token
+//! prefill and right-sized KV leases.
 //!
 //! The decode loop keeps an *active set* of sequences. Every iteration it
 //! (1) admits queued requests while there is batch room AND the KV pool
-//! grants a lease (backpressure), (2) advances every active sequence by one
-//! token (prompt tokens first — chunked prefill — then greedy decode), and
-//! (3) retires finished sequences, freeing their KV lease. New requests
-//! therefore join between *iterations*, not between requests.
+//! grants a lease (backpressure), (2) plans a **ragged chunk batch** under
+//! a per-iteration token budget and advances it through ONE
+//! [`Gpt::forward_chunk_batch`] call, and (3) retires finished sequences,
+//! freeing their KV lease. New requests therefore join between
+//! *iterations*, not between requests.
+//!
+//! ## Scheduling policy (step 2)
+//!
+//! Each iteration assembles at most [`BatchConfig::token_budget`] token
+//! rows:
+//! - **Decode rows first.** Every sequence past its prompt contributes
+//!   exactly one row, unconditionally — decode latency never queues behind
+//!   a long prefill.
+//! - **Prompt chunks share the remainder.** Each still-prefilling sequence
+//!   may feed up to [`BatchConfig::prefill_chunk`] prompt tokens from the
+//!   leftover budget. The grant order rotates across iterations
+//!   (round-robin start), so one long prompt cannot monopolize the chunk
+//!   budget and starve later arrivals of their TTFT.
+//!
+//! All planned spans stack into a single ragged forward: one batched
+//! quantized GEMM per layer per iteration over Σ span rows, with the
+//! lm_head GEMM run only for rows the scheduler reads back (prefill-final
+//! and decode rows — mid-prefill chunks skip the vocab projection). This is
+//! where long-prompt TTFT is won: prompt tokens hit the packed int8
+//! kernels as wide token tiles instead of one skinny row per iteration.
+//!
+//! ## KV leases (admission + growth)
 //!
 //! Admission distinguishes **transient** capacity pushback (the pool is
 //! full right now; the request is re-queued and admitted when leases free
 //! up — `BatchMetrics::rejected_capacity`) from **impossible** requests
-//! that could never run: empty prompts, prompts that cannot fit in the KV
-//! window with at least one generated token, and clamped KV demands larger
-//! than the whole pool. Those are refused immediately with an explicit
-//! [`Response`] carrying `rejected: true` and an empty token list
+//! that could never run: empty prompts, and prompts whose minimum
+//! footprint (prompt + one generated token) exceeds the KV window or the
+//! whole pool. Those are refused immediately with an explicit [`Response`]
+//! carrying `rejected: true` and an empty token list
 //! (`BatchMetrics::rejected_impossible`) — re-queueing them forever was an
-//! admission livelock, and over-long prompts used to be prefilled
-//! token-by-token straight past the KV-cache bound. With impossible
-//! requests refused up front, `run_batcher` terminates on any finite
-//! request stream.
+//! admission livelock. With impossible requests refused up front,
+//! `run_batcher` terminates on any finite request stream.
 //!
-//! TTFT (`Response::ttft`) is stamped when the batched forward that ends a
+//! Feasible requests lease **right-sized**, not worst-case: the initial
+//! lease covers `prompt + min(max_new, kv_reserve)` tokens, and decode
+//! extends it incrementally through [`KvPool::grow`]
+//! (`BatchMetrics::kv_grows`). When the pool cannot grow a lease even by
+//! one token, the sequence finishes gracefully with what it has generated
+//! (`BatchMetrics::truncated_kv`) instead of panicking — so tight pools
+//! run more sequences concurrently and EOS-early sequences never strand a
+//! `max_new`-sized reservation.
+//!
+//! TTFT (`Response::ttft`) is stamped when the chunked forward that ends a
 //! sequence's prefill writes its logits back — the instant its first
 //! generated token is determined — not when the next iteration argmaxes
 //! that token.
 //!
-//! Step (2) is where the throughput property is actually realized: all
-//! advancing sequences are stacked into one [`Gpt::forward_step_batch`]
-//! call, so each transformer layer runs ONE batched quantized GEMM per
-//! iteration (tile-packed int8 weight panels streamed once per batch)
-//! instead of one scalar token forward per sequence. The per-token
-//! activation-quantization scratch lives in a loop-owned
-//! [`QGemmArena`], so the steady-state decode loop does not allocate
-//! quantization buffers.
-//!
-//! Determinism scope: for decode batches under 32 sequences (the default
-//! `max_batch` is 8) the batched step is bitwise identical to per-sequence
-//! `forward_step`, so greedy outputs match single-sequence generation
-//! token-for-token (see `tensor::gemm::matmul_bt_acc`). Larger batches take
-//! the split-K blocked kernels and agree only to f32 tolerance.
+//! Determinism scope: per-sequence attention is identical across chunkings
+//! by construction, and the int-GEMM path is bitwise identical across
+//! batch shapes, so greedy outputs match single-sequence generation
+//! token-for-token on quantized models (and to f32 tolerance on dense
+//! ones; see `tensor::gemm::matmul_bt_acc` for the fp caveats).
 
 use super::kvpool::{KvPool, Lease};
 use crate::data::vocab::EOS;
-use crate::model::{argmax, Gpt, KvCache};
+use crate::model::{argmax, ChunkLogits, Gpt, KvCache, SeqChunk, PREFILL_CHUNK};
 use crate::tensor::QGemmArena;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -68,8 +90,8 @@ pub struct Response {
     pub total: Duration,
     pub prompt_len: usize,
     /// True when the request was refused at admission because it could
-    /// never run (empty prompt, prompt too long for the KV window, or KV
-    /// demand beyond total pool capacity); `tokens` is empty.
+    /// never run (empty prompt, or prompt + 1 beyond the KV window or the
+    /// whole pool); `tokens` is empty.
     pub rejected: bool,
 }
 
@@ -82,12 +104,29 @@ struct Active {
     generated: Vec<u32>,
     last_logits: Vec<f32>,
     first_token_at: Option<Instant>,
+    /// Finished early because the KV pool could not grow the lease.
+    truncated: bool,
 }
 
 /// Batcher configuration.
 #[derive(Clone, Debug)]
 pub struct BatchConfig {
+    /// Max concurrently active sequences.
     pub max_batch: usize,
+    /// Per-iteration token-row budget for the ragged forward. Decode rows
+    /// (one per decoding sequence, bounded by `max_batch`) are always
+    /// planned; prompt chunks share whatever remains.
+    pub token_budget: usize,
+    /// Max prompt tokens one sequence feeds per iteration.
+    pub prefill_chunk: usize,
+    /// Decode headroom reserved at admission: the initial KV lease covers
+    /// `prompt + min(max_new, kv_reserve)` tokens; the rest is leased
+    /// incrementally by [`KvPool::grow`] during decode.
+    pub kv_reserve: usize,
+    /// Preferred tokens per decode-time lease grow (amortizes pool-lock
+    /// traffic; growth falls back to the single token actually needed when
+    /// the pool is nearly full).
+    pub kv_grow: usize,
     /// Wait at most this long for work when idle.
     pub idle_wait: Duration,
     pub stop_on_eos: bool,
@@ -95,7 +134,15 @@ pub struct BatchConfig {
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        BatchConfig { max_batch: 8, idle_wait: Duration::from_millis(5), stop_on_eos: true }
+        BatchConfig {
+            max_batch: 8,
+            token_budget: 2 * PREFILL_CHUNK,
+            prefill_chunk: PREFILL_CHUNK,
+            kv_reserve: 16,
+            kv_grow: 16,
+            idle_wait: Duration::from_millis(5),
+            stop_on_eos: true,
+        }
     }
 }
 
@@ -107,12 +154,22 @@ pub struct BatchMetrics {
     pub prefill_tokens: usize,
     pub iterations: usize,
     pub peak_batch: usize,
+    /// Most token rows fed in one ragged forward. Bounded by
+    /// `max(token_budget, concurrent decode rows)` — decode rows (≤
+    /// `max_batch`) are planned unconditionally; only prompt chunks are
+    /// budget-limited.
+    pub peak_iter_tokens: usize,
     /// Transient pool pushback: the request was re-queued and admitted
     /// later.
     pub rejected_capacity: usize,
     /// Requests refused outright with a `rejected` response because they
     /// could never run (see the module doc's admission rules).
     pub rejected_impossible: usize,
+    /// Successful incremental lease grows during decode.
+    pub kv_grows: usize,
+    /// Sequences finished early (gracefully) because the pool could not
+    /// grow their lease by even one token.
+    pub truncated_kv: usize,
 }
 
 /// Run the batching loop until the request channel closes and the active
@@ -128,8 +185,10 @@ pub fn run_batcher(
     let mut metrics = BatchMetrics::default();
     let mut channel_open = true;
     let mut pending: Vec<Request> = Vec::new();
-    // Reusable activation-quantization scratch for the batched decode step.
+    // Reusable activation-quantization scratch for the chunked forward.
     let mut arena = QGemmArena::new();
+    // Rotating start index for prefill chunk grants (fairness).
+    let mut prefill_rr = 0usize;
 
     while channel_open || !active.is_empty() || !pending.is_empty() {
         // ---- admission ----
@@ -152,21 +211,16 @@ pub fn run_batcher(
                 still_pending.push(req);
                 continue;
             }
-            // Lease the full prompt + expected generation upfront, clamped
-            // to the model's KV window.
-            let want = (req.prompt.len() + req.max_new).min(model.cfg.max_seq);
-            // Requests that can NEVER run are refused with an explicit
-            // rejected response instead of being re-queued forever:
-            //  - empty prompts (no logits to decode from),
-            //  - prompts that don't fit the KV window with ≥1 generated
-            //    token (they used to be prefilled token-by-token straight
-            //    past the KV-cache bound),
-            //  - clamped KV demands beyond the whole pool (they used to be
-            //    re-queued forever: admission livelock once the channel
-            //    closed).
+            // A request is IMPOSSIBLE only when even its minimum footprint
+            // — the prompt plus one generated token — can never fit the KV
+            // window or the whole pool (or the prompt is empty: no logits
+            // to decode from). Larger demands are admissible: the lease is
+            // right-sized now and grown during decode, truncating
+            // gracefully if the pool runs out.
+            let min_need = req.prompt.len() + 1;
             if req.prompt.is_empty()
-                || req.prompt.len() + 1 > model.cfg.max_seq
-                || want > pool.capacity_tokens()
+                || min_need > model.cfg.max_seq
+                || min_need > pool.capacity_tokens()
             {
                 metrics.rejected_impossible += 1;
                 let waited = Instant::now() - req.submitted;
@@ -180,6 +234,12 @@ pub fn run_batcher(
                 });
                 continue;
             }
+            // Right-sized lease: prompt + min(max_new, kv_reserve), clamped
+            // to the KV window and pool size (never below prompt + 1).
+            let reserve = req.max_new.clamp(1, cfg.kv_reserve.max(1));
+            let want = (req.prompt.len() + reserve)
+                .min(model.cfg.max_seq)
+                .min(pool.capacity_tokens());
             match pool.alloc(want) {
                 Some(lease) => {
                     active.push(Active {
@@ -189,6 +249,7 @@ pub fn run_batcher(
                         generated: Vec::new(),
                         last_logits: Vec::new(),
                         first_token_at: None,
+                        truncated: false,
                         req,
                     });
                     metrics.requests += 1;
@@ -214,54 +275,120 @@ pub fn run_batcher(
             continue;
         }
 
-        // ---- one iteration: advance every active sequence by one token,
-        //      all stacked into a single batched step (one quantized GEMM
-        //      per layer per iteration, not per sequence) ----
+        // ---- one iteration: plan a ragged prefill+decode batch under the
+        //      token budget, advance it through one chunked forward ----
         metrics.iterations += 1;
-        let mut step_tokens: Vec<u32> = Vec::with_capacity(active.len());
-        let mut step_idx: Vec<usize> = Vec::with_capacity(active.len());
+        let budget = cfg.token_budget.max(1);
+        // Planned spans: (active idx, start in `flat`, len, logits kind).
+        // Tokens are copied into `flat` so the spans borrow one buffer
+        // instead of `active` (whose caches the forward borrows mutably).
+        let mut flat: Vec<u32> = Vec::new();
+        let mut spans: Vec<(usize, usize, usize, ChunkLogits)> = Vec::new();
+
+        // Decode rows first: every decoding sequence advances by one token
+        // regardless of prefill pressure.
         for (i, a) in active.iter_mut().enumerate() {
             if a.fed < a.req.prompt.len() {
-                let tok = a.req.prompt[a.fed];
-                a.fed += 1;
-                metrics.prefill_tokens += 1;
-                step_tokens.push(tok);
-                step_idx.push(i);
-            } else {
-                let next = argmax(&a.last_logits) as u32;
-                a.generated.push(next);
-                metrics.generated_tokens += 1;
-                let done = a.generated.len() >= a.req.max_new
-                    || (cfg.stop_on_eos && next == EOS)
-                    || a.cache.len() + 1 >= model.cfg.max_seq;
-                if !done {
-                    step_tokens.push(next);
-                    step_idx.push(i);
+                continue;
+            }
+            let next = argmax(&a.last_logits) as u32;
+            a.generated.push(next);
+            metrics.generated_tokens += 1;
+            let mut done = a.generated.len() >= a.req.max_new
+                || (cfg.stop_on_eos && next == EOS)
+                || a.cache.len() + 1 >= model.cfg.max_seq;
+            if !done && a.cache.len() + 1 > a.lease.tokens {
+                // Lease exhausted: grow by the preferred step, falling back
+                // to the single token actually needed; truncate gracefully
+                // when even that fails.
+                let need = a.cache.len() + 1 - a.lease.tokens;
+                let cap_total = (a.req.prompt.len() + a.req.max_new).min(model.cfg.max_seq);
+                let step = cap_total
+                    .saturating_sub(a.lease.tokens)
+                    .min(cfg.kv_grow.max(1))
+                    .max(need);
+                if pool.grow(&mut a.lease, step)
+                    || (step > need && pool.grow(&mut a.lease, need))
+                {
+                    metrics.kv_grows += 1;
+                } else {
+                    metrics.truncated_kv += 1;
+                    a.truncated = true;
+                    done = true;
                 }
             }
+            if !done {
+                spans.push((i, flat.len(), 1, ChunkLogits::Last));
+                flat.push(next);
+            }
         }
-        if !step_tokens.is_empty() {
+        let mut budget_left = budget.saturating_sub(spans.len());
+
+        // Prompt chunks from the leftover budget, rotating the start index
+        // so chunk grants are fair across prefilling sequences.
+        let prefilling: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.fed < a.req.prompt.len())
+            .map(|(i, _)| i)
+            .collect();
+        if !prefilling.is_empty() {
+            let start = prefill_rr % prefilling.len();
+            prefill_rr = prefill_rr.wrapping_add(1);
+            for k in 0..prefilling.len() {
+                if budget_left == 0 {
+                    break;
+                }
+                let i = prefilling[(start + k) % prefilling.len()];
+                let a = &mut active[i];
+                let remaining = a.req.prompt.len() - a.fed;
+                let grant = cfg.prefill_chunk.max(1).min(remaining).min(budget_left);
+                let logits = if a.fed + grant == a.req.prompt.len() {
+                    ChunkLogits::Last
+                } else {
+                    ChunkLogits::None
+                };
+                spans.push((i, flat.len(), grant, logits));
+                flat.extend_from_slice(&a.req.prompt[a.fed..a.fed + grant]);
+                a.fed += grant;
+                metrics.prefill_tokens += grant;
+                budget_left -= grant;
+            }
+        }
+        metrics.peak_iter_tokens = metrics.peak_iter_tokens.max(flat.len());
+
+        if !spans.is_empty() {
+            // forward_chunk_batch pairs chunks[i] with caches[i]; sort by
+            // active index so the ascending &mut gather below lines up.
+            spans.sort_unstable_by_key(|&(i, ..)| i);
+            let chunks: Vec<SeqChunk> = spans
+                .iter()
+                .map(|&(_, f0, len, lg)| SeqChunk { tokens: &flat[f0..f0 + len], logits: lg })
+                .collect();
             let logits = {
-                // Gather &mut caches for exactly the advancing sequences
-                // (step_idx is ascending by construction).
-                let mut want = step_idx.iter().copied().peekable();
-                let mut caches: Vec<&mut KvCache> = Vec::with_capacity(step_idx.len());
+                let mut want = spans.iter().map(|&(i, ..)| i).peekable();
+                let mut caches: Vec<&mut KvCache> = Vec::with_capacity(spans.len());
                 for (i, a) in active.iter_mut().enumerate() {
                     if want.peek() == Some(&i) {
                         want.next();
                         caches.push(&mut a.cache);
                     }
                 }
-                model.forward_step_batch(&step_tokens, &mut caches, &mut arena)
+                model.forward_chunk_batch(&chunks, &mut caches, &mut arena)
             };
             // Logits are materialized now: any sequence that just fed its
             // final prompt token has its first generated token determined
             // at this instant, so TTFT is stamped here — not one iteration
             // later when the decode branch argmaxes it.
             let logits_at = Instant::now();
-            for (row, &i) in step_idx.iter().enumerate() {
+            let mut row = 0usize;
+            for &(i, _, _, lg) in &spans {
+                if lg == ChunkLogits::None {
+                    continue;
+                }
                 let a = &mut active[i];
                 a.last_logits = logits.row(row).to_vec();
+                row += 1;
                 if a.first_token_at.is_none() && a.fed >= a.req.prompt.len() {
                     a.first_token_at = Some(logits_at);
                 }
@@ -273,10 +400,17 @@ pub fn run_batcher(
         while i < active.len() {
             let done = {
                 let a = &active[i];
-                a.fed >= a.req.prompt.len()
-                    && (a.generated.len() >= a.req.max_new
-                        || (cfg.stop_on_eos && a.generated.last() == Some(&EOS))
-                        || a.cache.len() + 1 >= model.cfg.max_seq)
+                // The KV-window clause must not fire on a fresh
+                // prefill-final sequence: its first token is already
+                // determined by the prefill logits and needs no KV slot,
+                // so the next iteration's decode pass emits it (and only
+                // then stops feeding).
+                a.truncated
+                    || (a.fed >= a.req.prompt.len()
+                        && (a.generated.len() >= a.req.max_new
+                            || (cfg.stop_on_eos && a.generated.last() == Some(&EOS))
+                            || (!a.generated.is_empty()
+                                && a.cache.len() + 1 >= model.cfg.max_seq)))
             };
             if done {
                 let a = active.swap_remove(i);
@@ -307,7 +441,11 @@ mod tests {
     use crate::model::synthetic_model;
     use std::sync::mpsc::channel;
 
-    fn serve(reqs: Vec<Request>, max_batch: usize, kv_tokens: usize) -> (Vec<Response>, BatchMetrics) {
+    fn serve_cfg(
+        reqs: Vec<Request>,
+        cfg: BatchConfig,
+        kv_tokens: usize,
+    ) -> (Vec<Response>, BatchMetrics) {
         let model = synthetic_model("micro", 51).unwrap();
         let pool = KvPool::new(kv_tokens, 8);
         let (tx, rx) = channel();
@@ -316,10 +454,13 @@ mod tests {
         }
         drop(tx);
         let mut out = Vec::new();
-        let cfg = BatchConfig { max_batch, ..Default::default() };
         let m = run_batcher(&model, &pool, &cfg, rx, |r| out.push(r));
         assert_eq!(pool.used_tokens(), 0, "all leases freed");
         (out, m)
+    }
+
+    fn serve(reqs: Vec<Request>, max_batch: usize, kv_tokens: usize) -> (Vec<Response>, BatchMetrics) {
+        serve_cfg(reqs, BatchConfig { max_batch, ..Default::default() }, kv_tokens)
     }
 
     fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
@@ -367,15 +508,38 @@ mod tests {
     }
 
     #[test]
-    fn impossible_kv_demand_rejected_not_livelocked() {
-        // Pool holds 4 tokens total; id 1 wants 2+10=12 — it can never be
-        // admitted. Before the fix it was re-queued forever and, once the
-        // channel closed with nothing active, run_batcher spun without
-        // terminating. Now it must be refused with an explicit rejected
-        // response while the feasible request still completes.
+    fn kv_lease_right_sizing_grows_and_truncates_gracefully() {
+        // Pool holds 4 tokens. id 0 fits outright. id 1 wants 2+10=12 —
+        // under the old upfront prompt+max_new policy this was refused as
+        // impossible; right-sized admission serves it and finishes it
+        // truncated when the pool cannot grow the lease any further.
         let reqs = vec![req(0, vec![2, 3], 2), req(1, vec![2, 3], 10)];
-        let (out, m) = serve(reqs, 4, 4);
+        let cfg = BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() };
+        let (out, m) = serve_cfg(reqs, cfg, 4);
         assert_eq!(out.len(), 2, "every request gets exactly one response");
+        for r in &out {
+            assert!(!r.rejected, "id {} must be served, not rejected", r.id);
+            assert!(!r.tokens.is_empty());
+        }
+        let truncated = out.iter().find(|r| r.id == 1).unwrap();
+        assert!(
+            truncated.tokens.len() < 10,
+            "a 4-token pool cannot hold 12 KV positions; got {} tokens",
+            truncated.tokens.len()
+        );
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.rejected_impossible, 0);
+        assert!(m.truncated_kv >= 1, "grow failure must be counted");
+    }
+
+    #[test]
+    fn impossible_min_footprint_still_rejected() {
+        // Pool holds 3 tokens total; a 3-token prompt needs 4 (prompt + one
+        // generated token) — impossible even with lease growth, so it must
+        // be refused up front while the feasible request completes.
+        let reqs = vec![req(0, vec![2, 3], 2), req(1, vec![2, 3, 4], 5)];
+        let (out, m) = serve(reqs, 4, 3);
+        assert_eq!(out.len(), 2);
         let served = out.iter().find(|r| r.id == 0).unwrap();
         assert!(!served.rejected);
         assert!(!served.tokens.is_empty());
@@ -388,12 +552,72 @@ mod tests {
     }
 
     #[test]
+    fn right_sized_leases_raise_concurrency_under_tight_pools() {
+        // Upfront prompt+max_new leasing needs 10 tokens per sequence
+        // (2+8), so a 12-token pool would serialize them. Right-sized
+        // admission (prompt + kv_reserve = 4) runs both concurrently and
+        // extends leases on demand during decode.
+        let model = synthetic_model("micro", 51).unwrap();
+        let pool = KvPool::new(12, 8);
+        let (tx, rx) = channel();
+        for i in 0..2u64 {
+            tx.send(req(i, vec![2, 3 + i as u32], 8)).unwrap();
+        }
+        drop(tx);
+        let cfg = BatchConfig {
+            max_batch: 4,
+            kv_reserve: 2,
+            stop_on_eos: false,
+            ..Default::default()
+        };
+        let mut out = Vec::new();
+        let m = run_batcher(&model, &pool, &cfg, rx, |r| out.push(r));
+        assert_eq!(pool.used_tokens(), 0);
+        assert_eq!(out.len(), 2);
+        assert_eq!(m.peak_batch, 2, "right-sizing must admit both up front");
+        assert!(m.kv_grows > 0, "decode must extend leases incrementally");
+        assert!(out.iter().all(|r| !r.rejected && !r.tokens.is_empty()));
+    }
+
+    #[test]
+    fn token_budget_bounds_mixed_iterations() {
+        // Five 20-token prompts under an 8-row budget: every iteration's
+        // ragged batch stays within the budget, prompts are fed as chunks
+        // (not one token per sequence per iteration), and everything
+        // completes.
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| {
+                req(i, (0..20).map(|t| 1 + ((t + i as usize) % 100) as u32).collect(), 4)
+            })
+            .collect();
+        let cfg = BatchConfig {
+            max_batch: 4,
+            token_budget: 8,
+            prefill_chunk: 4,
+            ..Default::default()
+        };
+        let (out, m) = serve_cfg(reqs, cfg, 10_000);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|r| !r.rejected && !r.tokens.is_empty() && r.tokens.len() <= 4));
+        assert!(
+            m.peak_iter_tokens <= 8,
+            "token budget violated: {} rows in one iteration",
+            m.peak_iter_tokens
+        );
+        assert_eq!(m.prefill_tokens, 100);
+        // 100 prompt tokens at ≤ 8 rows/iteration needs ≥ 13 iterations;
+        // well-formed chunking keeps it far under the 100 a per-token
+        // scheduler would take.
+        assert!(m.iterations >= 13, "iterations {}", m.iterations);
+        assert!(m.iterations < 60, "iterations {}", m.iterations);
+    }
+
+    #[test]
     fn over_long_prompt_rejected_at_admission() {
-        // micro's max_seq is 64. A 70-token prompt used to be prefilled
-        // token-by-token past the KV-cache bound (the done-check requires
-        // fed >= prompt.len() first), tripping the kv-cache-full assert.
-        // It must be rejected at admission instead; a prompt that just fits
-        // (63 tokens, room for exactly one generated token) still runs.
+        // micro's max_seq is 64. A 70-token prompt can never fit the KV
+        // window with one generated token, so it must be rejected at
+        // admission; a prompt that just fits (63 tokens, room for exactly
+        // one generated token) still runs.
         let long: Vec<u32> = (0..70).map(|i| 1 + (i % 100) as u32).collect();
         let edge: Vec<u32> = (0..63).map(|i| 1 + (i % 100) as u32).collect();
         let (out, m) =
@@ -421,11 +645,18 @@ mod tests {
     fn ttft_stamped_at_prefill_completion() {
         // TTFT is stamped when the prefill-final forward writes its logits
         // back. Invariants pinned: served responses have 0 < ttft <= total,
-        // and a longer prompt admitted in the same batch reaches its first
-        // token no earlier than a shorter one submitted at the same time.
+        // and a prompt whose prefill needs more iterations (narrow chunks
+        // force the 12-token prompt through ≥ 3 of them) reaches its first
+        // token no earlier than a short one admitted in the same batch.
         let short = req(0, vec![2, 3], 6);
         let long = req(1, (0..12).map(|i| 1 + i as u32).collect(), 6);
-        let (out, _) = serve(vec![short, long], 2, 10_000);
+        let cfg = BatchConfig {
+            max_batch: 2,
+            prefill_chunk: 4,
+            token_budget: 8,
+            ..Default::default()
+        };
+        let (out, _) = serve_cfg(vec![short, long], cfg, 10_000);
         let r_short = out.iter().find(|r| r.id == 0).unwrap();
         let r_long = out.iter().find(|r| r.id == 1).unwrap();
         for r in [r_short, r_long] {
@@ -443,11 +674,40 @@ mod tests {
 
     #[test]
     fn iteration_count_reflects_continuous_batching() {
-        // 4 requests × (2 prompt + 3 decode) ≈ 5 iterations if perfectly
-        // batched, not 20 — continuous batching interleaves.
+        // 4 requests × (2 prompt + 3 decode): chunked prefill feeds each
+        // whole prompt in one iteration, so ~4-5 iterations total — not 20.
         let reqs: Vec<Request> = (0..4).map(|i| req(i, vec![2, 3], 3)).collect();
         let (_, m) = serve(reqs, 4, 10_000);
         assert!(m.iterations < 12, "iterations {}", m.iterations);
         assert_eq!(m.prefill_tokens, 8);
+        assert!(m.peak_iter_tokens >= 4, "prompts should batch as chunks");
+    }
+
+    #[test]
+    fn chunked_serving_output_matches_per_token_prefill() {
+        // Scheduling policy must not change results: the same request
+        // stream served with chunk 1 (old behavior) and with wide chunks
+        // produces identical token streams.
+        let reqs = || -> Vec<Request> {
+            (0..3)
+                .map(|i| {
+                    req(i, (0..17).map(|t| 1 + ((t * 3 + i as usize) % 90) as u32).collect(), 5)
+                })
+                .collect()
+        };
+        let wide = BatchConfig { max_batch: 3, ..Default::default() };
+        let narrow = BatchConfig {
+            max_batch: 3,
+            prefill_chunk: 1,
+            token_budget: 3,
+            ..Default::default()
+        };
+        let (out_w, _) = serve_cfg(reqs(), wide, 10_000);
+        let (out_n, _) = serve_cfg(reqs(), narrow, 10_000);
+        for id in 0..3u64 {
+            let w = out_w.iter().find(|r| r.id == id).unwrap();
+            let n = out_n.iter().find(|r| r.id == id).unwrap();
+            assert_eq!(w.tokens, n.tokens, "id {id}: chunking changed output");
+        }
     }
 }

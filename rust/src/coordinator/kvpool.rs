@@ -2,9 +2,12 @@
 //!
 //! Accounts a fixed token budget across concurrent sequences; the batcher
 //! must hold a lease before admitting a request, which provides the
-//! backpressure that keeps the decode loop inside memory limits. Leases are
-//! RAII-free (explicit free) because they cross thread boundaries with the
-//! sequence state.
+//! backpressure that keeps the decode loop inside memory limits. Leases
+//! start right-sized (prompt + a small decode reserve) and are extended
+//! incrementally through [`KvPool::grow`] as decode proceeds — a failed
+//! grow is a normal signal (the batcher finishes the sequence truncated),
+//! not an error. Leases are RAII-free (explicit free) because they cross
+//! thread boundaries with the sequence state.
 
 use std::sync::{Arc, Mutex};
 

@@ -41,6 +41,13 @@ impl ServerRun {
         toks as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
+    /// Prompt tokens absorbed per wall second across all workers — the
+    /// chunked-prefill throughput the long-prompt TTFT benches track.
+    pub fn prefill_tok_s(&self) -> f64 {
+        let toks: usize = self.per_worker.iter().map(|m| m.prefill_tokens).sum();
+        toks as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
     /// Responses that were actually served (admission-rejected requests are
     /// in `responses` for completeness but carry no latency signal, so the
     /// percentile accessors exclude them).
@@ -160,6 +167,7 @@ mod tests {
         let total: usize = run.per_worker.iter().map(|m| m.requests).sum();
         assert_eq!(total, 12);
         assert!(run.throughput_tok_s() > 0.0);
+        assert!(run.prefill_tok_s() > 0.0);
         assert!(run.latency_percentile_ms(50.0) >= run.ttft_percentile_ms(50.0) * 0.5);
     }
 

@@ -2,8 +2,8 @@
 
 pub mod tasks;
 
-use crate::model::{Gpt, NullSink};
-use crate::tensor::Matrix;
+use crate::model::{Gpt, NullSink, PREFILL_CHUNK};
+use crate::tensor::{Matrix, QGemmArena};
 
 /// Numerically stable log-softmax of one logit row, returning only the value
 /// at `target`.
@@ -19,8 +19,14 @@ pub fn log_prob(logits: &[f32], target: usize) -> f64 {
 /// Perplexity of a token stream, evaluated in non-overlapping windows of
 /// `seq_len` (every position except the first of each window is scored —
 /// the standard strided PPL protocol).
+///
+/// Windows run through [`Gpt::forward_logits_chunked`] — the same ragged
+/// chunk-batch engine the serving path uses (packed quantized GEMMs over
+/// [`PREFILL_CHUNK`]-token tiles, one shared scratch arena across windows)
+/// — rather than a second teacher-forced implementation.
 pub fn perplexity(model: &Gpt, stream: &[u32], seq_len: usize) -> f64 {
     let seq_len = seq_len.min(model.cfg.max_seq);
+    let mut arena = QGemmArena::new();
     let mut nll = 0f64;
     let mut count = 0usize;
     let mut start = 0;
@@ -30,7 +36,7 @@ pub fn perplexity(model: &Gpt, stream: &[u32], seq_len: usize) -> f64 {
         if window.len() < 2 {
             break;
         }
-        let logits = model.forward_logits(window, &mut NullSink);
+        let logits = model.forward_logits_chunked(window, PREFILL_CHUNK, &mut arena);
         for t in 0..window.len() - 1 {
             nll -= log_prob(logits.row(t), window[t + 1] as usize);
             count += 1;
@@ -134,6 +140,38 @@ mod tests {
         let ppl = perplexity(&model, &stream, 32);
         let v = model.cfg.vocab_size as f64;
         assert!(ppl > v * 0.3 && ppl < v * 3.0, "ppl={ppl} vocab={v}");
+    }
+
+    #[test]
+    fn perplexity_chunked_matches_teacher_forced_reference() {
+        // The chunked serving-path PPL must agree with the same windowed
+        // protocol evaluated over the teacher-forced forward.
+        let model = synthetic_model("micro", 18).unwrap();
+        let corpus = crate::data::corpus(model.cfg.vocab_size, "wiki").unwrap();
+        let stream = corpus.stream(&mut Pcg64::seed(4), 160);
+        let seq_len = 32usize;
+        let got = perplexity(&model, &stream, seq_len);
+        let mut nll = 0f64;
+        let mut count = 0usize;
+        let mut start = 0;
+        while start + 2 <= stream.len() {
+            let end = (start + seq_len).min(stream.len());
+            let window = &stream[start..end];
+            if window.len() < 2 {
+                break;
+            }
+            let logits = model.forward_logits(window, &mut NullSink);
+            for t in 0..window.len() - 1 {
+                nll -= log_prob(logits.row(t), window[t + 1] as usize);
+                count += 1;
+            }
+            start = end;
+        }
+        let want = (nll / count.max(1) as f64).exp();
+        assert!(
+            (got - want).abs() / want < 1e-3,
+            "chunked ppl {got} vs teacher-forced {want}"
+        );
     }
 
     #[test]

@@ -7,18 +7,66 @@
 //! the LM head stay fp (standard PTQ practice).
 //!
 //! Three forward paths:
-//! - [`Gpt::forward_logits`] — teacher-forced batch forward (PPL/eval,
-//!   calibration capture via [`ActSink`]).
+//! - [`Gpt::forward_logits`] — teacher-forced batch forward (calibration
+//!   capture via [`ActSink`]).
 //! - [`Gpt::forward_step`] — single-sequence incremental decode against a
-//!   [`KvCache`] (greedy generation).
-//! - [`Gpt::forward_step_batch`] — the serving hot path: advance N
-//!   independent sequences by one token each, stacking every per-layer
-//!   linear into one batched (packed quantized) GEMM while attention runs
-//!   per-sequence against each sequence's own cache/position.
+//!   [`KvCache`]: the scalar token-at-a-time reference the batched paths
+//!   are property-tested against.
+//! - [`Gpt::forward_chunk_batch`] — the serving hot path: a **ragged chunk
+//!   batch**. Each sequence contributes a span of ≥ 1 tokens (decode
+//!   sequences one row, prefilling sequences up to a scheduler-chosen
+//!   chunk); all rows across all sequences stack into one batched (packed
+//!   quantized) GEMM per layer, while causal multi-token attention runs
+//!   per sequence against its own cache/position. Each sequence declares
+//!   via [`ChunkLogits`] which logits rows it needs, and the lm_head GEMM
+//!   runs only over those rows — non-final prefill rows never touch the
+//!   vocab projection. [`Gpt::forward_step_batch`] (all spans = 1,
+//!   [`ChunkLogits::Last`]) is the decode-only special case, and
+//!   [`Gpt::forward_logits_chunked`] (one sequence, [`ChunkLogits::All`])
+//!   is the eval/perplexity entry — greedy generation, perplexity, and the
+//!   continuous batcher all drive this single implementation.
 
 use super::config::{layer_key, ModelConfig};
 use super::linear::Linear;
 use crate::tensor::{Matrix, QGemmArena};
+
+/// Default prompt-chunk width for the chunked prefill paths
+/// (`generate_greedy`, `forward_logits_chunked`, the batcher's
+/// `prefill_chunk`). Wide enough that the packed GEMMs see token tiles, and
+/// small enough that a mid-prefill iteration stays latency-bounded.
+pub const PREFILL_CHUNK: usize = 32;
+
+/// Which logits rows of a sequence's span [`Gpt::forward_chunk_batch`]
+/// must return. The lm_head GEMM runs only over requested rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkLogits {
+    /// No rows — a mid-prefill chunk whose logits nobody reads.
+    None,
+    /// Only the span's last row — prefill-final chunks and decode steps.
+    Last,
+    /// Every row — teacher-forced eval (perplexity windows).
+    All,
+}
+
+/// One sequence's token span within a ragged chunk batch: the tokens to
+/// feed this iteration (decode = 1, prefill = up to the scheduler's chunk)
+/// and which of their logits rows the caller needs back.
+#[derive(Clone, Copy, Debug)]
+pub struct SeqChunk<'a> {
+    pub tokens: &'a [u32],
+    pub logits: ChunkLogits,
+}
+
+impl ChunkLogits {
+    /// Number of logits rows a span of `t` tokens contributes.
+    fn rows(self, t: usize) -> usize {
+        match self {
+            ChunkLogits::None => 0,
+            ChunkLogits::Last => 1,
+            ChunkLogits::All => t,
+        }
+    }
+}
 
 /// Receives the input activations of every quantizable linear layer.
 pub trait ActSink {
@@ -246,43 +294,59 @@ impl Gpt {
         h1.add(&ffn)
     }
 
-    /// One sequence's attention for layer `l` against its KV cache: split
-    /// the fused qkv row, rope at the cache position, append k/v, attend
-    /// over everything seen. Writes the concatenated head outputs into the
-    /// zeroed `out` (length d_model). Shared by the single-token and batched
-    /// decode paths so they stay numerically identical.
-    fn attn_cached(&self, l: usize, cache: &mut KvCache, qkv: &[f32], out: &mut [f32]) {
+    /// One sequence's causal multi-token attention for layer `l` against
+    /// its KV cache. `qkv` is the span's fused projection rows (t × 3d
+    /// row-major), `out` the zeroed output rows (t × d). Row `j` is roped
+    /// at position `cache.seen + j`; all K/V rows are appended to the cache
+    /// first, and row `j` then attends over cache positions `0..=seen+j` —
+    /// the span's future rows are masked simply by the loop bound. With
+    /// t = 1 this is exactly the single-token decode attention, so the
+    /// scalar [`Gpt::forward_step`] path and every chunked path stay
+    /// numerically identical per row.
+    fn attn_cached_span(&self, l: usize, cache: &mut KvCache, qkv: &[f32], out: &mut [f32]) {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let (nh, hd) = (cfg.n_heads, cfg.head_dim());
-        let pos = cache.seen;
-        let mut q = qkv[0..d].to_vec();
-        let mut k = qkv[d..2 * d].to_vec();
-        let v = &qkv[2 * d..3 * d];
-        for head in 0..nh {
-            let s = head * hd;
-            rope_inplace(&mut q[s..s + hd], pos, cfg.rope_base);
-            rope_inplace(&mut k[s..s + hd], pos, cfg.rope_base);
-        }
-        cache.keys[l].extend_from_slice(&k);
-        cache.values[l].extend_from_slice(v);
-        let t_seen = pos + 1;
-        let scale = 1.0 / (hd as f32).sqrt();
-        let mut scores = vec![0f32; t_seen];
-        for head in 0..nh {
-            let s = head * hd;
-            let qh = &q[s..s + hd];
-            for tk in 0..t_seen {
-                let krow = &cache.keys[l][tk * d + s..tk * d + s + hd];
-                scores[tk] = crate::tensor::dot(qh, krow) * scale;
+        let t = out.len() / d;
+        debug_assert_eq!(out.len(), t * d);
+        debug_assert_eq!(qkv.len(), t * 3 * d);
+        let pos0 = cache.seen;
+        debug_assert_eq!(cache.keys[l].len(), pos0 * d, "cache out of sync at layer {l}");
+        // Stage roped queries; append roped keys + raw values so in-span
+        // rows attend to each other through the same cache buffers.
+        let mut q = vec![0f32; t * d];
+        for j in 0..t {
+            let row = &qkv[j * 3 * d..(j + 1) * 3 * d];
+            let qj = &mut q[j * d..(j + 1) * d];
+            qj.copy_from_slice(&row[0..d]);
+            let mut k = row[d..2 * d].to_vec();
+            for head in 0..nh {
+                let s = head * hd;
+                rope_inplace(&mut qj[s..s + hd], pos0 + j, cfg.rope_base);
+                rope_inplace(&mut k[s..s + hd], pos0 + j, cfg.rope_base);
             }
-            softmax_inplace(&mut scores);
-            let orow = &mut out[s..s + hd];
-            for tk in 0..t_seen {
-                let w = scores[tk];
-                let vrow = &cache.values[l][tk * d + s..tk * d + s + hd];
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += w * vv;
+            cache.keys[l].extend_from_slice(&k);
+            cache.values[l].extend_from_slice(&row[2 * d..3 * d]);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0f32; pos0 + t];
+        for head in 0..nh {
+            let s = head * hd;
+            for j in 0..t {
+                let t_seen = pos0 + j + 1; // causal bound: row j sees nothing after itself
+                let qh = &q[j * d + s..j * d + s + hd];
+                for tk in 0..t_seen {
+                    let krow = &cache.keys[l][tk * d + s..tk * d + s + hd];
+                    scores[tk] = crate::tensor::dot(qh, krow) * scale;
+                }
+                softmax_inplace(&mut scores[..t_seen]);
+                let orow = &mut out[j * d + s..j * d + s + hd];
+                for tk in 0..t_seen {
+                    let w = scores[tk];
+                    let vrow = &cache.values[l][tk * d + s..tk * d + s + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
                 }
             }
         }
@@ -300,7 +364,7 @@ impl Gpt {
             let x_norm = rmsnorm(&h, &block.attn_norm, cfg.norm_eps);
             let qkv = block.qkv.forward_token(&x_norm);
             let mut attn_out = vec![0f32; d];
-            self.attn_cached(l, cache, &qkv, &mut attn_out);
+            self.attn_cached_span(l, cache, &qkv, &mut attn_out);
             let attn_proj = block.out_proj.forward_token(&attn_out);
             for (hi, p) in h.iter_mut().zip(&attn_proj) {
                 *hi += p;
@@ -323,56 +387,85 @@ impl Gpt {
         crate::tensor::matvec(&self.lm_head, &hn)
     }
 
-    /// Batched incremental decode — the continuous batcher's hot path.
+    /// Ragged chunk-batch forward — the serving hot path.
     ///
-    /// Advances `tokens.len()` independent sequences by one token each. All
-    /// per-layer linears run as ONE batched (packed quantized) GEMM over the
-    /// stacked token rows; attention runs per sequence against its own
-    /// cache/position via the same [`Gpt::attn_cached`] used by
-    /// [`Gpt::forward_step`], so per-sequence results match the scalar path.
-    /// `arena` holds the reusable activation-quantization scratch. Returns
-    /// logits, batch × vocab (row i belongs to `tokens[i]` / `caches[i]`).
-    pub fn forward_step_batch(
+    /// Advances `chunks.len()` independent sequences by their spans
+    /// (`chunks[i].tokens`, ≥ 1 each; decode sequences contribute one row,
+    /// prefilling sequences a multi-token chunk). All Σtᵢ rows across all
+    /// sequences stack into ONE batched (packed quantized) GEMM per layer
+    /// linear, while causal attention runs per sequence against its own
+    /// cache via [`Gpt::attn_cached_span`] — writing all span K/V positions
+    /// and masking each row's future — so per-row results match the scalar
+    /// [`Gpt::forward_step`] replay.
+    ///
+    /// Contract:
+    /// - `chunks[i]` is paired with `caches[i]`; spans must be non-empty
+    ///   and fit the KV window (`cache.seen + tᵢ ≤ max_seq`).
+    /// - Each cache's `seen` advances by its span length.
+    /// - Returns only the logits rows requested via [`ChunkLogits`]
+    ///   (rows × vocab), grouped by sequence in `chunks` order with each
+    ///   sequence's requested rows in position order. The final-norm +
+    ///   lm_head GEMM runs **only** over requested rows, so non-final
+    ///   prefill chunks skip the vocab projection entirely.
+    /// - `arena` holds the reusable activation-quantization scratch; the
+    ///   steady-state serving loop allocates no quantization buffers.
+    pub fn forward_chunk_batch(
         &self,
-        tokens: &[u32],
+        chunks: &[SeqChunk],
         caches: &mut [&mut KvCache],
         arena: &mut QGemmArena,
     ) -> Matrix {
         let cfg = &self.cfg;
-        let b = tokens.len();
-        assert_eq!(b, caches.len(), "token/cache count mismatch");
+        let b = chunks.len();
+        assert_eq!(b, caches.len(), "chunk/cache count mismatch");
         let d = cfg.d_model;
-        for c in caches.iter() {
-            assert!(c.seen < cfg.max_seq, "kv cache full");
+        let mut total = 0usize;
+        for (ch, c) in chunks.iter().zip(caches.iter()) {
+            assert!(!ch.tokens.is_empty(), "empty token span");
+            assert!(c.seen + ch.tokens.len() <= cfg.max_seq, "kv cache overflow");
+            total += ch.tokens.len();
         }
-        let mut h = Matrix::zeros(b, d);
-        for (i, &tok) in tokens.iter().enumerate() {
-            h.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        // Stack rows sequence-major; offsets[i] = first row of sequence i.
+        let mut offsets = Vec::with_capacity(b);
+        let mut h = Matrix::zeros(total, d);
+        let mut row = 0usize;
+        for ch in chunks {
+            offsets.push(row);
+            for &tok in ch.tokens {
+                h.row_mut(row).copy_from_slice(self.embed.row(tok as usize));
+                row += 1;
+            }
         }
         for (l, block) in self.blocks.iter().enumerate() {
             // ---- attention: one batched qkv/out_proj GEMM, per-seq attend ----
-            let mut x_norm = Matrix::zeros(b, d);
-            for i in 0..b {
-                rmsnorm_into(h.row(i), &block.attn_norm, cfg.norm_eps, x_norm.row_mut(i));
+            let mut x_norm = Matrix::zeros(total, d);
+            for r in 0..total {
+                rmsnorm_into(h.row(r), &block.attn_norm, cfg.norm_eps, x_norm.row_mut(r));
             }
-            let qkv = block.qkv.forward_with(&x_norm, arena); // b × 3d
-            let mut attn_out = Matrix::zeros(b, d);
-            for i in 0..b {
-                self.attn_cached(l, &mut *caches[i], qkv.row(i), attn_out.row_mut(i));
+            let qkv = block.qkv.forward_with(&x_norm, arena); // total × 3d
+            let mut attn_out = Matrix::zeros(total, d);
+            for (i, ch) in chunks.iter().enumerate() {
+                let (r0, t) = (offsets[i], ch.tokens.len());
+                self.attn_cached_span(
+                    l,
+                    &mut *caches[i],
+                    &qkv.data[r0 * 3 * d..(r0 + t) * 3 * d],
+                    &mut attn_out.data[r0 * d..(r0 + t) * d],
+                );
             }
             let attn_proj = block.out_proj.forward_with(&attn_out, arena);
             let h1 = h.add(&attn_proj);
             // ---- feed-forward: batched fc1/fc2, rowwise SwiGLU ----
-            let mut x_norm2 = Matrix::zeros(b, d);
-            for i in 0..b {
-                rmsnorm_into(h1.row(i), &block.ffn_norm, cfg.norm_eps, x_norm2.row_mut(i));
+            let mut x_norm2 = Matrix::zeros(total, d);
+            for r in 0..total {
+                rmsnorm_into(h1.row(r), &block.ffn_norm, cfg.norm_eps, x_norm2.row_mut(r));
             }
-            let gate_up = block.fc1.forward_with(&x_norm2, arena); // b × 2·dff
+            let gate_up = block.fc1.forward_with(&x_norm2, arena); // total × 2·dff
             let dff = cfg.d_ff;
-            let mut act = Matrix::zeros(b, dff);
-            for i in 0..b {
-                let gu = gate_up.row(i);
-                let arow = act.row_mut(i);
+            let mut act = Matrix::zeros(total, dff);
+            for r in 0..total {
+                let gu = gate_up.row(r);
+                let arow = act.row_mut(r);
                 for j in 0..dff {
                     arow[j] = silu(gu[j]) * gu[dff + j];
                 }
@@ -380,22 +473,100 @@ impl Gpt {
             let ffn = block.fc2.forward_with(&act, arena);
             h = h1.add(&ffn);
         }
-        for c in caches.iter_mut() {
-            c.seen += 1;
+        for (ch, c) in chunks.iter().zip(caches.iter_mut()) {
+            c.seen += ch.tokens.len();
         }
-        let mut hn = Matrix::zeros(b, d);
-        for i in 0..b {
-            rmsnorm_into(h.row(i), &self.final_norm, cfg.norm_eps, hn.row_mut(i));
+        // Final norm + lm_head only over the rows somebody asked for.
+        let n_logits: usize = chunks.iter().map(|ch| ch.logits.rows(ch.tokens.len())).sum();
+        let mut hn = Matrix::zeros(n_logits, d);
+        let mut out_r = 0usize;
+        for (i, ch) in chunks.iter().enumerate() {
+            let (r0, t) = (offsets[i], ch.tokens.len());
+            let rows = match ch.logits {
+                ChunkLogits::None => 0..0,
+                ChunkLogits::Last => (r0 + t - 1)..(r0 + t),
+                ChunkLogits::All => r0..(r0 + t),
+            };
+            for r in rows {
+                rmsnorm_into(h.row(r), &self.final_norm, cfg.norm_eps, hn.row_mut(out_r));
+                out_r += 1;
+            }
         }
         crate::tensor::matmul_bt(&hn, &self.lm_head)
     }
 
-    /// Greedy generation from a prompt; returns generated token ids.
-    pub fn generate_greedy(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    /// Batched incremental decode: advance N sequences by one token each —
+    /// the all-decode special case of [`Gpt::forward_chunk_batch`] (every
+    /// span is a single token, every sequence wants its logits row back).
+    /// Returns logits, batch × vocab (row i belongs to `tokens[i]` /
+    /// `caches[i]`).
+    pub fn forward_step_batch(
+        &self,
+        tokens: &[u32],
+        caches: &mut [&mut KvCache],
+        arena: &mut QGemmArena,
+    ) -> Matrix {
+        let chunks: Vec<SeqChunk> = tokens
+            .iter()
+            .map(|t| SeqChunk { tokens: std::slice::from_ref(t), logits: ChunkLogits::Last })
+            .collect();
+        self.forward_chunk_batch(&chunks, caches, arena)
+    }
+
+    /// Teacher-forced logits for every position (T × vocab) via the chunked
+    /// serving path: feed `tokens` in [`PREFILL_CHUNK`]-bounded spans with
+    /// [`ChunkLogits::All`] against a fresh KV cache. Same results as
+    /// [`Gpt::forward_logits`] to f32 tolerance, but runs the packed batched
+    /// GEMMs with caller-owned scratch — the perplexity eval entry point.
+    pub fn forward_logits_chunked(
+        &self,
+        tokens: &[u32],
+        chunk: usize,
+        arena: &mut QGemmArena,
+    ) -> Matrix {
+        assert!(chunk > 0, "chunk must be >= 1");
+        assert!(tokens.len() <= self.cfg.max_seq, "sequence {} > max_seq", tokens.len());
+        let vocab = self.cfg.vocab_size;
         let mut cache = KvCache::new(&self.cfg);
+        let mut out = Matrix::zeros(tokens.len(), vocab);
+        let mut fed = 0usize;
+        while fed < tokens.len() {
+            let end = (fed + chunk).min(tokens.len());
+            let span = [SeqChunk { tokens: &tokens[fed..end], logits: ChunkLogits::All }];
+            let logits = self.forward_chunk_batch(&span, &mut [&mut cache], arena);
+            out.data[fed * vocab..end * vocab].copy_from_slice(&logits.data);
+            fed = end;
+        }
+        out
+    }
+
+    /// Greedy generation from a prompt; returns generated token ids.
+    ///
+    /// The prompt prefills through [`Gpt::forward_chunk_batch`] in
+    /// [`PREFILL_CHUNK`]-token spans (only the final span pays the lm_head
+    /// GEMM), then decode continues one token at a time through the same
+    /// engine — a single code path with the continuous batcher instead of a
+    /// second scalar implementation.
+    pub fn generate_greedy(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        if prompt.is_empty() {
+            return Vec::new();
+        }
+        let mut cache = KvCache::new(&self.cfg);
+        let mut arena = QGemmArena::new();
         let mut logits = Vec::new();
-        for &t in prompt {
-            logits = self.forward_step(t, &mut cache);
+        let mut fed = 0usize;
+        while fed < prompt.len() {
+            let end = (fed + PREFILL_CHUNK).min(prompt.len());
+            let last = end == prompt.len();
+            let span = [SeqChunk {
+                tokens: &prompt[fed..end],
+                logits: if last { ChunkLogits::Last } else { ChunkLogits::None },
+            }];
+            let out = self.forward_chunk_batch(&span, &mut [&mut cache], &mut arena);
+            if last {
+                logits = out.row(0).to_vec();
+            }
+            fed = end;
         }
         let mut out = Vec::with_capacity(max_new);
         for _ in 0..max_new {
@@ -404,7 +575,8 @@ impl Gpt {
             }
             let next = argmax(&logits) as u32;
             out.push(next);
-            logits = self.forward_step(next, &mut cache);
+            let span = [SeqChunk { tokens: std::slice::from_ref(&next), logits: ChunkLogits::Last }];
+            logits = self.forward_chunk_batch(&span, &mut [&mut cache], &mut arena).row(0).to_vec();
         }
         out
     }
@@ -517,6 +689,125 @@ mod tests {
                 .zip(&last[i])
                 .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
             assert!(d < 1e-5, "seq {i}: maxdiff {d}");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_step_reference() {
+        // forward_chunk_batch over any chunking of a prompt must reproduce
+        // the token-by-token forward_step logits at the final position.
+        let model = synthetic_model("micro", 21).unwrap();
+        let prompt: Vec<u32> = (0..19).map(|i| 1 + (i * 13 % 120) as u32).collect();
+        let mut ref_cache = KvCache::new(&model.cfg);
+        let mut want = Vec::new();
+        for &t in &prompt {
+            want = model.forward_step(t, &mut ref_cache);
+        }
+        for chunk in [1usize, 3, 16, prompt.len()] {
+            let mut cache = KvCache::new(&model.cfg);
+            let mut arena = crate::tensor::QGemmArena::new();
+            let mut got = Vec::new();
+            let mut fed = 0;
+            while fed < prompt.len() {
+                let end = (fed + chunk).min(prompt.len());
+                let last = end == prompt.len();
+                let span = [SeqChunk {
+                    tokens: &prompt[fed..end],
+                    logits: if last { ChunkLogits::Last } else { ChunkLogits::None },
+                }];
+                let out = model.forward_chunk_batch(&span, &mut [&mut cache], &mut arena);
+                if last {
+                    assert_eq!(out.rows, 1, "Last must return exactly one row");
+                    got = out.row(0).to_vec();
+                } else {
+                    assert_eq!(out.rows, 0, "None must skip the lm_head entirely");
+                }
+                fed = end;
+            }
+            assert_eq!(cache.seen, prompt.len());
+            assert_eq!(cache.bytes(), ref_cache.bytes(), "chunking changed KV size");
+            let d = want
+                .iter()
+                .zip(&got)
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-4, "chunk {chunk}: maxdiff {d}");
+        }
+    }
+
+    #[test]
+    fn forward_logits_chunked_matches_teacher_forced() {
+        let model = synthetic_model("micro", 22).unwrap();
+        let tokens: Vec<u32> = vec![3, 17, 42, 9, 100, 55, 7, 70, 31];
+        let want = model.forward_logits(&tokens, &mut NullSink);
+        let mut arena = crate::tensor::QGemmArena::new();
+        for chunk in [1usize, 4, tokens.len()] {
+            let got = model.forward_logits_chunked(&tokens, chunk, &mut arena);
+            assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+            let d = got.max_diff(&want);
+            assert!(d < 2e-3, "chunk {chunk}: maxdiff {d}");
+        }
+    }
+
+    #[test]
+    fn ragged_mixed_prefill_decode_batch_matches_scalar() {
+        // One iteration mixing a decode row, a mid-prefill chunk (no
+        // logits), and a prefill-final chunk must agree row-for-row with
+        // the scalar forward_step replay of each sequence.
+        let model = synthetic_model("micro", 23).unwrap();
+        let decode_hist: Vec<u32> = vec![5, 9, 13];
+        let decode_tok = 21u32;
+        let mid: Vec<u32> = (0..11).map(|i| 2 + i as u32).collect();
+        let fin: Vec<u32> = vec![40, 41, 42, 43, 44];
+        // Scalar references.
+        let mut c_dec = KvCache::new(&model.cfg);
+        for &t in &decode_hist {
+            model.forward_step(t, &mut c_dec);
+        }
+        let mut c_dec_ref = c_dec.clone();
+        let want_dec = model.forward_step(decode_tok, &mut c_dec_ref);
+        let mut c_fin_ref = KvCache::new(&model.cfg);
+        let mut want_fin = Vec::new();
+        for &t in &fin {
+            want_fin = model.forward_step(t, &mut c_fin_ref);
+        }
+        let mut c_mid_ref = KvCache::new(&model.cfg);
+        for &t in &mid[..7] {
+            model.forward_step(t, &mut c_mid_ref);
+        }
+        // Ragged batch: decode row + first 7 tokens of `mid` + all of `fin`.
+        let mut c_mid = KvCache::new(&model.cfg);
+        let mut c_fin = KvCache::new(&model.cfg);
+        let spans = [
+            SeqChunk { tokens: std::slice::from_ref(&decode_tok), logits: ChunkLogits::Last },
+            SeqChunk { tokens: &mid[..7], logits: ChunkLogits::None },
+            SeqChunk { tokens: &fin, logits: ChunkLogits::Last },
+        ];
+        let mut arena = crate::tensor::QGemmArena::new();
+        let out = model.forward_chunk_batch(
+            &spans,
+            &mut [&mut c_dec, &mut c_mid, &mut c_fin],
+            &mut arena,
+        );
+        assert_eq!(out.rows, 2, "Last + None + Last = 2 logits rows");
+        assert_eq!(c_dec.seen, decode_hist.len() + 1);
+        assert_eq!(c_mid.seen, 7);
+        assert_eq!(c_fin.seen, fin.len());
+        for (row, want) in [(0usize, &want_dec), (1, &want_fin)] {
+            let d = out
+                .row(row)
+                .iter()
+                .zip(want)
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-4, "row {row}: maxdiff {d}");
+        }
+        // The mid-prefill cache must hold exactly the scalar-path K/V.
+        assert_eq!(c_mid.bytes(), c_mid_ref.bytes());
+        for l in 0..model.cfg.n_layers {
+            let d = c_mid.keys[l]
+                .iter()
+                .zip(&c_mid_ref.keys[l])
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-4, "layer {l} keys diverged: {d}");
         }
     }
 

@@ -16,6 +16,11 @@
 //! auto-detects the host's best kernel, [`Linear::quantized_with`] pins one
 //! explicitly.
 //!
+//! `forward_with` is the chunked serving entry: `Gpt::forward_chunk_batch`
+//! stacks every active sequence's token span (decode rows + prefill
+//! chunks) into one call per layer, so prompt prefill hits the packed
+//! kernels as wide token tiles rather than skinny single rows.
+//!
 //! `QuantizedLinear::forward_matrix` in `methods` remains the reference
 //! semantics the kernel must match; [`forward_quant_token`] here is the
 //! scalar (token-at-a-time) reference the serving benches compare against.

@@ -9,6 +9,6 @@ pub mod init;
 pub mod linear;
 
 pub use config::{layer_key, ModelConfig, LINEAR_NAMES};
-pub use gpt::{argmax, ActSink, Block, Gpt, KvCache, NullSink};
+pub use gpt::{argmax, ActSink, Block, ChunkLogits, Gpt, KvCache, NullSink, SeqChunk, PREFILL_CHUNK};
 pub use init::{inject_outliers, load_model, load_or_synthetic, save_model, synthetic_model};
 pub use linear::{forward_quant_token, Linear};

@@ -165,11 +165,19 @@ impl PackedQWeight {
 
 /// Reusable per-caller scratch for the batched forward: smoothed fp
 /// activations, int activation codes, per-token scales, low-rank
-/// intermediate. Buffers are `resize`d per call, so capacity sticks at the
-/// high-water mark and the steady-state decode loop performs no allocation.
+/// intermediate. Buffer **capacity is grow-only** (high-water, never
+/// released) and lengths are only extended when a call actually needs more
+/// rows — never re-filled just because call shapes vary (ragged prefill
+/// chunks mix decode-sized and chunk-sized calls through one arena) — so
+/// the steady-state serving loop neither allocates nor memsets
+/// quantization scratch. Callers read only the `t`-row prefix of each
+/// buffer; stale tails are never observed because every consumed element
+/// is overwritten first (smoothing copy / `quantize_token_into` /
+/// per-token scale stores).
 #[derive(Default)]
 pub struct QGemmArena {
-    /// Smoothed fp activations, t × d_in row-major.
+    /// Smoothed fp activations, t × d_in row-major (prefix of the
+    /// high-water buffer).
     xs: Vec<f32>,
     /// Per-token int codes, t rows at the packed weight's `k_pad` stride
     /// (tails beyond `d_in` are zeroed; the kernels' zero weight padding
@@ -179,6 +187,11 @@ pub struct QGemmArena {
     tok_scales: Vec<f32>,
     /// Low-rank intermediate z = X'·L_Bᵀ, t × r.
     z: Vec<f32>,
+    /// Code-row stride the `codes` buffer was last laid out for. The
+    /// stride invariant (`stride ≥ d_in`, i.e. the packed layout can hold
+    /// a full activation row) is asserted once per layout switch here, not
+    /// per call.
+    stride: usize,
 }
 
 impl QGemmArena {
@@ -187,14 +200,24 @@ impl QGemmArena {
     }
 
     fn prepare(&mut self, t: usize, d_in: usize, stride: usize, int_path: bool) {
-        // resize-only (no clear): stale prefixes are fine because every
-        // element is overwritten before it is read (smoothing copy /
-        // quantize_token_into / per-token scale stores), and skipping the
-        // re-fill avoids an O(t·d_in) memset per layer per decode iteration.
-        self.xs.resize(t * d_in, 0.0);
+        // Grow-only (no clear, no shrink): growth pays its fill once at a
+        // new high-water mark; afterwards varying chunk sizes reuse the
+        // buffers as-is instead of resizing an O(t·d_in) region per layer
+        // per iteration.
+        if self.xs.len() < t * d_in {
+            self.xs.resize(t * d_in, 0.0);
+        }
         if int_path {
-            self.codes.resize(t * stride, 0);
-            self.tok_scales.resize(t, 1.0);
+            if self.stride != stride {
+                assert!(stride >= d_in, "packed stride {stride} < d_in {d_in}");
+                self.stride = stride;
+            }
+            if self.codes.len() < t * stride {
+                self.codes.resize(t * stride, 0);
+            }
+            if self.tok_scales.len() < t {
+                self.tok_scales.resize(t, 1.0);
+            }
         }
     }
 }
@@ -212,8 +235,9 @@ pub fn qgemm_forward(
     forward_rows(pw, &x.data, x.rows, arena, threads)
 }
 
-/// Single-token forward through the same packed kernel (serving decode with
-/// batch 1, `generate_greedy`, the KV-cache prefill path).
+/// Single-token forward through the same packed kernel (the scalar
+/// `forward_step` reference path; serving and prefill go through
+/// [`qgemm_forward`] with chunked token batches).
 pub fn qgemm_forward_token(pw: &PackedQWeight, x: &[f32], arena: &mut QGemmArena) -> Vec<f32> {
     assert_eq!(x.len(), pw.d_in, "qgemm input width");
     forward_rows(pw, x, 1, arena, 1).data
@@ -244,7 +268,7 @@ fn forward_rows(
                 }
             }
         }
-        None => arena.xs.copy_from_slice(x),
+        None => arena.xs[..t * d_in].copy_from_slice(x),
     }
 
     let mut y = Matrix::zeros(t, d_out);
@@ -259,11 +283,13 @@ fn forward_rows(
             dst[d_in..].fill(0); // SIMD pad lanes (≤ k_step-1 bytes per row)
         }
         // 3.+4. packed integer main GEMM with fused scale application,
-        //       dispatched to the kernel this weight was packed for.
-        int_main(pw, &arena.codes, &arena.tok_scales, t, &mut y, threads);
+        //       dispatched to the kernel this weight was packed for. The
+        //       kernels see exactly the t-row prefix of the grow-only
+        //       buffers.
+        int_main(pw, &arena.codes[..t * stride], &arena.tok_scales[..t], t, &mut y, threads);
     } else {
         // A16: fp activations × int codes, row scale applied at write-out.
-        fp_main(pw, &arena.xs, t, &mut y, threads);
+        fp_main(pw, &arena.xs[..t * d_in], t, &mut y, threads);
     }
 
     // 5. fp outlier columns act on the *unquantized* smoothed activations.
@@ -277,9 +303,16 @@ fn forward_rows(
     }
 
     // 6. low-rank branch on the smoothed fp activations: Y += (X'·L_Bᵀ)·L_Aᵀ,
-    //    both skinny GEMMs through the blocked matmul_bt kernel.
+    //    both skinny GEMMs through the blocked matmul_bt kernel. The Matrix
+    //    wrapper needs an exact t-row shape, so the buffer is truncated to
+    //    t rows (len-only; capacity is never released, so this stays
+    //    allocation-free) and handed back shortened — `prepare` re-extends
+    //    the length lazily only when a later call actually needs more rows,
+    //    so constant-shape steady-state decode never pays a re-fill.
     if let Some((la, lb)) = &pw.low_rank {
-        let xs_m = Matrix { rows: t, cols: d_in, data: std::mem::take(&mut arena.xs) };
+        let mut xs_data = std::mem::take(&mut arena.xs);
+        xs_data.truncate(t * d_in);
+        let xs_m = Matrix { rows: t, cols: d_in, data: xs_data };
         let mut z = Matrix { rows: t, cols: lb.rows, data: std::mem::take(&mut arena.z) };
         z.data.clear();
         z.data.resize(t * lb.rows, 0.0);
@@ -573,6 +606,30 @@ mod tests {
         let y_s2 = qgemm_forward(&scalar, &x, &mut arena, 1);
         assert_eq!(y_s1, y_s2, "arena stride switch corrupted the scalar path");
         assert_eq!(y_a, qgemm_forward(&auto, &x, &mut QGemmArena::new(), 1));
+    }
+
+    #[test]
+    fn arena_grow_only_reuse_with_low_rank_branch() {
+        // The low-rank branch temporarily truncates the grow-only xs buffer
+        // to an exact t-row Matrix; ragged call shapes sharing one arena
+        // must stay bitwise identical to fresh-arena runs.
+        let mut rng = Pcg64::seed(609);
+        let (d_in, d_out, r) = (40, 24, 5);
+        let codes = random_codes(&mut rng, d_out * d_in, 7);
+        let scales: Vec<f32> = (0..d_out).map(|_| 0.02 + rng.f32() * 0.03).collect();
+        let la = Matrix::randn(&mut rng, d_out, r, 0.05);
+        let lb = Matrix::randn(&mut rng, r, d_in, 0.05);
+        let pw =
+            PackedQWeight::pack(&codes, d_out, d_in, 4, 8, &scales, None, &[], Some((&la, &lb)));
+        let mut arena = QGemmArena::new();
+        let xb = Matrix::randn(&mut rng, 48, d_in, 1.0);
+        let _ = qgemm_forward(&pw, &xb, &mut arena, 1);
+        for t in [1usize, 7, 3] {
+            let xs = Matrix::randn(&mut rng, t, d_in, 1.0);
+            let y1 = qgemm_forward(&pw, &xs, &mut arena, 1);
+            let y2 = qgemm_forward(&pw, &xs, &mut QGemmArena::new(), 1);
+            assert_eq!(y1, y2, "t={t}");
+        }
     }
 
     #[test]

@@ -296,6 +296,135 @@ fn prop_simd_and_scalar_kernels_bitwise_equal() {
 }
 
 #[test]
+fn prop_chunked_prefill_logits_match_token_by_token_reference() {
+    // The tentpole equivalence: prefilling a prompt through
+    // forward_chunk_batch — for any chunking — must reproduce the
+    // token-by-token forward_step logits at the prompt-final position,
+    // across the serving method grid and both activation widths. The int
+    // path is bitwise identical per row by construction; the fp pieces
+    // (attention, A16 main GEMM, low-rank branch) agree to f32 tolerance.
+    use aser::calib::CalibConfig;
+    use aser::coordinator::{calibrate_model, run_ptq};
+    use aser::model::{synthetic_model, ChunkLogits, KvCache, SeqChunk};
+    use aser::tensor::QGemmArena;
+
+    let base = synthetic_model("micro", 913).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 31 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+    let prompt: Vec<u32> = (0..21).map(|i| 1 + ((i * 7) % 120) as u32).collect();
+    for method in ["rtn", "aser", "aser-er", "smoothquant"] {
+        for prec in [Precision::w4a8(), Precision::w4a16()] {
+            let m = method_by_name(method, RankPolicy::Fixed(6), 4).unwrap();
+            let model = synthetic_model("micro", 913).unwrap();
+            let (qm, _) = run_ptq(model, &stats, m.as_ref(), prec, 0).unwrap();
+            let mut ref_cache = KvCache::new(&qm.cfg);
+            let mut want = Vec::new();
+            for &t in &prompt {
+                want = qm.forward_step(t, &mut ref_cache);
+            }
+            let wmax = want.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1.0);
+            for chunk in [1usize, 3, 16, prompt.len()] {
+                let mut cache = KvCache::new(&qm.cfg);
+                let mut arena = QGemmArena::new();
+                let mut got = Vec::new();
+                let mut fed = 0;
+                while fed < prompt.len() {
+                    let end = (fed + chunk).min(prompt.len());
+                    let last = end == prompt.len();
+                    let span = [SeqChunk {
+                        tokens: &prompt[fed..end],
+                        logits: if last { ChunkLogits::Last } else { ChunkLogits::None },
+                    }];
+                    let out = qm.forward_chunk_batch(&span, &mut [&mut cache], &mut arena);
+                    if last {
+                        got = out.row(0).to_vec();
+                    }
+                    fed = end;
+                }
+                assert_eq!(cache.seen, prompt.len());
+                let d = want
+                    .iter()
+                    .zip(&got)
+                    .fold(0f32, |mx, (&a, &b)| mx.max((a - b).abs()));
+                assert!(d < 1e-4 * wmax, "{method} {prec} chunk {chunk}: maxdiff {d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mixed_iterations_respect_token_budget() {
+    // Scheduling safety over random request streams, budgets, and chunk
+    // widths: every request completes, the pool drains, and no iteration
+    // ever feeds more rows than max(token_budget, decode rows) — decode
+    // rows are planned unconditionally (one per decoding sequence, bounded
+    // by max_batch), prompt chunks only from the leftover budget.
+    use aser::coordinator::{BatchConfig, KvPool, Request};
+    use aser::model::synthetic_model;
+    use std::time::Instant;
+    let model = synthetic_model("micro", 502).unwrap();
+    check(
+        "token_budget_respected",
+        &cfg(8),
+        |rng| {
+            let n = 1 + rng.below(6);
+            let budget = 1 + rng.below(24);
+            let chunk = 1 + rng.below(12);
+            let reqs: Vec<(Vec<u32>, usize)> = (0..n)
+                .map(|_| {
+                    let plen = 1 + rng.below(40);
+                    (
+                        (0..plen).map(|_| 2 + rng.below(120) as u32).collect(),
+                        1 + rng.below(8),
+                    )
+                })
+                .collect();
+            (budget, chunk, reqs)
+        },
+        |_| Vec::new(),
+        |(budget, chunk, reqs)| {
+            let max_batch = 4usize;
+            let pool = KvPool::new(10_000, 8);
+            let (tx, rx) = std::sync::mpsc::channel();
+            for (i, (prompt, max_new)) in reqs.iter().enumerate() {
+                tx.send(Request {
+                    id: i as u64,
+                    prompt: prompt.clone(),
+                    max_new: *max_new,
+                    submitted: Instant::now(),
+                })
+                .unwrap();
+            }
+            drop(tx);
+            let bcfg = BatchConfig {
+                max_batch,
+                token_budget: *budget,
+                prefill_chunk: *chunk,
+                ..Default::default()
+            };
+            let mut n_resp = 0usize;
+            let metrics = aser::coordinator::batcher::run_batcher(&model, &pool, &bcfg, rx, |r| {
+                assert!(!r.rejected, "feasible request {} rejected", r.id);
+                n_resp += 1;
+            });
+            let row_bound = (*budget).max(max_batch);
+            all(vec![
+                ensure(n_resp == reqs.len(), || {
+                    format!("{n_resp} responses for {} requests", reqs.len())
+                }),
+                ensure(pool.used_tokens() == 0, || "kv leak".into()),
+                ensure(metrics.peak_iter_tokens <= row_bound, || {
+                    format!(
+                        "peak {} rows exceeds bound {row_bound} (budget {budget}, chunk {chunk})",
+                        metrics.peak_iter_tokens
+                    )
+                }),
+            ])
+        },
+    );
+}
+
+#[test]
 fn prop_kv_pool_never_overcommits() {
     use aser::coordinator::KvPool;
     check(
@@ -335,10 +464,13 @@ fn prop_kv_pool_never_overcommits() {
 fn prop_batcher_preserves_request_ids() {
     // Termination + completeness on ARBITRARY finite request streams,
     // including impossible ones: prompts longer than the KV window
-    // (micro's max_seq is 64), KV demands beyond the whole (small) pool,
-    // and empty prompts. Every id must come back exactly once — served or
-    // explicitly rejected — and the pool must drain. Before the admission
-    // rejection fix, impossible requests livelocked run_batcher.
+    // (micro's max_seq is 64), prompts whose minimum footprint (prompt +
+    // one token) exceeds the whole (small) pool, and empty prompts.
+    // Requests whose *total* demand exceeds the pool but whose minimum
+    // footprint fits are served truncated under right-sized leasing.
+    // Every id must come back exactly once — served or explicitly
+    // rejected — and the pool must drain. Before the admission rejection
+    // fix, impossible requests livelocked run_batcher.
     use aser::coordinator::{BatchConfig, KvPool, Request};
     use aser::model::synthetic_model;
     use std::time::Instant;
