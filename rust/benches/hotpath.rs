@@ -1,13 +1,15 @@
 //! Hot-path microbenches (§Perf): the quantized linear forward in all its
 //! variants vs the dense fp32 GEMM of the same shape, the packed batched
 //! qgemm kernel vs the scalar token loop, the auto-detected SIMD int8
-//! microkernel vs the pinned scalar microkernel, the int8 dot kernel, and
+//! microkernel vs the pinned scalar microkernel, the attention span kernel
+//! (SIMD vs scalar over head-major KV tiles), the int8 dot kernel, and
 //! SVD variants. `cargo bench --offline` (criterion is not vendored;
 //! `util::stats::bench` provides warmup + robust summaries).
 //!
 //! Emits machine-readable `BENCH_hotpath.json` (median ns per benchmark,
-//! the batched-vs-scalar speedups, and per-kernel int-GEMM speedups under
-//! `int_kernel_speedup`) for cross-PR perf tracking — compare runs with
+//! the batched-vs-scalar speedups, per-kernel int-GEMM speedups under
+//! `int_kernel_speedup`, and per-kernel attention timings + speedups under
+//! `attn`) for cross-PR perf tracking — compare runs with
 //! `scripts/bench_diff`.
 
 use aser::methods::aser::Aser;
@@ -15,7 +17,10 @@ use aser::methods::{LayerCalib, PtqMethod, RankPolicy};
 use aser::model::linear::{dot_i8, forward_quant_token};
 use aser::model::Linear;
 use aser::quant::Precision;
-use aser::tensor::{detect_kernel, matmul, matvec, Matrix, QGemmArena, QKernelKind};
+use aser::tensor::{
+    attn_head_span, detect_attn_kernel, detect_kernel, matmul, matvec, AttnKernelKind, Matrix,
+    QGemmArena, QKernelKind,
+};
 use aser::util::json::{num, obj, s, Json};
 use aser::util::stats::{bench, black_box, Summary};
 use std::time::Duration;
@@ -142,6 +147,72 @@ fn main() {
         }
     }
 
+    // ---- attention span kernel: SIMD vs scalar over head-major KV tiles
+    //      (one (sequence, head) work item of long-context decode /
+    //      teacher-forced prefill; ctx = cached positions) ----
+    let attn_kernel = detect_attn_kernel();
+    let mut attn_speedups: Vec<Json> = Vec::new();
+    println!("attention kernel: {attn_kernel} (scalar reference pinned for comparison)");
+    for (hd, ctx, t) in [(64usize, 1024usize, 1usize), (64, 1024, 32), (32, 1024, 1)] {
+        let slen = ctx + t;
+        let q: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+        let keys: Vec<f32> = (0..slen * hd).map(|_| rng.normal() * 0.3).collect();
+        let values: Vec<f32> = (0..slen * hd).map(|_| rng.normal()).collect();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0f32; slen];
+        let mut out = vec![0f32; t * hd];
+        let label = format!("hd{hd} ctx{ctx} t{t}");
+        let s_scalar = bench(&format!("attn span scalar {label}"), budget, || {
+            attn_head_span(
+                AttnKernelKind::Scalar,
+                black_box(&q),
+                hd,
+                0,
+                hd,
+                ctx,
+                t,
+                black_box(&keys),
+                black_box(&values),
+                scale,
+                &mut scores,
+                &mut out,
+            );
+            black_box(&out);
+        });
+        record(&format!("attn_span_scalar {label}"), &s_scalar);
+        if attn_kernel == AttnKernelKind::Scalar {
+            println!("  -> no SIMD attention kernel on this host; skipping comparison");
+            continue;
+        }
+        let s_simd = bench(&format!("attn span {attn_kernel} {label}"), budget, || {
+            attn_head_span(
+                attn_kernel,
+                black_box(&q),
+                hd,
+                0,
+                hd,
+                ctx,
+                t,
+                black_box(&keys),
+                black_box(&values),
+                scale,
+                &mut scores,
+                &mut out,
+            );
+            black_box(&out);
+        });
+        record(&format!("attn_span_{attn_kernel} {label}"), &s_simd);
+        let sp = s_scalar.median_ns / s_simd.median_ns;
+        println!("  -> attention kernel {attn_kernel} vs scalar ({label}): {sp:.2}x");
+        attn_speedups.push(obj(vec![
+            ("shape", s(&label)),
+            ("kernel", s(attn_kernel.name())),
+            ("scalar_median_ns", num(s_scalar.median_ns)),
+            ("simd_median_ns", num(s_simd.median_ns)),
+            ("speedup", num(sp)),
+        ]));
+    }
+
     // ---- int8 dot kernel ----
     let a: Vec<i8> = (0..1024).map(|i| (i % 15 - 7) as i8).collect();
     let b: Vec<i8> = (0..1024).map(|i| (i % 13 - 6) as i8).collect();
@@ -194,6 +265,13 @@ fn main() {
         ("records", Json::Arr(records)),
         ("batched_vs_scalar", Json::Arr(speedups)),
         ("int_kernel_speedup", Json::Arr(kernel_speedups)),
+        (
+            "attn",
+            obj(vec![
+                ("kernel", s(attn_kernel.name())),
+                ("attn_kernel_speedup", Json::Arr(attn_speedups)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_hotpath.json", report.to_string_pretty())
         .expect("write BENCH_hotpath.json");

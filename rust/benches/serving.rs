@@ -9,8 +9,10 @@
 //!
 //! Emits machine-readable `BENCH_serving.json` so the perf trajectory is
 //! tracked across PRs: per-config tokens/s and p50/p95 TTFT, the
-//! batched-vs-scalar speedup per batch size, `prefill` rows, and
-//! `long_prompt_ttft` rows (`scripts/bench_diff` gates on the latter).
+//! batched-vs-scalar speedup per batch size, `prefill` rows,
+//! `long_prompt_ttft` rows, and `attn` rows (long-context decode tok/s at
+//! ≥ 1k cached positions — the vectorized attention engine's workload;
+//! `scripts/bench_diff` gates on the latter two).
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
@@ -109,6 +111,7 @@ fn main() {
     let mut speedup_rows: Vec<Json> = Vec::new();
     let mut prefill_rows: Vec<Json> = Vec::new();
     let mut long_prompt_rows: Vec<Json> = Vec::new();
+    let mut attn_rows: Vec<Json> = Vec::new();
 
     for variant in ["fp16", "aser-w4a8"] {
         let model = if variant == "fp16" {
@@ -199,6 +202,63 @@ fn main() {
             ]));
         }
 
+        // ---- attn: long-context decode throughput (the vectorized
+        //      attention engine's acceptance surface — ≥ 1k cached
+        //      positions, where attention dominates the iteration) ----
+        {
+            let cached = 1024usize;
+            let batch = 4usize;
+            let steps = 48usize;
+            let mut long_base = synthetic_model("micro", 7).unwrap();
+            long_base.cfg.max_seq = 1536; // stretch the KV window; weights unchanged
+            long_base.refresh_derived();
+            let long_model = if variant == "fp16" {
+                long_base
+            } else {
+                let method = method_by_name("aser", RankPolicy::Fixed(8), 4).unwrap();
+                run_ptq(long_base, &stats, method.as_ref(), Precision::w4a8(), 0).unwrap().0
+            };
+            let mut arena = QGemmArena::new();
+            let mut caches: Vec<KvCache> = (0..batch)
+                .map(|_| KvCache::with_capacity(&long_model.cfg, cached + steps + 1))
+                .collect();
+            let prompt: Vec<u32> = (0..cached)
+                .map(|i| ((i * 13) % (long_model.cfg.vocab_size - 1) + 1) as u32)
+                .collect();
+            let mut fed = 0usize;
+            while fed < cached {
+                let end = (fed + 128).min(cached);
+                let spans: Vec<SeqChunk> = (0..batch)
+                    .map(|_| SeqChunk { tokens: &prompt[fed..end], logits: ChunkLogits::None })
+                    .collect();
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                long_model.forward_chunk_batch(&spans, &mut refs, &mut arena);
+                fed = end;
+            }
+            let toks = vec![1u32; batch];
+            {
+                // Warm the arena + allocator before timing.
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                black_box(long_model.forward_step_batch(&toks, &mut refs, &mut arena));
+            }
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                black_box(long_model.forward_step_batch(&toks, &mut refs, &mut arena));
+            }
+            let tok_s = (batch * steps) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "long-context decode ({cached} cached, batch {batch}): {tok_s:>10.1} tok/s"
+            );
+            attn_rows.push(obj(vec![
+                ("variant", s(variant)),
+                ("batch", num(batch as f64)),
+                ("cached_positions", num(cached as f64)),
+                ("decode_steps", num(steps as f64)),
+                ("decode_tok_s", num(tok_s)),
+            ]));
+        }
+
         // ---- long-prompt serving TTFT: chunked schedule vs the old
         //      one-token-per-sequence-per-iteration schedule ----
         println!(
@@ -245,6 +305,7 @@ fn main() {
         ("batched_vs_scalar", Json::Arr(speedup_rows)),
         ("prefill", Json::Arr(prefill_rows)),
         ("long_prompt_ttft", Json::Arr(long_prompt_rows)),
+        ("attn", Json::Arr(attn_rows)),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");

@@ -29,6 +29,10 @@
 //! and decode rows — mid-prefill chunks skip the vocab projection). This is
 //! where long-prompt TTFT is won: prompt tokens hit the packed int8
 //! kernels as wide token tiles instead of one skinny row per iteration.
+//! Between those GEMMs, per-sequence attention fans out across
+//! (sequence × head) work items on the head-major KV tiles
+//! (`Gpt::attn_layer` + `tensor::attn_kernel`), so long-context decode
+//! iterations keep every core busy instead of walking sequences serially.
 //!
 //! ## KV leases (admission + growth)
 //!
@@ -243,7 +247,10 @@ pub fn run_batcher(
             match pool.alloc(want) {
                 Some(lease) => {
                     active.push(Active {
-                        cache: KvCache::new(&model.cfg),
+                        // Pre-size the tiles to the lease so prefill never
+                        // repacks mid-flight; decode-time lease growth
+                        // re-sizes lazily on the next span append.
+                        cache: KvCache::with_capacity(&model.cfg, lease.tokens),
                         lease,
                         fed: 0,
                         generated: Vec::new(),

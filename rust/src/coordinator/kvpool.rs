@@ -1,4 +1,36 @@
-//! KV-cache slot pool — serving memory manager.
+//! KV-cache memory: the per-sequence [`KvCache`] (head-major tile storage)
+//! and the [`KvPool`] slot pool that accounts it across concurrent
+//! sequences.
+//!
+//! ## `KvCache` tile layout
+//!
+//! Keys and values are stored **head-major**: per layer, per head, one
+//! contiguous `cap × hd` panel (position-major within the panel), with a
+//! layer's `nh` panels concatenated into one buffer:
+//!
+//! ```text
+//! keys[layer] = [ head 0: pos 0 | pos 1 | … | pos cap-1 ]
+//!               [ head 1: pos 0 | pos 1 | … | pos cap-1 ] …
+//! ```
+//!
+//! so position `p` of head `h` lives at `(h·cap + p)·hd`. Consecutive cache
+//! positions of one head are `hd` floats apart — the attention score sweep
+//! and weighted-V accumulation (`tensor::attn_kernel`) stream each panel as
+//! one unit-stride run. The previous layout interleaved all heads within a
+//! d-model row, which forced a `d_model` stride between positions and
+//! defeated SIMD loads.
+//!
+//! Capacity grows in [`KV_TILE`]-position quanta via [`KvCache::reserve`]
+//! (amortized doubling; growth repacks each head panel at the new stride).
+//! The batcher pre-sizes caches to their admission lease
+//! ([`KvCache::with_capacity`]) so steady-state prefill/decode never
+//! repacks; decode-time lease growth re-sizes lazily on the next append.
+//! [`KvCache::truncate`] is a length-only rollback (prefix reuse keeps the
+//! allocation), and [`KvCache::bytes`] reports the **live** footprint
+//! (`seen` positions) — capacity is accounted by the pool's leases, not
+//! per-cache.
+//!
+//! ## `KvPool`
 //!
 //! Accounts a fixed token budget across concurrent sequences; the batcher
 //! must hold a lease before admitting a request, which provides the
@@ -9,7 +41,133 @@
 //! not an error. Leases are RAII-free (explicit free) because they cross
 //! thread boundaries with the sequence state.
 
+use crate::model::ModelConfig;
 use std::sync::{Arc, Mutex};
+
+/// Positions per capacity-grow quantum of a [`KvCache`] panel.
+pub const KV_TILE: usize = 64;
+
+/// Per-layer KV cache for one sequence, stored as head-major tiles (see the
+/// module doc for the layout). `seen` is the number of positions whose K/V
+/// are live; the forward paths write span positions `seen..seen+t` first
+/// and advance `seen` once per multi-layer forward.
+#[derive(Clone)]
+pub struct KvCache {
+    /// keys[layer]: `nh` head panels of `cap × hd`, concatenated.
+    keys: Vec<Vec<f32>>,
+    /// values[layer]: same layout as `keys`.
+    values: Vec<Vec<f32>>,
+    /// Live positions (decoded so far).
+    pub seen: usize,
+    cap: usize,
+    nh: usize,
+    hd: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache::with_layers(cfg, cfg.n_layers)
+    }
+
+    /// A cache pre-sized to `positions` (the batcher sizes to the admission
+    /// lease so prefill never repacks mid-flight).
+    pub fn with_capacity(cfg: &ModelConfig, positions: usize) -> KvCache {
+        let mut c = KvCache::new(cfg);
+        c.reserve(positions);
+        c
+    }
+
+    /// Single-layer scratch cache for the teacher-forced path, which runs
+    /// one block's span attention at a time (always at cache layer 0).
+    pub(crate) fn span_scratch(cfg: &ModelConfig) -> KvCache {
+        KvCache::with_layers(cfg, 1)
+    }
+
+    fn with_layers(cfg: &ModelConfig, n_layers: usize) -> KvCache {
+        KvCache {
+            keys: vec![Vec::new(); n_layers],
+            values: vec![Vec::new(); n_layers],
+            seen: 0,
+            cap: 0,
+            nh: cfg.n_heads,
+            hd: cfg.d_model / cfg.n_heads,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Positions the tiles can hold before the next repack.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Live KV bytes (`seen` positions across all layers). Capacity beyond
+    /// `seen` is pool-accounted via the sequence's lease, not counted here.
+    pub fn bytes(&self) -> usize {
+        2 * self.keys.len() * self.seen * self.nh * self.hd * 4
+    }
+
+    /// Ensure the tiles can hold `positions`. Growth rounds up to the next
+    /// [`KV_TILE`] multiple of at least double the current capacity and
+    /// repacks every head panel at the new `cap` stride (full panels are
+    /// copied, so pending span rows beyond `seen` survive too).
+    pub fn reserve(&mut self, positions: usize) {
+        if positions <= self.cap {
+            return;
+        }
+        let new_cap = positions.max(self.cap * 2).div_ceil(KV_TILE) * KV_TILE;
+        let (nh, hd, old_cap) = (self.nh, self.hd, self.cap);
+        let repack = |bufs: &mut Vec<Vec<f32>>| {
+            for buf in bufs.iter_mut() {
+                let mut nb = vec![0f32; nh * new_cap * hd];
+                if old_cap > 0 {
+                    for h in 0..nh {
+                        nb[h * new_cap * hd..h * new_cap * hd + old_cap * hd]
+                            .copy_from_slice(&buf[h * old_cap * hd..(h + 1) * old_cap * hd]);
+                    }
+                }
+                *buf = nb;
+            }
+        };
+        repack(&mut self.keys);
+        repack(&mut self.values);
+        self.cap = new_cap;
+    }
+
+    /// Mutable K/V rows for (layer, head, position) — the append target of
+    /// the span staging pass. The caller must have [`KvCache::reserve`]d
+    /// `pos + 1` positions.
+    #[inline]
+    pub fn kv_row_mut(&mut self, l: usize, h: usize, pos: usize) -> (&mut [f32], &mut [f32]) {
+        debug_assert!(pos < self.cap, "kv write at {pos} beyond capacity {}", self.cap);
+        let off = (h * self.cap + pos) * self.hd;
+        let hd = self.hd;
+        (&mut self.keys[l][off..off + hd], &mut self.values[l][off..off + hd])
+    }
+
+    /// The first `n` positions of (layer, head)'s key and value panels as
+    /// contiguous `n × hd` tiles — what the attention kernels stream.
+    #[inline]
+    pub fn head_tiles(&self, l: usize, h: usize, n: usize) -> (&[f32], &[f32]) {
+        debug_assert!(n <= self.cap, "kv read of {n} beyond capacity {}", self.cap);
+        let off = h * self.cap * self.hd;
+        let len = n * self.hd;
+        (&self.keys[l][off..off + len], &self.values[l][off..off + len])
+    }
+
+    /// Drop everything after position `n` (prefix reuse). Length-only: the
+    /// tiles keep their allocation, and stale rows beyond `seen` are never
+    /// read (every read is bounded by a caller-passed position count).
+    pub fn truncate(&mut self, n: usize) {
+        self.seen = self.seen.min(n);
+    }
+}
 
 #[derive(Debug)]
 struct PoolState {
@@ -159,6 +317,77 @@ mod tests {
         let pool = KvPool::for_model(&cfg, 1 << 20);
         assert_eq!(pool.bytes_per_token, 2 * 2 * 64 * 4);
         assert_eq!(pool.capacity_tokens(), (1 << 20) / (2 * 2 * 64 * 4));
+    }
+
+    #[test]
+    fn kv_cache_tile_layout_roundtrip() {
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
+        let mut c = KvCache::new(&cfg);
+        assert_eq!(c.capacity(), 0);
+        let positions = 5usize;
+        c.reserve(positions);
+        assert!(c.capacity() >= positions);
+        assert_eq!(c.capacity() % KV_TILE, 0);
+        // Write a distinct pattern per (layer, head, pos, lane) and read it
+        // back through the tile accessor.
+        let val = |l: usize, h: usize, p: usize, i: usize| {
+            (l * 1000 + h * 100 + p * 10 + i) as f32
+        };
+        for l in 0..cfg.n_layers {
+            for p in 0..positions {
+                for h in 0..nh {
+                    let (k, v) = c.kv_row_mut(l, h, p);
+                    for i in 0..hd {
+                        k[i] = val(l, h, p, i);
+                        v[i] = -val(l, h, p, i);
+                    }
+                }
+            }
+        }
+        c.seen = positions;
+        for l in 0..cfg.n_layers {
+            for h in 0..nh {
+                let (kt, vt) = c.head_tiles(l, h, positions);
+                assert_eq!(kt.len(), positions * hd);
+                for p in 0..positions {
+                    for i in 0..hd {
+                        assert_eq!(kt[p * hd + i], val(l, h, p, i), "L{l} h{h} p{p} i{i}");
+                        assert_eq!(vt[p * hd + i], -val(l, h, p, i));
+                    }
+                }
+            }
+        }
+        // Growth repacks panels at the new stride without losing contents.
+        let old_cap = c.capacity();
+        c.reserve(old_cap + 1);
+        assert!(c.capacity() > old_cap);
+        for l in 0..cfg.n_layers {
+            for h in 0..nh {
+                let (kt, _) = c.head_tiles(l, h, positions);
+                for p in 0..positions {
+                    for i in 0..hd {
+                        assert_eq!(kt[p * hd + i], val(l, h, p, i), "post-grow L{l} h{h} p{p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv_cache_bytes_and_truncate() {
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let mut c = KvCache::with_capacity(&cfg, 10);
+        assert_eq!(c.bytes(), 0, "no live positions yet");
+        c.seen = 4;
+        let live4 = c.bytes();
+        assert_eq!(live4, 2 * cfg.n_layers * 4 * cfg.d_model * 4);
+        c.truncate(2);
+        assert_eq!(c.len(), 2);
+        assert!(c.bytes() < live4);
+        assert!(c.capacity() >= 10, "truncate keeps the allocation");
+        c.truncate(7); // truncating above seen is a no-op
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //! - [`Gpt::forward_logits`] — teacher-forced batch forward (calibration
 //!   capture via [`ActSink`]).
 //! - [`Gpt::forward_step`] — single-sequence incremental decode against a
-//!   [`KvCache`]: the scalar token-at-a-time reference the batched paths
-//!   are property-tested against.
+//!   [`KvCache`]: the token-at-a-time reference the batched paths are
+//!   property-tested against.
 //! - [`Gpt::forward_chunk_batch`] — the serving hot path: a **ragged chunk
 //!   batch**. Each sequence contributes a span of ≥ 1 tokens (decode
 //!   sequences one row, prefilling sequences up to a scheduler-chosen
@@ -25,10 +25,39 @@
 //!   [`Gpt::forward_logits_chunked`] (one sequence, [`ChunkLogits::All`])
 //!   is the eval/perplexity entry — greedy generation, perplexity, and the
 //!   continuous batcher all drive this single implementation.
+//!
+//! ## Attention engine
+//!
+//! All three paths share ONE attention implementation: [`Gpt::attn_layer`],
+//! a span-batch driver over the head-major KV tiles of
+//! [`coordinator::kvpool::KvCache`](crate::coordinator::kvpool). Per layer
+//! it (1) stages RoPE-rotated queries into grow-only arena scratch
+//! ([`AttnArena`], riding inside [`QGemmArena`]) and appends rotated keys +
+//! raw values to each sequence's tiles, then (2) fans the q·K sweep /
+//! softmax / weighted-V inner loops out as **(sequence × head) work items**
+//! over `scope_map` — decode iterations use every core between the
+//! per-layer GEMMs instead of walking sequences serially — and (3)
+//! scatters the per-head output tiles back into row-major activation rows.
+//! The inner loops are the runtime-dispatched SIMD kernels of
+//! [`tensor::attn_kernel`](crate::tensor::attn_kernel) (AVX2 FMA / NEON,
+//! scalar kept as the bitwise reference). Work items share no
+//! accumulators, so results are bitwise identical across thread counts and
+//! batch shapes for a fixed kernel. RoPE inverse frequencies are
+//! precomputed once per model ([`Gpt::rope_inv_freq`]); the per-position
+//! `sin_cos` stays at use time, bitwise-equal to the per-call `powf` path
+//! it replaced.
+//!
+//! The teacher-forced path runs the same driver against a single-layer
+//! scratch cache (`KvCache::span_scratch`) — causal masking falls out of
+//! the span bound — so calibration and perplexity eval ride the same
+//! kernels instead of a second scalar attention loop.
 
 use super::config::{layer_key, ModelConfig};
 use super::linear::Linear;
+use crate::coordinator::kvpool::KvCache;
+use crate::tensor::attn_kernel::{self, attn_head_span, AttnArena, AttnKernelKind};
 use crate::tensor::{Matrix, QGemmArena};
+use crate::util::pool::{scope_map, SendPtr};
 
 /// Default prompt-chunk width for the chunked prefill paths
 /// (`generate_greedy`, `forward_logits_chunked`, the batcher's
@@ -94,51 +123,10 @@ pub struct Gpt {
     pub blocks: Vec<Block>,
     pub final_norm: Vec<f32>,
     pub lm_head: Matrix, // vocab × d
-}
-
-#[derive(Clone)]
-/// Per-layer KV cache for incremental decoding.
-pub struct KvCache {
-    /// keys[layer]: seen × d_model (heads packed contiguously).
-    pub keys: Vec<Vec<f32>>,
-    pub values: Vec<Vec<f32>>,
-    pub seen: usize,
-    d_model: usize,
-}
-
-impl KvCache {
-    pub fn new(cfg: &ModelConfig) -> KvCache {
-        KvCache {
-            keys: vec![Vec::new(); cfg.n_layers],
-            values: vec![Vec::new(); cfg.n_layers],
-            seen: 0,
-            d_model: cfg.d_model,
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.seen
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.seen == 0
-    }
-
-    /// Bytes held (for the serving cache manager's accounting).
-    pub fn bytes(&self) -> usize {
-        self.keys.iter().chain(&self.values).map(|v| v.len() * 4).sum()
-    }
-
-    /// Drop everything after position `n` (prefix reuse).
-    pub fn truncate(&mut self, n: usize) {
-        for k in &mut self.keys {
-            k.truncate(n * self.d_model);
-        }
-        for v in &mut self.values {
-            v.truncate(n * self.d_model);
-        }
-        self.seen = self.seen.min(n);
-    }
+    /// Precomputed RoPE inverse frequencies (`head_dim/2` entries), derived
+    /// from `cfg` by [`Gpt::assemble`]; call [`Gpt::refresh_derived`] after
+    /// mutating `cfg.rope_base` / `cfg.n_heads` in place.
+    pub rope_inv_freq: Vec<f32>,
 }
 
 // ---------------------------------------------------------------------------
@@ -177,7 +165,10 @@ fn silu(x: f32) -> f32 {
 }
 
 /// Apply rotary position embedding to one head vector in place
-/// (half-split convention, matching the JAX build path).
+/// (half-split convention, matching the JAX build path). Recomputes the
+/// inverse frequency per lane — the hot paths use
+/// [`rope_inplace_cached`] with a [`rope_inv_freq`] table instead; the two
+/// are bitwise equivalent (property-pinned).
 pub fn rope_inplace(v: &mut [f32], pos: usize, base: f32) {
     let hd = v.len();
     let half = hd / 2;
@@ -192,20 +183,52 @@ pub fn rope_inplace(v: &mut [f32], pos: usize, base: f32) {
     }
 }
 
-fn softmax_inplace(x: &mut [f32]) {
-    let max = x.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-    let mut sum = 0f32;
-    for v in x.iter_mut() {
-        *v = (*v - max).exp();
-        sum += *v;
-    }
-    let inv = 1.0 / sum;
-    for v in x.iter_mut() {
-        *v *= inv;
+/// The RoPE inverse-frequency table for head dim `hd`:
+/// `inv_freq[i] = base^(-2i/hd)` — the exact per-lane expression
+/// [`rope_inplace`] evaluates, so cached and uncached rotation are bitwise
+/// equal. One table serves the whole model (all layers share `rope_base`
+/// and head dim); built once per [`Gpt`], retiring the per-position,
+/// per-head, per-layer `powf` from the hot paths.
+pub fn rope_inv_freq(base: f32, hd: usize) -> Vec<f32> {
+    (0..hd / 2).map(|i| base.powf(-2.0 * i as f32 / hd as f32)).collect()
+}
+
+/// [`rope_inplace`] with the `powf` hoisted into a precomputed `inv_freq`
+/// table; `sin_cos` stays per position.
+pub fn rope_inplace_cached(v: &mut [f32], pos: usize, inv_freq: &[f32]) {
+    let half = v.len() / 2;
+    debug_assert_eq!(inv_freq.len(), half, "inv_freq table length != head_dim/2");
+    for (i, &freq) in inv_freq.iter().enumerate() {
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let a = v[i];
+        let b = v[half + i];
+        v[i] = a * cos - b * sin;
+        v[half + i] = a * sin + b * cos;
     }
 }
 
 impl Gpt {
+    /// Assemble a model from its parts, building the derived tables (the
+    /// RoPE inverse-frequency table — one per model, shared by all layers).
+    pub fn assemble(
+        cfg: ModelConfig,
+        embed: Matrix,
+        blocks: Vec<Block>,
+        final_norm: Vec<f32>,
+        lm_head: Matrix,
+    ) -> Gpt {
+        let rope_inv_freq = rope_inv_freq(cfg.rope_base, cfg.head_dim());
+        Gpt { cfg, embed, blocks, final_norm, lm_head, rope_inv_freq }
+    }
+
+    /// Recompute derived tables after an in-place `cfg` mutation (benches
+    /// and tests stretch `max_seq` or reinterpret `n_heads`; the RoPE table
+    /// depends on `rope_base` and head dim).
+    pub fn refresh_derived(&mut self) {
+        self.rope_inv_freq = rope_inv_freq(self.cfg.rope_base, self.cfg.head_dim());
+    }
+
     /// Teacher-forced forward: logits for every position (T × vocab).
     pub fn forward_logits(&self, tokens: &[u32], sink: &mut dyn ActSink) -> Matrix {
         let h = self.forward_hidden(tokens, sink);
@@ -221,57 +244,50 @@ impl Gpt {
         for (t, &tok) in tokens.iter().enumerate() {
             h.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
         }
+        // One single-layer scratch cache + attention arena reused across
+        // every block: `seen` stays 0 and each layer fully overwrites rows
+        // 0..t, so the tiles need no reset between layers.
+        let mut scratch = KvCache::span_scratch(&self.cfg);
+        let mut arena = AttnArena::new();
+        let kind = attn_kernel::detect_attn_kernel();
         for (l, block) in self.blocks.iter().enumerate() {
-            h = self.block_forward(block, l, &h, sink);
+            h = self.block_forward(block, l, &h, sink, &mut scratch, &mut arena, kind);
         }
         rmsnorm_rows(&h, &self.final_norm, self.cfg.norm_eps)
     }
 
-    fn block_forward(&self, block: &Block, l: usize, h: &Matrix, sink: &mut dyn ActSink) -> Matrix {
+    #[allow(clippy::too_many_arguments)]
+    fn block_forward(
+        &self,
+        block: &Block,
+        l: usize,
+        h: &Matrix,
+        sink: &mut dyn ActSink,
+        scratch: &mut KvCache,
+        arena: &mut AttnArena,
+        kind: AttnKernelKind,
+    ) -> Matrix {
         let cfg = &self.cfg;
         let (t_len, d) = (h.rows, cfg.d_model);
-        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
 
-        // ---- attention ----
+        // ---- attention: the serving span engine against the caller's
+        //      single-layer scratch cache (positions = row indices; the
+        //      span's causal bound masks future rows, so this IS
+        //      teacher-forced causal attention) — one implementation,
+        //      same SIMD kernels ----
         let x_norm = rmsnorm_rows(h, &block.attn_norm, cfg.norm_eps);
         sink.record(&layer_key(l, "qkv_proj"), &x_norm);
         let qkv = block.qkv.forward(&x_norm); // T × 3d
-        // Split and apply rope per head.
-        let mut q = qkv.cols_slice(0, d);
-        let mut k = qkv.cols_slice(d, 2 * d);
-        let v = qkv.cols_slice(2 * d, 3 * d);
-        for t in 0..t_len {
-            for head in 0..nh {
-                let s = head * hd;
-                rope_inplace(&mut q.row_mut(t)[s..s + hd], t, cfg.rope_base);
-                rope_inplace(&mut k.row_mut(t)[s..s + hd], t, cfg.rope_base);
-            }
-        }
-        // Causal attention per head.
-        let scale = 1.0 / (hd as f32).sqrt();
         let mut attn_out = Matrix::zeros(t_len, d);
-        let mut scores = vec![0f32; t_len];
-        for head in 0..nh {
-            let s = head * hd;
-            for tq in 0..t_len {
-                let qrow = &q.row(tq)[s..s + hd];
-                for tk in 0..=tq {
-                    scores[tk] = crate::tensor::dot(qrow, &k.row(tk)[s..s + hd]) * scale;
-                }
-                softmax_inplace(&mut scores[..=tq]);
-                let orow = &mut attn_out.row_mut(tq)[s..s + hd];
-                for tk in 0..=tq {
-                    let w = scores[tk];
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let vrow = &v.row(tk)[s..s + hd];
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += w * vv;
-                    }
-                }
-            }
-        }
+        self.attn_layer(
+            0, // scratch cache layer index (rope depends only on position)
+            &[(0, t_len)],
+            &mut [&mut *scratch],
+            &qkv,
+            &mut attn_out,
+            arena,
+            kind,
+        );
         sink.record(&layer_key(l, "out_proj"), &attn_out);
         let attn_proj = block.out_proj.forward(&attn_out);
         let h1 = h.add(&attn_proj);
@@ -294,61 +310,151 @@ impl Gpt {
         h1.add(&ffn)
     }
 
-    /// One sequence's causal multi-token attention for layer `l` against
-    /// its KV cache. `qkv` is the span's fused projection rows (t × 3d
-    /// row-major), `out` the zeroed output rows (t × d). Row `j` is roped
-    /// at position `cache.seen + j`; all K/V rows are appended to the cache
-    /// first, and row `j` then attends over cache positions `0..=seen+j` —
-    /// the span's future rows are masked simply by the loop bound. With
-    /// t = 1 this is exactly the single-token decode attention, so the
-    /// scalar [`Gpt::forward_step`] path and every chunked path stay
-    /// numerically identical per row.
-    fn attn_cached_span(&self, l: usize, cache: &mut KvCache, qkv: &[f32], out: &mut [f32]) {
+    /// One layer's causal span attention over a ragged batch — the single
+    /// attention implementation every forward path drives.
+    ///
+    /// `spans[i] = (r0, t)` names sequence `i`'s rows `r0..r0+t` of `qkv`
+    /// (fused projections, rows × 3d) and `out` (rows × d, fully
+    /// overwritten on those rows); `caches[i]` is its KV cache. Three
+    /// passes:
+    ///
+    /// 1. **Stage** (serial): RoPE-rotate each span row's query into
+    ///    `arena.q` and append the rotated key + raw value to the cache's
+    ///    head-major tiles at positions `seen..seen+t` (`seen` itself
+    ///    advances once per forward, after all layers). In-span rows attend
+    ///    to each other through the same tiles.
+    /// 2. **Sweep** (parallel): one work item per (sequence, head) runs
+    ///    [`attn_head_span`] — q·K scores, softmax, weighted-V — over the
+    ///    contiguous tiles, fanned out via `scope_map` when the batch's
+    ///    q·K MAC count clears [`attn_kernel::auto_threads`]'s floor. Items
+    ///    write disjoint arena ranges and share no accumulators, so
+    ///    results are bitwise identical across thread counts.
+    /// 3. **Scatter** (serial): copy each head tile back into the
+    ///    row-major output rows.
+    ///
+    /// Row `j` of a span attends over positions `0..=seen+j`: the span's
+    /// future rows are masked purely by the loop bound, so with t = 1 this
+    /// is exactly single-token decode attention and every chunking of a
+    /// prompt is numerically identical per row.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_layer(
+        &self,
+        l: usize,
+        spans: &[(usize, usize)],
+        caches: &mut [&mut KvCache],
+        qkv: &Matrix,
+        out: &mut Matrix,
+        arena: &mut AttnArena,
+        kind: AttnKernelKind,
+    ) {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let (nh, hd) = (cfg.n_heads, cfg.head_dim());
-        let t = out.len() / d;
-        debug_assert_eq!(out.len(), t * d);
-        debug_assert_eq!(qkv.len(), t * 3 * d);
-        let pos0 = cache.seen;
-        debug_assert_eq!(cache.keys[l].len(), pos0 * d, "cache out of sync at layer {l}");
-        // Stage roped queries; append roped keys + raw values so in-span
-        // rows attend to each other through the same cache buffers.
-        let mut q = vec![0f32; t * d];
-        for j in 0..t {
-            let row = &qkv[j * 3 * d..(j + 1) * 3 * d];
-            let qj = &mut q[j * d..(j + 1) * d];
-            qj.copy_from_slice(&row[0..d]);
-            let mut k = row[d..2 * d].to_vec();
-            for head in 0..nh {
-                let s = head * hd;
-                rope_inplace(&mut qj[s..s + hd], pos0 + j, cfg.rope_base);
-                rope_inplace(&mut k[s..s + hd], pos0 + j, cfg.rope_base);
-            }
-            cache.keys[l].extend_from_slice(&k);
-            cache.values[l].extend_from_slice(&row[2 * d..3 * d]);
+        // A stale table would rotate the wrong lane count (silently wrong
+        // attention, or an out-of-bounds rotation) — keep this loud in
+        // release builds too.
+        assert_eq!(
+            self.rope_inv_freq.len(),
+            hd / 2,
+            "stale RoPE table: call Gpt::refresh_derived() after mutating cfg"
+        );
+        debug_assert_eq!(spans.len(), caches.len());
+        debug_assert_eq!(qkv.cols, 3 * d);
+        debug_assert_eq!(out.cols, d);
+        debug_assert!(spans.iter().all(|&(r0, t)| r0 + t <= qkv.rows));
+        let total: usize = spans.iter().map(|&(_, t)| t).sum();
+        if total == 0 {
+            return;
         }
-        let scale = 1.0 / (hd as f32).sqrt();
-        let mut scores = vec![0f32; pos0 + t];
-        for head in 0..nh {
-            let s = head * hd;
+
+        // Work items and their disjoint arena ranges: one (sequence, head)
+        // item gets a `pos0 + t` score row and a `t × hd` output tile.
+        // arena.items[w] = (seq, head, scores offset, tile offset).
+        arena.items.clear();
+        let (mut scores_len, mut tiles_len, mut macs) = (0usize, 0usize, 0usize);
+        for (i, &(_, t)) in spans.iter().enumerate() {
+            if t == 0 {
+                continue;
+            }
+            let slen = caches[i].seen + t;
+            for head in 0..nh {
+                arena.items.push((i, head, scores_len, tiles_len + head * t * hd));
+                scores_len += slen;
+            }
+            tiles_len += t * d;
+            macs += t * slen * hd * nh;
+        }
+        // q is indexed by absolute qkv row, so size it to the full matrix
+        // (== total rows for the contiguous spans every caller builds).
+        arena.ensure(qkv.rows * d, scores_len, tiles_len);
+
+        // -- stage roped queries; append roped K + raw V tiles --
+        for (&(r0, t), cache) in spans.iter().zip(caches.iter_mut()) {
+            let pos0 = cache.seen;
+            cache.reserve(pos0 + t);
             for j in 0..t {
-                let t_seen = pos0 + j + 1; // causal bound: row j sees nothing after itself
-                let qh = &q[j * d + s..j * d + s + hd];
-                for tk in 0..t_seen {
-                    let krow = &cache.keys[l][tk * d + s..tk * d + s + hd];
-                    scores[tk] = crate::tensor::dot(qh, krow) * scale;
-                }
-                softmax_inplace(&mut scores[..t_seen]);
-                let orow = &mut out[j * d + s..j * d + s + hd];
-                for tk in 0..t_seen {
-                    let w = scores[tk];
-                    let vrow = &cache.values[l][tk * d + s..tk * d + s + hd];
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += w * vv;
-                    }
+                let row = qkv.row(r0 + j);
+                let qrow = &mut arena.q[(r0 + j) * d..(r0 + j + 1) * d];
+                qrow.copy_from_slice(&row[0..d]);
+                for head in 0..nh {
+                    let s = head * hd;
+                    rope_inplace_cached(&mut qrow[s..s + hd], pos0 + j, &self.rope_inv_freq);
+                    let (kdst, vdst) = cache.kv_row_mut(l, head, pos0 + j);
+                    kdst.copy_from_slice(&row[d + s..d + s + hd]);
+                    rope_inplace_cached(kdst, pos0 + j, &self.rope_inv_freq);
+                    vdst.copy_from_slice(&row[2 * d + s..2 * d + s + hd]);
                 }
             }
+        }
+
+        // -- (sequence × head) fan-out over the shared tiles --
+        let scale = 1.0 / (hd as f32).sqrt();
+        let caches_ro: &[&mut KvCache] = caches;
+        let items = &arena.items;
+        let q = &arena.q[..qkv.rows * d];
+        let scores_ptr = SendPtr(arena.scores.as_mut_ptr());
+        let tiles_ptr = SendPtr(arena.tiles.as_mut_ptr());
+        let threads = attn_kernel::auto_threads(macs);
+        scope_map(items.len(), threads, |w| {
+            let (i, head, scores_off, tile_off) = items[w];
+            let (r0, t) = spans[i];
+            let cache: &KvCache = &*caches_ro[i];
+            let pos0 = cache.seen;
+            let slen = pos0 + t;
+            let (keys, values) = cache.head_tiles(l, head, slen);
+            // SAFETY: the offsets above partition `arena.scores` /
+            // `arena.tiles` into disjoint per-item ranges, and `scope_map`
+            // joins every worker before the buffers are read back.
+            let scores =
+                unsafe { std::slice::from_raw_parts_mut(scores_ptr.0.add(scores_off), slen) };
+            let tile = unsafe { std::slice::from_raw_parts_mut(tiles_ptr.0.add(tile_off), t * hd) };
+            attn_head_span(
+                kind,
+                &q[r0 * d..],
+                d,
+                head * hd,
+                hd,
+                pos0,
+                t,
+                keys,
+                values,
+                scale,
+                scores,
+                tile,
+            );
+        });
+
+        // -- scatter head tiles into row-major output rows --
+        let mut tile_base = 0usize;
+        for &(r0, t) in spans {
+            for head in 0..nh {
+                let tile = &arena.tiles[tile_base + head * t * hd..tile_base + (head + 1) * t * hd];
+                let s = head * hd;
+                for j in 0..t {
+                    out.row_mut(r0 + j)[s..s + hd].copy_from_slice(&tile[j * hd..(j + 1) * hd]);
+                }
+            }
+            tile_base += t * d;
         }
     }
 
@@ -357,15 +463,17 @@ impl Gpt {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         assert!(cache.seen < cfg.max_seq, "kv cache full");
+        let kind = attn_kernel::detect_attn_kernel();
+        let mut arena = AttnArena::new();
         let mut h: Vec<f32> = self.embed.row(token as usize).to_vec();
 
         for (l, block) in self.blocks.iter().enumerate() {
             // attention
             let x_norm = rmsnorm(&h, &block.attn_norm, cfg.norm_eps);
-            let qkv = block.qkv.forward_token(&x_norm);
-            let mut attn_out = vec![0f32; d];
-            self.attn_cached_span(l, cache, &qkv, &mut attn_out);
-            let attn_proj = block.out_proj.forward_token(&attn_out);
+            let qkv = Matrix::from_vec(1, 3 * d, block.qkv.forward_token(&x_norm));
+            let mut attn_out = Matrix::zeros(1, d);
+            self.attn_layer(l, &[(0, 1)], &mut [&mut *cache], &qkv, &mut attn_out, &mut arena, kind);
+            let attn_proj = block.out_proj.forward_token(&attn_out.data);
             for (hi, p) in h.iter_mut().zip(&attn_proj) {
                 *hi += p;
             }
@@ -393,10 +501,11 @@ impl Gpt {
     /// (`chunks[i].tokens`, ≥ 1 each; decode sequences contribute one row,
     /// prefilling sequences a multi-token chunk). All Σtᵢ rows across all
     /// sequences stack into ONE batched (packed quantized) GEMM per layer
-    /// linear, while causal attention runs per sequence against its own
-    /// cache via [`Gpt::attn_cached_span`] — writing all span K/V positions
-    /// and masking each row's future — so per-row results match the scalar
-    /// [`Gpt::forward_step`] replay.
+    /// linear, while causal attention runs through the span engine
+    /// ([`Gpt::attn_layer`]) — writing all span K/V positions to the
+    /// head-major tiles, masking each row's future, and fanning
+    /// (sequence × head) work items across cores — so per-row results match
+    /// the token-at-a-time [`Gpt::forward_step`] replay.
     ///
     /// Contract:
     /// - `chunks[i]` is paired with `caches[i]`; spans must be non-empty
@@ -436,23 +545,19 @@ impl Gpt {
                 row += 1;
             }
         }
+        let spans: Vec<(usize, usize)> =
+            offsets.iter().zip(chunks).map(|(&r0, ch)| (r0, ch.tokens.len())).collect();
+        let kind = attn_kernel::detect_attn_kernel();
         for (l, block) in self.blocks.iter().enumerate() {
-            // ---- attention: one batched qkv/out_proj GEMM, per-seq attend ----
+            // ---- attention: one batched qkv/out_proj GEMM, then the span
+            //      engine fanning (sequence × head) items across cores ----
             let mut x_norm = Matrix::zeros(total, d);
             for r in 0..total {
                 rmsnorm_into(h.row(r), &block.attn_norm, cfg.norm_eps, x_norm.row_mut(r));
             }
             let qkv = block.qkv.forward_with(&x_norm, arena); // total × 3d
             let mut attn_out = Matrix::zeros(total, d);
-            for (i, ch) in chunks.iter().enumerate() {
-                let (r0, t) = (offsets[i], ch.tokens.len());
-                self.attn_cached_span(
-                    l,
-                    &mut *caches[i],
-                    &qkv.data[r0 * 3 * d..(r0 + t) * 3 * d],
-                    &mut attn_out.data[r0 * d..(r0 + t) * d],
-                );
-            }
+            self.attn_layer(l, &spans, caches, &qkv, &mut attn_out, &mut arena.attn, kind);
             let attn_proj = block.out_proj.forward_with(&attn_out, arena);
             let h1 = h.add(&attn_proj);
             // ---- feed-forward: batched fc1/fc2, rowwise SwiGLU ----
@@ -800,14 +905,43 @@ mod tests {
                 .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
             assert!(d < 1e-4, "row {row}: maxdiff {d}");
         }
-        // The mid-prefill cache must hold exactly the scalar-path K/V.
+        // The mid-prefill cache must hold exactly the scalar-path K/V
+        // (tile-for-tile: the head-major layout is part of the contract).
         assert_eq!(c_mid.bytes(), c_mid_ref.bytes());
         for l in 0..model.cfg.n_layers {
-            let d = c_mid.keys[l]
-                .iter()
-                .zip(&c_mid_ref.keys[l])
-                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
-            assert!(d < 1e-4, "layer {l} keys diverged: {d}");
+            for h in 0..model.cfg.n_heads {
+                let (got_k, got_v) = c_mid.head_tiles(l, h, c_mid.len());
+                let (ref_k, ref_v) = c_mid_ref.head_tiles(l, h, c_mid_ref.len());
+                let dk = got_k
+                    .iter()
+                    .zip(ref_k)
+                    .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+                assert!(dk < 1e-4, "layer {l} head {h} keys diverged: {dk}");
+                let dv = got_v
+                    .iter()
+                    .zip(ref_v)
+                    .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+                assert!(dv < 1e-4, "layer {l} head {h} values diverged: {dv}");
+            }
+        }
+    }
+
+    #[test]
+    fn rope_cached_table_is_bitwise_identical_to_powf_path() {
+        let mut rng = Pcg64::seed(142);
+        for hd in [2usize, 4, 8, 16, 64] {
+            for base in [10_000.0f32, 500.0] {
+                let table = rope_inv_freq(base, hd);
+                assert_eq!(table.len(), hd / 2);
+                for pos in [0usize, 1, 7, 63, 1021] {
+                    let v0: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+                    let mut a = v0.clone();
+                    rope_inplace(&mut a, pos, base);
+                    let mut b = v0;
+                    rope_inplace_cached(&mut b, pos, &table);
+                    assert_eq!(a, b, "hd={hd} base={base} pos={pos}");
+                }
+            }
         }
     }
 

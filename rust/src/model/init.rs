@@ -52,7 +52,7 @@ pub fn synthetic_model(config_name: &str, seed: u64) -> Result<Gpt> {
             fc2: Linear::Dense(fc2),
         });
     }
-    let mut model = Gpt { cfg, embed, blocks, final_norm: vec![1.0; d], lm_head };
+    let mut model = Gpt::assemble(cfg, embed, blocks, vec![1.0; d], lm_head);
     inject_outliers(&mut model, &root.fork("outliers"));
     Ok(model)
 }
@@ -157,7 +157,7 @@ pub fn load_model(cfg: ModelConfig, path: &Path) -> Result<Gpt> {
             ),
         });
     }
-    Ok(Gpt { cfg, embed, blocks, final_norm, lm_head })
+    Ok(Gpt::assemble(cfg, embed, blocks, final_norm, lm_head))
 }
 
 trait FixShape: Sized {

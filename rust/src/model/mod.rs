@@ -8,7 +8,11 @@ pub mod gpt;
 pub mod init;
 pub mod linear;
 
+pub use crate::coordinator::kvpool::KvCache;
 pub use config::{layer_key, ModelConfig, LINEAR_NAMES};
-pub use gpt::{argmax, ActSink, Block, ChunkLogits, Gpt, KvCache, NullSink, SeqChunk, PREFILL_CHUNK};
+pub use gpt::{
+    argmax, rope_inplace, rope_inplace_cached, rope_inv_freq, ActSink, Block, ChunkLogits, Gpt,
+    NullSink, SeqChunk, PREFILL_CHUNK,
+};
 pub use init::{inject_outliers, load_model, load_or_synthetic, save_model, synthetic_model};
 pub use linear::{forward_quant_token, Linear};

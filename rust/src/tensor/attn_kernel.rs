@@ -1,0 +1,789 @@
+//! SIMD f32 microkernels for attention over head-major KV tiles.
+//!
+//! PRs 1–3 moved every linear projection onto runtime-dispatched packed int8
+//! GEMMs; attention over the KV cache was the last scalar dot loop on the
+//! serving path and the Amdahl bottleneck at long contexts. This module is
+//! its kernel layer: the three inner loops of cached causal attention —
+//!
+//! 1. **q·K score sweep** ([`qk_scores`]): one query head-vector against a
+//!    contiguous `t_seen × hd` key tile, producing scaled scores,
+//! 2. **softmax** ([`softmax`]): max / exp / sum / normalize in place,
+//! 3. **weighted-V accumulation** ([`pv_accum`]): `out = Σ_tk w[tk] · v[tk]`
+//!    over the matching value tile —
+//!
+//! each dispatched on an [`AttnKernelKind`] selected once per forward call
+//! (runtime feature detection, like `qgemm_kernel`):
+//!
+//! * [`AttnKernelKind::Scalar`] — portable reference. Its q·K dot is
+//!   [`gemm::dot`] (the 8-wide unroll with the pinned summation order), its
+//!   softmax and PV loops reproduce the pre-kernel `attn_cached_span` inner
+//!   loops **bitwise** — the property tests pin the scalar kernel against a
+//!   straight-line replica of that retired implementation with `assert_eq`.
+//! * [`AttnKernelKind::Avx2`] — x86-64 AVX2+FMA: the score sweep processes
+//!   4 keys per pass (each query register load amortized across 4 fused
+//!   multiply-add accumulators), softmax vectorizes the max reduction and
+//!   the `1/sum` normalization (the `exp` calls stay scalar — a polynomial
+//!   exp would trade accuracy for nothing measurable here), and the PV
+//!   accumulation broadcasts 4 weights per output-register round trip.
+//! * [`AttnKernelKind::Neon`] — aarch64 `vfmaq_f32` variants of the same
+//!   three loops.
+//!
+//! Unlike the int8 kernels (exact i32 ⇒ bitwise across kernels), these are
+//! f32: the SIMD variants reassociate the reductions, so they promise
+//! tolerance-level agreement with the scalar reference, not bit equality.
+//! What **is** bitwise-stable: the scalar kernel vs the pre-refactor code,
+//! and any single kernel across batch shapes and thread counts (work items
+//! never share accumulators — see `Gpt::attn_layer`).
+//!
+//! All kernels stream **unit-stride tiles**: the head-major `KvCache` layout
+//! (`coordinator::kvpool`) stores each (layer, head) as a contiguous
+//! `cap × hd` panel, so consecutive cache positions are `hd` floats apart —
+//! the score sweep and PV accumulation walk memory linearly instead of
+//! striding `d_model` between positions as the row-major layout forced.
+
+// Index-heavy microkernels: indexed loops mirror the register tiling and
+// keep the scalar/SIMD variants visually aligned.
+#![allow(clippy::needless_range_loop)]
+
+use super::gemm::dot;
+
+/// The attention microkernel for this host, selected per forward call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnKernelKind {
+    /// Portable reference kernel; bitwise-pinned against the pre-kernel
+    /// scalar attention loops.
+    Scalar,
+    /// x86-64 AVX2 + FMA kernel.
+    Avx2,
+    /// aarch64 NEON kernel.
+    Neon,
+}
+
+impl AttnKernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AttnKernelKind::Scalar => "scalar",
+            AttnKernelKind::Avx2 => "avx2",
+            AttnKernelKind::Neon => "neon",
+        }
+    }
+
+    /// Whether this kernel can run on the current host (compile target arch
+    /// AND runtime CPU features).
+    pub fn available(self) -> bool {
+        match self {
+            AttnKernelKind::Scalar => true,
+            AttnKernelKind::Avx2 => avx2_fma_available(),
+            AttnKernelKind::Neon => neon_available(),
+        }
+    }
+}
+
+impl std::fmt::Display for AttnKernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_available() -> bool {
+    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_fma_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+/// Pick the fastest attention kernel available on this host. Feature
+/// detection results are cached by std, so calling this once per forward
+/// pass is cheap.
+pub fn detect_attn_kernel() -> AttnKernelKind {
+    if AttnKernelKind::Avx2.available() {
+        AttnKernelKind::Avx2
+    } else if AttnKernelKind::Neon.available() {
+        AttnKernelKind::Neon
+    } else {
+        AttnKernelKind::Scalar
+    }
+}
+
+/// Thread count for a span-attention batch of `macs` q·K multiply-adds:
+/// decode and short-context batches stay inline; long-context decode and
+/// teacher-forced prefill fan out across (sequence × head) work items.
+/// The floor is ~2²⁰ MACs — ≳ 100µs of scalar / tens of µs of SIMD f32
+/// work, comfortably above the ~10µs-per-worker scoped-thread spawn (raw
+/// MACs are ~d_in× finer-grained than qgemm's output-element unit, hence
+/// the higher floor). The spawn-cost logic lives in
+/// [`crate::util::pool::fanout_threads`], shared with the qgemm row-block
+/// heuristic.
+pub fn auto_threads(macs: usize) -> usize {
+    crate::util::pool::fanout_threads(macs, 1 << 20)
+}
+
+// ---------------------------------------------------------------------------
+// Batch-lifetime scratch
+
+/// Grow-only scratch for the span-attention driver (`Gpt::attn_layer`), the
+/// attention analog of `QGemmArena` (it rides inside it as
+/// `QGemmArena::attn`): staged roped queries, per-(sequence × head) score
+/// rows, and the head-major output tiles. Capacities are high-water and
+/// never released, so steady-state decode iterations allocate nothing;
+/// every consumed element is overwritten before being read (queries are
+/// staged, scores written by the sweep, tiles zero-filled by [`pv_accum`]),
+/// so stale tails are never observed.
+#[derive(Default)]
+pub struct AttnArena {
+    /// Staged roped queries, total × d row-major.
+    pub(crate) q: Vec<f32>,
+    /// Concatenated per-(sequence, head) score rows (`pos0 + t` each).
+    pub(crate) scores: Vec<f32>,
+    /// Head-major output tiles: per sequence, nh panels of `t × hd`.
+    pub(crate) tiles: Vec<f32>,
+    /// (sequence, head, scores offset, tile offset) work items — refilled
+    /// per layer but capacity-reused, so the layer loop allocates nothing.
+    pub(crate) items: Vec<(usize, usize, usize, usize)>,
+}
+
+impl AttnArena {
+    pub fn new() -> AttnArena {
+        AttnArena::default()
+    }
+
+    pub(crate) fn ensure(&mut self, q_len: usize, scores_len: usize, tiles_len: usize) {
+        if self.q.len() < q_len {
+            self.q.resize(q_len, 0.0);
+        }
+        if self.scores.len() < scores_len {
+            self.scores.resize(scores_len, 0.0);
+        }
+        if self.tiles.len() < tiles_len {
+            self.tiles.resize(tiles_len, 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+
+/// `scores[tk] = dot(q, keys[tk·hd .. (tk+1)·hd]) · scale` over a contiguous
+/// key tile (`keys.len() == scores.len() · q.len()`). The caller must only
+/// pass a `kind` that is [`AttnKernelKind::available`] on this host.
+pub fn qk_scores(kind: AttnKernelKind, q: &[f32], keys: &[f32], scale: f32, scores: &mut [f32]) {
+    debug_assert_eq!(keys.len(), scores.len() * q.len());
+    match kind {
+        AttnKernelKind::Scalar => qk_scores_scalar(q, keys, scale, scores),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability is asserted by `attn_head_span` / checked by
+        // callers per the contract above.
+        AttnKernelKind::Avx2 => unsafe { avx2::qk_scores(q, keys, scale, scores) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        AttnKernelKind::Neon => unsafe { neon::qk_scores(q, keys, scale, scores) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel {other:?} is not available on this target"),
+    }
+}
+
+/// In-place softmax (max / exp / sum / normalize). Same contract on `kind`.
+pub fn softmax(kind: AttnKernelKind, x: &mut [f32]) {
+    match kind {
+        AttnKernelKind::Scalar => softmax_scalar(x),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Avx2 => unsafe { avx2::softmax(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Neon => unsafe { neon::softmax(x) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel {other:?} is not available on this target"),
+    }
+}
+
+/// `out = Σ_tk scores[tk] · values[tk·hd .. (tk+1)·hd]` over a contiguous
+/// value tile (`values.len() == scores.len() · out.len()`). `out` is fully
+/// overwritten. Same contract on `kind`.
+pub fn pv_accum(kind: AttnKernelKind, scores: &[f32], values: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(values.len(), scores.len() * out.len());
+    match kind {
+        AttnKernelKind::Scalar => pv_accum_scalar(scores, values, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Avx2 => unsafe { avx2::pv_accum(scores, values, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Neon => unsafe { neon::pv_accum(scores, values, out) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel {other:?} is not available on this target"),
+    }
+}
+
+/// One (sequence, head) causal attention work item over head-major KV tiles
+/// — the unit `Gpt::attn_layer` fans out across cores.
+///
+/// `q` holds the span's staged (already roped) query rows at row stride `d`
+/// with this head's lanes at column offset `s`; `keys` / `values` are the
+/// head's contiguous `(pos0 + t) × hd` tiles (span rows already appended);
+/// `scores` is caller scratch of ≥ `pos0 + t` entries; `out` is the span's
+/// `t × hd` head tile, fully overwritten. Row `j` attends over cache
+/// positions `0..=pos0+j` — in-span future rows are masked purely by the
+/// loop bound, which is what keeps every chunking of a prompt numerically
+/// identical per row.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_head_span(
+    kind: AttnKernelKind,
+    q: &[f32],
+    d: usize,
+    s: usize,
+    hd: usize,
+    pos0: usize,
+    t: usize,
+    keys: &[f32],
+    values: &[f32],
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    assert!(kind.available(), "attention kernel {kind:?} not available on this host");
+    assert!(t > 0, "empty span");
+    debug_assert!(q.len() >= (t - 1) * d + s + hd);
+    debug_assert!(keys.len() >= (pos0 + t) * hd);
+    debug_assert!(values.len() >= (pos0 + t) * hd);
+    debug_assert!(scores.len() >= pos0 + t);
+    debug_assert_eq!(out.len(), t * hd);
+    for j in 0..t {
+        let t_seen = pos0 + j + 1;
+        let qh = &q[j * d + s..j * d + s + hd];
+        qk_scores(kind, qh, &keys[..t_seen * hd], scale, &mut scores[..t_seen]);
+        softmax(kind, &mut scores[..t_seen]);
+        pv_accum(kind, &scores[..t_seen], &values[..t_seen * hd], &mut out[j * hd..(j + 1) * hd]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels
+//
+// These reproduce the retired `attn_cached_span` inner loops exactly: the
+// score sweep uses `gemm::dot` (the pinned 8-wide summation order), softmax
+// folds max / exp-sums / normalizes in position order, and the PV loop
+// accumulates into a zeroed output in position order. Property tests pin
+// all three bitwise against a straight-line replica.
+
+fn qk_scores_scalar(q: &[f32], keys: &[f32], scale: f32, scores: &mut [f32]) {
+    let hd = q.len();
+    for (tk, sc) in scores.iter_mut().enumerate() {
+        *sc = dot(q, &keys[tk * hd..(tk + 1) * hd]) * scale;
+    }
+}
+
+fn softmax_scalar(x: &mut [f32]) {
+    let max = x.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+fn pv_accum_scalar(scores: &[f32], values: &[f32], out: &mut [f32]) {
+    let hd = out.len();
+    out.fill(0.0);
+    for (tk, &w) in scores.iter().enumerate() {
+        let vrow = &values[tk * hd..(tk + 1) * hd];
+        for (o, &vv) in out.iter_mut().zip(vrow) {
+            *o += w * vv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    //! AVX2+FMA attention kernels. The reductions reassociate relative to
+    //! the scalar reference (8-lane partial sums + scalar tails), so these
+    //! agree to f32 tolerance, not bitwise — see the module doc.
+
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the 8 f32 lanes of `v`.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn hsum_ps(v: __m256) -> f32 {
+        // Explicit inner block: edition-2024-proof (unsafe_op_in_unsafe_fn).
+        unsafe {
+            let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps::<0x55>(s, s));
+            _mm_cvtss_f32(s)
+        }
+    }
+
+    /// Score sweep: 4 keys per pass so each 8-lane query load feeds four
+    /// FMA accumulators; lane tail (`hd % 8`) and key tail (`n % 4`) run
+    /// scalar.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA are present and
+    /// `keys.len() == scores.len() * q.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn qk_scores(q: &[f32], keys: &[f32], scale: f32, scores: &mut [f32]) {
+        unsafe {
+            let hd = q.len();
+            let n = scores.len();
+            let chunks = hd / 8 * 8;
+            let qp = q.as_ptr();
+            let kp = keys.as_ptr();
+            let mut tk = 0usize;
+            while tk + 4 <= n {
+                let base = [
+                    kp.add(tk * hd),
+                    kp.add((tk + 1) * hd),
+                    kp.add((tk + 2) * hd),
+                    kp.add((tk + 3) * hd),
+                ];
+                let mut acc = [_mm256_setzero_ps(); 4];
+                let mut i = 0usize;
+                while i < chunks {
+                    let qv = _mm256_loadu_ps(qp.add(i));
+                    acc[0] = _mm256_fmadd_ps(qv, _mm256_loadu_ps(base[0].add(i)), acc[0]);
+                    acc[1] = _mm256_fmadd_ps(qv, _mm256_loadu_ps(base[1].add(i)), acc[1]);
+                    acc[2] = _mm256_fmadd_ps(qv, _mm256_loadu_ps(base[2].add(i)), acc[2]);
+                    acc[3] = _mm256_fmadd_ps(qv, _mm256_loadu_ps(base[3].add(i)), acc[3]);
+                    i += 8;
+                }
+                let mut j = 0usize;
+                while j < 4 {
+                    let mut s = hsum_ps(acc[j]);
+                    for i in chunks..hd {
+                        s += q[i] * *base[j].add(i);
+                    }
+                    scores[tk + j] = s * scale;
+                    j += 1;
+                }
+                tk += 4;
+            }
+            while tk < n {
+                let base = kp.add(tk * hd);
+                let mut acc = _mm256_setzero_ps();
+                let mut i = 0usize;
+                while i < chunks {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(qp.add(i)),
+                        _mm256_loadu_ps(base.add(i)),
+                        acc,
+                    );
+                    i += 8;
+                }
+                let mut s = hsum_ps(acc);
+                for i in chunks..hd {
+                    s += q[i] * *base.add(i);
+                }
+                scores[tk] = s * scale;
+                tk += 1;
+            }
+        }
+    }
+
+    /// Softmax with a vectorized max reduction and `1/sum` normalization;
+    /// the exp stage stays scalar (accuracy over a marginal win).
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA are present.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn softmax(x: &mut [f32]) {
+        unsafe {
+            let n = x.len();
+            let chunks = n / 8 * 8;
+            let mut max = {
+                let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+                let p = x.as_ptr();
+                let mut i = 0usize;
+                while i < chunks {
+                    vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(p.add(i)));
+                    i += 8;
+                }
+                let m = _mm_max_ps(_mm256_castps256_ps128(vmax), _mm256_extractf128_ps::<1>(vmax));
+                let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+                let m = _mm_max_ss(m, _mm_shuffle_ps::<0x55>(m, m));
+                _mm_cvtss_f32(m)
+            };
+            for &v in &x[chunks..] {
+                max = max.max(v);
+            }
+            let mut sum = 0f32;
+            for v in x.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            let vinv = _mm256_set1_ps(inv);
+            let pm = x.as_mut_ptr();
+            let mut i = 0usize;
+            while i < chunks {
+                _mm256_storeu_ps(pm.add(i), _mm256_mul_ps(_mm256_loadu_ps(pm.add(i)), vinv));
+                i += 8;
+            }
+            for v in &mut x[chunks..] {
+                *v *= inv;
+            }
+        }
+    }
+
+    /// Weighted-V accumulation: 4 broadcast weights per output-register
+    /// round trip (`out` loaded/stored once per 4 positions).
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA are present and
+    /// `values.len() == scores.len() * out.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn pv_accum(scores: &[f32], values: &[f32], out: &mut [f32]) {
+        unsafe {
+            let hd = out.len();
+            let n = scores.len();
+            out.fill(0.0);
+            let chunks = hd / 8 * 8;
+            let vp = values.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut tk = 0usize;
+            while tk + 4 <= n {
+                let base = [
+                    vp.add(tk * hd),
+                    vp.add((tk + 1) * hd),
+                    vp.add((tk + 2) * hd),
+                    vp.add((tk + 3) * hd),
+                ];
+                let w = [
+                    _mm256_set1_ps(scores[tk]),
+                    _mm256_set1_ps(scores[tk + 1]),
+                    _mm256_set1_ps(scores[tk + 2]),
+                    _mm256_set1_ps(scores[tk + 3]),
+                ];
+                let mut i = 0usize;
+                while i < chunks {
+                    let mut o = _mm256_loadu_ps(op.add(i));
+                    o = _mm256_fmadd_ps(w[0], _mm256_loadu_ps(base[0].add(i)), o);
+                    o = _mm256_fmadd_ps(w[1], _mm256_loadu_ps(base[1].add(i)), o);
+                    o = _mm256_fmadd_ps(w[2], _mm256_loadu_ps(base[2].add(i)), o);
+                    o = _mm256_fmadd_ps(w[3], _mm256_loadu_ps(base[3].add(i)), o);
+                    _mm256_storeu_ps(op.add(i), o);
+                    i += 8;
+                }
+                let mut j = 0usize;
+                while j < 4 {
+                    let s = scores[tk + j];
+                    for i in chunks..hd {
+                        *op.add(i) += s * *base[j].add(i);
+                    }
+                    j += 1;
+                }
+                tk += 4;
+            }
+            while tk < n {
+                let base = vp.add(tk * hd);
+                let w = _mm256_set1_ps(scores[tk]);
+                let mut i = 0usize;
+                while i < chunks {
+                    let o = _mm256_fmadd_ps(w, _mm256_loadu_ps(base.add(i)), _mm256_loadu_ps(op.add(i)));
+                    _mm256_storeu_ps(op.add(i), o);
+                    i += 8;
+                }
+                let s = scores[tk];
+                for i in chunks..hd {
+                    *op.add(i) += s * *base.add(i);
+                }
+                tk += 1;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    //! NEON `vfmaq_f32` attention kernels: 4-lane FMA streams over the
+    //! contiguous tiles, scalar lane tails. Same tolerance contract as the
+    //! AVX2 variants.
+
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must guarantee NEON is present and
+    /// `keys.len() == scores.len() * q.len()`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn qk_scores(q: &[f32], keys: &[f32], scale: f32, scores: &mut [f32]) {
+        unsafe {
+            let hd = q.len();
+            let n = scores.len();
+            let chunks = hd / 4 * 4;
+            let qp = q.as_ptr();
+            let kp = keys.as_ptr();
+            for tk in 0..n {
+                let base = kp.add(tk * hd);
+                let mut acc = vdupq_n_f32(0.0);
+                let mut i = 0usize;
+                while i < chunks {
+                    acc = vfmaq_f32(acc, vld1q_f32(qp.add(i)), vld1q_f32(base.add(i)));
+                    i += 4;
+                }
+                let mut s = vaddvq_f32(acc);
+                for i in chunks..hd {
+                    s += q[i] * *base.add(i);
+                }
+                scores[tk] = s * scale;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is present.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn softmax(x: &mut [f32]) {
+        unsafe {
+            let n = x.len();
+            let chunks = n / 4 * 4;
+            let mut max = {
+                let mut vmax = vdupq_n_f32(f32::NEG_INFINITY);
+                let p = x.as_ptr();
+                let mut i = 0usize;
+                while i < chunks {
+                    vmax = vmaxq_f32(vmax, vld1q_f32(p.add(i)));
+                    i += 4;
+                }
+                vmaxvq_f32(vmax)
+            };
+            for &v in &x[chunks..] {
+                max = max.max(v);
+            }
+            let mut sum = 0f32;
+            for v in x.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            let vinv = vdupq_n_f32(inv);
+            let pm = x.as_mut_ptr();
+            let mut i = 0usize;
+            while i < chunks {
+                vst1q_f32(pm.add(i), vmulq_f32(vld1q_f32(pm.add(i)), vinv));
+                i += 4;
+            }
+            for v in &mut x[chunks..] {
+                *v *= inv;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must guarantee NEON is present and
+    /// `values.len() == scores.len() * out.len()`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn pv_accum(scores: &[f32], values: &[f32], out: &mut [f32]) {
+        unsafe {
+            let hd = out.len();
+            let n = scores.len();
+            out.fill(0.0);
+            let chunks = hd / 4 * 4;
+            let vp = values.as_ptr();
+            let op = out.as_mut_ptr();
+            for tk in 0..n {
+                let base = vp.add(tk * hd);
+                let w = vdupq_n_f32(scores[tk]);
+                let mut i = 0usize;
+                while i < chunks {
+                    let o = vfmaq_f32(vld1q_f32(op.add(i)), w, vld1q_f32(base.add(i)));
+                    vst1q_f32(op.add(i), o);
+                    i += 4;
+                }
+                let s = scores[tk];
+                for i in chunks..hd {
+                    *op.add(i) += s * *base.add(i);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Straight-line replica of the retired `attn_cached_span` inner loops
+    /// (the pre-kernel scalar attention): per row, `gemm::dot`-scored sweep,
+    /// in-order softmax, zero-init += PV accumulation.
+    #[allow(clippy::too_many_arguments)]
+    fn reference_span(
+        q: &[f32],
+        d: usize,
+        s: usize,
+        hd: usize,
+        pos0: usize,
+        t: usize,
+        keys: &[f32],
+        values: &[f32],
+        scale: f32,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; t * hd];
+        let mut scores = vec![0f32; pos0 + t];
+        for j in 0..t {
+            let t_seen = pos0 + j + 1;
+            let qh = &q[j * d + s..j * d + s + hd];
+            for tk in 0..t_seen {
+                scores[tk] = crate::tensor::dot(qh, &keys[tk * hd..(tk + 1) * hd]) * scale;
+            }
+            let sc = &mut scores[..t_seen];
+            let max = sc.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut sum = 0f32;
+            for v in sc.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in sc.iter_mut() {
+                *v *= inv;
+            }
+            let orow = &mut out[j * hd..(j + 1) * hd];
+            for tk in 0..t_seen {
+                let w = sc[tk];
+                for (o, &vv) in orow.iter_mut().zip(&values[tk * hd..(tk + 1) * hd]) {
+                    *o += w * vv;
+                }
+            }
+        }
+        out
+    }
+
+    fn random_case(
+        rng: &mut Pcg64,
+        hd: usize,
+        nh: usize,
+        pos0: usize,
+        t: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let d = nh * hd;
+        let q: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+        let keys: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+        let values: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+        (q, keys, values)
+    }
+
+    #[test]
+    fn scalar_span_bitwise_matches_prerefactor_reference() {
+        let mut rng = Pcg64::seed(1201);
+        for (hd, nh, pos0, t) in
+            [(1, 1, 0, 1), (3, 2, 5, 3), (5, 1, 0, 7), (8, 4, 2, 1), (11, 2, 9, 4), (16, 1, 31, 8)]
+        {
+            let (q, keys, values) = random_case(&mut rng, hd, nh, pos0, t);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let d = nh * hd;
+            for s_head in 0..nh {
+                let s = s_head * hd;
+                let want = reference_span(&q, d, s, hd, pos0, t, &keys, &values, scale);
+                let mut scores = vec![0f32; pos0 + t];
+                let mut got = vec![7f32; t * hd]; // poisoned: out must be overwritten
+                attn_head_span(
+                    AttnKernelKind::Scalar,
+                    &q,
+                    d,
+                    s,
+                    hd,
+                    pos0,
+                    t,
+                    &keys,
+                    &values,
+                    scale,
+                    &mut scores,
+                    &mut got,
+                );
+                assert_eq!(got, want, "hd={hd} nh={nh} pos0={pos0} t={t} head={s_head}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_span_matches_scalar_within_tolerance() {
+        let kind = detect_attn_kernel();
+        if kind == AttnKernelKind::Scalar {
+            return; // no SIMD on this host; scalar covered above
+        }
+        let mut rng = Pcg64::seed(1202);
+        // Head dims straddle the SIMD lane width (8 for AVX2, 4 for NEON),
+        // spans straddle the 4-key/4-weight blocks, nh = 1 included.
+        for (hd, nh, pos0, t) in [
+            (1, 1, 0, 1),
+            (3, 2, 5, 3),
+            (7, 1, 2, 5),
+            (8, 2, 0, 9),
+            (9, 1, 6, 2),
+            (12, 3, 1, 4),
+            (20, 2, 65, 1),
+            (32, 1, 13, 6),
+        ] {
+            let (q, keys, values) = random_case(&mut rng, hd, nh, pos0, t);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let d = nh * hd;
+            let mut scores = vec![0f32; pos0 + t];
+            let mut want = vec![0f32; t * hd];
+            attn_head_span(
+                AttnKernelKind::Scalar,
+                &q,
+                d,
+                0,
+                hd,
+                pos0,
+                t,
+                &keys,
+                &values,
+                scale,
+                &mut scores,
+                &mut want,
+            );
+            let mut got = vec![0f32; t * hd];
+            attn_head_span(
+                kind, &q, d, 0, hd, pos0, t, &keys, &values, scale, &mut scores, &mut got,
+            );
+            let wmax = want.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1.0);
+            let diff = got
+                .iter()
+                .zip(&want)
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(diff < 1e-5 * wmax, "{kind} hd={hd} pos0={pos0} t={t}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn softmax_kernels_normalize() {
+        let mut rng = Pcg64::seed(1203);
+        for kind in [AttnKernelKind::Scalar, detect_attn_kernel()] {
+            for n in [1usize, 3, 7, 8, 9, 31, 64] {
+                let mut x: Vec<f32> = (0..n).map(|_| rng.normal() * 4.0).collect();
+                softmax(kind, &mut x);
+                let sum: f32 = x.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "{kind} n={n}: sum {sum}");
+                assert!(x.iter().all(|&v| v >= 0.0), "{kind} n={n}: negative weight");
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_consistent() {
+        let kind = detect_attn_kernel();
+        assert!(kind.available());
+        assert!(AttnKernelKind::Scalar.available());
+        assert_eq!(AttnKernelKind::Scalar.name(), "scalar");
+        assert!(auto_threads(1) == 1, "tiny batches stay inline");
+        assert!(auto_threads(1 << 20) >= 1);
+    }
+}

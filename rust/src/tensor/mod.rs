@@ -1,13 +1,17 @@
 //! Dense f32 tensor substrate: the `Matrix` type, fp32 GEMM kernels, the
-//! packed quantized GEMM layer (`qgemm`) the serving path runs on, and the
-//! SIMD microkernels behind it (`qgemm_kernel`: runtime-dispatched
-//! AVX2/NEON int8 kernels with a portable scalar fallback).
+//! packed quantized GEMM layer (`qgemm`) the serving path runs on, the SIMD
+//! int8 microkernels behind it (`qgemm_kernel`: runtime-dispatched
+//! AVX2/NEON kernels with a portable scalar fallback), and the f32
+//! attention microkernels (`attn_kernel`: q·K sweep / softmax / weighted-V
+//! over head-major KV tiles, same dispatch scheme).
 
+pub mod attn_kernel;
 pub mod gemm;
 pub mod matrix;
 pub mod qgemm;
 pub mod qgemm_kernel;
 
+pub use attn_kernel::{attn_head_span, detect_attn_kernel, AttnArena, AttnKernelKind};
 pub use gemm::{
     dot, gram_cols_f64, gram_rows, matmul, matmul_at, matmul_bt, matmul_bt_acc, matvec, matvec_t,
 };

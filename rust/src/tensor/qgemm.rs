@@ -46,6 +46,7 @@
 //! semantics; the equivalence property tests in `tests/properties.rs` pin
 //! this kernel against it and against the scalar token path.
 
+use super::attn_kernel::AttnArena;
 use super::gemm::{axpy, matmul_bt_acc};
 use super::matrix::Matrix;
 use super::qgemm_kernel::{self, detect_kernel, QKernelKind};
@@ -192,6 +193,11 @@ pub struct QGemmArena {
     /// a full activation row) is asserted once per layout switch here, not
     /// per call.
     stride: usize,
+    /// Span-attention scratch (staged roped queries, per-(sequence × head)
+    /// score rows, head-major output tiles) — same grow-only discipline,
+    /// carried here so the serving loop threads ONE arena through both the
+    /// packed GEMMs and `Gpt::attn_layer`.
+    pub attn: AttnArena,
 }
 
 impl QGemmArena {
@@ -373,21 +379,15 @@ fn fp_main(pw: &PackedQWeight, xs: &[f32], t: usize, y: &mut Matrix, threads: us
     });
 }
 
-/// Thread count heuristic for a (t × d_out) quantized GEMM.
-///
-/// The `scope_map` workers are spawned per call (std scoped threads, no
-/// persistent pool on this path), which costs ~10µs — more than the whole
-/// int kernel for a decode-sized `t × d_out`. So: stay inline below
-/// `t·d_out = 2^16` (decode batches: t ≤ 16 and d_out ≤ 4096 stays inline),
-/// fan out over row blocks for eval/prefill-sized calls where the kernel
-/// dwarfs the spawn. Thread count never affects values — see the
-/// determinism notes in the module doc.
+/// Thread count heuristic for a (t × d_out) quantized GEMM: stay inline
+/// below `t·d_out = 2^16` output elements (each ~d_in int8 MACs; decode
+/// batches with t ≤ 16 and d_out ≤ 4096 stay inline), fan out over row
+/// blocks for eval/prefill-sized calls where the kernel dwarfs the spawn.
+/// The spawn-cost logic lives in [`crate::util::pool::fanout_threads`],
+/// shared with the attention span heuristic. Thread count never affects
+/// values — see the determinism notes in the module doc.
 pub fn auto_threads(t: usize, d_out: usize) -> usize {
-    if t * d_out >= (1 << 16) {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-    } else {
-        1
-    }
+    crate::util::pool::fanout_threads(t * d_out, 1 << 16)
 }
 
 #[cfg(test)]

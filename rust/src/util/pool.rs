@@ -84,6 +84,23 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Inline-vs-fan-out heuristic shared by the data-parallel hot paths
+/// (`tensor::qgemm::auto_threads`, `tensor::attn_kernel::auto_threads`).
+/// The `scope_map` workers are spawned per call (std scoped threads, no
+/// persistent pool), which costs ~10µs each — more than a decode-sized
+/// kernel — so jobs below the caller's `floor` stay on the calling thread
+/// and larger ones use every core. Each caller calibrates `floor` to its
+/// own work unit (qgemm: output elements, ~d_in MACs each; attention: raw
+/// q·K MACs), so the spawn-cost logic lives in one place without
+/// pretending the units are comparable.
+pub fn fanout_threads(work: usize, floor: usize) -> usize {
+    if work >= floor {
+        thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        1
+    }
+}
+
 /// Apply `f` to every index in `0..n` on `threads` scoped threads and return
 /// results in index order. Panics in workers propagate. This borrows `f`'s
 /// captures for the duration of the call (no 'static bound), so it is the
@@ -126,7 +143,12 @@ where
     slots.into_iter().map(|x| x.expect("slot filled")).collect()
 }
 
-struct SendPtr<T>(*mut T);
+/// A raw pointer that asserts cross-thread shareability. Shared with the
+/// attention driver (`model::gpt::Gpt::attn_layer`), which hands disjoint
+/// scratch ranges to (sequence × head) work items the same way `scope_map`
+/// hands out result slots: every user must guarantee disjoint writes and a
+/// join before reads.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 // SAFETY: see scope_map — disjoint index writes only.
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}

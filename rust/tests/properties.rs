@@ -296,6 +296,127 @@ fn prop_simd_and_scalar_kernels_bitwise_equal() {
 }
 
 #[test]
+fn prop_attn_simd_kernel_matches_scalar_reference() {
+    // The vectorized attention span kernel must reproduce the scalar
+    // reference across head dims that are NOT multiples of the SIMD lane
+    // width (8 for AVX2, 4 for NEON), nh = 1, short and long spans, and
+    // non-empty pre-existing cache contents (pos0 > 0). The SIMD kernels
+    // reassociate f32 sums, so the contract is tight tolerance (the scalar
+    // kernel itself is pinned bitwise against the pre-refactor loops in
+    // tensor::attn_kernel's unit tests).
+    use aser::tensor::{attn_head_span, detect_attn_kernel, AttnKernelKind};
+    let kind = detect_attn_kernel();
+    check(
+        "attn_simd_vs_scalar",
+        &cfg(48),
+        |rng| {
+            let hd = 1 + rng.below(33); // straddles both SIMD lane widths
+            let nh = 1 + rng.below(3); // includes nh = 1
+            let pos0 = rng.below(70); // 0 = fresh cache, > 0 = pre-existing
+            let t = [1usize, 3, 8][rng.below(3)]; // span lengths incl. decode
+            let d = nh * hd;
+            let q: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+            let keys: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+            let values: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+            (hd, nh, pos0, t, q, keys, values)
+        },
+        |_| Vec::new(),
+        |(hd, nh, pos0, t, q, keys, values)| {
+            let (hd, nh, pos0, t) = (*hd, *nh, *pos0, *t);
+            let d = nh * hd;
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut scores = vec![0f32; pos0 + t];
+            for head in 0..nh {
+                let s = head * hd;
+                let mut want = vec![0f32; t * hd];
+                attn_head_span(
+                    AttnKernelKind::Scalar,
+                    q,
+                    d,
+                    s,
+                    hd,
+                    pos0,
+                    t,
+                    keys,
+                    values,
+                    scale,
+                    &mut scores,
+                    &mut want,
+                );
+                let mut got = vec![0f32; t * hd];
+                attn_head_span(
+                    kind, q, d, s, hd, pos0, t, keys, values, scale, &mut scores, &mut got,
+                );
+                let wmax = want.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1.0);
+                let diff = got
+                    .iter()
+                    .zip(&want)
+                    .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+                if diff >= 1e-5 * wmax {
+                    return CaseResult::Fail(format!(
+                        "{kind} hd={hd} nh={nh} pos0={pos0} t={t} head={head}: diff {diff}"
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_vectorized_attention_spans_match_step_reference() {
+    // The serving attention engine end to end: feeding a span through
+    // forward_chunk_batch — against a NON-EMPTY pre-existing cache, for
+    // span lengths {1, 3, whole} — must reproduce the token-at-a-time
+    // forward_step replay, for both multi-head and nh = 1 models (same
+    // weights reinterpreted as a single 64-wide head).
+    use aser::model::{synthetic_model, ChunkLogits, KvCache, SeqChunk};
+    use aser::tensor::QGemmArena;
+    for nh in [4usize, 1] {
+        let mut model = synthetic_model("micro", 914).unwrap();
+        model.cfg.n_heads = nh;
+        model.refresh_derived();
+        let history: Vec<u32> = (0..9).map(|i| 1 + (i * 5 % 120) as u32).collect();
+        let tail: Vec<u32> = (0..12).map(|i| 2 + (i * 11 % 110) as u32).collect();
+        let mut pre_cache = KvCache::new(&model.cfg);
+        for &t in &history {
+            model.forward_step(t, &mut pre_cache);
+        }
+        let mut want = Vec::new();
+        let mut ref_cache = pre_cache.clone();
+        for &t in &tail {
+            want = model.forward_step(t, &mut ref_cache);
+        }
+        let wmax = want.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1.0);
+        for chunk in [1usize, 3, tail.len()] {
+            let mut cache = pre_cache.clone();
+            let mut arena = QGemmArena::new();
+            let mut got = Vec::new();
+            let mut fed = 0usize;
+            while fed < tail.len() {
+                let end = (fed + chunk).min(tail.len());
+                let last = end == tail.len();
+                let span = [SeqChunk {
+                    tokens: &tail[fed..end],
+                    logits: if last { ChunkLogits::Last } else { ChunkLogits::None },
+                }];
+                let out = model.forward_chunk_batch(&span, &mut [&mut cache], &mut arena);
+                if last {
+                    got = out.row(0).to_vec();
+                }
+                fed = end;
+            }
+            assert_eq!(cache.seen, history.len() + tail.len());
+            let d = want
+                .iter()
+                .zip(&got)
+                .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(d < 1e-4 * wmax, "nh={nh} chunk={chunk}: maxdiff {d}");
+        }
+    }
+}
+
+#[test]
 fn prop_chunked_prefill_logits_match_token_by_token_reference() {
     // The tentpole equivalence: prefilling a prompt through
     // forward_chunk_batch — for any chunking — must reproduce the
