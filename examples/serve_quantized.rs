@@ -1,13 +1,15 @@
 //! Serving demo: quantize model A with ASER (W4A8) and serve a bursty
-//! request trace through the router + continuous batcher, comparing
-//! throughput/latency against the fp16 model — the deployment scenario the
-//! paper's overhead analysis targets.
+//! request trace through the streaming engine, comparing throughput/latency
+//! against the fp16 model — the deployment scenario the paper's overhead
+//! analysis targets. The quantized pass also demos the request-granular
+//! API: one request is streamed token-by-token and cancelled mid-decode.
 //!
 //! Run: `cargo run --release --example serve_quantized`
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
-    calibrate_model, run_ptq, serve_requests, synthetic_requests, BatchConfig, ServerConfig,
+    calibrate_model, run_ptq, serve_requests, synthetic_requests, BatchConfig, Engine,
+    EngineConfig, GenRequest, ServerConfig, TokenEvent,
 };
 use aser::methods::{method_by_name, RankPolicy};
 use aser::model::load_or_synthetic;
@@ -41,8 +43,53 @@ fn main() -> anyhow::Result<()> {
             qm
         };
         let vocab = model.cfg.vocab_size;
+        let model = Arc::new(model);
+        if variant == "aser-w4a8" {
+            // Request-granular API demo: stream one request live, cancel a
+            // second mid-decode (EOS stopping off so the doomed request
+            // keeps decoding until the cancel lands).
+            let engine = Engine::new(
+                Arc::clone(&model),
+                EngineConfig {
+                    workers: 1,
+                    kv_tokens: 1 << 14,
+                    batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+                },
+            );
+            let streamed = engine.submit(GenRequest::new(0, vec![2, 9, 4], 8));
+            let doomed = engine.submit(GenRequest::new(1, vec![3, 7], 64));
+            // Cancel as soon as the doomed stream produces its first token.
+            while let Some(ev) = doomed.recv() {
+                if matches!(ev, TokenEvent::Token { .. }) {
+                    break;
+                }
+            }
+            doomed.cancel();
+            print!("[{variant}] streamed tokens:");
+            while let Some(ev) = streamed.recv() {
+                match ev {
+                    TokenEvent::Token { token, .. } => print!(" {token}"),
+                    TokenEvent::Finished { reason, .. } => println!(" ({reason:?})"),
+                    TokenEvent::PrefillDone { .. } => {}
+                }
+            }
+            let (reason, n_tokens) = loop {
+                match doomed.recv() {
+                    Some(TokenEvent::Finished { reason, n_tokens, .. }) => {
+                        break (reason, n_tokens)
+                    }
+                    Some(_) => {}
+                    None => break (aser::coordinator::FinishReason::Cancelled, 0),
+                }
+            };
+            println!(
+                "[{variant}] cancelled after {n_tokens} tokens ({reason:?}); kv in use: {}",
+                engine.kv_used_tokens()
+            );
+            engine.shutdown();
+        }
         let reqs = synthetic_requests(vocab, n_requests, 12, 20, 42)?;
-        let run = serve_requests(Arc::new(model), &cfg, reqs);
+        let run = serve_requests(Arc::clone(&model), &cfg, reqs);
         println!(
             "[{variant}] {} reqs | {:.1} tok/s decode | p50 latency {:.0}ms | p95 {:.0}ms | ttft p50 {:.0}ms",
             run.responses.len(),

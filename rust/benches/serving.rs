@@ -10,20 +10,24 @@
 //! Emits machine-readable `BENCH_serving.json` so the perf trajectory is
 //! tracked across PRs: per-config tokens/s and p50/p95 TTFT, the
 //! batched-vs-scalar speedup per batch size, `prefill` rows,
-//! `long_prompt_ttft` rows, and `attn` rows (long-context decode tok/s at
-//! ≥ 1k cached positions — the vectorized attention engine's workload;
-//! `scripts/bench_diff` gates on the latter two).
+//! `long_prompt_ttft` rows, `attn` rows (long-context decode tok/s at
+//! ≥ 1k cached positions — the vectorized attention engine's workload), and
+//! `stream` rows (decode tok/s through the streaming `Engine`
+//! submit/recv path, inter-token latency p50/p95, and time-to-cancel;
+//! `scripts/bench_diff` gates on long-prompt TTFT, long-context decode, and
+//! the Engine-path decode tok/s).
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
-    calibrate_model, run_ptq, serve_requests, synthetic_requests, BatchConfig, ServerConfig,
+    calibrate_model, poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig,
+    Engine, EngineConfig, FinishReason, ServerConfig, TokenEvent,
 };
 use aser::methods::{method_by_name, RankPolicy};
 use aser::model::{synthetic_model, ChunkLogits, Gpt, KvCache, SeqChunk};
 use aser::quant::Precision;
 use aser::tensor::QGemmArena;
 use aser::util::json::{num, obj, s, Json};
-use aser::util::stats::black_box;
+use aser::util::stats::{black_box, percentile_sorted};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -112,6 +116,7 @@ fn main() {
     let mut prefill_rows: Vec<Json> = Vec::new();
     let mut long_prompt_rows: Vec<Json> = Vec::new();
     let mut attn_rows: Vec<Json> = Vec::new();
+    let mut stream_rows: Vec<Json> = Vec::new();
 
     for variant in ["fp16", "aser-w4a8"] {
         let model = if variant == "fp16" {
@@ -259,6 +264,114 @@ fn main() {
             ]));
         }
 
+        // ---- stream: the Engine submit/stream/cancel path — decode tok/s
+        //      through streaming handles, inter-token receive latency, and
+        //      time from cancel() to the terminal event ----
+        {
+            let n_requests = 16usize;
+            let max_new = 16usize;
+            let engine = Engine::new(
+                Arc::clone(&model),
+                EngineConfig {
+                    workers: 1,
+                    batch: BatchConfig { max_batch: 8, ..Default::default() },
+                    kv_tokens: 1 << 14,
+                },
+            );
+            let reqs =
+                synthetic_requests(model.cfg.vocab_size, n_requests, 8, max_new, 23).unwrap();
+            let t0 = Instant::now();
+            let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r)).collect();
+            // poll_streams drains round-robin, so receive time tracks
+            // generation time for every stream, not just the first handle.
+            let mut last_at: Vec<Option<Instant>> = vec![None; handles.len()];
+            let mut gaps_ms: Vec<f64> = Vec::new();
+            let mut total_tokens = 0usize;
+            poll_streams(&handles, |i, ev| {
+                if matches!(ev, Some(TokenEvent::Token { .. })) {
+                    let now = Instant::now();
+                    if let Some(prev) = last_at[i] {
+                        gaps_ms.push((now - prev).as_secs_f64() * 1e3);
+                    }
+                    last_at[i] = Some(now);
+                    total_tokens += 1;
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let decode_tok_s = total_tokens as f64 / wall;
+            gaps_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (itl_p50, itl_p95) = if gaps_ms.is_empty() {
+                (0.0, 0.0)
+            } else {
+                (percentile_sorted(&gaps_ms, 50.0), percentile_sorted(&gaps_ms, 95.0))
+            };
+            drop(handles);
+            engine.shutdown();
+
+            // Time-to-cancel: cancel after the second streamed token and
+            // measure until the terminal Cancelled event lands (the lease
+            // is already back in the pool at that point).
+            let cancel_engine = Engine::new(
+                Arc::clone(&model),
+                EngineConfig {
+                    workers: 1,
+                    batch: BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() },
+                    kv_tokens: 1 << 14,
+                },
+            );
+            let mut cancel_ms: Vec<f64> = Vec::new();
+            for rep in 0..5u64 {
+                let mut req = synthetic_requests(model.cfg.vocab_size, 1, 8, 48, 29 + rep)
+                    .unwrap()
+                    .remove(0);
+                req.id = rep;
+                let h = cancel_engine.submit(req);
+                let mut seen = 0usize;
+                let cancelled_at = loop {
+                    match h.recv().expect("stream open") {
+                        TokenEvent::Token { .. } => {
+                            seen += 1;
+                            if seen == 2 {
+                                let t = Instant::now();
+                                h.cancel();
+                                break t;
+                            }
+                        }
+                        TokenEvent::Finished { .. } => panic!("finished before cancel"),
+                        TokenEvent::PrefillDone { .. } => {}
+                    }
+                };
+                loop {
+                    match h.recv().expect("terminal event") {
+                        TokenEvent::Finished { reason, .. } => {
+                            if reason == FinishReason::Cancelled {
+                                cancel_ms.push(cancelled_at.elapsed().as_secs_f64() * 1e3);
+                            }
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            cancel_engine.shutdown();
+            cancel_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ttc_p50 =
+                if cancel_ms.is_empty() { 0.0 } else { percentile_sorted(&cancel_ms, 50.0) };
+            println!(
+                "stream: {decode_tok_s:>10.1} tok/s decode | inter-token p50/p95 \
+                 {itl_p50:.2}/{itl_p95:.2} ms | time-to-cancel p50 {ttc_p50:.2} ms"
+            );
+            stream_rows.push(obj(vec![
+                ("variant", s(variant)),
+                ("requests", num(n_requests as f64)),
+                ("max_new", num(max_new as f64)),
+                ("decode_tok_s", num(decode_tok_s)),
+                ("inter_token_p50_ms", num(itl_p50)),
+                ("inter_token_p95_ms", num(itl_p95)),
+                ("time_to_cancel_p50_ms", num(ttc_p50)),
+            ]));
+        }
+
         // ---- long-prompt serving TTFT: chunked schedule vs the old
         //      one-token-per-sequence-per-iteration schedule ----
         println!(
@@ -306,6 +419,7 @@ fn main() {
         ("prefill", Json::Arr(prefill_rows)),
         ("long_prompt_ttft", Json::Arr(long_prompt_rows)),
         ("attn", Json::Arr(attn_rows)),
+        ("stream", Json::Arr(stream_rows)),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");

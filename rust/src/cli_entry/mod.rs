@@ -13,7 +13,7 @@ pub mod table_cmd;
 use crate::util::cli::Args;
 use anyhow::Result;
 
-pub const GLOBAL_FLAGS: [&str; 3] = ["help", "verbose", "fast"];
+pub const GLOBAL_FLAGS: [&str; 4] = ["help", "verbose", "fast", "stream"];
 
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &GLOBAL_FLAGS)?;
@@ -49,8 +49,12 @@ commands:
                    --model A --method aser --prec w4a8 --rank 64 --outlier-f 32
   eval           perplexity + zero-shot accuracy
                    --model A --method aser --prec w4a8 [--ppl-tokens N]
-  serve          dynamic-batching server demo over a quantized model
+  serve          streaming-engine server demo over a quantized model
                    --model A --method aser --requests 32 --batch 8
+                   per-request sampling: --temperature 0.8 --top-k 40
+                   --top-p 0.95 (--seed doubles as the sampling seed;
+                   --sample-seed overrides it); --stream prints token
+                   events live as the engine generates them
   bench-table    regenerate a paper table: --id t1|t2|...|t8
   figure         regenerate a paper figure: --id f2|...|f8
   runtime-check  load + run the AOT HLO artifacts through PJRT

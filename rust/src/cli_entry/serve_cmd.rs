@@ -1,15 +1,81 @@
-//! `repro serve` — the serving demo: quantize a model, run the
-//! router + continuous batcher over a synthetic request trace, report
-//! latency/throughput. This is the "deployed W4A8 model" path of the paper.
+//! `repro serve` — the serving demo: quantize a model, run the streaming
+//! [`Engine`] over a synthetic request trace, report latency/throughput.
+//! This is the "deployed W4A8 model" path of the paper.
+//!
+//! Sampling is per request: `--temperature/--top-k/--top-p/--seed` set the
+//! decoding policy applied to the trace (temperature 0 = the default greedy
+//! path), and `--stream` switches from the blocking `serve_requests`
+//! compat path to live per-token printing through `poll_streams`.
 
 use super::ctx::Ctx;
 use crate::coordinator::{
-    run_ptq, serve_requests, synthetic_requests, BatchConfig, ServerConfig,
+    poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig, Engine,
+    EngineConfig, FinishReason, RequestHandle, Response, ServerRun, TokenEvent,
 };
+use crate::model::SamplingParams;
 use crate::quant::Precision;
 use crate::util::cli::Args;
 use anyhow::Result;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Drain all handles through [`poll_streams`], printing each event as it
+/// lands — interleaved generation is visible live instead of buffered
+/// behind a blocking per-request wait.
+fn drain_streaming(handles: Vec<RequestHandle>) -> Vec<Response> {
+    #[derive(Default)]
+    struct Acc {
+        tokens: Vec<u32>,
+        ttft: Duration,
+        total: Duration,
+        finish: Option<FinishReason>,
+    }
+    let mut acc: Vec<Acc> = handles.iter().map(|_| Acc::default()).collect();
+    poll_streams(&handles, |i, ev| {
+        let a = &mut acc[i];
+        let id = handles[i].id();
+        match ev {
+            Some(TokenEvent::PrefillDone { ttft }) => {
+                a.ttft = ttft;
+                println!(
+                    "[stream] req {id:>3}: prefill done ({:.0} ms)",
+                    ttft.as_secs_f64() * 1e3
+                );
+            }
+            Some(TokenEvent::Token { token, index }) => {
+                a.tokens.push(token);
+                println!("[stream] req {id:>3}: token[{index}] = {token}");
+            }
+            Some(TokenEvent::Finished { reason, n_tokens, ttft, total }) => {
+                a.ttft = ttft;
+                a.total = total;
+                a.finish = Some(reason);
+                println!(
+                    "[stream] req {id:>3}: finished {reason:?} ({n_tokens} tokens, {:.0} ms)",
+                    total.as_secs_f64() * 1e3
+                );
+            }
+            None => {
+                // Worker gone without a terminal event.
+                a.total = handles[i].elapsed();
+                a.finish = Some(FinishReason::Cancelled);
+                println!("[stream] req {id:>3}: stream closed (worker gone)");
+            }
+        }
+    });
+    handles
+        .iter()
+        .zip(acc)
+        .map(|(h, a)| Response {
+            id: h.id(),
+            prompt_len: h.prompt_len(),
+            tokens: a.tokens,
+            ttft: a.ttft,
+            total: a.total,
+            finish: a.finish.expect("stream drained"),
+        })
+        .collect()
+}
 
 pub fn run(args: &Args) -> Result<()> {
     let ctx = Ctx::from_args(args)?;
@@ -27,6 +93,14 @@ pub fn run(args: &Args) -> Result<()> {
     let prefill_chunk = args.usize_or("chunk", default_cfg.prefill_chunk)?;
     let token_budget = args.usize_or("token-budget", default_cfg.token_budget)?;
     let kv_reserve = args.usize_or("kv-reserve", default_cfg.kv_reserve)?;
+    // Per-request decoding policy. temperature 0 (default) is the greedy
+    // path; the sampling seed defaults to the global --seed so the whole
+    // trace stays reproducible.
+    let temperature = args.f64_or("temperature", 0.0)? as f32;
+    let top_k = args.usize_or("top-k", 0)?;
+    let top_p = args.f64_or("top-p", 1.0)? as f32;
+    let sample_seed = args.u64_or("sample-seed", ctx.seed)?;
+    let stream = args.flag("stream");
 
     let model = ctx.model(&model_name)?;
     let model = if method_name == "fp16" {
@@ -44,9 +118,20 @@ pub fn run(args: &Args) -> Result<()> {
         qmodel
     };
 
-    let requests =
+    let mut requests =
         synthetic_requests(model.cfg.vocab_size, n_requests, prompt_len, max_new, ctx.seed)?;
-    let cfg = ServerConfig {
+    for req in requests.iter_mut() {
+        req.sampling = SamplingParams {
+            temperature,
+            top_k,
+            top_p,
+            // Independent per-request streams, reproducible from one seed.
+            seed: sample_seed.wrapping_add(req.id),
+            stop_tokens: Vec::new(),
+        };
+    }
+
+    let cfg = EngineConfig {
         workers,
         batch: BatchConfig {
             max_batch,
@@ -57,11 +142,23 @@ pub fn run(args: &Args) -> Result<()> {
         },
         kv_tokens: args.usize_or("kv-tokens", 1 << 15)?,
     };
-    let run = serve_requests(Arc::new(model), &cfg, requests);
+    let model = Arc::new(model);
+    let run = if stream {
+        let t0 = Instant::now();
+        let engine = Engine::new(model, cfg);
+        let handles: Vec<RequestHandle> =
+            requests.into_iter().map(|req| engine.submit(req)).collect();
+        let responses = drain_streaming(handles);
+        let per_worker = engine.shutdown();
+        ServerRun { responses, per_worker, wall: t0.elapsed() }
+    } else {
+        // The blocking path IS the compat wrapper — one implementation.
+        serve_requests(model, &cfg, requests)
+    };
 
     println!(
         "== serve: {n_requests} requests, {workers} workers, batch {max_batch}, \
-         chunk {prefill_chunk}, budget {token_budget} =="
+         chunk {prefill_chunk}, budget {token_budget}, temperature {temperature} =="
     );
     println!("  completed      {}", run.responses.len());
     println!("  wall           {:.2}s", run.wall.as_secs_f64());
@@ -80,16 +177,18 @@ pub fn run(args: &Args) -> Result<()> {
     for (i, m) in run.per_worker.iter().enumerate() {
         println!(
             "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, peak rows {}, \
-             kv-rejects {}, refused {}, kv-grows {}, truncated {}",
+             kv-rejects {}, kv-grows {}",
             m.requests,
             m.generated_tokens,
             m.iterations,
             m.peak_batch,
             m.peak_iter_tokens,
             m.rejected_capacity,
-            m.rejected_impossible,
             m.kv_grows,
-            m.truncated_kv
+        );
+        println!(
+            "           finish: eos {}, length {}, truncated-kv {}, cancelled {}, rejected {}",
+            m.finished_eos, m.finished_length, m.truncated_kv, m.cancelled, m.rejected_impossible
         );
     }
     Ok(())

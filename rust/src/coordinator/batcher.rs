@@ -1,115 +1,216 @@
 //! Continuous (iteration-level) dynamic batcher — Orca-style scheduling on
-//! top of the packed quantized execution engine, with chunked multi-token
-//! prefill and right-sized KV leases.
+//! top of the packed quantized execution engine, now driving **streaming,
+//! cancellable, per-request-sampled** generation for the [`super::engine`]
+//! facade.
 //!
 //! The decode loop keeps an *active set* of sequences. Every iteration it
-//! (1) admits queued requests while there is batch room AND the KV pool
-//! grants a lease (backpressure), (2) plans a **ragged chunk batch** under
-//! a per-iteration token budget and advances it through ONE
-//! [`Gpt::forward_chunk_batch`] call, and (3) retires finished sequences,
-//! freeing their KV lease. New requests therefore join between
+//! (1) admits queued [`Submission`]s while there is batch room AND the KV
+//! pool grants a lease (backpressure), (2) sweeps cancellation flags,
+//! (3) plans a **ragged chunk batch** under a per-iteration token budget and
+//! advances it through ONE [`Gpt::forward_chunk_batch`] call, sampling and
+//! **emitting each token the instant its logits are written back**, and
+//! (4) retires finished sequences, freeing their KV lease and sending a
+//! terminal [`TokenEvent::Finished`]. New requests therefore join between
 //! *iterations*, not between requests.
 //!
-//! ## Scheduling policy (step 2)
+//! ## Streaming protocol
+//!
+//! Each sequence's event channel carries, in order:
+//! `PrefillDone { ttft }`, then one `Token { token, index }` per generated
+//! token (indices are contiguous from 0), then exactly one
+//! `Finished { reason, .. }`. Rejected and cancelled-while-queued requests
+//! skip straight to `Finished`. The KV lease is returned to the pool
+//! **before** the `Finished` event is sent, so an observer that has seen the
+//! terminal event can rely on the capacity being reusable.
+//!
+//! ## Sampling (per-`Active` state)
+//!
+//! The pre-Engine batcher hardwired `argmax` over a terminal logits buffer.
+//! Now every active sequence owns a [`Sampler`] built from its request's
+//! [`SamplingParams`]; the token is drawn at logits writeback (greedy /
+//! temperature / top-k / top-p with the request's private seeded RNG) and
+//! `max_new` / EOS / per-request stop tokens are evaluated at the same
+//! moment. Because a sampler consumes RNG draws only for its own rows —
+//! exactly one per non-greedy token — token streams are bitwise-reproducible
+//! across batch shapes, chunk widths, and co-scheduled traffic.
+//!
+//! ## Cancellation
+//!
+//! Every submission carries a shared `AtomicBool`. The loop checks it once
+//! per iteration (and at admission for still-queued requests): a raised flag
+//! finishes the sequence with [`FinishReason::Cancelled`], frees its KV
+//! lease that same iteration, and emits the terminal event. A closed event
+//! channel (the handle was dropped) is treated as an implicit cancel the
+//! next time the loop tries to emit, so abandoned streams cannot pin KV
+//! capacity.
+//!
+//! ## Scheduling policy (step 3)
 //!
 //! Each iteration assembles at most [`BatchConfig::token_budget`] token
 //! rows:
-//! - **Decode rows first.** Every sequence past its prompt contributes
-//!   exactly one row, unconditionally — decode latency never queues behind
-//!   a long prefill.
+//! - **Decode rows first.** Every sequence past its prompt feeds its one
+//!   pending token, unconditionally — decode latency never queues behind a
+//!   long prefill.
 //! - **Prompt chunks share the remainder.** Each still-prefilling sequence
 //!   may feed up to [`BatchConfig::prefill_chunk`] prompt tokens from the
-//!   leftover budget. The grant order rotates across iterations
-//!   (round-robin start), so one long prompt cannot monopolize the chunk
-//!   budget and starve later arrivals of their TTFT.
+//!   leftover budget, with a rotating round-robin start for fairness.
 //!
 //! All planned spans stack into a single ragged forward: one batched
 //! quantized GEMM per layer per iteration over Σ span rows, with the
-//! lm_head GEMM run only for rows the scheduler reads back (prefill-final
-//! and decode rows — mid-prefill chunks skip the vocab projection). This is
-//! where long-prompt TTFT is won: prompt tokens hit the packed int8
-//! kernels as wide token tiles instead of one skinny row per iteration.
-//! Between those GEMMs, per-sequence attention fans out across
-//! (sequence × head) work items on the head-major KV tiles
-//! (`Gpt::attn_layer` + `tensor::attn_kernel`), so long-context decode
-//! iterations keep every core busy instead of walking sequences serially.
+//! lm_head GEMM run only for rows the scheduler reads back. Between those
+//! GEMMs, per-sequence attention fans out across (sequence × head) work
+//! items on the head-major KV tiles (`Gpt::attn_layer` +
+//! `tensor::attn_kernel`).
 //!
 //! ## KV leases (admission + growth)
 //!
-//! Admission distinguishes **transient** capacity pushback (the pool is
-//! full right now; the request is re-queued and admitted when leases free
-//! up — `BatchMetrics::rejected_capacity`) from **impossible** requests
-//! that could never run: empty prompts, and prompts whose minimum
-//! footprint (prompt + one generated token) exceeds the KV window or the
-//! whole pool. Those are refused immediately with an explicit [`Response`]
-//! carrying `rejected: true` and an empty token list
-//! (`BatchMetrics::rejected_impossible`) — re-queueing them forever was an
-//! admission livelock. With impossible requests refused up front,
-//! `run_batcher` terminates on any finite request stream.
+//! Admission distinguishes **transient** capacity pushback (re-queued;
+//! `BatchMetrics::rejected_capacity`) from **impossible** requests — empty
+//! prompt, or `prompt + 1` beyond the KV window or the whole pool — which
+//! finish immediately with [`FinishReason::Rejected`]
+//! (`BatchMetrics::rejected_impossible`); re-queueing them forever was an
+//! admission livelock. Feasible requests lease right-sized
+//! (`prompt + min(max_new, kv_reserve)`) and decode extends the lease
+//! through [`KvPool::grow`]; when the pool cannot grow a lease even by one
+//! token the sequence finishes gracefully with
+//! [`FinishReason::TruncatedKv`].
 //!
-//! Feasible requests lease **right-sized**, not worst-case: the initial
-//! lease covers `prompt + min(max_new, kv_reserve)` tokens, and decode
-//! extends it incrementally through [`KvPool::grow`]
-//! (`BatchMetrics::kv_grows`). When the pool cannot grow a lease even by
-//! one token, the sequence finishes gracefully with what it has generated
-//! (`BatchMetrics::truncated_kv`) instead of panicking — so tight pools
-//! run more sequences concurrently and EOS-early sequences never strand a
-//! `max_new`-sized reservation.
-//!
-//! TTFT (`Response::ttft`) is stamped when the chunked forward that ends a
-//! sequence's prefill writes its logits back — the instant its first
-//! generated token is determined — not when the next iteration argmaxes
-//! that token.
+//! TTFT is stamped when the chunked forward that ends a sequence's prefill
+//! writes its logits back — the instant its first token is sampled — and
+//! delivered immediately as `PrefillDone`.
 //!
 //! Determinism scope: per-sequence attention is identical across chunkings
-//! by construction, and the int-GEMM path is bitwise identical across
-//! batch shapes, so greedy outputs match single-sequence generation
-//! token-for-token on quantized models (and to f32 tolerance on dense
-//! ones; see `tensor::gemm::matmul_bt_acc` for the fp caveats).
+//! by construction, the int-GEMM path is bitwise identical across batch
+//! shapes, and sampler RNG consumption is batch-independent, so outputs
+//! match single-sequence generation token-for-token on quantized models
+//! (greedy: exactly the `Gpt::generate_greedy` stream, truncated at the
+//! KV window).
 
 use super::kvpool::{KvPool, Lease};
 use crate::data::vocab::EOS;
-use crate::model::{argmax, ChunkLogits, Gpt, KvCache, SeqChunk, PREFILL_CHUNK};
+use crate::model::{ChunkLogits, Gpt, KvCache, Sampler, SamplingParams, SeqChunk, PREFILL_CHUNK};
 use crate::tensor::QGemmArena;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// One generation request, as submitted through `Engine::submit` (or the
+/// `serve_requests` compat wrapper).
 #[derive(Clone, Debug)]
-pub struct Request {
+pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Per-request decoding policy (greedy, temperature/top-k/top-p with a
+    /// deterministic seed, extra stop tokens).
+    pub sampling: SamplingParams,
     pub submitted: Instant,
 }
 
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub id: u64,
-    pub tokens: Vec<u32>,
-    /// Time from submit to first generated token (stamped when the logits
-    /// of the prefill-final forward are written back). For rejected
-    /// requests this equals `total` (time to rejection).
-    pub ttft: Duration,
-    /// Time from submit to completion.
-    pub total: Duration,
-    pub prompt_len: usize,
-    /// True when the request was refused at admission because it could
-    /// never run (empty prompt, or prompt + 1 beyond the KV window or the
-    /// whole pool); `tokens` is empty.
-    pub rejected: bool,
+impl GenRequest {
+    /// Greedy request stamped now — the common case for benches and tests.
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt,
+            max_new,
+            sampling: SamplingParams::greedy(),
+            submitted: Instant::now(),
+        }
+    }
 }
 
+/// Why a request's stream ended. Replaces the old `Response::rejected` flag
+/// with the full outcome taxonomy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// EOS (under `BatchConfig::stop_on_eos`) or a per-request stop token
+    /// was generated; the stop token itself is the stream's last token.
+    Eos,
+    /// `max_new` tokens were generated (zero for a `max_new == 0` request,
+    /// which finishes at admission), or the model's context window
+    /// (`ModelConfig::max_seq`) left no room to feed another token.
+    Length,
+    /// `RequestHandle::cancel()` was called (or the handle was dropped).
+    Cancelled,
+    /// The KV pool could not grow the sequence's lease by even one token;
+    /// the stream keeps everything generated so far.
+    TruncatedKv,
+    /// Refused at admission: the request could never run (empty prompt, or
+    /// `prompt + 1` beyond the KV window or the whole pool). No tokens.
+    Rejected,
+}
+
+impl FinishReason {
+    /// True for streams that ran to a natural end (served requests):
+    /// rejected and cancelled streams carry no complete latency signal.
+    pub fn is_completed(&self) -> bool {
+        matches!(self, FinishReason::Eos | FinishReason::Length | FinishReason::TruncatedKv)
+    }
+}
+
+/// One event on a request's stream. See the module doc for the protocol
+/// (`PrefillDone` → `Token`* → `Finished`).
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// Prefill completed; the first token was just determined. `ttft` is
+    /// measured from `GenRequest::submitted`.
+    PrefillDone { ttft: Duration },
+    /// A generated token. `index` counts from 0 and is contiguous.
+    Token { token: u32, index: usize },
+    /// Terminal event: the stream is complete and the KV lease has already
+    /// been returned to the pool. For streams that never reached their
+    /// first token (rejected / early-cancelled), `ttft == total`.
+    Finished { reason: FinishReason, n_tokens: usize, ttft: Duration, total: Duration },
+}
+
+/// A request paired with its event channel and cancellation flag — the unit
+/// the engine routes to a worker. Public so tests can drive [`run_batcher`]
+/// directly; `Engine::submit` is the normal constructor.
+pub struct Submission {
+    pub req: GenRequest,
+    pub events: Sender<TokenEvent>,
+    pub cancel: Arc<AtomicBool>,
+}
+
+impl Submission {
+    /// Wire a request to a fresh event channel + cancel flag. Returns the
+    /// submission plus the receiving side (what `RequestHandle` wraps).
+    pub fn channel(req: GenRequest) -> (Submission, Receiver<TokenEvent>, Arc<AtomicBool>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        (Submission { req, events: tx, cancel: Arc::clone(&cancel) }, rx, cancel)
+    }
+}
+
+/// An in-flight sequence.
 struct Active {
-    req: Request,
+    req: GenRequest,
+    events: Sender<TokenEvent>,
+    cancel: Arc<AtomicBool>,
+    sampler: Sampler,
     cache: KvCache,
     lease: Lease,
     /// Next prompt index to feed (prefill progress).
     fed: usize,
-    generated: Vec<u32>,
-    last_logits: Vec<f32>,
+    /// Tokens sampled (and emitted) so far.
+    n_generated: usize,
+    /// Sampled but not yet fed back to the model.
+    pending: Option<u32>,
     first_token_at: Option<Instant>,
-    /// Finished early because the KV pool could not grow the lease.
-    truncated: bool,
+    /// Set when a terminal condition is decided; retired at end of iteration.
+    finish: Option<FinishReason>,
+}
+
+impl Active {
+    /// Emit an event; a closed channel (dropped handle) becomes an implicit
+    /// cancel so abandoned streams release their KV lease.
+    fn emit(&mut self, ev: TokenEvent) {
+        if self.events.send(ev).is_err() && self.finish.is_none() {
+            self.finish = Some(FinishReason::Cancelled);
+        }
+    }
 }
 
 /// Batcher configuration.
@@ -150,9 +251,13 @@ impl Default for BatchConfig {
     }
 }
 
-/// Metrics the server reports.
+/// Metrics the server reports. Finished streams are counted once each under
+/// their [`FinishReason`]: `finished_eos + finished_length + cancelled +
+/// truncated_kv + rejected_impossible` equals the number of terminal events
+/// emitted.
 #[derive(Clone, Debug, Default)]
 pub struct BatchMetrics {
+    /// Requests admitted into the active set.
     pub requests: usize,
     pub generated_tokens: usize,
     pub prefill_tokens: usize,
@@ -166,53 +271,98 @@ pub struct BatchMetrics {
     /// Transient pool pushback: the request was re-queued and admitted
     /// later.
     pub rejected_capacity: usize,
-    /// Requests refused outright with a `rejected` response because they
-    /// could never run (see the module doc's admission rules).
+    /// Streams finished [`FinishReason::Rejected`] (see the module doc's
+    /// admission rules).
     pub rejected_impossible: usize,
     /// Successful incremental lease grows during decode.
     pub kv_grows: usize,
-    /// Sequences finished early (gracefully) because the pool could not
-    /// grow their lease by even one token.
+    /// Streams finished [`FinishReason::TruncatedKv`].
     pub truncated_kv: usize,
+    /// Streams finished [`FinishReason::Cancelled`] — by flag, or by a
+    /// dropped handle.
+    pub cancelled: usize,
+    /// Streams finished [`FinishReason::Eos`].
+    pub finished_eos: usize,
+    /// Streams finished [`FinishReason::Length`].
+    pub finished_length: usize,
 }
 
-/// Run the batching loop until the request channel closes and the active
-/// set drains. Responses are delivered through `respond`.
+impl BatchMetrics {
+    fn count_finish(&mut self, reason: FinishReason) {
+        match reason {
+            FinishReason::Eos => self.finished_eos += 1,
+            FinishReason::Length => self.finished_length += 1,
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::TruncatedKv => self.truncated_kv += 1,
+            FinishReason::Rejected => self.rejected_impossible += 1,
+        }
+    }
+}
+
+/// Finish a request that never entered the active set (rejected at
+/// admission, or cancelled while queued): terminal event + bookkeeping.
+fn finish_queued(
+    sub: Submission,
+    reason: FinishReason,
+    metrics: &mut BatchMetrics,
+    on_finish: &mut impl FnMut(&GenRequest, FinishReason),
+) {
+    metrics.count_finish(reason);
+    let waited = Instant::now() - sub.req.submitted;
+    let _ = sub.events.send(TokenEvent::Finished {
+        reason,
+        n_tokens: 0,
+        ttft: waited,
+        total: waited,
+    });
+    on_finish(&sub.req, reason);
+}
+
+/// Run the batching loop until the submission channel closes and the active
+/// set drains. Token streams are delivered through each submission's event
+/// channel; `on_finish` fires once per request after its terminal event
+/// (the engine uses it for load accounting).
 pub fn run_batcher(
     model: &Gpt,
     pool: &KvPool,
     cfg: &BatchConfig,
-    rx: Receiver<Request>,
-    mut respond: impl FnMut(Response),
+    rx: Receiver<Submission>,
+    mut on_finish: impl FnMut(&GenRequest, FinishReason),
 ) -> BatchMetrics {
     let mut active: Vec<Active> = Vec::new();
     let mut metrics = BatchMetrics::default();
     let mut channel_open = true;
-    let mut pending: Vec<Request> = Vec::new();
+    let mut pending: Vec<Submission> = Vec::new();
     // Reusable activation-quantization scratch for the chunked forward.
     let mut arena = QGemmArena::new();
     // Rotating start index for prefill chunk grants (fairness).
     let mut prefill_rr = 0usize;
 
     while channel_open || !active.is_empty() || !pending.is_empty() {
-        // ---- admission ----
+        // ---- intake ----
         while active.len() < cfg.max_batch && channel_open {
             match rx.recv_timeout(if active.is_empty() && pending.is_empty() {
                 cfg.idle_wait
             } else {
                 Duration::ZERO
             }) {
-                Ok(req) => pending.push(req),
+                Ok(sub) => pending.push(sub),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
                     channel_open = false;
                 }
             }
         }
+
+        // ---- admission ----
         let mut still_pending = Vec::new();
-        for req in pending.drain(..) {
+        for sub in pending.drain(..) {
+            if sub.cancel.load(Ordering::Acquire) {
+                finish_queued(sub, FinishReason::Cancelled, &mut metrics, &mut on_finish);
+                continue;
+            }
             if active.len() >= cfg.max_batch {
-                still_pending.push(req);
+                still_pending.push(sub);
                 continue;
             }
             // A request is IMPOSSIBLE only when even its minimum footprint
@@ -221,54 +371,69 @@ pub fn run_batcher(
             // to decode from). Larger demands are admissible: the lease is
             // right-sized now and grown during decode, truncating
             // gracefully if the pool runs out.
-            let min_need = req.prompt.len() + 1;
-            if req.prompt.is_empty()
+            let min_need = sub.req.prompt.len() + 1;
+            if sub.req.prompt.is_empty()
                 || min_need > model.cfg.max_seq
                 || min_need > pool.capacity_tokens()
             {
-                metrics.rejected_impossible += 1;
-                let waited = Instant::now() - req.submitted;
-                respond(Response {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    ttft: waited,
-                    total: waited,
-                    prompt_len: req.prompt.len(),
-                    rejected: true,
-                });
+                finish_queued(sub, FinishReason::Rejected, &mut metrics, &mut on_finish);
+                continue;
+            }
+            if sub.req.max_new == 0 {
+                // Valid request asking for nothing: finish immediately with
+                // zero tokens instead of burning a prefill whose first
+                // sampled token would overshoot the limit. (Checked after
+                // the validity rules so an impossible request still reports
+                // Rejected, not a "completed" empty stream.)
+                finish_queued(sub, FinishReason::Length, &mut metrics, &mut on_finish);
                 continue;
             }
             // Right-sized lease: prompt + min(max_new, kv_reserve), clamped
             // to the KV window and pool size (never below prompt + 1).
-            let reserve = req.max_new.clamp(1, cfg.kv_reserve.max(1));
-            let want = (req.prompt.len() + reserve)
+            let reserve = sub.req.max_new.clamp(1, cfg.kv_reserve.max(1));
+            let want = (sub.req.prompt.len() + reserve)
                 .min(model.cfg.max_seq)
                 .min(pool.capacity_tokens());
             match pool.alloc(want) {
                 Some(lease) => {
                     active.push(Active {
+                        sampler: Sampler::new(&sub.req.sampling),
                         // Pre-size the tiles to the lease so prefill never
                         // repacks mid-flight; decode-time lease growth
                         // re-sizes lazily on the next span append.
                         cache: KvCache::with_capacity(&model.cfg, lease.tokens),
                         lease,
                         fed: 0,
-                        generated: Vec::new(),
-                        last_logits: Vec::new(),
+                        n_generated: 0,
+                        pending: None,
                         first_token_at: None,
-                        truncated: false,
-                        req,
+                        finish: None,
+                        req: sub.req,
+                        events: sub.events,
+                        cancel: sub.cancel,
                     });
                     metrics.requests += 1;
                 }
                 None => {
                     metrics.rejected_capacity += 1;
-                    still_pending.push(req);
+                    still_pending.push(sub);
                 }
             }
         }
         pending = still_pending;
         metrics.peak_batch = metrics.peak_batch.max(active.len());
+
+        // ---- cancellation sweep ----
+        // Raised flags finish this iteration: the sequence is skipped by
+        // the planner below and its lease is freed in the retire phase at
+        // the bottom — cancellation-to-lease-return is at most one
+        // iteration.
+        for a in active.iter_mut() {
+            if a.finish.is_none() && a.cancel.load(Ordering::Acquire) {
+                a.finish = Some(FinishReason::Cancelled);
+            }
+        }
+
         if active.is_empty() {
             if !channel_open && pending.is_empty() {
                 break;
@@ -292,19 +457,20 @@ pub fn run_batcher(
         let mut flat: Vec<u32> = Vec::new();
         let mut spans: Vec<(usize, usize, usize, ChunkLogits)> = Vec::new();
 
-        // Decode rows first: every decoding sequence advances by one token
-        // regardless of prefill pressure.
+        // Decode rows first: every decoding sequence feeds its pending
+        // token regardless of prefill pressure.
         for (i, a) in active.iter_mut().enumerate() {
-            if a.fed < a.req.prompt.len() {
+            if a.finish.is_some() || a.fed < a.req.prompt.len() {
                 continue;
             }
-            let next = argmax(&a.last_logits) as u32;
-            a.generated.push(next);
-            metrics.generated_tokens += 1;
-            let mut done = a.generated.len() >= a.req.max_new
-                || (cfg.stop_on_eos && next == EOS)
-                || a.cache.len() + 1 >= model.cfg.max_seq;
-            if !done && a.cache.len() + 1 > a.lease.tokens {
+            let Some(next) = a.pending else { continue };
+            if a.cache.len() + 1 >= model.cfg.max_seq {
+                // The KV window has no room to feed another token; the
+                // pending token was already emitted (it needed no slot).
+                a.finish = Some(FinishReason::Length);
+                continue;
+            }
+            if a.cache.len() + 1 > a.lease.tokens {
                 // Lease exhausted: grow by the preferred step, falling back
                 // to the single token actually needed; truncate gracefully
                 // when even that fails.
@@ -319,15 +485,13 @@ pub fn run_batcher(
                 {
                     metrics.kv_grows += 1;
                 } else {
-                    metrics.truncated_kv += 1;
-                    a.truncated = true;
-                    done = true;
+                    a.finish = Some(FinishReason::TruncatedKv);
+                    continue;
                 }
             }
-            if !done {
-                spans.push((i, flat.len(), 1, ChunkLogits::Last));
-                flat.push(next);
-            }
+            spans.push((i, flat.len(), 1, ChunkLogits::Last));
+            flat.push(next);
+            a.pending = None;
         }
         let mut budget_left = budget.saturating_sub(spans.len());
 
@@ -336,7 +500,7 @@ pub fn run_batcher(
         let prefilling: Vec<usize> = active
             .iter()
             .enumerate()
-            .filter(|(_, a)| a.fed < a.req.prompt.len())
+            .filter(|(_, a)| a.finish.is_none() && a.fed < a.req.prompt.len())
             .map(|(i, _)| i)
             .collect();
         if !prefilling.is_empty() {
@@ -383,10 +547,10 @@ pub fn run_batcher(
                 }
                 model.forward_chunk_batch(&chunks, &mut caches, &mut arena)
             };
-            // Logits are materialized now: any sequence that just fed its
-            // final prompt token has its first generated token determined
-            // at this instant, so TTFT is stamped here — not one iteration
-            // later when the decode branch argmaxes it.
+            // Logits are materialized now: sample each row's next token at
+            // this instant — generation time — and emit it immediately,
+            // instead of parking a terminal logits buffer for the next
+            // iteration to argmax.
             let logits_at = Instant::now();
             let mut row = 0usize;
             for &(i, _, _, lg) in &spans {
@@ -394,10 +558,32 @@ pub fn run_batcher(
                     continue;
                 }
                 let a = &mut active[i];
-                a.last_logits = logits.row(row).to_vec();
+                let lrow = logits.row(row);
                 row += 1;
                 if a.first_token_at.is_none() && a.fed >= a.req.prompt.len() {
+                    // Prefill just completed: its first generated token is
+                    // determined by these logits, so TTFT is stamped (and
+                    // streamed) here.
                     a.first_token_at = Some(logits_at);
+                    a.emit(TokenEvent::PrefillDone { ttft: logits_at - a.req.submitted });
+                }
+                if a.finish.is_some() {
+                    continue; // channel died on the PrefillDone emit
+                }
+                let tok = a.sampler.sample(lrow);
+                let index = a.n_generated;
+                a.n_generated += 1;
+                metrics.generated_tokens += 1;
+                a.emit(TokenEvent::Token { token: tok, index });
+                if a.finish.is_some() {
+                    continue; // channel died mid-emit
+                }
+                if (cfg.stop_on_eos && tok == EOS) || a.req.sampling.is_stop_token(tok) {
+                    a.finish = Some(FinishReason::Eos);
+                } else if a.n_generated >= a.req.max_new {
+                    a.finish = Some(FinishReason::Length);
+                } else {
+                    a.pending = Some(tok);
                 }
             }
         }
@@ -405,38 +591,22 @@ pub fn run_batcher(
         // ---- retire finished ----
         let mut i = 0;
         while i < active.len() {
-            let done = {
-                let a = &active[i];
-                // The KV-window clause must not fire on a fresh
-                // prefill-final sequence: its first token is already
-                // determined by the prefill logits and needs no KV slot,
-                // so the next iteration's decode pass emits it (and only
-                // then stops feeding).
-                a.truncated
-                    || (a.fed >= a.req.prompt.len()
-                        && (a.generated.len() >= a.req.max_new
-                            || (cfg.stop_on_eos && a.generated.last() == Some(&EOS))
-                            || (!a.generated.is_empty()
-                                && a.cache.len() + 1 >= model.cfg.max_seq)))
-            };
-            if done {
-                let a = active.swap_remove(i);
-                pool.free(a.lease);
-                let now = Instant::now();
-                respond(Response {
-                    id: a.req.id,
-                    prompt_len: a.req.prompt.len(),
-                    tokens: a.generated,
-                    ttft: a
-                        .first_token_at
-                        .map(|t| t - a.req.submitted)
-                        .unwrap_or_else(|| now - a.req.submitted),
-                    total: now - a.req.submitted,
-                    rejected: false,
-                });
-            } else {
+            if active[i].finish.is_none() {
                 i += 1;
+                continue;
             }
+            let mut a = active.swap_remove(i);
+            let reason = a.finish.unwrap();
+            // Free the lease BEFORE the terminal event: once `Finished` is
+            // observable, the capacity is back in the pool.
+            pool.free(a.lease);
+            metrics.count_finish(reason);
+            let now = Instant::now();
+            let total = now - a.req.submitted;
+            let ttft = a.first_token_at.map(|t| t - a.req.submitted).unwrap_or(total);
+            let n_tokens = a.n_generated;
+            a.emit(TokenEvent::Finished { reason, n_tokens, ttft, total });
+            on_finish(&a.req, reason);
         }
     }
     metrics
@@ -448,41 +618,93 @@ mod tests {
     use crate::model::synthetic_model;
     use std::sync::mpsc::channel;
 
+    /// Drain a request's event stream into (tokens, finish info), checking
+    /// the protocol invariants on the way: PrefillDone (if any) precedes
+    /// tokens, indices are contiguous, Finished is terminal and consistent.
+    fn drain(rx: &Receiver<TokenEvent>) -> (Vec<u32>, FinishReason, Duration, Duration) {
+        let mut tokens = Vec::new();
+        let mut saw_prefill = false;
+        loop {
+            match rx.try_recv().expect("stream must be complete") {
+                TokenEvent::PrefillDone { .. } => {
+                    assert!(!saw_prefill, "duplicate PrefillDone");
+                    assert!(tokens.is_empty(), "PrefillDone after tokens");
+                    saw_prefill = true;
+                }
+                TokenEvent::Token { token, index } => {
+                    assert_eq!(index, tokens.len(), "non-contiguous token index");
+                    assert!(saw_prefill, "Token before PrefillDone");
+                    tokens.push(token);
+                }
+                TokenEvent::Finished { reason, n_tokens, ttft, total } => {
+                    assert_eq!(n_tokens, tokens.len(), "Finished token count drift");
+                    assert!(rx.try_recv().is_err(), "events after Finished");
+                    return (tokens, reason, ttft, total);
+                }
+            }
+        }
+    }
+
+    struct Served {
+        id: u64,
+        tokens: Vec<u32>,
+        reason: FinishReason,
+        ttft: Duration,
+        total: Duration,
+    }
+
     fn serve_cfg(
-        reqs: Vec<Request>,
+        reqs: Vec<GenRequest>,
         cfg: BatchConfig,
         kv_tokens: usize,
-    ) -> (Vec<Response>, BatchMetrics) {
+    ) -> (Vec<Served>, BatchMetrics) {
         let model = synthetic_model("micro", 51).unwrap();
         let pool = KvPool::new(kv_tokens, 8);
         let (tx, rx) = channel();
+        let mut streams = Vec::new();
         for r in reqs {
-            tx.send(r).unwrap();
+            let id = r.id;
+            let (sub, erx, _cancel) = Submission::channel(r);
+            tx.send(sub).unwrap();
+            streams.push((id, erx));
         }
         drop(tx);
-        let mut out = Vec::new();
-        let m = run_batcher(&model, &pool, &cfg, rx, |r| out.push(r));
+        let mut n_finished = 0usize;
+        let m = run_batcher(&model, &pool, &cfg, rx, |_, _| n_finished += 1);
         assert_eq!(pool.used_tokens(), 0, "all leases freed");
+        assert_eq!(n_finished, streams.len(), "on_finish fired per request");
+        let out = streams
+            .iter()
+            .map(|(id, erx)| {
+                let (tokens, reason, ttft, total) = drain(erx);
+                Served { id: *id, tokens, reason, ttft, total }
+            })
+            .collect();
         (out, m)
     }
 
-    fn serve(reqs: Vec<Request>, max_batch: usize, kv_tokens: usize) -> (Vec<Response>, BatchMetrics) {
+    fn serve(
+        reqs: Vec<GenRequest>,
+        max_batch: usize,
+        kv_tokens: usize,
+    ) -> (Vec<Served>, BatchMetrics) {
         serve_cfg(reqs, BatchConfig { max_batch, ..Default::default() }, kv_tokens)
     }
 
-    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
-        Request { id, prompt, max_new, submitted: Instant::now() }
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> GenRequest {
+        GenRequest::new(id, prompt, max_new)
     }
 
     #[test]
     fn serves_all_requests() {
-        let reqs: Vec<Request> =
+        let reqs: Vec<GenRequest> =
             (0..10).map(|i| req(i, vec![1 + i as u32, 2, 3], 4)).collect();
         let (out, m) = serve(reqs, 4, 10_000);
         assert_eq!(out.len(), 10);
         assert_eq!(m.requests, 10);
         assert!(m.peak_batch <= 4);
         assert!(out.iter().all(|r| r.tokens.len() <= 4 && !r.tokens.is_empty()));
+        assert_eq!(m.finished_eos + m.finished_length, 10, "all complete naturally");
     }
 
     #[test]
@@ -497,18 +719,14 @@ mod tests {
         );
         let r1 = out.iter().find(|r| r.id == 1).unwrap();
         let r3 = out.iter().find(|r| r.id == 3).unwrap();
-        let trim = |v: &[u32]| {
-            // greedy may stop at EOS in batcher; compare prefix
-            v.to_vec()
-        };
-        assert!(want.starts_with(&trim(&r1.tokens)) || r1.tokens == want);
+        assert!(want.starts_with(&r1.tokens) || r1.tokens == want);
         assert_eq!(r1.tokens, r3.tokens, "same prompt ⇒ same output");
     }
 
     #[test]
     fn capacity_backpressure_still_completes() {
         // Pool fits only ~1 sequence at a time; everything must still finish.
-        let reqs: Vec<Request> = (0..6).map(|i| req(i, vec![2, 3], 3)).collect();
+        let reqs: Vec<GenRequest> = (0..6).map(|i| req(i, vec![2, 3], 3)).collect();
         let (out, m) = serve(reqs, 4, 6);
         assert_eq!(out.len(), 6);
         assert!(m.rejected_capacity > 0, "expected capacity pushback");
@@ -523,12 +741,17 @@ mod tests {
         let reqs = vec![req(0, vec![2, 3], 2), req(1, vec![2, 3], 10)];
         let cfg = BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() };
         let (out, m) = serve_cfg(reqs, cfg, 4);
-        assert_eq!(out.len(), 2, "every request gets exactly one response");
+        assert_eq!(out.len(), 2, "every request gets exactly one stream");
         for r in &out {
-            assert!(!r.rejected, "id {} must be served, not rejected", r.id);
+            assert!(
+                r.reason != FinishReason::Rejected,
+                "id {} must be served, not rejected",
+                r.id
+            );
             assert!(!r.tokens.is_empty());
         }
         let truncated = out.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(truncated.reason, FinishReason::TruncatedKv);
         assert!(
             truncated.tokens.len() < 10,
             "a 4-token pool cannot hold 12 KV positions; got {} tokens",
@@ -548,10 +771,10 @@ mod tests {
         let (out, m) = serve(reqs, 4, 3);
         assert_eq!(out.len(), 2);
         let served = out.iter().find(|r| r.id == 0).unwrap();
-        assert!(!served.rejected);
+        assert!(served.reason.is_completed());
         assert!(!served.tokens.is_empty());
         let rejected = out.iter().find(|r| r.id == 1).unwrap();
-        assert!(rejected.rejected);
+        assert_eq!(rejected.reason, FinishReason::Rejected);
         assert!(rejected.tokens.is_empty());
         assert_eq!(rejected.ttft, rejected.total);
         assert_eq!(m.requests, 1);
@@ -564,26 +787,18 @@ mod tests {
         // (2+8), so a 12-token pool would serialize them. Right-sized
         // admission (prompt + kv_reserve = 4) runs both concurrently and
         // extends leases on demand during decode.
-        let model = synthetic_model("micro", 51).unwrap();
-        let pool = KvPool::new(12, 8);
-        let (tx, rx) = channel();
-        for i in 0..2u64 {
-            tx.send(req(i, vec![2, 3 + i as u32], 8)).unwrap();
-        }
-        drop(tx);
+        let reqs = (0..2u64).map(|i| req(i, vec![2, 3 + i as u32], 8)).collect();
         let cfg = BatchConfig {
             max_batch: 4,
             kv_reserve: 2,
             stop_on_eos: false,
             ..Default::default()
         };
-        let mut out = Vec::new();
-        let m = run_batcher(&model, &pool, &cfg, rx, |r| out.push(r));
-        assert_eq!(pool.used_tokens(), 0);
+        let (out, m) = serve_cfg(reqs, cfg, 12);
         assert_eq!(out.len(), 2);
         assert_eq!(m.peak_batch, 2, "right-sizing must admit both up front");
         assert!(m.kv_grows > 0, "decode must extend leases incrementally");
-        assert!(out.iter().all(|r| !r.rejected && !r.tokens.is_empty()));
+        assert!(out.iter().all(|r| r.reason.is_completed() && !r.tokens.is_empty()));
     }
 
     #[test]
@@ -592,7 +807,7 @@ mod tests {
         // ragged batch stays within the budget, prompts are fed as chunks
         // (not one token per sequence per iteration), and everything
         // completes.
-        let reqs: Vec<Request> = (0..5)
+        let reqs: Vec<GenRequest> = (0..5)
             .map(|i| {
                 req(i, (0..20).map(|t| 1 + ((t + i as usize) % 100) as u32).collect(), 4)
             })
@@ -605,7 +820,9 @@ mod tests {
         };
         let (out, m) = serve_cfg(reqs, cfg, 10_000);
         assert_eq!(out.len(), 5);
-        assert!(out.iter().all(|r| !r.rejected && !r.tokens.is_empty() && r.tokens.len() <= 4));
+        assert!(out
+            .iter()
+            .all(|r| r.reason.is_completed() && !r.tokens.is_empty() && r.tokens.len() <= 4));
         assert!(
             m.peak_iter_tokens <= 8,
             "token budget violated: {} rows in one iteration",
@@ -624,18 +841,18 @@ mod tests {
         // micro's max_seq is 64. A 70-token prompt can never fit the KV
         // window with one generated token, so it must be rejected at
         // admission; a prompt that just fits (63 tokens, room for exactly
-        // one generated token) still runs.
+        // one KV slot) still runs.
         let long: Vec<u32> = (0..70).map(|i| 1 + (i % 100) as u32).collect();
         let edge: Vec<u32> = (0..63).map(|i| 1 + (i % 100) as u32).collect();
         let (out, m) =
             serve(vec![req(0, long, 3), req(1, edge, 5), req(2, vec![1, 2], 2)], 3, 10_000);
         assert_eq!(out.len(), 3);
         let r0 = out.iter().find(|r| r.id == 0).unwrap();
-        assert!(r0.rejected, "over-long prompt must be rejected");
+        assert_eq!(r0.reason, FinishReason::Rejected, "over-long prompt must be rejected");
         let r1 = out.iter().find(|r| r.id == 1).unwrap();
-        assert!(!r1.rejected);
+        assert!(r1.reason.is_completed());
         assert_eq!(r1.tokens.len(), 1, "KV window leaves room for exactly one token");
-        assert!(!out.iter().find(|r| r.id == 2).unwrap().rejected);
+        assert!(out.iter().find(|r| r.id == 2).unwrap().reason.is_completed());
         assert_eq!(m.rejected_impossible, 1);
     }
 
@@ -643,15 +860,15 @@ mod tests {
     fn empty_prompt_rejected() {
         let (out, m) = serve(vec![req(0, Vec::new(), 4), req(1, vec![3], 2)], 2, 10_000);
         assert_eq!(out.len(), 2);
-        assert!(out.iter().find(|r| r.id == 0).unwrap().rejected);
-        assert!(!out.iter().find(|r| r.id == 1).unwrap().rejected);
+        assert_eq!(out.iter().find(|r| r.id == 0).unwrap().reason, FinishReason::Rejected);
+        assert!(out.iter().find(|r| r.id == 1).unwrap().reason.is_completed());
         assert_eq!(m.rejected_impossible, 1);
     }
 
     #[test]
     fn ttft_stamped_at_prefill_completion() {
         // TTFT is stamped when the prefill-final forward writes its logits
-        // back. Invariants pinned: served responses have 0 < ttft <= total,
+        // back. Invariants pinned: served streams have 0 < ttft <= total,
         // and a prompt whose prefill needs more iterations (narrow chunks
         // force the 12-token prompt through ≥ 3 of them) reaches its first
         // token no earlier than a short one admitted in the same batch.
@@ -667,7 +884,7 @@ mod tests {
         let r_short = out.iter().find(|r| r.id == 0).unwrap();
         let r_long = out.iter().find(|r| r.id == 1).unwrap();
         for r in [r_short, r_long] {
-            assert!(!r.rejected);
+            assert!(r.reason.is_completed());
             assert!(r.ttft > Duration::ZERO, "ttft must be stamped");
             assert!(r.ttft <= r.total, "ttft {:?} > total {:?}", r.ttft, r.total);
         }
@@ -683,7 +900,7 @@ mod tests {
     fn iteration_count_reflects_continuous_batching() {
         // 4 requests × (2 prompt + 3 decode): chunked prefill feeds each
         // whole prompt in one iteration, so ~4-5 iterations total — not 20.
-        let reqs: Vec<Request> = (0..4).map(|i| req(i, vec![2, 3], 3)).collect();
+        let reqs: Vec<GenRequest> = (0..4).map(|i| req(i, vec![2, 3], 3)).collect();
         let (_, m) = serve(reqs, 4, 10_000);
         assert!(m.iterations < 12, "iterations {}", m.iterations);
         assert_eq!(m.prefill_tokens, 8);
@@ -695,7 +912,7 @@ mod tests {
         // Scheduling policy must not change results: the same request
         // stream served with chunk 1 (old behavior) and with wide chunks
         // produces identical token streams.
-        let reqs = || -> Vec<Request> {
+        let reqs = || -> Vec<GenRequest> {
             (0..3)
                 .map(|i| {
                     req(i, (0..17).map(|t| 1 + ((t * 3 + i as usize) % 90) as u32).collect(), 5)
@@ -716,5 +933,162 @@ mod tests {
             let n = out_n.iter().find(|r| r.id == id).unwrap();
             assert_eq!(w.tokens, n.tokens, "id {id}: chunking changed output");
         }
+    }
+
+    #[test]
+    fn cancel_mid_decode_frees_lease_and_finishes_stream() {
+        // Cancel a long-running request after its first streamed token; the
+        // stream must terminate with Cancelled, the pool must fully drain,
+        // and the co-scheduled request must be unaffected. The KV window is
+        // stretched so the request cannot race to a Length finish before
+        // the cancel flag is swept.
+        let mut model = synthetic_model("micro", 51).unwrap();
+        model.cfg.max_seq = 8192;
+        model.refresh_derived();
+        let pool = KvPool::new(10_000, 8);
+        let cfg = BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() };
+        let (tx, rx) = channel();
+        let long = req(0, vec![2, 3, 4], 4000);
+        let (sub_l, erx_l, cancel_l) = Submission::channel(long);
+        let short = req(1, vec![5, 6], 4);
+        let (sub_s, erx_s, _cancel_s) = Submission::channel(short);
+        tx.send(sub_l).unwrap();
+        tx.send(sub_s).unwrap();
+        drop(tx);
+        std::thread::scope(|scope| {
+            let worker = scope.spawn(|| run_batcher(&model, &pool, &cfg, rx, |_, _| {}));
+            // Wait for the long request's first token, then cancel it.
+            loop {
+                match erx_l.recv().expect("stream open") {
+                    TokenEvent::Token { .. } => break,
+                    TokenEvent::Finished { .. } => panic!("finished before first token"),
+                    TokenEvent::PrefillDone { .. } => {}
+                }
+            }
+            cancel_l.store(true, Ordering::Release);
+            // Drain to the terminal event — after it, the lease is freed.
+            let reason = loop {
+                match erx_l.recv().expect("stream open") {
+                    TokenEvent::Finished { reason, .. } => break reason,
+                    _ => {}
+                }
+            };
+            assert_eq!(reason, FinishReason::Cancelled);
+            let m = worker.join().unwrap();
+            assert_eq!(m.cancelled, 1);
+            assert!(m.generated_tokens < 4000, "cancel must stop generation early");
+        });
+        assert_eq!(pool.used_tokens(), 0, "cancelled lease leaked");
+        assert_eq!(pool.live_leases(), 0);
+        // The co-scheduled request still completes normally.
+        let (tokens, reason, _, _) = drain(&erx_s);
+        assert!(reason.is_completed());
+        assert!(!tokens.is_empty());
+    }
+
+    #[test]
+    fn cancel_while_queued_never_admits() {
+        // A request cancelled before the batcher picks it up must finish
+        // Cancelled without consuming a lease or producing tokens.
+        let model = synthetic_model("micro", 51).unwrap();
+        let pool = KvPool::new(10_000, 8);
+        let (tx, rx) = channel();
+        let (sub, erx, cancel) = Submission::channel(req(0, vec![2, 3], 4));
+        cancel.store(true, Ordering::Release);
+        tx.send(sub).unwrap();
+        drop(tx);
+        let m = run_batcher(&model, &pool, &BatchConfig::default(), rx, |_, _| {});
+        let (tokens, reason, ttft, total) = drain(&erx);
+        assert!(tokens.is_empty());
+        assert_eq!(reason, FinishReason::Cancelled);
+        assert_eq!(ttft, total);
+        assert_eq!(m.requests, 0, "cancelled-in-queue must not be admitted");
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(pool.used_tokens(), 0);
+    }
+
+    #[test]
+    fn dropped_stream_acts_as_cancel() {
+        // Dropping the receiving side mid-run must not wedge the batcher or
+        // leak the lease: the first failed send turns into a cancel.
+        let model = synthetic_model("micro", 51).unwrap();
+        let pool = KvPool::new(10_000, 8);
+        let cfg = BatchConfig { stop_on_eos: false, ..Default::default() };
+        let (tx, rx) = channel();
+        let (sub, erx, _cancel) = Submission::channel(req(0, vec![2, 3], 2000));
+        drop(erx); // handle abandoned before serving even starts
+        tx.send(sub).unwrap();
+        drop(tx);
+        let m = run_batcher(&model, &pool, &cfg, rx, |_, _| {});
+        assert_eq!(m.cancelled, 1);
+        assert!(m.generated_tokens < 2000, "dead stream must stop generation early");
+        assert_eq!(pool.used_tokens(), 0);
+    }
+
+    #[test]
+    fn per_request_sampling_params_apply() {
+        // Two requests over the same prompt: one greedy, one hot-temperature
+        // seeded. Greedy must match generate_greedy exactly; the sampled one
+        // must (a) be reproducible under the same seed across runs and
+        // (b) diverge from greedy on this prompt.
+        let model = synthetic_model("micro", 51).unwrap();
+        let prompt = vec![5u32, 9, 13];
+        let want = model.generate_greedy(&prompt, 8);
+        let sampled_req = |id: u64| {
+            let mut r = req(id, prompt.clone(), 8);
+            r.sampling =
+                SamplingParams { temperature: 3.0, top_k: 0, top_p: 1.0, seed: 42, stop_tokens: vec![] };
+            r
+        };
+        let run_pair = || {
+            let cfg = BatchConfig { max_batch: 2, stop_on_eos: false, ..Default::default() };
+            let (out, _) = serve_cfg(vec![req(0, prompt.clone(), 8), sampled_req(1)], cfg, 10_000);
+            let g = out.iter().find(|r| r.id == 0).unwrap().tokens.clone();
+            let s = out.iter().find(|r| r.id == 1).unwrap().tokens.clone();
+            (g, s)
+        };
+        let (g1, s1) = run_pair();
+        let (g2, s2) = run_pair();
+        assert_eq!(g1, want, "greedy request must pin to the argmax path");
+        assert_eq!(s1, s2, "same seed must reproduce the sampled stream");
+        assert_eq!(g1, g2);
+        assert_ne!(s1, g1, "temperature 3.0 should diverge from greedy here");
+    }
+
+    #[test]
+    fn max_new_zero_finishes_with_no_tokens() {
+        // A valid max_new == 0 request completes empty at admission; an
+        // INVALID one (empty prompt) still reports Rejected, not Length.
+        let (out, m) = serve(
+            vec![req(0, vec![2, 3], 0), req(1, vec![2, 3], 3), req(2, Vec::new(), 0)],
+            2,
+            10_000,
+        );
+        assert_eq!(out.len(), 3);
+        let r0 = out.iter().find(|r| r.id == 0).unwrap();
+        assert!(r0.tokens.is_empty(), "max_new 0 must emit nothing");
+        assert_eq!(r0.reason, FinishReason::Length);
+        assert_eq!(r0.ttft, r0.total);
+        assert!(!out.iter().find(|r| r.id == 1).unwrap().tokens.is_empty());
+        assert_eq!(out.iter().find(|r| r.id == 2).unwrap().reason, FinishReason::Rejected);
+        assert_eq!(m.requests, 1, "max_new 0 finishes at admission");
+        assert_eq!(m.rejected_impossible, 1);
+    }
+
+    #[test]
+    fn stop_tokens_end_the_stream() {
+        // Serve greedily once, then resubmit with the first generated token
+        // as a stop token: the stream must end at (and include) it.
+        let model = synthetic_model("micro", 51).unwrap();
+        let prompt = vec![5u32, 9, 13];
+        let want = model.generate_greedy(&prompt, 6);
+        assert!(want.len() > 1, "need a multi-token greedy stream");
+        let mut r = req(0, prompt, 6);
+        r.sampling.stop_tokens = vec![want[0]];
+        let cfg = BatchConfig { stop_on_eos: false, ..Default::default() };
+        let (out, m) = serve_cfg(vec![r], cfg, 10_000);
+        assert_eq!(out[0].tokens, vec![want[0]], "stream must stop at the stop token");
+        assert_eq!(out[0].reason, FinishReason::Eos);
+        assert_eq!(m.finished_eos, 1);
     }
 }

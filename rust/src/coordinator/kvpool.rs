@@ -207,9 +207,22 @@ impl KvPool {
         }
     }
 
+    /// Per-token KV bytes for a model: K + V, all layers, f32.
+    fn model_bytes_per_token(cfg: &crate::model::ModelConfig) -> usize {
+        2 * cfg.n_layers * cfg.d_model * 4
+    }
+
+    /// Pool holding `capacity_tokens` positions with byte accounting sized
+    /// from the model config — the one constructor serve-time callers need
+    /// (the engine used to build a throwaway `for_model` pool just to copy
+    /// its `bytes_per_token` into a second `new`).
+    pub fn for_model_tokens(cfg: &crate::model::ModelConfig, capacity_tokens: usize) -> KvPool {
+        KvPool::new(capacity_tokens.max(1), KvPool::model_bytes_per_token(cfg))
+    }
+
     /// For a model: capacity from a byte budget.
     pub fn for_model(cfg: &crate::model::ModelConfig, budget_bytes: usize) -> KvPool {
-        let per_token = 2 * cfg.n_layers * cfg.d_model * 4;
+        let per_token = KvPool::model_bytes_per_token(cfg);
         KvPool::new((budget_bytes / per_token).max(1), per_token)
     }
 
@@ -317,6 +330,16 @@ mod tests {
         let pool = KvPool::for_model(&cfg, 1 << 20);
         assert_eq!(pool.bytes_per_token, 2 * 2 * 64 * 4);
         assert_eq!(pool.capacity_tokens(), (1 << 20) / (2 * 2 * 64 * 4));
+    }
+
+    #[test]
+    fn for_model_tokens_sizing() {
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let pool = KvPool::for_model_tokens(&cfg, 4096);
+        assert_eq!(pool.capacity_tokens(), 4096);
+        assert_eq!(pool.bytes_per_token, 2 * 2 * 64 * 4);
+        // Degenerate budget still yields a usable pool.
+        assert_eq!(KvPool::for_model_tokens(&cfg, 0).capacity_tokens(), 1);
     }
 
     #[test]

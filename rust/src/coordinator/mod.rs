@@ -1,12 +1,17 @@
 //! L3 coordinator: the quantization pipeline orchestrator and the serving
-//! runtime (continuous batcher, KV-cache pool, request router).
+//! runtime (streaming engine, continuous batcher, KV-cache pool, and the
+//! batch-and-drain compat router).
 
 pub mod batcher;
+pub mod engine;
 pub mod kvpool;
 pub mod pipeline;
 pub mod router;
 
-pub use batcher::{BatchConfig, BatchMetrics, Request, Response};
+pub use batcher::{
+    BatchConfig, BatchMetrics, FinishReason, GenRequest, Submission, TokenEvent,
+};
+pub use engine::{poll_streams, Engine, EngineConfig, RequestHandle, Response, TryEvent};
 pub use kvpool::KvPool;
 pub use pipeline::{calibrate_model, quantize_model, run_ptq, CalibStats, PipelineReport};
 pub use router::{serve_requests, synthetic_requests, ServerConfig, ServerRun};

@@ -1,34 +1,23 @@
-//! Request router + multi-worker server.
+//! Batch-and-drain compat surface over the streaming [`Engine`].
 //!
-//! vLLM-router-style front end: N worker replicas (threads), each running
-//! the continuous batcher over a shared model snapshot (`Arc<Gpt>` —
-//! weights are immutable at serve time). The router assigns each incoming
-//! request to the worker with the least outstanding work and aggregates
-//! responses + metrics.
+//! The worker threads, per-worker KV pools, and least-loaded routing that
+//! used to live here moved into [`super::engine`]; what remains is the thin
+//! submit-all/drain-all wrapper ([`serve_requests`]) that offline callers
+//! (benches, tables, the pipeline demo) still want, plus the synthetic
+//! request-trace builder. New code should use [`Engine::submit`] directly
+//! and consume the token stream.
 
-use super::batcher::{run_batcher, BatchConfig, BatchMetrics, Request, Response};
-use super::kvpool::KvPool;
+use super::batcher::{BatchMetrics, GenRequest};
+use super::engine::{Engine, EngineConfig, RequestHandle, Response};
 use crate::model::Gpt;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread;
+use std::sync::Arc;
 use std::time::Instant;
 
-pub struct ServerConfig {
-    pub workers: usize,
-    pub batch: BatchConfig,
-    /// KV token budget per worker.
-    pub kv_tokens: usize,
-}
+/// Engine sizing under its pre-streaming name: the compat wrapper takes the
+/// same configuration the `Engine` does.
+pub type ServerConfig = EngineConfig;
 
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig { workers: 2, batch: BatchConfig::default(), kv_tokens: 1 << 16 }
-    }
-}
-
-/// Aggregated server outcome.
+/// Aggregated server outcome of one batch-and-drain run.
 pub struct ServerRun {
     pub responses: Vec<Response>,
     pub per_worker: Vec<BatchMetrics>,
@@ -48,17 +37,22 @@ impl ServerRun {
         toks as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
-    /// Responses that were actually served (admission-rejected requests are
-    /// in `responses` for completeness but carry no latency signal, so the
-    /// percentile accessors exclude them).
-    fn served_ms(&self, f: impl Fn(&Response) -> f64) -> Vec<f64> {
-        let mut ms: Vec<f64> = self.responses.iter().filter(|r| !r.rejected).map(f).collect();
+    /// Latency samples over **completed** requests only
+    /// ([`super::batcher::FinishReason::is_completed`]): rejected requests
+    /// never ran and
+    /// cancelled requests were cut short, so neither carries a full latency
+    /// signal — including them would skew the percentiles low.
+    fn completed_ms(&self, f: impl Fn(&Response) -> f64) -> Vec<f64> {
+        let mut ms: Vec<f64> =
+            self.responses.iter().filter(|r| r.finish.is_completed()).map(f).collect();
         ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ms
     }
 
+    /// End-to-end latency percentile (ms) over completed requests only (see
+    /// [`ServerRun::completed_ms`]).
     pub fn latency_percentile_ms(&self, p: f64) -> f64 {
-        let ms = self.served_ms(|r| r.total.as_secs_f64() * 1e3);
+        let ms = self.completed_ms(|r| r.total.as_secs_f64() * 1e3);
         // 0.0, not NaN, when every request was rejected: NaN would serialize
         // as invalid JSON in BENCH_serving.json.
         if ms.is_empty() {
@@ -67,8 +61,10 @@ impl ServerRun {
         crate::util::stats::percentile_sorted(&ms, p)
     }
 
+    /// TTFT percentile (ms) over completed requests only (see
+    /// [`ServerRun::completed_ms`]).
     pub fn ttft_percentile_ms(&self, p: f64) -> f64 {
-        let ms = self.served_ms(|r| r.ttft.as_secs_f64() * 1e3);
+        let ms = self.completed_ms(|r| r.ttft.as_secs_f64() * 1e3);
         if ms.is_empty() {
             return 0.0;
         }
@@ -76,84 +72,45 @@ impl ServerRun {
     }
 }
 
-struct Worker {
-    tx: Sender<Request>,
-    load: Arc<AtomicUsize>,
-    handle: thread::JoinHandle<BatchMetrics>,
-}
-
-/// Route `requests` across workers (least-outstanding-tokens policy), run to
-/// completion, and return all responses.
+/// Submit every request to a fresh [`Engine`], wait for every stream to
+/// finish, and aggregate the responses — the pre-streaming blocking surface,
+/// now a thin wrapper. Greedy requests reproduce the pre-redesign outputs
+/// token-for-token (property-tested in `rust/tests/properties.rs`).
 pub fn serve_requests(
     model: Arc<Gpt>,
     cfg: &ServerConfig,
-    requests: Vec<Request>,
+    requests: Vec<GenRequest>,
 ) -> ServerRun {
     let t0 = Instant::now();
-    let responses = Arc::new(Mutex::new(Vec::new()));
-    let mut workers: Vec<Worker> = Vec::with_capacity(cfg.workers);
-    for _ in 0..cfg.workers.max(1) {
-        let (tx, rx) = channel::<Request>();
-        let model = Arc::clone(&model);
-        let pool = KvPool::for_model(&model.cfg, cfg.kv_tokens * model.cfg.d_model * 8);
-        let pool = KvPool::new(cfg.kv_tokens, pool.bytes_per_token);
-        let bcfg = cfg.batch.clone();
-        let load = Arc::new(AtomicUsize::new(0));
-        let load2 = Arc::clone(&load);
-        let responses2 = Arc::clone(&responses);
-        let handle = thread::spawn(move || {
-            run_batcher(&model, &pool, &bcfg, rx, |r: Response| {
-                load2.fetch_sub(r.prompt_len + r.tokens.len(), Ordering::SeqCst);
-                responses2.lock().unwrap().push(r);
-            })
-        });
-        workers.push(Worker { tx, load, handle });
-    }
-
-    // Least-loaded routing by outstanding token estimate.
-    for req in requests {
-        let cost = req.prompt.len() + req.max_new;
-        let w = workers
-            .iter()
-            .min_by_key(|w| w.load.load(Ordering::SeqCst))
-            .expect("workers non-empty");
-        w.load.fetch_add(cost, Ordering::SeqCst);
-        w.tx.send(req).expect("worker alive");
-    }
-    // Close queues; workers drain and exit.
-    let mut per_worker = Vec::new();
-    for w in workers {
-        drop(w.tx);
-        per_worker.push(w.handle.join().expect("worker panicked"));
-    }
-    let responses = Arc::try_unwrap(responses).unwrap().into_inner().unwrap();
+    let engine = Engine::new(model, cfg.clone());
+    let handles: Vec<RequestHandle> =
+        requests.into_iter().map(|req| engine.submit(req)).collect();
+    let responses: Vec<Response> = handles.into_iter().map(|h| h.wait()).collect();
+    let per_worker = engine.shutdown();
     ServerRun { responses, per_worker, wall: t0.elapsed() }
 }
 
-/// Build a standard request batch from corpus prompts (demo + benches).
+/// Build a standard greedy request batch from corpus prompts (demo +
+/// benches). Per-request sampling can be overridden on the returned
+/// requests before submission.
 pub fn synthetic_requests(
     vocab_size: usize,
     n: usize,
     prompt_len: usize,
     max_new: usize,
     seed: u64,
-) -> anyhow::Result<Vec<Request>> {
+) -> anyhow::Result<Vec<GenRequest>> {
     let corpus = crate::data::corpus(vocab_size, "wiki")?;
     let mut rng = crate::util::rng::Pcg64::new(seed, 0x5e12e);
-    let now = Instant::now();
     Ok((0..n)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: corpus.stream(&mut rng, prompt_len),
-            max_new,
-            submitted: now,
-        })
+        .map(|i| GenRequest::new(i as u64, corpus.stream(&mut rng, prompt_len), max_new))
         .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::FinishReason;
     use crate::model::synthetic_model;
 
     #[test]
@@ -166,6 +123,7 @@ mod tests {
         assert_eq!(run.per_worker.len(), 3);
         let total: usize = run.per_worker.iter().map(|m| m.requests).sum();
         assert_eq!(total, 12);
+        assert!(run.responses.iter().all(|r| r.finish.is_completed()));
         assert!(run.throughput_tok_s() > 0.0);
         assert!(run.prefill_tok_s() > 0.0);
         assert!(run.latency_percentile_ms(50.0) >= run.ttft_percentile_ms(50.0) * 0.5);
@@ -187,14 +145,27 @@ mod tests {
         let model = Arc::new(synthetic_model("micro", 63).unwrap());
         let prompt = vec![3u32, 5, 7];
         let want = model.generate_greedy(&prompt, 4);
-        let reqs = vec![Request {
-            id: 0,
-            prompt,
-            max_new: 4,
-            submitted: Instant::now(),
-        }];
+        let reqs = vec![GenRequest::new(0, prompt, 4)];
         let cfg = ServerConfig { workers: 1, kv_tokens: 4096, ..Default::default() };
         let run = serve_requests(model, &cfg, reqs);
         assert!(want.starts_with(&run.responses[0].tokens) || run.responses[0].tokens == want);
+    }
+
+    #[test]
+    fn percentiles_skip_non_completed_responses() {
+        // One served + one impossible request: the rejected response must
+        // not drag the latency percentiles toward its near-zero turnaround.
+        let model = Arc::new(synthetic_model("micro", 64).unwrap());
+        let long: Vec<u32> = (0..70).map(|i| 1 + (i % 100) as u32).collect();
+        let reqs = vec![GenRequest::new(0, vec![2, 3], 3), GenRequest::new(1, long, 3)];
+        let cfg = ServerConfig { workers: 1, kv_tokens: 4096, ..Default::default() };
+        let run = serve_requests(model, &cfg, reqs);
+        assert_eq!(run.responses.len(), 2);
+        let served = run.responses.iter().find(|r| r.id == 0).unwrap();
+        let rejected = run.responses.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(rejected.finish, FinishReason::Rejected);
+        let served_ms = served.total.as_secs_f64() * 1e3;
+        assert!((run.latency_percentile_ms(50.0) - served_ms).abs() < 1e-6);
+        assert!((run.latency_percentile_ms(5.0) - served_ms).abs() < 1e-6);
     }
 }

@@ -7,6 +7,7 @@ pub mod config;
 pub mod gpt;
 pub mod init;
 pub mod linear;
+pub mod sampling;
 
 pub use crate::coordinator::kvpool::KvCache;
 pub use config::{layer_key, ModelConfig, LINEAR_NAMES};
@@ -16,3 +17,4 @@ pub use gpt::{
 };
 pub use init::{inject_outliers, load_model, load_or_synthetic, save_model, synthetic_model};
 pub use linear::{forward_quant_token, Linear};
+pub use sampling::{Sampler, SamplingParams, GREEDY_TEMPERATURE_EPS};

@@ -1,0 +1,376 @@
+//! Per-request token sampling over logits rows.
+//!
+//! The serving engine decodes many requests concurrently out of one ragged
+//! forward, so sampling state must be **per request**, not per batcher: each
+//! [`Sampler`] owns its own deterministic RNG ([`crate::util::rng::Pcg64`]
+//! seeded from [`SamplingParams::seed`]) and consumes exactly one draw per
+//! non-greedy token. Because the draw count depends only on the request's
+//! own decode sequence — never on batch composition, chunk widths, or
+//! scheduling order — a seeded request reproduces its token stream bitwise
+//! across batch shapes (property-tested in `rust/tests/properties.rs`).
+//!
+//! Decoding policies:
+//! - **Greedy** (`temperature < GREEDY_TEMPERATURE_EPS`): plain [`argmax`],
+//!   ties to the lowest index, no RNG consumption. This is the pre-redesign
+//!   batcher's hardwired path; [`SamplingParams::greedy`] pins it exactly.
+//! - **Temperature**: softmax over `logits / temperature`.
+//! - **Top-k** (`top_k > 0`): restrict to the `k` highest logits before
+//!   normalizing (ties broken toward lower indices, so the candidate set is
+//!   deterministic).
+//! - **Top-p** (`top_p < 1.0`): further restrict to the smallest
+//!   probability-sorted prefix whose mass reaches `top_p` (the prefix always
+//!   keeps at least the argmax).
+//!
+//! Candidate weights accumulate in f64 in a fixed (sorted) order, so the
+//! selection is bit-stable for a given logits row regardless of platform
+//! threading — the forward path already guarantees bitwise logits on the
+//! quantized engine.
+
+use crate::model::gpt::argmax;
+use crate::util::rng::Pcg64;
+
+/// Temperatures below this decode greedily (no RNG draw): `temperature → 0`
+/// mathematically collapses onto the argmax anyway, and clamping keeps the
+/// token stream bit-identical to the dedicated greedy path instead of
+/// depending on `exp` underflow behavior.
+pub const GREEDY_TEMPERATURE_EPS: f32 = 1e-3;
+
+/// Per-request decoding parameters carried by `GenRequest`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; values below [`GREEDY_TEMPERATURE_EPS`] (incl.
+    /// `0.0`) decode greedily.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits (`0` disables the filter).
+    pub top_k: usize,
+    /// Nucleus mass; keep the smallest high-probability prefix reaching
+    /// `top_p` (`>= 1.0` disables the filter).
+    pub top_p: f32,
+    /// Seed of the request's private RNG stream. Two requests with the same
+    /// seed and the same logits sequence emit the same tokens.
+    pub seed: u64,
+    /// Extra stop tokens (checked in addition to the engine's EOS handling);
+    /// the matched token is still emitted before the stream finishes.
+    pub stop_tokens: Vec<u32>,
+}
+
+impl SamplingParams {
+    /// The deterministic argmax policy the pre-Engine batcher hardwired.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+        }
+    }
+
+    /// Stochastic sampling with a deterministic seed; `top_k`/`top_p` stay
+    /// disabled until set explicitly.
+    pub fn with_temperature(temperature: f32, seed: u64) -> SamplingParams {
+        SamplingParams { temperature, seed, ..SamplingParams::greedy() }
+    }
+
+    /// True when this request decodes through the argmax path.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature < GREEDY_TEMPERATURE_EPS
+    }
+
+    /// True when `tok` is one of this request's extra stop tokens.
+    pub fn is_stop_token(&self, tok: u32) -> bool {
+        self.stop_tokens.contains(&tok)
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::greedy()
+    }
+}
+
+/// Per-request sampling state: the parameters plus the request's private RNG
+/// and a reusable candidate-index scratch buffer. One lives inside each
+/// active sequence of the batcher.
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Pcg64,
+    /// Scratch: vocab indices sorted by (logit desc, index asc).
+    order: Vec<u32>,
+    /// Scratch: candidate weights aligned with `order`'s kept prefix.
+    weights: Vec<f64>,
+}
+
+impl Sampler {
+    pub fn new(params: &SamplingParams) -> Sampler {
+        Sampler {
+            rng: Pcg64::new(params.seed, 0x5a3e12),
+            params: params.clone(),
+            order: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Draw the next token from one logits row. Greedy parameters take the
+    /// argmax without touching the RNG; otherwise exactly one uniform draw
+    /// is consumed per call.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        debug_assert!(!logits.is_empty());
+        if self.params.is_greedy() {
+            return argmax(logits) as u32;
+        }
+        let inv_t = 1.0 / self.params.temperature as f64;
+        let best = argmax(logits);
+        // The max-logit shift makes the leading weight exactly 1.0, so the
+        // total is always >= 1 and the draws below stay well defined even
+        // when every other weight underflows.
+        let top = logits[best] as f64;
+
+        let n = logits.len();
+        let k_limit = if self.params.top_k > 0 { self.params.top_k.min(n) } else { n };
+        let nucleus = self.params.top_p < 1.0;
+        if k_limit == n && !nucleus {
+            // Pure temperature: no candidate ordering needed — one softmax
+            // pass in index order and one draw, instead of a vocab sort
+            // per decoded token on the serving hot path.
+            self.weights.clear();
+            let mut total = 0f64;
+            for &l in logits {
+                let w = ((l as f64 - top) * inv_t).exp();
+                self.weights.push(w);
+                total += w;
+            }
+            let mut u = self.rng.f64() * total;
+            for (i, &w) in self.weights.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    return i as u32;
+                }
+            }
+            return best as u32; // f64 rounding sliver
+        }
+
+        // Truncating paths need candidates in deterministic order: logit
+        // descending, index ascending (a total order, so partitioning
+        // yields a deterministic candidate set).
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        let by_logit_desc = |a: &u32, b: &u32| {
+            logits[*b as usize]
+                .total_cmp(&logits[*a as usize])
+                .then_with(|| a.cmp(b))
+        };
+        if k_limit < n {
+            // Top-k (optionally + top-p): partition to the k highest, then
+            // sort only that prefix.
+            self.order.select_nth_unstable_by(k_limit - 1, by_logit_desc);
+            self.order.truncate(k_limit);
+            self.order.sort_unstable_by(by_logit_desc);
+            self.weights.clear();
+            let mut total = 0f64;
+            for &i in &self.order {
+                let w = ((logits[i as usize] as f64 - top) * inv_t).exp();
+                self.weights.push(w);
+                total += w;
+            }
+            let mut keep = k_limit;
+            if nucleus {
+                let target = self.params.top_p.max(0.0) as f64 * total;
+                let mut cum = 0f64;
+                for (j, &w) in self.weights.iter().enumerate() {
+                    cum += w;
+                    if cum >= target {
+                        keep = j + 1;
+                        break;
+                    }
+                }
+            }
+            return self.draw(keep);
+        }
+
+        // Top-p only: the nucleus is usually a tiny head of the
+        // distribution, so never sort the whole vocabulary up front. The
+        // total mass is a sort-free index-order pass; then a geometrically
+        // growing head is partitioned + sorted until it holds `top_p` of
+        // that mass (worst case degenerates to one full sort).
+        let mut total = 0f64;
+        for &l in logits {
+            total += ((l as f64 - top) * inv_t).exp();
+        }
+        let target = self.params.top_p.max(0.0) as f64 * total;
+        let mut m = 64usize.min(n);
+        loop {
+            if m < n {
+                self.order.select_nth_unstable_by(m - 1, by_logit_desc);
+            }
+            self.order[..m].sort_unstable_by(by_logit_desc);
+            self.weights.clear();
+            let mut cum = 0f64;
+            let mut keep = 0usize;
+            for &i in &self.order[..m] {
+                let w = ((logits[i as usize] as f64 - top) * inv_t).exp();
+                self.weights.push(w);
+                cum += w;
+                keep += 1;
+                if cum >= target {
+                    break;
+                }
+            }
+            if cum >= target || m == n {
+                // Nucleus found (or the whole vocab is in play; index-order
+                // vs sorted-order f64 rounding can leave `target` a hair
+                // above the sorted total — then everything is kept).
+                return self.draw(keep);
+            }
+            m = (m * 4).min(n);
+        }
+    }
+
+    /// Draw one token from `self.weights[..keep]` (candidates in
+    /// `self.order`), consuming exactly one uniform.
+    fn draw(&mut self, keep: usize) -> u32 {
+        let mass: f64 = self.weights[..keep].iter().sum();
+        let mut u = self.rng.f64() * mass;
+        for (j, &w) in self.weights[..keep].iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return self.order[j];
+            }
+        }
+        // f64 rounding can leave a sliver; fall back to the last candidate.
+        self.order[keep - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.5, -1.0, 2.5, 0.7, -3.0, 1.9, 0.0]
+    }
+
+    #[test]
+    fn greedy_matches_argmax_and_skips_rng() {
+        let mut s = Sampler::new(&SamplingParams::greedy());
+        let l = logits();
+        for _ in 0..5 {
+            // Tie at index 1 and 3: argmax keeps the lower index.
+            assert_eq!(s.sample(&l), argmax(&l) as u32);
+            assert_eq!(s.sample(&l), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_temperature_clamps_to_greedy() {
+        let l = logits();
+        for t in [0.0f32, 1e-6, 5e-4] {
+            let mut s = Sampler::new(&SamplingParams::with_temperature(t, 99));
+            assert!(s.params().is_greedy(), "t={t}");
+            assert_eq!(s.sample(&l), argmax(&l) as u32, "t={t}");
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_is_reproducible() {
+        let p = SamplingParams {
+            temperature: 0.8,
+            top_k: 5,
+            top_p: 0.95,
+            seed: 1234,
+            stop_tokens: Vec::new(),
+        };
+        let l = logits();
+        let draw = |p: &SamplingParams| {
+            let mut s = Sampler::new(p);
+            (0..32).map(|_| s.sample(&l)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(&p), draw(&p));
+        let mut p2 = p.clone();
+        p2.seed = 1235;
+        assert_ne!(draw(&p), draw(&p2), "different seeds should diverge");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let p = SamplingParams {
+            temperature: 10.0, // near-uniform over the kept set
+            top_k: 2,
+            top_p: 1.0,
+            seed: 7,
+            stop_tokens: Vec::new(),
+        };
+        let mut s = Sampler::new(&p);
+        let l = logits();
+        // k=2 keeps the tied 2.5s at indices 1 and 3 (index-ascending ties).
+        for _ in 0..200 {
+            let t = s.sample(&l);
+            assert!(t == 1 || t == 3, "token {t} outside top-2 support");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_at_least_argmax() {
+        let p = SamplingParams {
+            temperature: 0.5,
+            top_k: 0,
+            top_p: 1e-9, // degenerate nucleus: only the argmax survives
+            seed: 3,
+            stop_tokens: Vec::new(),
+        };
+        let mut s = Sampler::new(&p);
+        let l = logits();
+        for _ in 0..50 {
+            assert_eq!(s.sample(&l), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_only_restricts_to_nucleus_on_large_vocab() {
+        // > 64 candidates exercises the growing partial-sort path. A steep
+        // ramp concentrates the mass in the first few ranks: with top_p
+        // 0.9 and temperature 1, every draw must come from a small head,
+        // and the seeded stream must reproduce.
+        let n = 500usize;
+        let l: Vec<f32> = (0..n).map(|i| -(i as f32) * 0.5).collect();
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 0.9,
+            seed: 13,
+            stop_tokens: Vec::new(),
+        };
+        let mut s = Sampler::new(&p);
+        let draws: Vec<u32> = (0..300).map(|_| s.sample(&l)).collect();
+        // mass(exp(-0.5 k)) cum hits 0.9 within the first ~6 ranks.
+        assert!(draws.iter().all(|&t| t < 8), "draw outside the nucleus");
+        assert!(draws.iter().any(|&t| t > 0), "temperature 1 should leave the argmax sometimes");
+        let mut s2 = Sampler::new(&p);
+        let again: Vec<u32> = (0..300).map(|_| s2.sample(&l)).collect();
+        assert_eq!(draws, again, "seeded top-p stream must reproduce");
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let p = SamplingParams::with_temperature(5.0, 11);
+        let mut s = Sampler::new(&p);
+        let l = logits();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..500 {
+            seen.insert(s.sample(&l));
+        }
+        assert!(seen.len() >= 4, "only {seen:?} sampled at high temperature");
+    }
+
+    #[test]
+    fn stop_token_membership() {
+        let mut p = SamplingParams::greedy();
+        p.stop_tokens = vec![17, 4];
+        assert!(p.is_stop_token(4));
+        assert!(!p.is_stop_token(5));
+    }
+}

@@ -5,7 +5,8 @@
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
-    calibrate_model, run_ptq, serve_requests, synthetic_requests, ServerConfig,
+    calibrate_model, run_ptq, serve_requests, synthetic_requests, BatchConfig, Engine,
+    EngineConfig, FinishReason, GenRequest, ServerConfig, TokenEvent,
 };
 use aser::eval::{perplexity, tasks};
 use aser::methods::{method_by_name, RankPolicy};
@@ -92,8 +93,9 @@ fn e2e_aser_recovers_ppl_on_pretrained_model() {
     );
 }
 
-/// Quantized serving end-to-end: batched greedy outputs must match the
-/// unbatched quantized model exactly, and all requests complete.
+/// Quantized serving end-to-end through BOTH public surfaces: the streaming
+/// `Engine::submit` path and the `serve_requests` compat wrapper must each
+/// match the unbatched quantized model exactly, and all requests complete.
 #[test]
 fn e2e_quantized_serving_matches_offline_generation() {
     let model = synthetic_model("micro", 401).unwrap();
@@ -106,11 +108,49 @@ fn e2e_quantized_serving_matches_offline_generation() {
     let offline: Vec<Vec<u32>> =
         reqs.iter().map(|r| qmodel.generate_greedy(&r.prompt, r.max_new)).collect();
     let qmodel = std::sync::Arc::new(qmodel);
+
+    // Streaming surface: submit all, consume each event stream, check the
+    // protocol (PrefillDone → Token* → Finished) and the token content.
+    let engine = Engine::new(
+        std::sync::Arc::clone(&qmodel),
+        EngineConfig { workers: 2, kv_tokens: 4096, ..Default::default() },
+    );
+    let handles: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone())).collect();
+    for h in handles {
+        let id = h.id() as usize;
+        let mut tokens = Vec::new();
+        let mut saw_prefill = false;
+        loop {
+            match h.recv().expect("stream must stay open until Finished") {
+                TokenEvent::PrefillDone { .. } => saw_prefill = true,
+                TokenEvent::Token { token, index } => {
+                    assert!(saw_prefill, "req {id}: token before PrefillDone");
+                    assert_eq!(index, tokens.len(), "req {id}: index gap");
+                    tokens.push(token);
+                }
+                TokenEvent::Finished { reason, n_tokens, .. } => {
+                    assert!(reason.is_completed(), "req {id}: {reason:?}");
+                    assert_eq!(n_tokens, tokens.len());
+                    break;
+                }
+            }
+        }
+        let want = &offline[id];
+        assert!(
+            want.starts_with(&tokens) || *want == tokens,
+            "req {id}: streamed {tokens:?} vs offline {want:?}"
+        );
+    }
+    assert_eq!(engine.kv_used_tokens(), 0, "streams done ⇒ pools drained");
+    engine.shutdown();
+
+    // Compat surface: the blocking wrapper reproduces the same outputs.
     let cfg = ServerConfig { workers: 2, kv_tokens: 4096, ..Default::default() };
     let run = serve_requests(qmodel, &cfg, reqs.clone());
     assert_eq!(run.responses.len(), 8);
     for resp in &run.responses {
         let want = &offline[resp.id as usize];
+        assert!(resp.finish.is_completed());
         assert!(
             want.starts_with(&resp.tokens) || *want == resp.tokens,
             "req {}: batched {:?} vs offline {:?}",
@@ -119,6 +159,70 @@ fn e2e_quantized_serving_matches_offline_generation() {
             want
         );
     }
+}
+
+/// Acceptance: a mid-decode `cancel()` on a quantized serving stream frees
+/// its KV lease within one batcher iteration — observed through the
+/// guarantee that the lease is back in the pool by the time the terminal
+/// `Finished { Cancelled }` event is delivered — while co-scheduled
+/// requests keep running to completion.
+#[test]
+fn e2e_cancel_mid_decode_frees_kv_promptly() {
+    let mut model = synthetic_model("micro", 403).unwrap();
+    model.cfg.max_seq = 4096; // room to keep decoding until cancelled
+    model.refresh_derived();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 5 };
+    let stats = calibrate_model(&model, "wiki", &ccfg).unwrap();
+    let method = method_by_name("aser", RankPolicy::Fixed(8), 4).unwrap();
+    let (qmodel, _) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 1).unwrap();
+    let qmodel = std::sync::Arc::new(qmodel);
+
+    let engine = Engine::new(
+        qmodel,
+        EngineConfig {
+            workers: 1,
+            batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+            kv_tokens: 1 << 14,
+        },
+    );
+    let victim = engine.submit(GenRequest::new(0, vec![2, 3, 4], 2000));
+    let bystander = engine.submit(GenRequest::new(1, vec![5, 6, 7], 8));
+    // Let the victim decode a few tokens, then cancel it.
+    let mut seen = 0usize;
+    loop {
+        match victim.recv().expect("victim stream open") {
+            TokenEvent::Token { .. } => {
+                seen += 1;
+                if seen == 3 {
+                    break;
+                }
+            }
+            TokenEvent::Finished { .. } => panic!("victim finished before cancel"),
+            TokenEvent::PrefillDone { .. } => {}
+        }
+    }
+    victim.cancel();
+    let reason = loop {
+        match victim.recv().expect("terminal event must arrive") {
+            TokenEvent::Finished { reason, n_tokens, .. } => {
+                assert!(n_tokens < 2000, "cancel must cut generation short");
+                break reason;
+            }
+            _ => {}
+        }
+    };
+    assert_eq!(reason, FinishReason::Cancelled);
+    // The Finished event is sent only after the lease is freed, so the
+    // victim's KV tokens are reusable the moment we observed it. Only the
+    // bystander's lease may still be live.
+    assert!(engine.kv_live_leases() <= 1, "victim lease must be gone");
+    let r = bystander.wait();
+    assert!(r.finish.is_completed());
+    assert_eq!(r.tokens.len(), 8, "bystander unaffected by the cancel");
+    assert_eq!(engine.kv_used_tokens(), 0);
+    let metrics = engine.shutdown();
+    assert_eq!(metrics[0].cancelled, 1);
+    assert_eq!(metrics[0].requests, 2);
 }
 
 /// PJRT bridge (skips without artifacts): manifest loads, a kernel runs.

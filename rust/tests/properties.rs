@@ -480,9 +480,8 @@ fn prop_mixed_iterations_respect_token_budget() {
     // ever feeds more rows than max(token_budget, decode rows) — decode
     // rows are planned unconditionally (one per decoding sequence, bounded
     // by max_batch), prompt chunks only from the leftover budget.
-    use aser::coordinator::{BatchConfig, KvPool, Request};
+    use aser::coordinator::{BatchConfig, FinishReason, GenRequest, KvPool, Submission};
     use aser::model::synthetic_model;
-    use std::time::Instant;
     let model = synthetic_model("micro", 502).unwrap();
     check(
         "token_budget_respected",
@@ -507,14 +506,14 @@ fn prop_mixed_iterations_respect_token_budget() {
             let max_batch = 4usize;
             let pool = KvPool::new(10_000, 8);
             let (tx, rx) = std::sync::mpsc::channel();
+            // Receivers are held open for the whole run: a dropped stream
+            // counts as an implicit cancel.
+            let mut streams = Vec::new();
             for (i, (prompt, max_new)) in reqs.iter().enumerate() {
-                tx.send(Request {
-                    id: i as u64,
-                    prompt: prompt.clone(),
-                    max_new: *max_new,
-                    submitted: Instant::now(),
-                })
-                .unwrap();
+                let (sub, erx, _cancel) =
+                    Submission::channel(GenRequest::new(i as u64, prompt.clone(), *max_new));
+                tx.send(sub).unwrap();
+                streams.push(erx);
             }
             drop(tx);
             let bcfg = BatchConfig {
@@ -524,10 +523,16 @@ fn prop_mixed_iterations_respect_token_budget() {
                 ..Default::default()
             };
             let mut n_resp = 0usize;
-            let metrics = aser::coordinator::batcher::run_batcher(&model, &pool, &bcfg, rx, |r| {
-                assert!(!r.rejected, "feasible request {} rejected", r.id);
-                n_resp += 1;
-            });
+            let metrics =
+                aser::coordinator::batcher::run_batcher(&model, &pool, &bcfg, rx, |r, reason| {
+                    assert_ne!(
+                        reason,
+                        FinishReason::Rejected,
+                        "feasible request {} rejected",
+                        r.id
+                    );
+                    n_resp += 1;
+                });
             let row_bound = (*budget).max(max_batch);
             all(vec![
                 ensure(n_resp == reqs.len(), || {
@@ -592,9 +597,8 @@ fn prop_batcher_preserves_request_ids() {
     // Every id must come back exactly once — served or explicitly
     // rejected — and the pool must drain. Before the admission rejection
     // fix, impossible requests livelocked run_batcher.
-    use aser::coordinator::{BatchConfig, KvPool, Request};
+    use aser::coordinator::{BatchConfig, FinishReason, GenRequest, KvPool, Submission, TokenEvent};
     use aser::model::synthetic_model;
-    use std::time::Instant;
     let model = synthetic_model("micro", 501).unwrap();
     check(
         "batcher_completeness",
@@ -602,13 +606,14 @@ fn prop_batcher_preserves_request_ids() {
         |rng| {
             let n = 1 + rng.below(10);
             (0..n)
-                .map(|i| Request {
-                    id: i as u64,
-                    // 0..=79 tokens: some empty, some past max_seq = 64.
-                    prompt: (0..rng.below(80)).map(|_| rng.below(128) as u32).collect(),
-                    // Wants up to ~120 tokens vs a 48-token pool below.
-                    max_new: 1 + rng.below(40),
-                    submitted: Instant::now(),
+                .map(|i| {
+                    GenRequest::new(
+                        i as u64,
+                        // 0..=79 tokens: some empty, some past max_seq = 64.
+                        (0..rng.below(80)).map(|_| rng.below(128) as u32).collect(),
+                        // Wants up to ~120 tokens vs a 48-token pool below.
+                        1 + rng.below(40),
+                    )
                 })
                 .collect::<Vec<_>>()
         },
@@ -616,8 +621,11 @@ fn prop_batcher_preserves_request_ids() {
         |reqs| {
             let pool = KvPool::new(48, 8);
             let (tx, rx) = std::sync::mpsc::channel();
+            let mut streams = Vec::new();
             for r in reqs.clone() {
-                tx.send(r).unwrap();
+                let (sub, erx, _cancel) = Submission::channel(r);
+                tx.send(sub).unwrap();
+                streams.push(erx);
             }
             drop(tx);
             let mut got = Vec::new();
@@ -627,14 +635,32 @@ fn prop_batcher_preserves_request_ids() {
                 &pool,
                 &BatchConfig::default(),
                 rx,
-                |resp| {
-                    if resp.rejected {
+                |req, reason| {
+                    if reason == FinishReason::Rejected {
                         n_rejected += 1;
-                        assert!(resp.tokens.is_empty(), "rejected response with tokens");
                     }
-                    got.push(resp.id);
+                    got.push(req.id);
                 },
             );
+            // Rejected streams must carry no Token events.
+            for (i, erx) in streams.iter().enumerate() {
+                let mut tokens = 0usize;
+                let mut finish = None;
+                while let Ok(ev) = erx.try_recv() {
+                    match ev {
+                        TokenEvent::Token { .. } => tokens += 1,
+                        TokenEvent::Finished { reason, .. } => finish = Some(reason),
+                        TokenEvent::PrefillDone { .. } => {}
+                    }
+                }
+                match finish {
+                    Some(FinishReason::Rejected) => {
+                        assert_eq!(tokens, 0, "rejected stream {i} with tokens")
+                    }
+                    Some(_) => assert!(tokens > 0, "served stream {i} without tokens"),
+                    None => panic!("stream {i} missing terminal event"),
+                }
+            }
             got.sort_unstable();
             let want: Vec<u64> = (0..reqs.len() as u64).collect();
             all(vec![
@@ -654,6 +680,375 @@ fn prop_batcher_preserves_request_ids() {
                     )
                 }),
             ])
+        },
+    );
+}
+
+#[test]
+fn prop_engine_greedy_matches_pre_redesign_serving() {
+    // Acceptance bar for the Engine redesign: greedy generation through
+    // Engine::submit reproduces the pre-redesign batch-and-drain outputs
+    // token-for-token on quantized models, across the serving method grid
+    // and both activation widths. `generate_greedy` is the oracle (the old
+    // serve_requests was pinned to it); prompts are window-safe
+    // (prompt + max_new + 1 < max_seq) so no path hits the KV boundary.
+    use aser::calib::CalibConfig;
+    use aser::coordinator::{
+        calibrate_model, run_ptq, BatchConfig, Engine, EngineConfig, GenRequest,
+    };
+    use aser::model::synthetic_model;
+    use std::sync::Arc;
+
+    let base = synthetic_model("micro", 917).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 33 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+    let mut rng = Pcg64::seed(0xE16);
+    for method in ["rtn", "aser", "smoothquant"] {
+        for prec in [Precision::w4a8(), Precision::w4a16()] {
+            let m = method_by_name(method, RankPolicy::Fixed(6), 4).unwrap();
+            let model = synthetic_model("micro", 917).unwrap();
+            let (qm, _) = run_ptq(model, &stats, m.as_ref(), prec, 0).unwrap();
+            let qm = Arc::new(qm);
+            let prompts: Vec<Vec<u32>> = (0..3)
+                .map(|_| (0..4 + rng.below(12)).map(|_| 2 + rng.below(120) as u32).collect())
+                .collect();
+            let max_new = 6usize;
+            let want: Vec<Vec<u32>> =
+                prompts.iter().map(|p| qm.generate_greedy(p, max_new)).collect();
+            let engine = Engine::new(
+                Arc::clone(&qm),
+                EngineConfig {
+                    workers: 2,
+                    // generate_greedy has no EOS early-out, so disable it
+                    // here too for exact stream equality.
+                    batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+                    kv_tokens: 4096,
+                },
+            );
+            let handles: Vec<_> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| engine.submit(GenRequest::new(i as u64, p.clone(), max_new)))
+                .collect();
+            for h in handles {
+                let r = h.wait();
+                assert!(r.finish.is_completed(), "{method} {prec}: {:?}", r.finish);
+                assert_eq!(
+                    r.tokens, want[r.id as usize],
+                    "{method} {prec} req {}: engine diverged from pre-redesign greedy",
+                    r.id
+                );
+            }
+            assert_eq!(engine.kv_used_tokens(), 0);
+            engine.shutdown();
+        }
+    }
+}
+
+#[test]
+fn prop_seeded_sampling_reproducible_across_batch_shapes() {
+    // A seeded sampled request must emit the same token stream regardless
+    // of scheduling: chunk widths, token budgets, and co-scheduled traffic
+    // must not perturb it. Holds because (a) the quantized forward is
+    // bitwise identical across batch shapes and chunkings and (b) each
+    // request's sampler consumes exactly one RNG draw per non-greedy token
+    // from its private stream.
+    use aser::calib::CalibConfig;
+    use aser::coordinator::{
+        calibrate_model, run_ptq, BatchConfig, FinishReason, GenRequest, KvPool, Submission,
+        TokenEvent,
+    };
+    use aser::model::{synthetic_model, SamplingParams};
+
+    let base = synthetic_model("micro", 919).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 37 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+    let m = method_by_name("aser", RankPolicy::Fixed(6), 4).unwrap();
+    let (qm, _) =
+        run_ptq(synthetic_model("micro", 919).unwrap(), &stats, m.as_ref(), Precision::w4a8(), 0)
+            .unwrap();
+
+    // Serve `target` (plus optional co-traffic) through one batcher run
+    // under `bcfg`; return the target's token stream.
+    let serve_one = |target: GenRequest, extra: Vec<GenRequest>, bcfg: BatchConfig| -> Vec<u32> {
+        let pool = KvPool::new(10_000, 8);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (sub, erx, _c) = Submission::channel(target);
+        tx.send(sub).unwrap();
+        let mut co = Vec::new();
+        for r in extra {
+            let (sub, erx, _c) = Submission::channel(r);
+            tx.send(sub).unwrap();
+            co.push(erx);
+        }
+        drop(tx);
+        aser::coordinator::batcher::run_batcher(&qm, &pool, &bcfg, rx, |_, _| {});
+        assert_eq!(pool.used_tokens(), 0);
+        let mut tokens = Vec::new();
+        while let Ok(ev) = erx.try_recv() {
+            match ev {
+                TokenEvent::Token { token, .. } => tokens.push(token),
+                TokenEvent::Finished { reason, .. } => {
+                    assert_ne!(reason, FinishReason::Rejected)
+                }
+                TokenEvent::PrefillDone { .. } => {}
+            }
+        }
+        tokens
+    };
+
+    check(
+        "seeded_sampling_batch_shape_invariant",
+        &cfg(6),
+        |rng| {
+            let plen = 2 + rng.below(14);
+            let prompt: Vec<u32> = (0..plen).map(|_| 2 + rng.below(120) as u32).collect();
+            let params = SamplingParams {
+                temperature: 0.3 + rng.f32() * 2.5,
+                top_k: if rng.f32() < 0.5 { 1 + rng.below(32) } else { 0 },
+                top_p: if rng.f32() < 0.5 { 0.5 + 0.5 * rng.f32() } else { 1.0 },
+                seed: rng.next_u64(),
+                stop_tokens: Vec::new(),
+            };
+            let max_new = 2 + rng.below(8);
+            (prompt, params, max_new)
+        },
+        |_| Vec::new(),
+        |(prompt, params, max_new)| {
+            let req = || {
+                let mut r = GenRequest::new(0, prompt.clone(), *max_new);
+                r.sampling = params.clone();
+                r
+            };
+            let co = |n: usize| -> Vec<GenRequest> {
+                (0..n)
+                    .map(|i| GenRequest::new(10 + i as u64, vec![3 + i as u32, 5, 8], 4))
+                    .collect()
+            };
+            let wide = serve_one(
+                req(),
+                Vec::new(),
+                BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() },
+            );
+            let narrow = serve_one(
+                req(),
+                Vec::new(),
+                BatchConfig {
+                    max_batch: 4,
+                    prefill_chunk: 1,
+                    token_budget: 2,
+                    stop_on_eos: false,
+                    ..Default::default()
+                },
+            );
+            let traffic = serve_one(
+                req(),
+                co(3),
+                BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() },
+            );
+            all(vec![
+                ensure(wide == narrow, || {
+                    format!("chunking changed sampled stream: {wide:?} vs {narrow:?}")
+                }),
+                ensure(wide == traffic, || {
+                    format!("co-traffic changed sampled stream: {wide:?} vs {traffic:?}")
+                }),
+                ensure(wide.len() == *max_new, || {
+                    format!("expected {max_new} tokens, got {}", wide.len())
+                }),
+            ])
+        },
+    );
+}
+
+#[test]
+fn prop_temperature_to_zero_pins_argmax_path() {
+    // SamplingParams::greedy() and any temperature below the greedy
+    // epsilon must reproduce the old hardwired-argmax batcher stream
+    // token-for-token (oracle: generate_greedy, which the pre-redesign
+    // serve_requests was pinned to).
+    use aser::calib::CalibConfig;
+    use aser::coordinator::{
+        calibrate_model, run_ptq, BatchConfig, GenRequest, KvPool, Submission, TokenEvent,
+    };
+    use aser::model::{synthetic_model, SamplingParams};
+
+    let base = synthetic_model("micro", 923).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 41 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+    let m = method_by_name("aser", RankPolicy::Fixed(6), 4).unwrap();
+    let (qm, _) =
+        run_ptq(synthetic_model("micro", 923).unwrap(), &stats, m.as_ref(), Precision::w4a8(), 0)
+            .unwrap();
+
+    check(
+        "temperature_zero_is_argmax",
+        &cfg(8),
+        |rng| {
+            let plen = 2 + rng.below(12);
+            let prompt: Vec<u32> = (0..plen).map(|_| 2 + rng.below(120) as u32).collect();
+            // 0.0 exactly, plus strictly-positive values under the epsilon.
+            let temperature = [0.0f32, 1e-6, 1e-4, 9e-4][rng.below(4)];
+            let seed = rng.next_u64();
+            (prompt, temperature, seed)
+        },
+        |_| Vec::new(),
+        |(prompt, temperature, seed)| {
+            let max_new = 6usize;
+            let want = qm.generate_greedy(prompt, max_new);
+            let mut r = GenRequest::new(0, prompt.clone(), max_new);
+            r.sampling = if *temperature == 0.0 {
+                SamplingParams::greedy()
+            } else {
+                SamplingParams::with_temperature(*temperature, *seed)
+            };
+            let pool = KvPool::new(10_000, 8);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let (sub, erx, _c) = Submission::channel(r);
+            tx.send(sub).unwrap();
+            drop(tx);
+            let bcfg = BatchConfig { stop_on_eos: false, ..Default::default() };
+            aser::coordinator::batcher::run_batcher(&qm, &pool, &bcfg, rx, |_, _| {});
+            let mut tokens = Vec::new();
+            while let Ok(ev) = erx.try_recv() {
+                if let TokenEvent::Token { token, .. } = ev {
+                    tokens.push(token);
+                }
+            }
+            ensure(tokens == want, || {
+                format!("t={temperature}: {tokens:?} != argmax stream {want:?}")
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_cancellation_returns_full_kv_lease() {
+    // Under random cancel streams — flags raised at random points while
+    // the batcher runs — every stream still gets exactly one terminal
+    // event, cancelled streams stop early, and the pool drains completely
+    // (capacity restored, no leaked leases).
+    use aser::coordinator::{BatchConfig, GenRequest, KvPool, Submission, TokenEvent};
+    use aser::model::synthetic_model;
+    use std::sync::atomic::Ordering;
+
+    let mut model = synthetic_model("micro", 929).unwrap();
+    model.cfg.max_seq = 4096; // room to decode until cancelled
+    model.refresh_derived();
+
+    check(
+        "cancel_frees_kv",
+        &cfg(6),
+        |rng| {
+            let n = 2 + rng.below(5);
+            (0..n)
+                .map(|_| {
+                    let plen = 2 + rng.below(10);
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|_| 2 + rng.below(120) as u32).collect();
+                    // cancel_after: raise the flag after this many observed
+                    // tokens; None = never cancel.
+                    let cancel_after =
+                        if rng.f32() < 0.7 { Some(rng.below(6)) } else { None };
+                    (prompt, 400usize, cancel_after)
+                })
+                .collect::<Vec<_>>()
+        },
+        |_| Vec::new(),
+        |reqs| {
+            let pool = KvPool::new(10_000, 8);
+            let bcfg = BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() };
+            let (tx, rx) = std::sync::mpsc::channel();
+            let mut streams = Vec::new();
+            for (i, (prompt, max_new, cancel_after)) in reqs.iter().enumerate() {
+                let (sub, erx, cancel) =
+                    Submission::channel(GenRequest::new(i as u64, prompt.clone(), *max_new));
+                tx.send(sub).unwrap();
+                streams.push((erx, cancel, *cancel_after));
+            }
+            drop(tx);
+            // Immediate cancels (trigger 0) are raised before serving even
+            // starts — they may land while the request is still queued.
+            for (_, cancel, cancel_after) in streams.iter() {
+                if *cancel_after == Some(0) {
+                    cancel.store(true, Ordering::Release);
+                }
+            }
+            let ok = std::thread::scope(|scope| {
+                let worker = scope.spawn(|| {
+                    aser::coordinator::batcher::run_batcher(&model, &pool, &bcfg, rx, |_, _| {})
+                });
+                // Watch every stream concurrently (round-robin polling) so
+                // each cancel flag is raised as soon as its trigger count
+                // of tokens has streamed — sequential blocking drains would
+                // let later streams run to completion first.
+                let mut seen = vec![0usize; streams.len()];
+                let mut results = vec![None; streams.len()];
+                let mut done = vec![false; streams.len()];
+                let mut open = streams.len();
+                while open > 0 {
+                    let mut advanced = false;
+                    for (i, (erx, cancel, cancel_after)) in streams.iter().enumerate() {
+                        if done[i] {
+                            continue;
+                        }
+                        loop {
+                            match erx.try_recv() {
+                                Ok(TokenEvent::Token { .. }) => {
+                                    advanced = true;
+                                    seen[i] += 1;
+                                    if *cancel_after == Some(seen[i]) {
+                                        cancel.store(true, Ordering::Release);
+                                    }
+                                }
+                                Ok(TokenEvent::Finished { reason, n_tokens, .. }) => {
+                                    advanced = true;
+                                    results[i] = Some((reason, n_tokens));
+                                    done[i] = true;
+                                    open -= 1;
+                                    break;
+                                }
+                                Ok(TokenEvent::PrefillDone { .. }) => advanced = true,
+                                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                    // Worker died without a terminal event
+                                    // (a batcher bug): stop polling so the
+                                    // join below surfaces the panic.
+                                    advanced = true;
+                                    done[i] = true;
+                                    open -= 1;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    if !advanced && open > 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                worker.join().expect("batcher panicked");
+                results
+            });
+            let mut checks = vec![ensure(pool.used_tokens() == 0, || "kv tokens leaked".into())];
+            checks.push(ensure(pool.live_leases() == 0, || "leases leaked".into()));
+            for (i, r) in ok.iter().enumerate() {
+                let Some((reason, n_tokens)) = r else {
+                    return CaseResult::Fail(format!("stream {i} missing terminal event"));
+                };
+                let (_, max_new, cancel_after) = &reqs[i];
+                if cancel_after.is_some() {
+                    // A cancelled stream must have stopped well short of
+                    // its 400-token budget (flag swept within one
+                    // iteration of being raised — the consumer loop keeps
+                    // pace with generation).
+                    checks.push(ensure(*n_tokens < *max_new, || {
+                        format!(
+                            "stream {i}: cancel at {cancel_after:?} but ran to {n_tokens}/{max_new} ({reason:?})"
+                        )
+                    }));
+                }
+            }
+            all(checks)
         },
     );
 }
