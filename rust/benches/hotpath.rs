@@ -17,9 +17,10 @@ use aser::methods::{LayerCalib, PtqMethod, RankPolicy};
 use aser::model::linear::{dot_i8, forward_quant_token};
 use aser::model::Linear;
 use aser::quant::Precision;
+use aser::quant::quantize_tile;
 use aser::tensor::{
-    attn_head_span, detect_attn_kernel, detect_kernel, matmul, matvec, AttnKernelKind, Matrix,
-    QGemmArena, QKernelKind,
+    attn_head_span, attn_head_span_int8, detect_attn_kernel, detect_kernel, matmul, matvec,
+    AttnKernelKind, Matrix, QGemmArena, QKernelKind,
 };
 use aser::util::json::{num, obj, s, Json};
 use aser::util::stats::{bench, black_box, Summary};
@@ -206,6 +207,90 @@ fn main() {
         println!("  -> attention kernel {attn_kernel} vs scalar ({label}): {sp:.2}x");
         attn_speedups.push(obj(vec![
             ("shape", s(&label)),
+            ("kernel", s(attn_kernel.name())),
+            ("scalar_median_ns", num(s_scalar.median_ns)),
+            ("simd_median_ns", num(s_simd.median_ns)),
+            ("speedup", num(sp)),
+        ]));
+    }
+
+    // ---- int8 attention span kernel: fused-dequant q·K and P·V over
+    //      int8-quantized KV tiles, same shapes as the f32 span above ----
+    for (hd, ctx, t) in [(64usize, 1024usize, 1usize), (64, 1024, 32), (32, 1024, 1)] {
+        let slen = ctx + t;
+        let q: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+        let keys: Vec<f32> = (0..slen * hd).map(|_| rng.normal() * 0.3).collect();
+        let values: Vec<f32> = (0..slen * hd).map(|_| rng.normal()).collect();
+        let mut q_codes = vec![0i8; t * hd];
+        let mut q_scales = vec![0f32; t];
+        for j in 0..t {
+            q_scales[j] = quantize_tile(&q[j * hd..(j + 1) * hd], 8, &mut q_codes[j * hd..(j + 1) * hd]);
+        }
+        let mut k_codes = vec![0i8; slen * hd];
+        let mut k_scales = vec![0f32; slen];
+        let mut v_codes = vec![0i8; slen * hd];
+        let mut v_scales = vec![0f32; slen];
+        for p in 0..slen {
+            k_scales[p] = quantize_tile(&keys[p * hd..(p + 1) * hd], 8, &mut k_codes[p * hd..(p + 1) * hd]);
+            v_scales[p] = quantize_tile(&values[p * hd..(p + 1) * hd], 8, &mut v_codes[p * hd..(p + 1) * hd]);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0f32; slen];
+        let mut out = vec![0f32; t * hd];
+        let label = format!("hd{hd} ctx{ctx} t{t}");
+        let s_scalar = bench(&format!("attn span int8 scalar {label}"), budget, || {
+            attn_head_span_int8(
+                AttnKernelKind::Scalar,
+                black_box(&q_codes),
+                black_box(&q_scales),
+                1,
+                0,
+                hd,
+                0,
+                hd,
+                ctx,
+                t,
+                black_box(&k_codes),
+                black_box(&k_scales),
+                black_box(&v_codes),
+                black_box(&v_scales),
+                scale,
+                &mut scores,
+                &mut out,
+            );
+            black_box(&out);
+        });
+        record(&format!("attn_span_int8_scalar {label}"), &s_scalar);
+        if attn_kernel == AttnKernelKind::Scalar {
+            continue;
+        }
+        let s_simd = bench(&format!("attn span int8 {attn_kernel} {label}"), budget, || {
+            attn_head_span_int8(
+                attn_kernel,
+                black_box(&q_codes),
+                black_box(&q_scales),
+                1,
+                0,
+                hd,
+                0,
+                hd,
+                ctx,
+                t,
+                black_box(&k_codes),
+                black_box(&k_scales),
+                black_box(&v_codes),
+                black_box(&v_scales),
+                scale,
+                &mut scores,
+                &mut out,
+            );
+            black_box(&out);
+        });
+        record(&format!("attn_span_int8_{attn_kernel} {label}"), &s_simd);
+        let sp = s_scalar.median_ns / s_simd.median_ns;
+        println!("  -> int8 attention kernel {attn_kernel} vs scalar ({label}): {sp:.2}x");
+        attn_speedups.push(obj(vec![
+            ("shape", s(&format!("int8 {label}"))),
             ("kernel", s(attn_kernel.name())),
             ("scalar_median_ns", num(s_scalar.median_ns)),
             ("simd_median_ns", num(s_simd.median_ns)),

@@ -13,17 +13,22 @@
 //! `long_prompt_ttft` rows, `attn` rows (long-context decode tok/s at
 //! ≥ 1k cached positions — the vectorized attention engine's workload), and
 //! `stream` rows (decode tok/s through the streaming `Engine`
-//! submit/recv path, inter-token latency p50/p95, and time-to-cancel;
-//! `scripts/bench_diff` gates on long-prompt TTFT, long-context decode, and
-//! the Engine-path decode tok/s).
+//! submit/recv path, inter-token latency p50/p95, and time-to-cancel),
+//! and a `kv_quant` section (int8 vs f32 KV cache: long-context decode
+//! tok/s side by side plus resident-capacity tokens at an equal byte
+//! budget; `scripts/bench_diff` gates on long-prompt TTFT, long-context
+//! decode, the Engine-path decode tok/s, int8/f32 decode ≥ 0.9x, and
+//! int8/f32 capacity ≥ 3x). `--kv-bits {8,32}` flips the serving/stream
+//! sections onto the quantized cache.
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
     calibrate_model, poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig,
     Engine, EngineConfig, FinishReason, ServerConfig, TokenEvent,
 };
+use aser::coordinator::KvPool;
 use aser::methods::{method_by_name, RankPolicy};
-use aser::model::{synthetic_model, ChunkLogits, Gpt, KvCache, SeqChunk};
+use aser::model::{synthetic_model, ChunkLogits, Gpt, KvCache, KvDtype, SeqChunk};
 use aser::quant::Precision;
 use aser::tensor::QGemmArena;
 use aser::util::json::{num, obj, s, Json};
@@ -107,6 +112,17 @@ fn chunked_prefill_tok_s(model: &Gpt, prompt: &[u32], chunk: usize, reps: usize)
 }
 
 fn main() {
+    // `--kv-bits {8,32}` selects the KV-cache dtype the serving/stream
+    // sections run with (32 = f32 default, 8 = int8 + fused dequant). The
+    // `kv_quant` section below always measures both side by side.
+    let kv_bits: usize = std::env::args()
+        .skip_while(|a| a != "--kv-bits")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let kv_dtype = KvDtype::from_bits(kv_bits)
+        .unwrap_or_else(|| panic!("--kv-bits must be 8 or 32, got {kv_bits}"));
+
     let base = synthetic_model("micro", 7).unwrap();
     let ccfg = CalibConfig { n_seqs: 6, seq_len: 24, max_sample: 96, seed: 3 };
     let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
@@ -117,6 +133,8 @@ fn main() {
     let mut long_prompt_rows: Vec<Json> = Vec::new();
     let mut attn_rows: Vec<Json> = Vec::new();
     let mut stream_rows: Vec<Json> = Vec::new();
+    let mut kv_quant_decode_rows: Vec<Json> = Vec::new();
+    let mut kv_quant_capacity_rows: Vec<Json> = Vec::new();
 
     for variant in ["fp16", "aser-w4a8"] {
         let model = if variant == "fp16" {
@@ -136,7 +154,7 @@ fn main() {
             let reqs = synthetic_requests(model.cfg.vocab_size, 32, 8, 12, 11).unwrap();
             let cfg = ServerConfig {
                 workers,
-                batch: BatchConfig { max_batch: batch, ..Default::default() },
+                batch: BatchConfig { max_batch: batch, kv_dtype, ..Default::default() },
                 kv_tokens: 1 << 14,
             };
             let run = serve_requests(Arc::clone(&model), &cfg, reqs);
@@ -274,7 +292,7 @@ fn main() {
                 Arc::clone(&model),
                 EngineConfig {
                     workers: 1,
-                    batch: BatchConfig { max_batch: 8, ..Default::default() },
+                    batch: BatchConfig { max_batch: 8, kv_dtype, ..Default::default() },
                     kv_tokens: 1 << 14,
                 },
             );
@@ -410,6 +428,73 @@ fn main() {
         }
     }
 
+    // ---- kv_quant: int8 vs f32 KV cache at the long-context decode
+    //      workload (1024 cached positions, batch 4 — where the fused
+    //      dequant attention kernels carry the iteration), plus resident
+    //      capacity at an equal byte budget. Acceptance: int8 decode tok/s
+    //      ≥ 0.9x f32 while admitting ≥ 3x the sequences per byte. ----
+    {
+        let cached = 1024usize;
+        let batch = 4usize;
+        let steps = 48usize;
+        let mut long_model = synthetic_model("micro", 7).unwrap();
+        long_model.cfg.max_seq = 1536; // stretch the KV window; weights unchanged
+        long_model.refresh_derived();
+        println!("\n== kv_quant ==");
+        println!("{:>8} {:>14} {:>16} {:>16}", "kv bits", "decode tok/s", "bytes/token", "capacity toks");
+        for &bits in &[32usize, 8] {
+            let dtype = KvDtype::from_bits(bits).unwrap();
+            let mut arena = QGemmArena::new();
+            let mut caches: Vec<KvCache> = (0..batch)
+                .map(|_| KvCache::with_capacity_dtype(&long_model.cfg, cached + steps + 1, dtype))
+                .collect();
+            let prompt: Vec<u32> = (0..cached)
+                .map(|i| ((i * 13) % (long_model.cfg.vocab_size - 1) + 1) as u32)
+                .collect();
+            let mut fed = 0usize;
+            while fed < cached {
+                let end = (fed + 128).min(cached);
+                let spans: Vec<SeqChunk> = (0..batch)
+                    .map(|_| SeqChunk { tokens: &prompt[fed..end], logits: ChunkLogits::None })
+                    .collect();
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                long_model.forward_chunk_batch(&spans, &mut refs, &mut arena);
+                fed = end;
+            }
+            let toks = vec![1u32; batch];
+            {
+                // Warm the arena + allocator before timing.
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                black_box(long_model.forward_step_batch(&toks, &mut refs, &mut arena));
+            }
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                black_box(long_model.forward_step_batch(&toks, &mut refs, &mut arena));
+            }
+            let tok_s = (batch * steps) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+            let pool = KvPool::for_model_dtype(&long_model.cfg, 1 << 20, dtype);
+            println!(
+                "{bits:>8} {tok_s:>14.1} {:>16} {:>16}",
+                pool.bytes_per_token,
+                pool.capacity_tokens()
+            );
+            kv_quant_decode_rows.push(obj(vec![
+                ("variant", s("fp16")),
+                ("kv_bits", num(bits as f64)),
+                ("batch", num(batch as f64)),
+                ("cached_positions", num(cached as f64)),
+                ("decode_steps", num(steps as f64)),
+                ("decode_tok_s", num(tok_s)),
+            ]));
+            kv_quant_capacity_rows.push(obj(vec![
+                ("kv_bits", num(bits as f64)),
+                ("bytes_per_token", num(pool.bytes_per_token as f64)),
+                ("capacity_tokens", num(pool.capacity_tokens() as f64)),
+            ]));
+        }
+    }
+
     let report = obj(vec![
         ("bench", s("serving")),
         ("model", s("micro")),
@@ -420,6 +505,13 @@ fn main() {
         ("long_prompt_ttft", Json::Arr(long_prompt_rows)),
         ("attn", Json::Arr(attn_rows)),
         ("stream", Json::Arr(stream_rows)),
+        (
+            "kv_quant",
+            obj(vec![
+                ("decode", Json::Arr(kv_quant_decode_rows)),
+                ("capacity", Json::Arr(kv_quant_capacity_rows)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");

@@ -12,7 +12,7 @@ use crate::coordinator::{
     poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig, Engine,
     EngineConfig, FinishReason, RequestHandle, Response, ServerRun, TokenEvent,
 };
-use crate::model::SamplingParams;
+use crate::model::{KvDtype, SamplingParams};
 use crate::quant::Precision;
 use crate::util::cli::Args;
 use anyhow::Result;
@@ -101,6 +101,13 @@ pub fn run(args: &Args) -> Result<()> {
     let top_p = args.f64_or("top-p", 1.0)? as f32;
     let sample_seed = args.u64_or("sample-seed", ctx.seed)?;
     let stream = args.flag("stream");
+    // KV-cache precision: 32 keeps the f32 cache, 8 stores int8 codes with
+    // per-(position, head) scales and runs the fused-dequant attention path.
+    let kv_bits = args.usize_or("kv-bits", 32)?;
+    let kv_dtype = match KvDtype::from_bits(kv_bits) {
+        Some(d) => d,
+        None => anyhow::bail!("--kv-bits must be 8 or 32, got {kv_bits}"),
+    };
 
     let model = ctx.model(&model_name)?;
     let model = if method_name == "fp16" {
@@ -138,6 +145,7 @@ pub fn run(args: &Args) -> Result<()> {
             prefill_chunk,
             token_budget,
             kv_reserve,
+            kv_dtype,
             ..Default::default()
         },
         kv_tokens: args.usize_or("kv-tokens", 1 << 15)?,
@@ -158,7 +166,8 @@ pub fn run(args: &Args) -> Result<()> {
 
     println!(
         "== serve: {n_requests} requests, {workers} workers, batch {max_batch}, \
-         chunk {prefill_chunk}, budget {token_budget}, temperature {temperature} =="
+         chunk {prefill_chunk}, budget {token_budget}, temperature {temperature}, \
+         kv {kv_dtype} =="
     );
     println!("  completed      {}", run.responses.len());
     println!("  wall           {:.2}s", run.wall.as_secs_f64());

@@ -88,7 +88,9 @@
 
 use super::kvpool::{KvPool, Lease};
 use crate::data::vocab::EOS;
-use crate::model::{ChunkLogits, Gpt, KvCache, Sampler, SamplingParams, SeqChunk, PREFILL_CHUNK};
+use crate::model::{
+    ChunkLogits, Gpt, KvCache, KvDtype, Sampler, SamplingParams, SeqChunk, PREFILL_CHUNK,
+};
 use crate::tensor::QGemmArena;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -235,6 +237,12 @@ pub struct BatchConfig {
     /// Wait at most this long for work when idle.
     pub idle_wait: Duration,
     pub stop_on_eos: bool,
+    /// KV-cache storage dtype for admitted sequences. `Int8` stores K/V as
+    /// symmetric int8 codes + per-row scales (≈ 3–4x more resident
+    /// sequences at equal pool bytes — engine pool sizing follows this
+    /// knob) and sweeps attention through the fused-dequant kernels; `F32`
+    /// is the exact baseline.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for BatchConfig {
@@ -247,6 +255,7 @@ impl Default for BatchConfig {
             kv_grow: 16,
             idle_wait: Duration::from_millis(5),
             stop_on_eos: true,
+            kv_dtype: KvDtype::F32,
         }
     }
 }
@@ -401,7 +410,7 @@ pub fn run_batcher(
                         // Pre-size the tiles to the lease so prefill never
                         // repacks mid-flight; decode-time lease growth
                         // re-sizes lazily on the next span append.
-                        cache: KvCache::with_capacity(&model.cfg, lease.tokens),
+                        cache: KvCache::with_capacity_dtype(&model.cfg, lease.tokens, cfg.kv_dtype),
                         lease,
                         fed: 0,
                         n_generated: 0,

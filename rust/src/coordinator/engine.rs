@@ -296,7 +296,8 @@ impl Engine {
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
         for _ in 0..cfg.workers.max(1) {
             let (tx, rx) = std::sync::mpsc::channel::<Submission>();
-            let pool = KvPool::for_model_tokens(&model.cfg, cfg.kv_tokens);
+            let pool =
+                KvPool::for_model_tokens_dtype(&model.cfg, cfg.kv_tokens, cfg.batch.kv_dtype);
             let worker_pool = pool.clone();
             let model = Arc::clone(&model);
             let bcfg = cfg.batch.clone();

@@ -30,6 +30,38 @@
 //! (`seen` positions) — capacity is accounted by the pool's leases, not
 //! per-cache.
 //!
+//! ## Quantized tile layout ([`KvDtype::Int8`])
+//!
+//! A cache is dtype-parametric at construction ([`KvCache::new_with`]).
+//! `Int8` caches store the SAME head-major geometry, but each (layer, head)
+//! panel holds `cap × hd` **int8 codes** instead of floats, paired with one
+//! **f32 scale per tile row** (= per cached position per head): per layer a
+//! `nh × cap` scale buffer, position `p` of head `h` at `h·cap + p`, for
+//! keys and values independently:
+//!
+//! ```text
+//! qkeys[layer]   = [ head 0: cap × hd i8 codes ][ head 1: … ]   (panels)
+//! kscales[layer] = [ head 0: cap f32 scales    ][ head 1: … ]   (rows)
+//! ```
+//!
+//! Rows are quantized symmetrically at **write time** (the staging pass of
+//! `Gpt::attn_layer`, through `quant::act::quantize_tile` — one scale per
+//! roped K row / raw V row, codes in `[-127, 127]`, never −128) and
+//! dequantization is **fused into the attention kernels**
+//! (`tensor::attn_kernel::attn_head_span_int8`): scales are applied at
+//! i32-accumulator writeback, so the code tiles stream straight into the
+//! int8 q·K and P·V loops. Because each position quantizes independently,
+//! codes are invariant to prompt chunking, and [`KvCache::reserve`]'s
+//! repack carries code panels and scale rows to the new `cap` stride with
+//! the same full-panel copy as the f32 path (pending span rows beyond
+//! `seen` survive). `Int8` cuts the per-token footprint to
+//! `2·layers·(d_model + 4·nh)` bytes (codes + scales) vs
+//! `2·layers·d_model·4` for f32 — ~3.2–3.9x more resident sequences per
+//! pool byte budget ([`KvPool::for_model_dtype`] accounts it exactly).
+//! The accessors are dtype-checked: [`KvCache::kv_row_mut`] /
+//! [`KvCache::head_tiles`] serve f32 caches, [`KvCache::kv_row_quant_mut`]
+//! / [`KvCache::head_tiles_quant`] serve int8 caches.
+//!
 //! ## `KvPool`
 //!
 //! Accounts a fixed token budget across concurrent sequences; the batcher
@@ -47,16 +79,73 @@ use std::sync::{Arc, Mutex};
 /// Positions per capacity-grow quantum of a [`KvCache`] panel.
 pub const KV_TILE: usize = 64;
 
+/// Storage dtype of a [`KvCache`]'s K/V tiles. `F32` keeps the raw floats;
+/// `Int8` stores symmetric int8 codes with one f32 scale per cached row
+/// (per position per head) and relies on the fused-dequant attention
+/// kernels (`tensor::attn_kernel::attn_head_span_int8`) at read time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl KvDtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Bits per stored K/V element (scale overhead not included).
+    pub fn bits(self) -> usize {
+        match self {
+            KvDtype::F32 => 32,
+            KvDtype::Int8 => 8,
+        }
+    }
+
+    /// Map a `--kv-bits` style knob to a dtype.
+    pub fn from_bits(bits: usize) -> Option<KvDtype> {
+        match bits {
+            32 => Some(KvDtype::F32),
+            8 => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Per-layer KV cache for one sequence, stored as head-major tiles (see the
 /// module doc for the layout). `seen` is the number of positions whose K/V
 /// are live; the forward paths write span positions `seen..seen+t` first
 /// and advance `seen` once per multi-layer forward.
+///
+/// Storage is dtype-parametric: an `F32` cache uses `keys`/`values`, an
+/// `Int8` cache uses `qkeys`/`qvalues` plus the per-row scale buffers. All
+/// six layer vectors always hold `n_layers` entries (the inactive dtype's
+/// inner vectors stay empty) so layer count and capacity logic are shared.
 #[derive(Clone)]
 pub struct KvCache {
-    /// keys[layer]: `nh` head panels of `cap × hd`, concatenated.
+    /// keys[layer]: `nh` head panels of `cap × hd`, concatenated (F32).
     keys: Vec<Vec<f32>>,
-    /// values[layer]: same layout as `keys`.
+    /// values[layer]: same layout as `keys` (F32).
     values: Vec<Vec<f32>>,
+    /// qkeys[layer]: `nh` head panels of `cap × hd` int8 codes (Int8).
+    qkeys: Vec<Vec<i8>>,
+    /// qvalues[layer]: same layout as `qkeys` (Int8).
+    qvalues: Vec<Vec<i8>>,
+    /// kscales[layer]: `nh × cap` per-row key scales, row `h·cap + p` (Int8).
+    kscales: Vec<Vec<f32>>,
+    /// vscales[layer]: same layout as `kscales`, for values (Int8).
+    vscales: Vec<Vec<f32>>,
+    dtype: KvDtype,
     /// Live positions (decoded so far).
     pub seen: usize,
     cap: usize,
@@ -66,13 +155,23 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(cfg: &ModelConfig) -> KvCache {
-        KvCache::with_layers(cfg, cfg.n_layers)
+        KvCache::new_with(cfg, KvDtype::F32)
+    }
+
+    /// A cache with the given storage dtype (see [`KvDtype`]).
+    pub fn new_with(cfg: &ModelConfig, dtype: KvDtype) -> KvCache {
+        KvCache::with_layers_dtype(cfg, cfg.n_layers, dtype)
     }
 
     /// A cache pre-sized to `positions` (the batcher sizes to the admission
     /// lease so prefill never repacks mid-flight).
     pub fn with_capacity(cfg: &ModelConfig, positions: usize) -> KvCache {
-        let mut c = KvCache::new(cfg);
+        KvCache::with_capacity_dtype(cfg, positions, KvDtype::F32)
+    }
+
+    /// Pre-sized cache with an explicit storage dtype.
+    pub fn with_capacity_dtype(cfg: &ModelConfig, positions: usize, dtype: KvDtype) -> KvCache {
+        let mut c = KvCache::new_with(cfg, dtype);
         c.reserve(positions);
         c
     }
@@ -80,18 +179,28 @@ impl KvCache {
     /// Single-layer scratch cache for the teacher-forced path, which runs
     /// one block's span attention at a time (always at cache layer 0).
     pub(crate) fn span_scratch(cfg: &ModelConfig) -> KvCache {
-        KvCache::with_layers(cfg, 1)
+        KvCache::with_layers_dtype(cfg, 1, KvDtype::F32)
     }
 
-    fn with_layers(cfg: &ModelConfig, n_layers: usize) -> KvCache {
+    fn with_layers_dtype(cfg: &ModelConfig, n_layers: usize, dtype: KvDtype) -> KvCache {
         KvCache {
             keys: vec![Vec::new(); n_layers],
             values: vec![Vec::new(); n_layers],
+            qkeys: vec![Vec::new(); n_layers],
+            qvalues: vec![Vec::new(); n_layers],
+            kscales: vec![Vec::new(); n_layers],
+            vscales: vec![Vec::new(); n_layers],
+            dtype,
             seen: 0,
             cap: 0,
             nh: cfg.n_heads,
             hd: cfg.d_model / cfg.n_heads,
         }
+    }
+
+    /// Storage dtype of this cache's tiles.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
     }
 
     pub fn len(&self) -> usize {
@@ -109,56 +218,119 @@ impl KvCache {
 
     /// Live KV bytes (`seen` positions across all layers). Capacity beyond
     /// `seen` is pool-accounted via the sequence's lease, not counted here.
+    /// For `Int8` this is the true quantized footprint: 1-byte codes plus
+    /// one f32 scale per row (K and V each) per position per head.
     pub fn bytes(&self) -> usize {
-        2 * self.keys.len() * self.seen * self.nh * self.hd * 4
+        let rows = 2 * self.keys.len() * self.seen * self.nh;
+        match self.dtype {
+            KvDtype::F32 => rows * self.hd * 4,
+            KvDtype::Int8 => rows * self.hd + rows * 4,
+        }
     }
 
     /// Ensure the tiles can hold `positions`. Growth rounds up to the next
     /// [`KV_TILE`] multiple of at least double the current capacity and
     /// repacks every head panel at the new `cap` stride (full panels are
-    /// copied, so pending span rows beyond `seen` survive too).
+    /// copied, so pending span rows beyond `seen` survive too). For `Int8`,
+    /// code panels repack at `unit = hd` and scale rows at `unit = 1` with
+    /// the same per-head copy, so codes and scales stay paired.
     pub fn reserve(&mut self, positions: usize) {
         if positions <= self.cap {
             return;
         }
         let new_cap = positions.max(self.cap * 2).div_ceil(KV_TILE) * KV_TILE;
-        let (nh, hd, old_cap) = (self.nh, self.hd, self.cap);
-        let repack = |bufs: &mut Vec<Vec<f32>>| {
+        let (nh, old_cap, hd) = (self.nh, self.cap, self.hd);
+        fn repack<T: Copy + Default>(bufs: &mut [Vec<T>], nh: usize, old_cap: usize, new_cap: usize, unit: usize) {
             for buf in bufs.iter_mut() {
-                let mut nb = vec![0f32; nh * new_cap * hd];
+                let mut nb = vec![T::default(); nh * new_cap * unit];
                 if old_cap > 0 {
                     for h in 0..nh {
-                        nb[h * new_cap * hd..h * new_cap * hd + old_cap * hd]
-                            .copy_from_slice(&buf[h * old_cap * hd..(h + 1) * old_cap * hd]);
+                        nb[h * new_cap * unit..h * new_cap * unit + old_cap * unit]
+                            .copy_from_slice(&buf[h * old_cap * unit..(h + 1) * old_cap * unit]);
                     }
                 }
                 *buf = nb;
             }
-        };
-        repack(&mut self.keys);
-        repack(&mut self.values);
+        }
+        match self.dtype {
+            KvDtype::F32 => {
+                repack(&mut self.keys, nh, old_cap, new_cap, hd);
+                repack(&mut self.values, nh, old_cap, new_cap, hd);
+            }
+            KvDtype::Int8 => {
+                repack(&mut self.qkeys, nh, old_cap, new_cap, hd);
+                repack(&mut self.qvalues, nh, old_cap, new_cap, hd);
+                repack(&mut self.kscales, nh, old_cap, new_cap, 1);
+                repack(&mut self.vscales, nh, old_cap, new_cap, 1);
+            }
+        }
         self.cap = new_cap;
     }
 
     /// Mutable K/V rows for (layer, head, position) — the append target of
     /// the span staging pass. The caller must have [`KvCache::reserve`]d
-    /// `pos + 1` positions.
+    /// `pos + 1` positions. F32 caches only; int8 caches use
+    /// [`KvCache::kv_row_quant_mut`].
     #[inline]
     pub fn kv_row_mut(&mut self, l: usize, h: usize, pos: usize) -> (&mut [f32], &mut [f32]) {
         debug_assert!(pos < self.cap, "kv write at {pos} beyond capacity {}", self.cap);
+        debug_assert_eq!(self.dtype, KvDtype::F32, "kv_row_mut on an int8 cache");
         let off = (h * self.cap + pos) * self.hd;
         let hd = self.hd;
         (&mut self.keys[l][off..off + hd], &mut self.values[l][off..off + hd])
     }
 
+    /// Quantized append target for (layer, head, position): the K and V code
+    /// rows plus their scale slots, for the staging pass to fill via
+    /// `quant::act::quantize_tile`. Int8 caches only.
+    #[inline]
+    pub fn kv_row_quant_mut(
+        &mut self,
+        l: usize,
+        h: usize,
+        pos: usize,
+    ) -> (&mut [i8], &mut [i8], &mut f32, &mut f32) {
+        debug_assert!(pos < self.cap, "kv write at {pos} beyond capacity {}", self.cap);
+        debug_assert_eq!(self.dtype, KvDtype::Int8, "kv_row_quant_mut on an f32 cache");
+        let row = h * self.cap + pos;
+        let off = row * self.hd;
+        let hd = self.hd;
+        (
+            &mut self.qkeys[l][off..off + hd],
+            &mut self.qvalues[l][off..off + hd],
+            &mut self.kscales[l][row],
+            &mut self.vscales[l][row],
+        )
+    }
+
     /// The first `n` positions of (layer, head)'s key and value panels as
-    /// contiguous `n × hd` tiles — what the attention kernels stream.
+    /// contiguous `n × hd` tiles — what the attention kernels stream. F32
+    /// caches only; int8 caches use [`KvCache::head_tiles_quant`].
     #[inline]
     pub fn head_tiles(&self, l: usize, h: usize, n: usize) -> (&[f32], &[f32]) {
         debug_assert!(n <= self.cap, "kv read of {n} beyond capacity {}", self.cap);
+        debug_assert_eq!(self.dtype, KvDtype::F32, "head_tiles on an int8 cache");
         let off = h * self.cap * self.hd;
         let len = n * self.hd;
         (&self.keys[l][off..off + len], &self.values[l][off..off + len])
+    }
+
+    /// Quantized read view of the first `n` positions of (layer, head):
+    /// `n × hd` K and V code tiles plus the matching `n` per-row scales —
+    /// what the fused-dequant attention kernels stream. Int8 caches only.
+    #[inline]
+    pub fn head_tiles_quant(&self, l: usize, h: usize, n: usize) -> (&[i8], &[i8], &[f32], &[f32]) {
+        debug_assert!(n <= self.cap, "kv read of {n} beyond capacity {}", self.cap);
+        debug_assert_eq!(self.dtype, KvDtype::Int8, "head_tiles_quant on an f32 cache");
+        let off = h * self.cap * self.hd;
+        let len = n * self.hd;
+        let srow = h * self.cap;
+        (
+            &self.qkeys[l][off..off + len],
+            &self.qvalues[l][off..off + len],
+            &self.kscales[l][srow..srow + n],
+            &self.vscales[l][srow..srow + n],
+        )
     }
 
     /// Drop everything after position `n` (prefix reuse). Length-only: the
@@ -207,9 +379,16 @@ impl KvPool {
         }
     }
 
-    /// Per-token KV bytes for a model: K + V, all layers, f32.
-    fn model_bytes_per_token(cfg: &crate::model::ModelConfig) -> usize {
-        2 * cfg.n_layers * cfg.d_model * 4
+    /// Per-token KV bytes for a model at the given storage dtype: K + V,
+    /// all layers. F32 is `2·layers·d_model·4`; Int8 is 1-byte codes plus
+    /// one f32 scale per head row (K and V each), `2·layers·(d_model + 4·nh)`
+    /// — the scale overhead is what keeps int8 at ~3.2x (micro) rather than
+    /// a flat 4x.
+    fn model_bytes_per_token_dtype(cfg: &crate::model::ModelConfig, dtype: KvDtype) -> usize {
+        match dtype {
+            KvDtype::F32 => 2 * cfg.n_layers * cfg.d_model * 4,
+            KvDtype::Int8 => 2 * cfg.n_layers * (cfg.d_model + 4 * cfg.n_heads),
+        }
     }
 
     /// Pool holding `capacity_tokens` positions with byte accounting sized
@@ -217,12 +396,34 @@ impl KvPool {
     /// (the engine used to build a throwaway `for_model` pool just to copy
     /// its `bytes_per_token` into a second `new`).
     pub fn for_model_tokens(cfg: &crate::model::ModelConfig, capacity_tokens: usize) -> KvPool {
-        KvPool::new(capacity_tokens.max(1), KvPool::model_bytes_per_token(cfg))
+        KvPool::for_model_tokens_dtype(cfg, capacity_tokens, KvDtype::F32)
+    }
+
+    /// Token-capacity pool with byte accounting for the given KV dtype.
+    pub fn for_model_tokens_dtype(
+        cfg: &crate::model::ModelConfig,
+        capacity_tokens: usize,
+        dtype: KvDtype,
+    ) -> KvPool {
+        KvPool::new(
+            capacity_tokens.max(1),
+            KvPool::model_bytes_per_token_dtype(cfg, dtype),
+        )
     }
 
     /// For a model: capacity from a byte budget.
     pub fn for_model(cfg: &crate::model::ModelConfig, budget_bytes: usize) -> KvPool {
-        let per_token = KvPool::model_bytes_per_token(cfg);
+        KvPool::for_model_dtype(cfg, budget_bytes, KvDtype::F32)
+    }
+
+    /// Byte-budget pool sized for the given KV dtype — an int8 pool admits
+    /// ~`f32_bpt / int8_bpt` times the resident tokens at equal budget.
+    pub fn for_model_dtype(
+        cfg: &crate::model::ModelConfig,
+        budget_bytes: usize,
+        dtype: KvDtype,
+    ) -> KvPool {
+        let per_token = KvPool::model_bytes_per_token_dtype(cfg, dtype);
         KvPool::new((budget_bytes / per_token).max(1), per_token)
     }
 
@@ -395,6 +596,97 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn int8_kv_cache_tile_layout_and_repack_roundtrip() {
+        // The quantized mirror of kv_cache_tile_layout_roundtrip: codes and
+        // per-row scales written through kv_row_quant_mut read back through
+        // head_tiles_quant, and reserve's repack preserves both in lockstep.
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
+        let mut c = KvCache::new_with(&cfg, KvDtype::Int8);
+        assert_eq!(c.dtype(), KvDtype::Int8);
+        assert_eq!(c.capacity(), 0);
+        let positions = 5usize;
+        c.reserve(positions);
+        assert!(c.capacity() >= positions);
+        assert_eq!(c.capacity() % KV_TILE, 0);
+        let code = |l: usize, h: usize, p: usize, i: usize| ((l * 31 + h * 17 + p * 5 + i) % 255) as i32 - 127;
+        let kscale = |l: usize, h: usize, p: usize| (l * 100 + h * 10 + p + 1) as f32 * 0.5;
+        for l in 0..cfg.n_layers {
+            for p in 0..positions {
+                for h in 0..nh {
+                    let (kc, vc, ks, vs) = c.kv_row_quant_mut(l, h, p);
+                    for i in 0..hd {
+                        kc[i] = code(l, h, p, i) as i8;
+                        vc[i] = -(code(l, h, p, i) as i8);
+                    }
+                    *ks = kscale(l, h, p);
+                    *vs = -kscale(l, h, p);
+                }
+            }
+        }
+        c.seen = positions;
+        let check = |c: &KvCache, tag: &str| {
+            for l in 0..cfg.n_layers {
+                for h in 0..nh {
+                    let (kt, vt, ks, vs) = c.head_tiles_quant(l, h, positions);
+                    assert_eq!(kt.len(), positions * hd);
+                    assert_eq!(ks.len(), positions);
+                    for p in 0..positions {
+                        for i in 0..hd {
+                            assert_eq!(kt[p * hd + i], code(l, h, p, i) as i8, "{tag} L{l} h{h} p{p} i{i}");
+                            assert_eq!(vt[p * hd + i], -(code(l, h, p, i) as i8));
+                        }
+                        assert_eq!(ks[p], kscale(l, h, p), "{tag} kscale L{l} h{h} p{p}");
+                        assert_eq!(vs[p], -kscale(l, h, p), "{tag} vscale L{l} h{h} p{p}");
+                    }
+                }
+            }
+        };
+        check(&c, "pre-grow");
+        let old_cap = c.capacity();
+        c.reserve(old_cap + 1);
+        assert!(c.capacity() > old_cap);
+        check(&c, "post-grow");
+    }
+
+    #[test]
+    fn int8_kv_bytes_and_pool_sizing() {
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        // micro: 2 layers, d_model 64, 4 heads → f32 1024 B/token, int8
+        // 2·2·(64 + 16) = 320 B/token — a 3.2x capacity win at equal budget
+        // (the acceptance floor is 3x).
+        let f32_pool = KvPool::for_model_dtype(&cfg, 1 << 20, KvDtype::F32);
+        let i8_pool = KvPool::for_model_dtype(&cfg, 1 << 20, KvDtype::Int8);
+        assert_eq!(f32_pool.bytes_per_token, 2 * 2 * 64 * 4);
+        assert_eq!(i8_pool.bytes_per_token, 2 * 2 * (64 + 4 * 4));
+        let ratio = i8_pool.capacity_tokens() as f64 / f32_pool.capacity_tokens() as f64;
+        assert!(ratio >= 3.0, "int8 capacity win {ratio} below the 3x floor");
+        assert_eq!(
+            KvPool::for_model_tokens_dtype(&cfg, 4096, KvDtype::Int8).bytes_per_token,
+            i8_pool.bytes_per_token
+        );
+        // KvCache::bytes agrees with the pool's per-token accounting.
+        let mut c = KvCache::with_capacity_dtype(&cfg, 10, KvDtype::Int8);
+        assert_eq!(c.bytes(), 0);
+        c.seen = 4;
+        assert_eq!(c.bytes(), 4 * i8_pool.bytes_per_token);
+        let mut f = KvCache::with_capacity(&cfg, 10);
+        f.seen = 4;
+        assert_eq!(f.bytes(), 4 * f32_pool.bytes_per_token);
+    }
+
+    #[test]
+    fn kv_dtype_bits_roundtrip() {
+        assert_eq!(KvDtype::from_bits(32), Some(KvDtype::F32));
+        assert_eq!(KvDtype::from_bits(8), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::from_bits(4), None);
+        assert_eq!(KvDtype::F32.bits(), 32);
+        assert_eq!(KvDtype::Int8.bits(), 8);
+        assert_eq!(KvDtype::Int8.name(), "int8");
+        assert_eq!(format!("{}", KvDtype::F32), "f32");
     }
 
     #[test]

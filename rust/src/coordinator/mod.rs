@@ -12,6 +12,6 @@ pub use batcher::{
     BatchConfig, BatchMetrics, FinishReason, GenRequest, Submission, TokenEvent,
 };
 pub use engine::{poll_streams, Engine, EngineConfig, RequestHandle, Response, TryEvent};
-pub use kvpool::KvPool;
+pub use kvpool::{KvDtype, KvPool};
 pub use pipeline::{calibrate_model, quantize_model, run_ptq, CalibStats, PipelineReport};
 pub use router::{serve_requests, synthetic_requests, ServerConfig, ServerRun};

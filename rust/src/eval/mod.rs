@@ -2,7 +2,7 @@
 
 pub mod tasks;
 
-use crate::model::{Gpt, NullSink, PREFILL_CHUNK};
+use crate::model::{Gpt, KvDtype, NullSink, PREFILL_CHUNK};
 use crate::tensor::{Matrix, QGemmArena};
 
 /// Numerically stable log-softmax of one logit row, returning only the value
@@ -25,6 +25,13 @@ pub fn log_prob(logits: &[f32], target: usize) -> f64 {
 /// [`PREFILL_CHUNK`]-token tiles, one shared scratch arena across windows)
 /// — rather than a second teacher-forced implementation.
 pub fn perplexity(model: &Gpt, stream: &[u32], seq_len: usize) -> f64 {
+    perplexity_kv_dtype(model, stream, seq_len, KvDtype::F32)
+}
+
+/// [`perplexity`] with an explicit KV-cache dtype. `KvDtype::Int8` scores
+/// the stream through the int8-quantized cache and fused-dequant attention
+/// path, so the drift it reports is exactly the serving-time drift.
+pub fn perplexity_kv_dtype(model: &Gpt, stream: &[u32], seq_len: usize, dtype: KvDtype) -> f64 {
     let seq_len = seq_len.min(model.cfg.max_seq);
     let mut arena = QGemmArena::new();
     let mut nll = 0f64;
@@ -36,7 +43,8 @@ pub fn perplexity(model: &Gpt, stream: &[u32], seq_len: usize) -> f64 {
         if window.len() < 2 {
             break;
         }
-        let logits = model.forward_logits_chunked(window, PREFILL_CHUNK, &mut arena);
+        let logits =
+            model.forward_logits_chunked_dtype(window, PREFILL_CHUNK, dtype, &mut arena);
         for t in 0..window.len() - 1 {
             nll -= log_prob(logits.row(t), window[t + 1] as usize);
             count += 1;
@@ -171,6 +179,23 @@ mod tests {
         assert!(
             (got - want).abs() / want < 1e-3,
             "chunked ppl {got} vs teacher-forced {want}"
+        );
+    }
+
+    #[test]
+    fn int8_kv_perplexity_drift_bounded() {
+        // The int8 KV cache must not move perplexity by more than 10%
+        // relative to the f32 cache on the same stream — the serving-time
+        // quality gate for --kv-bits 8.
+        let model = synthetic_model("micro", 15).unwrap();
+        let corpus = crate::data::corpus(model.cfg.vocab_size, "wiki").unwrap();
+        let stream = corpus.stream(&mut Pcg64::seed(9), 256);
+        let ppl_f32 = perplexity_kv_dtype(&model, &stream, 32, KvDtype::F32);
+        let ppl_i8 = perplexity_kv_dtype(&model, &stream, 32, KvDtype::Int8);
+        let drift = (ppl_i8 / ppl_f32 - 1.0).abs();
+        assert!(
+            drift <= 0.1,
+            "int8 KV ppl drift {drift:.4} (f32 {ppl_f32:.3} vs int8 {ppl_i8:.3})"
         );
     }
 

@@ -54,8 +54,11 @@
 
 use super::config::{layer_key, ModelConfig};
 use super::linear::Linear;
-use crate::coordinator::kvpool::KvCache;
-use crate::tensor::attn_kernel::{self, attn_head_span, AttnArena, AttnKernelKind};
+use crate::coordinator::kvpool::{KvCache, KvDtype};
+use crate::quant::quantize_tile;
+use crate::tensor::attn_kernel::{
+    self, attn_head_span, attn_head_span_int8, AttnArena, AttnKernelKind,
+};
 use crate::tensor::{Matrix, QGemmArena};
 use crate::util::pool::{scope_map, SendPtr};
 
@@ -336,6 +339,16 @@ impl Gpt {
     /// future rows are masked purely by the loop bound, so with t = 1 this
     /// is exactly single-token decode attention and every chunking of a
     /// prompt is numerically identical per row.
+    ///
+    /// Caches are dtype-mixed: each sequence's [`KvDtype`] picks its staging
+    /// and sweep path independently, so f32 and int8 caches coexist in one
+    /// batch. Int8 sequences quantize the roped K row and raw V row into
+    /// the cache's code tiles at stage time (one scale per position per
+    /// head, via [`quantize_tile`]), quantize each roped query head-slice
+    /// once into the arena, and sweep through [`attn_head_span_int8`] —
+    /// dequantization fused into the kernels, the cache never rematerialized
+    /// to f32. Since every position quantizes independently, the chunking
+    /// invariance above carries over to int8 codes verbatim.
     #[allow(clippy::too_many_arguments)]
     fn attn_layer(
         &self,
@@ -387,8 +400,13 @@ impl Gpt {
         // q is indexed by absolute qkv row, so size it to the full matrix
         // (== total rows for the contiguous spans every caller builds).
         arena.ensure(qkv.rows * d, scores_len, tiles_len);
+        if caches.iter().any(|c| c.dtype() == KvDtype::Int8) {
+            arena.ensure_int8(qkv.rows * d, qkv.rows * nh, hd);
+        }
 
-        // -- stage roped queries; append roped K + raw V tiles --
+        // -- stage roped queries; append roped K + raw V tiles (int8
+        //    sequences quantize queries into the arena and K/V straight
+        //    into the cache's code tiles) --
         for (&(r0, t), cache) in spans.iter().zip(caches.iter_mut()) {
             let pos0 = cache.seen;
             cache.reserve(pos0 + t);
@@ -396,13 +414,36 @@ impl Gpt {
                 let row = qkv.row(r0 + j);
                 let qrow = &mut arena.q[(r0 + j) * d..(r0 + j + 1) * d];
                 qrow.copy_from_slice(&row[0..d]);
-                for head in 0..nh {
-                    let s = head * hd;
-                    rope_inplace_cached(&mut qrow[s..s + hd], pos0 + j, &self.rope_inv_freq);
-                    let (kdst, vdst) = cache.kv_row_mut(l, head, pos0 + j);
-                    kdst.copy_from_slice(&row[d + s..d + s + hd]);
-                    rope_inplace_cached(kdst, pos0 + j, &self.rope_inv_freq);
-                    vdst.copy_from_slice(&row[2 * d + s..2 * d + s + hd]);
+                match cache.dtype() {
+                    KvDtype::F32 => {
+                        for head in 0..nh {
+                            let s = head * hd;
+                            rope_inplace_cached(&mut qrow[s..s + hd], pos0 + j, &self.rope_inv_freq);
+                            let (kdst, vdst) = cache.kv_row_mut(l, head, pos0 + j);
+                            kdst.copy_from_slice(&row[d + s..d + s + hd]);
+                            rope_inplace_cached(kdst, pos0 + j, &self.rope_inv_freq);
+                            vdst.copy_from_slice(&row[2 * d + s..2 * d + s + hd]);
+                        }
+                    }
+                    KvDtype::Int8 => {
+                        for head in 0..nh {
+                            let s = head * hd;
+                            rope_inplace_cached(&mut qrow[s..s + hd], pos0 + j, &self.rope_inv_freq);
+                            arena.q_scales[(r0 + j) * nh + head] = quantize_tile(
+                                &qrow[s..s + hd],
+                                8,
+                                &mut arena.q_codes[(r0 + j) * d + s..(r0 + j) * d + s + hd],
+                            );
+                            // Keys rope in an f32 landing pad (the cache
+                            // stores codes), then quantize; values quantize
+                            // straight from the projection row.
+                            arena.krow[..hd].copy_from_slice(&row[d + s..d + s + hd]);
+                            rope_inplace_cached(&mut arena.krow[..hd], pos0 + j, &self.rope_inv_freq);
+                            let (kc, vc, ks, vs) = cache.kv_row_quant_mut(l, head, pos0 + j);
+                            *ks = quantize_tile(&arena.krow[..hd], 8, kc);
+                            *vs = quantize_tile(&row[2 * d + s..2 * d + s + hd], 8, vc);
+                        }
+                    }
                 }
             }
         }
@@ -412,6 +453,8 @@ impl Gpt {
         let caches_ro: &[&mut KvCache] = caches;
         let items = &arena.items;
         let q = &arena.q[..qkv.rows * d];
+        let q_codes: &[i8] = &arena.q_codes;
+        let q_scales: &[f32] = &arena.q_scales;
         let scores_ptr = SendPtr(arena.scores.as_mut_ptr());
         let tiles_ptr = SendPtr(arena.tiles.as_mut_ptr());
         let threads = attn_kernel::auto_threads(macs);
@@ -421,27 +464,53 @@ impl Gpt {
             let cache: &KvCache = &*caches_ro[i];
             let pos0 = cache.seen;
             let slen = pos0 + t;
-            let (keys, values) = cache.head_tiles(l, head, slen);
             // SAFETY: the offsets above partition `arena.scores` /
             // `arena.tiles` into disjoint per-item ranges, and `scope_map`
             // joins every worker before the buffers are read back.
             let scores =
                 unsafe { std::slice::from_raw_parts_mut(scores_ptr.0.add(scores_off), slen) };
             let tile = unsafe { std::slice::from_raw_parts_mut(tiles_ptr.0.add(tile_off), t * hd) };
-            attn_head_span(
-                kind,
-                &q[r0 * d..],
-                d,
-                head * hd,
-                hd,
-                pos0,
-                t,
-                keys,
-                values,
-                scale,
-                scores,
-                tile,
-            );
+            match cache.dtype() {
+                KvDtype::F32 => {
+                    let (keys, values) = cache.head_tiles(l, head, slen);
+                    attn_head_span(
+                        kind,
+                        &q[r0 * d..],
+                        d,
+                        head * hd,
+                        hd,
+                        pos0,
+                        t,
+                        keys,
+                        values,
+                        scale,
+                        scores,
+                        tile,
+                    );
+                }
+                KvDtype::Int8 => {
+                    let (keys, values, k_scales, v_scales) = cache.head_tiles_quant(l, head, slen);
+                    attn_head_span_int8(
+                        kind,
+                        &q_codes[r0 * d..],
+                        &q_scales[r0 * nh..],
+                        nh,
+                        head,
+                        d,
+                        head * hd,
+                        hd,
+                        pos0,
+                        t,
+                        keys,
+                        k_scales,
+                        values,
+                        v_scales,
+                        scale,
+                        scores,
+                        tile,
+                    );
+                }
+            }
         });
 
         // -- scatter head tiles into row-major output rows --
@@ -629,10 +698,23 @@ impl Gpt {
         chunk: usize,
         arena: &mut QGemmArena,
     ) -> Matrix {
+        self.forward_logits_chunked_dtype(tokens, chunk, KvDtype::F32, arena)
+    }
+
+    /// [`Gpt::forward_logits_chunked`] with an explicit KV storage dtype —
+    /// the eval entry for measuring int8-KV perplexity drift against the
+    /// f32 cache on identical windows.
+    pub fn forward_logits_chunked_dtype(
+        &self,
+        tokens: &[u32],
+        chunk: usize,
+        dtype: KvDtype,
+        arena: &mut QGemmArena,
+    ) -> Matrix {
         assert!(chunk > 0, "chunk must be >= 1");
         assert!(tokens.len() <= self.cfg.max_seq, "sequence {} > max_seq", tokens.len());
         let vocab = self.cfg.vocab_size;
-        let mut cache = KvCache::new(&self.cfg);
+        let mut cache = KvCache::new_with(&self.cfg, dtype);
         let mut out = Matrix::zeros(tokens.len(), vocab);
         let mut fed = 0usize;
         while fed < tokens.len() {

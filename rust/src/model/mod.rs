@@ -9,7 +9,7 @@ pub mod init;
 pub mod linear;
 pub mod sampling;
 
-pub use crate::coordinator::kvpool::KvCache;
+pub use crate::coordinator::kvpool::{KvCache, KvDtype};
 pub use config::{layer_key, ModelConfig, LINEAR_NAMES};
 pub use gpt::{
     argmax, rope_inplace, rope_inplace_cached, rope_inv_freq, ActSink, Block, ChunkLogits, Gpt,

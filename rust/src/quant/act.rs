@@ -22,21 +22,22 @@ pub fn quantize_token(x: &[f32], bits: u8) -> QuantizedToken {
     QuantizedToken { codes, scale }
 }
 
-/// Quantize a token into caller-provided storage, returning the scale — the
-/// no-allocation variant the batched serving path (`tensor::qgemm`) uses for
-/// its arena, and the single source of truth for per-token quantization
-/// semantics (token and batch paths stay bitwise identical by construction).
+/// Quantize one contiguous f32 slice into caller-provided int codes,
+/// returning the symmetric scale — the single source of truth for
+/// slice-granular quantization semantics, shared by the GEMM activation
+/// path (per token row, via [`quantize_token_into`]) and the KV-cache write
+/// path (per head-row tile, `coordinator::kvpool` / `Gpt::attn_layer`).
 ///
 /// Non-finite lanes: `amax` is NaN-immune (`f32::max` returns the other
 /// operand when one side is NaN), and the saturating float→int cast in
-/// `rtn`/`clamp_q` sends NaN to code 0 — so a NaN activation lane silently
-/// contributes nothing to the GEMM while the rest of the token quantizes
-/// normally (pinned by `nan_lane_is_contained`). An ∞ lane does poison the
-/// scale (amax = ∞ ⇒ every code rounds to 0); callers feeding untrusted fp
-/// inputs should pre-filter. The returned codes are always in
+/// `rtn`/`clamp_q` sends NaN to code 0 — so a NaN lane silently contributes
+/// nothing to the dot products downstream while the rest of the slice
+/// quantizes normally (pinned by `nan_lane_is_contained`). An ∞ lane does
+/// poison the scale (amax = ∞ ⇒ every code rounds to 0); callers feeding
+/// untrusted fp inputs should pre-filter. The returned codes are always in
 /// `[-qmax, qmax]` with `qmax ≤ 127` — never −128, which the SIMD sign/abs
-/// kernels in `tensor::qgemm_kernel` rely on.
-pub fn quantize_token_into(x: &[f32], bits: u8, codes: &mut [i8]) -> f32 {
+/// kernels in `tensor::qgemm_kernel` and `tensor::attn_kernel` rely on.
+pub fn quantize_tile(x: &[f32], bits: u8, codes: &mut [i8]) -> f32 {
     debug_assert_eq!(x.len(), codes.len());
     let qmax = BitWidth(bits).qmax();
     let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
@@ -46,6 +47,15 @@ pub fn quantize_token_into(x: &[f32], bits: u8, codes: &mut [i8]) -> f32 {
         *c = clamp_q(rtn(v * inv), qmax) as i8;
     }
     scale
+}
+
+/// Quantize a token into caller-provided storage, returning the scale — the
+/// no-allocation variant the batched serving path (`tensor::qgemm`) uses for
+/// its arena. Delegates to [`quantize_tile`] (a token row IS a tile), so the
+/// token, batch, and KV-cache paths stay bitwise identical by construction;
+/// see `quantize_tile` for the non-finite-lane semantics.
+pub fn quantize_token_into(x: &[f32], bits: u8, codes: &mut [i8]) -> f32 {
+    quantize_tile(x, bits, codes)
 }
 
 impl QuantizedToken {
@@ -132,6 +142,39 @@ mod tests {
         let mut neg_codes = [0i8; 2];
         quantize_token_into(&neg, 8, &mut neg_codes);
         assert_eq!(neg_codes[0], -127);
+    }
+
+    #[test]
+    fn tile_and_token_paths_are_the_same_quantizer() {
+        // quantize_tile is the shared slice-granular helper; the token path
+        // must stay a pure delegate (bitwise-identical codes and scale), and
+        // the documented NaN semantics must hold for the tile entry too.
+        let mut rng = Pcg64::seed(56);
+        for bits in [4u8, 8] {
+            let x: Vec<f32> = (0..29).map(|_| rng.heavy_tailed(0.1, 10.0)).collect();
+            let mut tile_codes = vec![0i8; x.len()];
+            let mut tok_codes = vec![0i8; x.len()];
+            let ts = quantize_tile(&x, bits, &mut tile_codes);
+            let ks = quantize_token_into(&x, bits, &mut tok_codes);
+            assert_eq!(ts, ks);
+            assert_eq!(tile_codes, tok_codes);
+        }
+        // NaN lane: scale unperturbed, codes identical to the NaN-free tile,
+        // NaN lane itself → code 0 (the KV write path relies on this — a
+        // poisoned cache row must not poison the whole head tile).
+        let x = [2.0f32, f32::NAN, -0.5];
+        let clean = [2.0f32, 0.0, -0.5];
+        let (mut c_x, mut c_clean) = ([0i8; 3], [0i8; 3]);
+        let s_x = quantize_tile(&x, 8, &mut c_x);
+        let s_clean = quantize_tile(&clean, 8, &mut c_clean);
+        assert_eq!(s_x, s_clean, "NaN perturbed the tile scale");
+        assert_eq!(c_x, c_clean);
+        assert_eq!(c_x[1], 0, "NaN lane must quantize to 0");
+        // Codes never reach -128 (SIMD sign/abs kernels rely on it).
+        let neg = [-3.0f32, 1.0];
+        let mut c_neg = [0i8; 2];
+        quantize_tile(&neg, 8, &mut c_neg);
+        assert_eq!(c_neg[0], -127);
     }
 
     #[test]

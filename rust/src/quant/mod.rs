@@ -6,7 +6,8 @@ pub mod spec;
 pub mod weight;
 
 pub use act::{
-    fake_quant_acts, fake_quant_vec, quantize_token, quantize_token_into, QuantizedToken,
+    fake_quant_acts, fake_quant_vec, quantize_tile, quantize_token, quantize_token_into,
+    QuantizedToken,
 };
 pub use spec::{BitWidth, Precision, FP};
 pub use weight::{fake_quant_weight, pack_int4, unpack_int4, QuantizedWeight};

@@ -40,6 +40,33 @@
 //! `cap × hd` panel, so consecutive cache positions are `hd` floats apart —
 //! the score sweep and PV accumulation walk memory linearly instead of
 //! striding `d_model` between positions as the row-major layout forced.
+//!
+//! ## Int8 KV paths (fused dequant)
+//!
+//! For [`crate::model::KvDtype::Int8`] caches the two KV-touching loops have
+//! int8 twins that stream code tiles directly and fuse dequantization into
+//! the writeback — the cache is never materialized back to f32:
+//!
+//! * [`qk_scores_int8`] — int8 q (quantized once per (sequence, head) row
+//!   into [`AttnArena`]) dotted against the `t_seen × hd` key-code tile in
+//!   exact i32, with `q_scale · attn_scale · k_scale[tk]` applied once per
+//!   accumulator at writeback. AVX2 uses the `qgemm_kernel` sign/abs
+//!   `maddubs`+`madd` trick on **128-bit** lanes (head dims are small —
+//!   16-byte chunks keep hd = 16 fully vectorized where 32-byte chunks
+//!   would degenerate to the scalar tail); NEON uses `vmull_s8` +
+//!   `vpadalq_s16`. Codes are ≥ −127 by construction of `quantize_tile`,
+//!   so pair sums are ≤ 2·127² < `i16::MAX` and the i16 stage is exact.
+//! * [`pv_accum_int8`] — softmax weights times the value-code tile with the
+//!   per-row value scale folded into the broadcast weight. SIMD variants
+//!   process positions **in order with separate mul-then-add** (no FMA):
+//!   i8→f32 conversion is exact, so each lane reproduces the scalar
+//!   `out += (w·v_scale) · code` rounding sequence bit-for-bit.
+//!
+//! Because integer accumulation is order-independent and the f32 writeback
+//! expressions are kept character-identical across kernels, the int8 paths
+//! are **bitwise identical across Scalar/AVX2/NEON** — the property tests
+//! pin SIMD against the int8 scalar reference with `assert_eq`, unlike the
+//! tolerance-level contract of the f32 kernels above.
 
 // Index-heavy microkernels: indexed loops mirror the register tiling and
 // keep the scalar/SIMD variants visually aligned.
@@ -151,6 +178,15 @@ pub struct AttnArena {
     /// (sequence, head, scores offset, tile offset) work items — refilled
     /// per layer but capacity-reused, so the layer loop allocates nothing.
     pub(crate) items: Vec<(usize, usize, usize, usize)>,
+    /// Int8 query codes mirroring `q` (total × d row-major), quantized once
+    /// per (row, head) by the staging pass when any sequence in the batch
+    /// carries an int8 KV cache.
+    pub(crate) q_codes: Vec<i8>,
+    /// Per-(row, head) query scales for `q_codes`: row-major `total × nh`.
+    pub(crate) q_scales: Vec<f32>,
+    /// One roped key row (`hd` floats) staged before quantization — the
+    /// int8 cache stores codes, so rope needs an f32 landing pad.
+    pub(crate) krow: Vec<f32>,
 }
 
 impl AttnArena {
@@ -167,6 +203,21 @@ impl AttnArena {
         }
         if self.tiles.len() < tiles_len {
             self.tiles.resize(tiles_len, 0.0);
+        }
+    }
+
+    /// Grow the int8 staging buffers (query codes + scales + key landing
+    /// pad) — called only on batches that touch an int8 cache, so pure-f32
+    /// serving never pays for them.
+    pub(crate) fn ensure_int8(&mut self, q_len: usize, scales_len: usize, hd: usize) {
+        if self.q_codes.len() < q_len {
+            self.q_codes.resize(q_len, 0);
+        }
+        if self.q_scales.len() < scales_len {
+            self.q_scales.resize(scales_len, 0.0);
+        }
+        if self.krow.len() < hd {
+            self.krow.resize(hd, 0.0);
         }
     }
 }
@@ -304,6 +355,155 @@ fn pv_accum_scalar(scores: &[f32], values: &[f32], out: &mut [f32]) {
         let vrow = &values[tk * hd..(tk + 1) * hd];
         for (o, &vv) in out.iter_mut().zip(vrow) {
             *o += w * vv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 KV kernels (fused dequant) — see the module doc. All kernels are
+// bitwise-identical across Scalar/AVX2/NEON: exact i32 accumulation plus
+// character-identical f32 writeback expressions.
+
+/// Int8 score sweep: `scores[tk] = (q · keys[tk]) · scale · k_scales[tk]`
+/// with the dot in exact i32. `scale` is the caller's pre-combined
+/// `q_scale · attn_scale`; `k_scales` holds one scale per key row. Same
+/// availability contract on `kind` as [`qk_scores`].
+pub fn qk_scores_int8(
+    kind: AttnKernelKind,
+    q: &[i8],
+    keys: &[i8],
+    k_scales: &[f32],
+    scale: f32,
+    scores: &mut [f32],
+) {
+    debug_assert_eq!(keys.len(), scores.len() * q.len());
+    debug_assert!(k_scales.len() >= scores.len());
+    match kind {
+        AttnKernelKind::Scalar => qk_scores_int8_scalar(q, keys, k_scales, scale, scores),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Avx2 => unsafe { avx2::qk_scores_int8(q, keys, k_scales, scale, scores) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Neon => unsafe { neon::qk_scores_int8(q, keys, k_scales, scale, scores) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel {other:?} is not available on this target"),
+    }
+}
+
+/// Int8 weighted-V accumulation with fused dequant:
+/// `out = Σ_tk (scores[tk] · v_scales[tk]) · values[tk]` with the value
+/// codes converted lane-wise (i8→f32 is exact). `out` is fully overwritten.
+/// Same availability contract on `kind` as [`pv_accum`].
+pub fn pv_accum_int8(
+    kind: AttnKernelKind,
+    scores: &[f32],
+    values: &[i8],
+    v_scales: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(values.len(), scores.len() * out.len());
+    debug_assert!(v_scales.len() >= scores.len());
+    match kind {
+        AttnKernelKind::Scalar => pv_accum_int8_scalar(scores, values, v_scales, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Avx2 => unsafe { avx2::pv_accum_int8(scores, values, v_scales, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see `qk_scores`.
+        AttnKernelKind::Neon => unsafe { neon::pv_accum_int8(scores, values, v_scales, out) },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel {other:?} is not available on this target"),
+    }
+}
+
+/// One (sequence, head) causal attention work item over **int8** head-major
+/// KV tiles — the int8 twin of [`attn_head_span`], with dequantization fused
+/// into the score sweep and PV writebacks.
+///
+/// `q` holds the span's quantized query rows at row stride `d` with this
+/// head's lanes at column offset `s`; `q_scales` holds the matching
+/// per-(row, head) scales, row `j`'s at `j · q_scale_stride + q_scale_off`
+/// (the `Gpt` driver passes stride `nh`, offset `head`). `keys` / `values`
+/// are the head's contiguous `(pos0 + t) × hd` code tiles and
+/// `k_scales` / `v_scales` the matching per-position scales
+/// ([`crate::model::KvCache::head_tiles_quant`]). Masking, chunking
+/// invariance, and the `scores` / `out` contracts match [`attn_head_span`].
+#[allow(clippy::too_many_arguments)]
+pub fn attn_head_span_int8(
+    kind: AttnKernelKind,
+    q: &[i8],
+    q_scales: &[f32],
+    q_scale_stride: usize,
+    q_scale_off: usize,
+    d: usize,
+    s: usize,
+    hd: usize,
+    pos0: usize,
+    t: usize,
+    keys: &[i8],
+    k_scales: &[f32],
+    values: &[i8],
+    v_scales: &[f32],
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    assert!(kind.available(), "attention kernel {kind:?} not available on this host");
+    assert!(t > 0, "empty span");
+    debug_assert!(q.len() >= (t - 1) * d + s + hd);
+    debug_assert!(q_scales.len() >= (t - 1) * q_scale_stride + q_scale_off + 1);
+    debug_assert!(keys.len() >= (pos0 + t) * hd);
+    debug_assert!(values.len() >= (pos0 + t) * hd);
+    debug_assert!(k_scales.len() >= pos0 + t);
+    debug_assert!(v_scales.len() >= pos0 + t);
+    debug_assert!(scores.len() >= pos0 + t);
+    debug_assert_eq!(out.len(), t * hd);
+    for j in 0..t {
+        let t_seen = pos0 + j + 1;
+        let qh = &q[j * d + s..j * d + s + hd];
+        let qs = q_scales[j * q_scale_stride + q_scale_off] * scale;
+        qk_scores_int8(
+            kind,
+            qh,
+            &keys[..t_seen * hd],
+            &k_scales[..t_seen],
+            qs,
+            &mut scores[..t_seen],
+        );
+        softmax(kind, &mut scores[..t_seen]);
+        pv_accum_int8(
+            kind,
+            &scores[..t_seen],
+            &values[..t_seen * hd],
+            &v_scales[..t_seen],
+            &mut out[j * hd..(j + 1) * hd],
+        );
+    }
+}
+
+fn qk_scores_int8_scalar(q: &[i8], keys: &[i8], k_scales: &[f32], scale: f32, scores: &mut [f32]) {
+    let hd = q.len();
+    for (tk, sc) in scores.iter_mut().enumerate() {
+        let krow = &keys[tk * hd..(tk + 1) * hd];
+        let mut acc = 0i32;
+        for (&a, &b) in q.iter().zip(krow) {
+            acc += a as i32 * b as i32;
+        }
+        // Writeback kept character-identical to the SIMD kernels — the
+        // bitwise cross-kernel contract hangs on this exact expression.
+        *sc = acc as f32 * (scale * k_scales[tk]);
+    }
+}
+
+fn pv_accum_int8_scalar(scores: &[f32], values: &[i8], v_scales: &[f32], out: &mut [f32]) {
+    let hd = out.len();
+    out.fill(0.0);
+    for (tk, &w) in scores.iter().enumerate() {
+        let wv = w * v_scales[tk];
+        let vrow = &values[tk * hd..(tk + 1) * hd];
+        for (o, &c) in out.iter_mut().zip(vrow) {
+            *o += wv * (c as f32);
         }
     }
 }
@@ -508,6 +708,106 @@ pub(crate) mod avx2 {
             }
         }
     }
+
+    /// Horizontal sum of the 4 i32 lanes of `v`.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn hsum_i32_128(v: __m128i) -> i32 {
+        unsafe {
+            let s = _mm_add_epi32(v, _mm_unpackhi_epi64(v, v));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32::<1>(s));
+            _mm_cvtsi128_si32(s)
+        }
+    }
+
+    /// Int8 score sweep: the `qgemm_kernel` sign/abs `maddubs`+`madd` trick
+    /// on **128-bit** lanes — head dims are small (16 on the micro model),
+    /// and 16-byte chunks keep them fully vectorized where 32-byte chunks
+    /// would fall to the scalar tail. i32 accumulation is exact (codes
+    /// ≥ −127 ⇒ pair sums ≤ 2·127² < `i16::MAX`), and the writeback
+    /// expression matches the scalar kernel character-for-character, so
+    /// this kernel is bitwise-identical to the int8 scalar reference.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA are present and
+    /// `keys.len() == scores.len() * q.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn qk_scores_int8(
+        q: &[i8],
+        keys: &[i8],
+        k_scales: &[f32],
+        scale: f32,
+        scores: &mut [f32],
+    ) {
+        unsafe {
+            let hd = q.len();
+            let n = scores.len();
+            let chunks = hd / 16 * 16;
+            let ones = _mm_set1_epi16(1);
+            let qp = q.as_ptr();
+            let kp = keys.as_ptr();
+            for tk in 0..n {
+                let base = kp.add(tk * hd);
+                let mut vacc = _mm_setzero_si128();
+                let mut i = 0usize;
+                while i < chunks {
+                    let qv = _mm_loadu_si128(qp.add(i) as *const __m128i);
+                    let kv = _mm_loadu_si128(base.add(i) as *const __m128i);
+                    // |k| · (q·sign(k)) == q·k ; pairs sum exactly in i16.
+                    let p = _mm_maddubs_epi16(_mm_abs_epi8(kv), _mm_sign_epi8(qv, kv));
+                    vacc = _mm_add_epi32(vacc, _mm_madd_epi16(p, ones));
+                    i += 16;
+                }
+                let mut acc = hsum_i32_128(vacc);
+                for i in chunks..hd {
+                    acc += q[i] as i32 * *base.add(i) as i32;
+                }
+                scores[tk] = acc as f32 * (scale * k_scales[tk]);
+            }
+        }
+    }
+
+    /// Int8 weighted-V accumulation with fused dequant: 8 value codes per
+    /// pass widened i8→i32→f32 (exact), then **separate mul-then-add** — no
+    /// FMA — one position at a time in position order, so every lane
+    /// reproduces the scalar `out += (w·v_scale)·code` rounding sequence
+    /// bit-for-bit.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA are present and
+    /// `values.len() == scores.len() * out.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn pv_accum_int8(
+        scores: &[f32],
+        values: &[i8],
+        v_scales: &[f32],
+        out: &mut [f32],
+    ) {
+        unsafe {
+            let hd = out.len();
+            let n = scores.len();
+            out.fill(0.0);
+            let chunks = hd / 8 * 8;
+            let vp = values.as_ptr();
+            let op = out.as_mut_ptr();
+            for tk in 0..n {
+                let wv = scores[tk] * v_scales[tk];
+                let wvec = _mm256_set1_ps(wv);
+                let base = vp.add(tk * hd);
+                let mut i = 0usize;
+                while i < chunks {
+                    let c8 = _mm_loadl_epi64(base.add(i) as *const __m128i);
+                    let vf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(c8));
+                    let o = _mm256_add_ps(_mm256_loadu_ps(op.add(i)), _mm256_mul_ps(wvec, vf));
+                    _mm256_storeu_ps(op.add(i), o);
+                    i += 8;
+                }
+                for i in chunks..hd {
+                    *op.add(i) += wv * (*base.add(i) as f32);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -609,6 +909,90 @@ pub(crate) mod neon {
                 let s = scores[tk];
                 for i in chunks..hd {
                     *op.add(i) += s * *base.add(i);
+                }
+            }
+        }
+    }
+
+    /// Int8 score sweep: `vmull_s8` widens i8×i8→i16 exactly and
+    /// `vpadalq_s16` pairwise-accumulates into i32, so the dot is exact and
+    /// the per-key writeback matches the scalar reference bitwise.
+    ///
+    /// # Safety
+    /// Caller must guarantee NEON is present and
+    /// `keys.len() == scores.len() * q.len()`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn qk_scores_int8(
+        q: &[i8],
+        keys: &[i8],
+        k_scales: &[f32],
+        scale: f32,
+        scores: &mut [f32],
+    ) {
+        unsafe {
+            let hd = q.len();
+            let n = scores.len();
+            let chunks = hd / 16 * 16;
+            let qp = q.as_ptr();
+            let kp = keys.as_ptr();
+            for tk in 0..n {
+                let base = kp.add(tk * hd);
+                let mut vacc = vdupq_n_s32(0);
+                let mut i = 0usize;
+                while i < chunks {
+                    let qv = vld1q_s8(qp.add(i));
+                    let kv = vld1q_s8(base.add(i));
+                    vacc = vpadalq_s16(vacc, vmull_s8(vget_low_s8(qv), vget_low_s8(kv)));
+                    vacc = vpadalq_s16(vacc, vmull_s8(vget_high_s8(qv), vget_high_s8(kv)));
+                    i += 16;
+                }
+                let mut acc = vaddvq_s32(vacc);
+                for i in chunks..hd {
+                    acc += q[i] as i32 * *base.add(i) as i32;
+                }
+                scores[tk] = acc as f32 * (scale * k_scales[tk]);
+            }
+        }
+    }
+
+    /// Int8 weighted-V accumulation with fused dequant: 8 codes per pass
+    /// widened i8→i16→i32→f32 (exact), then separate mul-then-add — no FMA
+    /// — in position order, matching the scalar rounding sequence bitwise.
+    ///
+    /// # Safety
+    /// Caller must guarantee NEON is present and
+    /// `values.len() == scores.len() * out.len()`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn pv_accum_int8(
+        scores: &[f32],
+        values: &[i8],
+        v_scales: &[f32],
+        out: &mut [f32],
+    ) {
+        unsafe {
+            let hd = out.len();
+            let n = scores.len();
+            out.fill(0.0);
+            let chunks = hd / 8 * 8;
+            let vp = values.as_ptr();
+            let op = out.as_mut_ptr();
+            for tk in 0..n {
+                let wv = scores[tk] * v_scales[tk];
+                let wvec = vdupq_n_f32(wv);
+                let base = vp.add(tk * hd);
+                let mut i = 0usize;
+                while i < chunks {
+                    let c16 = vmovl_s8(vld1_s8(base.add(i)));
+                    let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(c16)));
+                    let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(c16)));
+                    let o0 = vaddq_f32(vld1q_f32(op.add(i)), vmulq_f32(wvec, lo));
+                    let o1 = vaddq_f32(vld1q_f32(op.add(i + 4)), vmulq_f32(wvec, hi));
+                    vst1q_f32(op.add(i), o0);
+                    vst1q_f32(op.add(i + 4), o1);
+                    i += 8;
+                }
+                for i in chunks..hd {
+                    *op.add(i) += wv * (*base.add(i) as f32);
                 }
             }
         }
@@ -760,6 +1144,240 @@ mod tests {
                 .zip(&want)
                 .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
             assert!(diff < 1e-5 * wmax, "{kind} hd={hd} pos0={pos0} t={t}: diff {diff}");
+        }
+    }
+
+    /// Random int8 codes in `[-127, 127]` (never −128, like the quantizers
+    /// emit) plus positive per-row scales.
+    fn random_int8_case(
+        rng: &mut Pcg64,
+        hd: usize,
+        nh: usize,
+        pos0: usize,
+        t: usize,
+    ) -> (Vec<i8>, Vec<f32>, Vec<i8>, Vec<f32>, Vec<i8>, Vec<f32>) {
+        let d = nh * hd;
+        let code = |rng: &mut Pcg64| (rng.below(255) as i32 - 127) as i8;
+        let scale = |rng: &mut Pcg64| 0.01 + rng.below(1000) as f32 * 1e-3;
+        let q: Vec<i8> = (0..t * d).map(|_| code(rng)).collect();
+        let q_scales: Vec<f32> = (0..t * nh).map(|_| scale(rng)).collect();
+        let keys: Vec<i8> = (0..(pos0 + t) * hd).map(|_| code(rng)).collect();
+        let k_scales: Vec<f32> = (0..pos0 + t).map(|_| scale(rng)).collect();
+        let values: Vec<i8> = (0..(pos0 + t) * hd).map(|_| code(rng)).collect();
+        let v_scales: Vec<f32> = (0..pos0 + t).map(|_| scale(rng)).collect();
+        (q, q_scales, keys, k_scales, values, v_scales)
+    }
+
+    #[test]
+    fn int8_scalar_span_bitwise_matches_straightline_reference() {
+        // Pins the int8 scalar kernels against a straight-line replica of
+        // their defining loops: exact i32 q·K with scale-at-writeback,
+        // in-order softmax, zero-init (w·v_scale)·code accumulation.
+        let mut rng = Pcg64::seed(1204);
+        for (hd, nh, pos0, t) in
+            [(1, 1, 0, 1), (3, 2, 5, 3), (8, 4, 2, 1), (16, 1, 31, 8), (20, 2, 9, 4)]
+        {
+            let (q, q_scales, keys, k_scales, values, v_scales) =
+                random_int8_case(&mut rng, hd, nh, pos0, t);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let d = nh * hd;
+            for head in 0..nh {
+                let s = head * hd;
+                let mut want = vec![0f32; t * hd];
+                let mut scores = vec![0f32; pos0 + t];
+                for j in 0..t {
+                    let t_seen = pos0 + j + 1;
+                    let qh = &q[j * d + s..j * d + s + hd];
+                    let qs = q_scales[j * nh + head] * scale;
+                    for tk in 0..t_seen {
+                        let mut acc = 0i32;
+                        for i in 0..hd {
+                            acc += qh[i] as i32 * keys[tk * hd + i] as i32;
+                        }
+                        scores[tk] = acc as f32 * (qs * k_scales[tk]);
+                    }
+                    let sc = &mut scores[..t_seen];
+                    let max = sc.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                    let mut sum = 0f32;
+                    for v in sc.iter_mut() {
+                        *v = (*v - max).exp();
+                        sum += *v;
+                    }
+                    let inv = 1.0 / sum;
+                    for v in sc.iter_mut() {
+                        *v *= inv;
+                    }
+                    let orow = &mut want[j * hd..(j + 1) * hd];
+                    for tk in 0..t_seen {
+                        let wv = sc[tk] * v_scales[tk];
+                        for (o, &c) in orow.iter_mut().zip(&values[tk * hd..(tk + 1) * hd]) {
+                            *o += wv * (c as f32);
+                        }
+                    }
+                }
+                let mut got = vec![7f32; t * hd]; // poisoned: out must be overwritten
+                attn_head_span_int8(
+                    AttnKernelKind::Scalar,
+                    &q,
+                    &q_scales,
+                    nh,
+                    head,
+                    d,
+                    s,
+                    hd,
+                    pos0,
+                    t,
+                    &keys,
+                    &k_scales,
+                    &values,
+                    &v_scales,
+                    scale,
+                    &mut scores,
+                    &mut got,
+                );
+                assert_eq!(got, want, "hd={hd} nh={nh} pos0={pos0} t={t} head={head}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_simd_span_bitwise_matches_int8_scalar() {
+        // The int8 contract is stronger than the f32 one: exact integer
+        // accumulation + identical writeback expressions ⇒ SIMD must equal
+        // the int8 scalar reference bit-for-bit, across lane-straddling
+        // head dims (hd ∤ 16 and ∤ 8), spans, and deep pos0.
+        let kind = detect_attn_kernel();
+        if kind == AttnKernelKind::Scalar {
+            return; // no SIMD on this host; scalar covered above
+        }
+        let mut rng = Pcg64::seed(1205);
+        for (hd, nh, pos0, t) in [
+            (1, 1, 0, 1),
+            (3, 2, 5, 3),
+            (7, 1, 2, 5),
+            (8, 2, 0, 9),
+            (9, 1, 6, 2),
+            (16, 4, 31, 8),
+            (17, 1, 12, 3),
+            (20, 2, 65, 1),
+            (32, 1, 13, 6),
+        ] {
+            let (q, q_scales, keys, k_scales, values, v_scales) =
+                random_int8_case(&mut rng, hd, nh, pos0, t);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let d = nh * hd;
+            let mut scores = vec![0f32; pos0 + t];
+            let mut want = vec![0f32; t * hd];
+            attn_head_span_int8(
+                AttnKernelKind::Scalar,
+                &q,
+                &q_scales,
+                nh,
+                0,
+                d,
+                0,
+                hd,
+                pos0,
+                t,
+                &keys,
+                &k_scales,
+                &values,
+                &v_scales,
+                scale,
+                &mut scores,
+                &mut want,
+            );
+            let mut got = vec![7f32; t * hd];
+            attn_head_span_int8(
+                kind,
+                &q,
+                &q_scales,
+                nh,
+                0,
+                d,
+                0,
+                hd,
+                pos0,
+                t,
+                &keys,
+                &k_scales,
+                &values,
+                &v_scales,
+                scale,
+                &mut scores,
+                &mut got,
+            );
+            assert_eq!(got, want, "{kind} hd={hd} pos0={pos0} t={t}");
+        }
+    }
+
+    #[test]
+    fn int8_span_tracks_f32_span_on_quantized_data() {
+        // Quantize f32 K/V/q with quantize_tile and check the fused-dequant
+        // int8 span stays within int8 tolerance of the f32 span on the same
+        // data — the kernel-level version of the model-level property test.
+        let mut rng = Pcg64::seed(1206);
+        for (hd, pos0, t) in [(8, 5, 3), (16, 40, 4), (20, 9, 2)] {
+            let d = hd;
+            let q: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+            let keys: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+            let values: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut scores = vec![0f32; pos0 + t];
+            let mut want = vec![0f32; t * hd];
+            attn_head_span(
+                AttnKernelKind::Scalar,
+                &q,
+                d,
+                0,
+                hd,
+                pos0,
+                t,
+                &keys,
+                &values,
+                scale,
+                &mut scores,
+                &mut want,
+            );
+            let quant_rows = |x: &[f32], rows: usize| {
+                let mut codes = vec![0i8; x.len()];
+                let mut scales = vec![0f32; rows];
+                for r in 0..rows {
+                    scales[r] = crate::quant::quantize_tile(
+                        &x[r * hd..(r + 1) * hd],
+                        8,
+                        &mut codes[r * hd..(r + 1) * hd],
+                    );
+                }
+                (codes, scales)
+            };
+            let (qc, qs) = quant_rows(&q, t);
+            let (kc, ks) = quant_rows(&keys, pos0 + t);
+            let (vc, vs) = quant_rows(&values, pos0 + t);
+            let mut got = vec![0f32; t * hd];
+            attn_head_span_int8(
+                AttnKernelKind::Scalar,
+                &qc,
+                &qs,
+                1,
+                0,
+                d,
+                0,
+                hd,
+                pos0,
+                t,
+                &kc,
+                &ks,
+                &vc,
+                &vs,
+                scale,
+                &mut scores,
+                &mut got,
+            );
+            let wmax = want.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1.0);
+            let diff =
+                got.iter().zip(&want).fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            assert!(diff < 0.1 * wmax, "hd={hd} pos0={pos0} t={t}: diff {diff}");
         }
     }
 

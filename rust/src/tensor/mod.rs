@@ -11,7 +11,10 @@ pub mod matrix;
 pub mod qgemm;
 pub mod qgemm_kernel;
 
-pub use attn_kernel::{attn_head_span, detect_attn_kernel, AttnArena, AttnKernelKind};
+pub use attn_kernel::{
+    attn_head_span, attn_head_span_int8, detect_attn_kernel, pv_accum_int8, qk_scores_int8,
+    AttnArena, AttnKernelKind,
+};
 pub use gemm::{
     dot, gram_cols_f64, gram_rows, matmul, matmul_at, matmul_bt, matmul_bt_acc, matvec, matvec_t,
 };

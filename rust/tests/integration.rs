@@ -10,7 +10,7 @@ use aser::coordinator::{
 };
 use aser::eval::{perplexity, tasks};
 use aser::methods::{method_by_name, RankPolicy};
-use aser::model::{load_model, synthetic_model, ModelConfig, NullSink};
+use aser::model::{load_model, synthetic_model, KvDtype, ModelConfig, NullSink};
 use aser::quant::Precision;
 use aser::util::io::TensorFile;
 use std::path::Path;
@@ -159,6 +159,60 @@ fn e2e_quantized_serving_matches_offline_generation() {
             want
         );
     }
+}
+
+/// Smoke: serving end to end on the int8-quantized KV cache (`--kv-bits 8`
+/// equivalent). Every request must complete through the fused-dequant
+/// attention path, streams must obey the event protocol, and the pool must
+/// drain — the content-level guarantees live in the property suite.
+#[test]
+fn e2e_int8_kv_serving_completes_and_drains() {
+    let model = synthetic_model("micro", 405).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 7 };
+    let stats = calibrate_model(&model, "wiki", &ccfg).unwrap();
+    let method = method_by_name("aser", RankPolicy::Fixed(8), 4).unwrap();
+    let (qmodel, _) = run_ptq(model, &stats, method.as_ref(), Precision::w4a8(), 1).unwrap();
+    let qmodel = std::sync::Arc::new(qmodel);
+
+    let reqs = synthetic_requests(qmodel.cfg.vocab_size, 8, 5, 6, 13).unwrap();
+    let engine = Engine::new(
+        std::sync::Arc::clone(&qmodel),
+        EngineConfig {
+            workers: 2,
+            // stop_on_eos off ⇒ every request runs its full max_new budget,
+            // so completion is deterministic regardless of sampled content.
+            batch: BatchConfig {
+                kv_dtype: KvDtype::Int8,
+                stop_on_eos: false,
+                ..Default::default()
+            },
+            kv_tokens: 4096,
+        },
+    );
+    let handles: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone())).collect();
+    for h in handles {
+        let id = h.id() as usize;
+        let mut n_tokens = 0usize;
+        let mut saw_prefill = false;
+        loop {
+            match h.recv().expect("stream must stay open until Finished") {
+                TokenEvent::PrefillDone { .. } => saw_prefill = true,
+                TokenEvent::Token { index, .. } => {
+                    assert!(saw_prefill, "req {id}: token before PrefillDone");
+                    assert_eq!(index, n_tokens, "req {id}: index gap");
+                    n_tokens += 1;
+                }
+                TokenEvent::Finished { reason, n_tokens: n, .. } => {
+                    assert!(reason.is_completed(), "req {id}: {reason:?}");
+                    assert_eq!(n, n_tokens);
+                    break;
+                }
+            }
+        }
+        assert!(n_tokens > 0, "req {id}: no tokens generated on int8 KV");
+    }
+    assert_eq!(engine.kv_used_tokens(), 0, "streams done ⇒ pools drained");
+    engine.shutdown();
 }
 
 /// Acceptance: a mid-decode `cancel()` on a quantized serving stream frees

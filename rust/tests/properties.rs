@@ -1,6 +1,7 @@
 //! Property-based invariant suites (hand-rolled harness in `util::prop`):
 //! quantizer grid bounds, smoothing function-preservation, rank selection
-//! monotonicity, batcher/KV-pool safety, SVD contracts.
+//! monotonicity, batcher/KV-pool safety, int8-KV attention kernel
+//! contracts, SVD contracts.
 
 use aser::linalg::{rank_for_threshold, svd, svd_gram};
 use aser::methods::aser::Aser;
@@ -1051,4 +1052,300 @@ fn prop_cancellation_returns_full_kv_lease() {
             all(checks)
         },
     );
+}
+
+#[test]
+fn prop_int8_attn_simd_kernel_matches_scalar_bitwise() {
+    // The int8 fused-dequant span kernels accumulate q·K and P·V with
+    // exact integer dots and a writeback expression kept character-
+    // identical across implementations, so SIMD vs scalar is a BITWISE
+    // contract — stricter than the f32 kernels' tolerance contract.
+    // Trivially true on scalar-only hosts (same kernel both sides).
+    use aser::tensor::{attn_head_span_int8, detect_attn_kernel, AttnKernelKind};
+    let kind = detect_attn_kernel();
+    check(
+        "int8_attn_simd_vs_scalar_bitwise",
+        &cfg(48),
+        |rng| {
+            let hd = 1 + rng.below(33); // straddles both SIMD chunk widths
+            let nh = 1 + rng.below(3);
+            let pos0 = rng.below(70);
+            let t = [1usize, 3, 8][rng.below(3)];
+            let d = nh * hd;
+            let code = |rng: &mut Pcg64| (rng.below(255) as i32 - 127) as i8;
+            let sc = |rng: &mut Pcg64| 0.01 + rng.below(1000) as f32 * 1e-3;
+            let q: Vec<i8> = (0..t * d).map(|_| code(rng)).collect();
+            let q_scales: Vec<f32> = (0..t * nh).map(|_| sc(rng)).collect();
+            let keys: Vec<i8> = (0..(pos0 + t) * hd).map(|_| code(rng)).collect();
+            let k_scales: Vec<f32> = (0..pos0 + t).map(|_| sc(rng)).collect();
+            let values: Vec<i8> = (0..(pos0 + t) * hd).map(|_| code(rng)).collect();
+            let v_scales: Vec<f32> = (0..pos0 + t).map(|_| sc(rng)).collect();
+            (hd, nh, pos0, t, q, q_scales, keys, k_scales, values, v_scales)
+        },
+        |_| Vec::new(),
+        |(hd, nh, pos0, t, q, q_scales, keys, k_scales, values, v_scales)| {
+            let (hd, nh, pos0, t) = (*hd, *nh, *pos0, *t);
+            let d = nh * hd;
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut scores = vec![0f32; pos0 + t];
+            for head in 0..nh {
+                let mut want = vec![7f32; t * hd];
+                attn_head_span_int8(
+                    AttnKernelKind::Scalar,
+                    q,
+                    q_scales,
+                    nh,
+                    head,
+                    d,
+                    head * hd,
+                    hd,
+                    pos0,
+                    t,
+                    keys,
+                    k_scales,
+                    values,
+                    v_scales,
+                    scale,
+                    &mut scores,
+                    &mut want,
+                );
+                let mut got = vec![7f32; t * hd];
+                attn_head_span_int8(
+                    kind,
+                    q,
+                    q_scales,
+                    nh,
+                    head,
+                    d,
+                    head * hd,
+                    hd,
+                    pos0,
+                    t,
+                    keys,
+                    k_scales,
+                    values,
+                    v_scales,
+                    scale,
+                    &mut scores,
+                    &mut got,
+                );
+                if got != want {
+                    return CaseResult::Fail(format!(
+                        "{kind} hd={hd} nh={nh} pos0={pos0} t={t} head={head}: \
+                         int8 span not bitwise-equal to scalar"
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_int8_attn_matches_f32_within_tolerance() {
+    // Quantizing K/V (and q) to int8 must leave the attention output close
+    // to the f32 span on the same data — the per-tile scales keep the
+    // fused-dequant path within ~1% of range; 0.1·|out|max is a loose
+    // ceiling that still catches scale-indexing or layout bugs.
+    use aser::quant::quantize_tile;
+    use aser::tensor::{attn_head_span, attn_head_span_int8, detect_attn_kernel};
+    let kind = detect_attn_kernel();
+    check(
+        "int8_attn_tracks_f32",
+        &cfg(48),
+        |rng| {
+            let hd = 1 + rng.below(33);
+            let pos0 = rng.below(70);
+            let t = [1usize, 3, 8][rng.below(3)];
+            let q: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+            let keys: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+            let values: Vec<f32> = (0..(pos0 + t) * hd).map(|_| rng.normal()).collect();
+            (hd, pos0, t, q, keys, values)
+        },
+        |_| Vec::new(),
+        |(hd, pos0, t, q, keys, values)| {
+            let (hd, pos0, t) = (*hd, *pos0, *t);
+            let slen = pos0 + t;
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut q_codes = vec![0i8; t * hd];
+            let mut q_scales = vec![0f32; t];
+            for j in 0..t {
+                q_scales[j] =
+                    quantize_tile(&q[j * hd..(j + 1) * hd], 8, &mut q_codes[j * hd..(j + 1) * hd]);
+            }
+            let mut k_codes = vec![0i8; slen * hd];
+            let mut k_scales = vec![0f32; slen];
+            let mut v_codes = vec![0i8; slen * hd];
+            let mut v_scales = vec![0f32; slen];
+            for p in 0..slen {
+                k_scales[p] = quantize_tile(
+                    &keys[p * hd..(p + 1) * hd],
+                    8,
+                    &mut k_codes[p * hd..(p + 1) * hd],
+                );
+                v_scales[p] = quantize_tile(
+                    &values[p * hd..(p + 1) * hd],
+                    8,
+                    &mut v_codes[p * hd..(p + 1) * hd],
+                );
+            }
+            let mut scores = vec![0f32; slen];
+            let mut want = vec![0f32; t * hd];
+            attn_head_span(
+                kind, q, hd, 0, hd, pos0, t, keys, values, scale, &mut scores, &mut want,
+            );
+            let mut got = vec![0f32; t * hd];
+            attn_head_span_int8(
+                kind,
+                &q_codes,
+                &q_scales,
+                1,
+                0,
+                hd,
+                0,
+                hd,
+                pos0,
+                t,
+                &k_codes,
+                &k_scales,
+                &v_codes,
+                &v_scales,
+                scale,
+                &mut scores,
+                &mut got,
+            );
+            let wmax = want.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1.0);
+            let diff = got.iter().zip(&want).fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+            ensure(diff < 0.1 * wmax, || {
+                format!("hd={hd} pos0={pos0} t={t}: int8 span drifted {diff} from f32")
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_int8_kv_chunking_invariant_and_survives_repack() {
+    // The int8-cache serving path end to end: feeding a span through
+    // forward_chunk_batch against a NON-EMPTY int8 cache must reproduce
+    // the token-at-a-time forward_step replay on the same int8 cache.
+    // History 60 + tail 12 crosses the KV_TILE = 64 grow quantum, so the
+    // tail exercises `reserve`'s repack with live quantized codes+scales
+    // mid-sequence. Tolerance is looser than the f32 twin (3e-2 vs 1e-4):
+    // write-time quantization sits on rounding knife-edges that tiny
+    // batch-shape f32 differences can flip by one code.
+    use aser::model::{synthetic_model, ChunkLogits, KvCache, KvDtype, SeqChunk};
+    use aser::tensor::QGemmArena;
+    let model = synthetic_model("micro", 921).unwrap();
+    let history: Vec<u32> = (0..60).map(|i| 1 + (i * 5 % 120) as u32).collect();
+    let tail: Vec<u32> = (0..12).map(|i| 2 + (i * 11 % 110) as u32).collect();
+    let mut pre_cache = KvCache::new_with(&model.cfg, KvDtype::Int8);
+    for &t in &history {
+        model.forward_step(t, &mut pre_cache);
+    }
+    let mut want = Vec::new();
+    let mut ref_cache = pre_cache.clone();
+    for &t in &tail {
+        want = model.forward_step(t, &mut ref_cache);
+    }
+    let wmax = want.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1.0);
+    for chunk in [1usize, 3, tail.len()] {
+        let mut cache = pre_cache.clone();
+        let mut arena = QGemmArena::new();
+        let mut got = Vec::new();
+        let mut fed = 0usize;
+        while fed < tail.len() {
+            let end = (fed + chunk).min(tail.len());
+            let last = end == tail.len();
+            let span = [SeqChunk {
+                tokens: &tail[fed..end],
+                logits: if last { ChunkLogits::Last } else { ChunkLogits::None },
+            }];
+            let out = model.forward_chunk_batch(&span, &mut [&mut cache], &mut arena);
+            if last {
+                got = out.row(0).to_vec();
+            }
+            fed = end;
+        }
+        assert_eq!(cache.seen, history.len() + tail.len());
+        let d = want.iter().zip(&got).fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+        assert!(d < 3e-2 * wmax, "int8 chunk={chunk}: maxdiff {d}");
+    }
+}
+
+#[test]
+fn prop_engine_int8_greedy_matches_step_oracle() {
+    // Dtype threading end to end: an Engine configured with an int8 KV
+    // cache (pool sized with int8 bytes/token, batcher admitting int8
+    // caches, attention on the fused-dequant kernels) must reproduce the
+    // token-at-a-time int8 forward_step oracle exactly. RTN W4A8 keeps the
+    // whole forward on the packed int path, which is bitwise identical per
+    // row across batch shapes, so stream equality is deterministic.
+    // (Exact int8-vs-f32 stream equality is NOT asserted — KV quantization
+    // can legitimately flip near-tied argmaxes; that quality bound is
+    // gated by the eval suite's relative perplexity-drift test instead.)
+    use aser::calib::CalibConfig;
+    use aser::coordinator::{
+        calibrate_model, run_ptq, BatchConfig, Engine, EngineConfig, GenRequest,
+    };
+    use aser::model::{argmax, synthetic_model, KvCache, KvDtype};
+    use std::sync::Arc;
+
+    let base = synthetic_model("micro", 923).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 39 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+    let m = method_by_name("rtn", RankPolicy::Fixed(6), 4).unwrap();
+    let (qm, _) =
+        run_ptq(synthetic_model("micro", 923).unwrap(), &stats, m.as_ref(), Precision::w4a8(), 0)
+            .unwrap();
+    let qm = Arc::new(qm);
+    let mut rng = Pcg64::seed(0x18E);
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|_| (0..3 + rng.below(3)).map(|_| 2 + rng.below(120) as u32).collect())
+        .collect();
+    let max_new = 6usize;
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| {
+            let mut cache = KvCache::new_with(&qm.cfg, KvDtype::Int8);
+            let mut logits = Vec::new();
+            for &t in p {
+                logits = qm.forward_step(t, &mut cache);
+            }
+            let mut toks = Vec::new();
+            for _ in 0..max_new {
+                let next = argmax(&logits) as u32;
+                toks.push(next);
+                logits = qm.forward_step(next, &mut cache);
+            }
+            toks
+        })
+        .collect();
+    let engine = Engine::new(
+        Arc::clone(&qm),
+        EngineConfig {
+            workers: 1,
+            batch: BatchConfig {
+                stop_on_eos: false,
+                kv_dtype: KvDtype::Int8,
+                ..Default::default()
+            },
+            kv_tokens: 4096,
+        },
+    );
+    let handles: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| engine.submit(GenRequest::new(i as u64, p.clone(), max_new)))
+        .collect();
+    for h in handles {
+        let r = h.wait();
+        assert!(r.finish.is_completed(), "int8 engine: {:?}", r.finish);
+        assert_eq!(
+            r.tokens, want[r.id as usize],
+            "req {}: int8 engine diverged from int8 step oracle",
+            r.id
+        );
+    }
+    assert_eq!(engine.kv_used_tokens(), 0);
+    engine.shutdown();
 }
