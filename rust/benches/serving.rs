@@ -14,17 +14,21 @@
 //! ≥ 1k cached positions — the vectorized attention engine's workload), and
 //! `stream` rows (decode tok/s through the streaming `Engine`
 //! submit/recv path, inter-token latency p50/p95, and time-to-cancel),
-//! and a `kv_quant` section (int8 vs f32 KV cache: long-context decode
+//! a `kv_quant` section (int8 vs f32 KV cache: long-context decode
 //! tok/s side by side plus resident-capacity tokens at an equal byte
-//! budget; `scripts/bench_diff` gates on long-prompt TTFT, long-context
-//! decode, the Engine-path decode tok/s, int8/f32 decode ≥ 0.9x, and
-//! int8/f32 capacity ≥ 3x). `--kv-bits {8,32}` flips the serving/stream
-//! sections onto the quantized cache.
+//! budget), and a `prefix_cache` section (repeated-prefix workload, both
+//! KV dtypes: cold vs warm prompt-absorption tok/s and p50/p95 TTFT —
+//! warm waves adopt the shared pages from the pool's radix trie and
+//! prefill only the novel tails). `scripts/bench_diff` gates on
+//! long-prompt TTFT, long-context decode, the Engine-path decode tok/s,
+//! int8/f32 decode ≥ 0.9x, int8/f32 capacity ≥ 3x, and warm prefix TTFT
+//! ≤ 0.6x cold. `--kv-bits {8,32}` flips the serving/stream sections onto
+//! the quantized cache.
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
     calibrate_model, poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig,
-    Engine, EngineConfig, FinishReason, ServerConfig, TokenEvent,
+    Engine, EngineConfig, FinishReason, GenRequest, ServerConfig, TokenEvent,
 };
 use aser::coordinator::KvPool;
 use aser::methods::{method_by_name, RankPolicy};
@@ -120,8 +124,16 @@ fn main() {
         .nth(1)
         .and_then(|v| v.parse().ok())
         .unwrap_or(32);
-    let kv_dtype = KvDtype::from_bits(kv_bits)
-        .unwrap_or_else(|| panic!("--kv-bits must be 8 or 32, got {kv_bits}"));
+    let kv_dtype = match KvDtype::from_bits(kv_bits) {
+        Some(d) => d,
+        None => {
+            eprintln!(
+                "unsupported --kv-bits {kv_bits}: supported bit-widths are {}",
+                KvDtype::SUPPORTED_BITS.map(|b| b.to_string()).join("/")
+            );
+            std::process::exit(2);
+        }
+    };
 
     let base = synthetic_model("micro", 7).unwrap();
     let ccfg = CalibConfig { n_seqs: 6, seq_len: 24, max_sample: 96, seed: 3 };
@@ -135,6 +147,7 @@ fn main() {
     let mut stream_rows: Vec<Json> = Vec::new();
     let mut kv_quant_decode_rows: Vec<Json> = Vec::new();
     let mut kv_quant_capacity_rows: Vec<Json> = Vec::new();
+    let mut prefix_cache_rows: Vec<Json> = Vec::new();
 
     for variant in ["fp16", "aser-w4a8"] {
         let model = if variant == "fp16" {
@@ -495,6 +508,108 @@ fn main() {
         }
     }
 
+    // ---- prefix_cache: repeated-prefix serving — every request shares a
+    //      128-token preamble (two whole KV pages) and adds a unique
+    //      8-token tail. Cold = prefix cache off; warm = cache on, measured
+    //      on a second wave against a primed pool, so admission adopts the
+    //      shared pages and prefills only the tails. Acceptance: warm p50
+    //      TTFT ≤ 0.6x cold at equal output (bitwise on ≡ off is pinned in
+    //      tests/properties.rs). ----
+    {
+        let shared_len = 128usize;
+        let tail_len = 8usize;
+        let n_requests = 12usize;
+        let max_new = 4usize;
+        let prompt_len = shared_len + tail_len;
+        let mut pm = synthetic_model("micro", 7).unwrap();
+        pm.cfg.max_seq = 512; // room for the shared preamble; weights unchanged
+        pm.refresh_derived();
+        let pmodel = Arc::new(pm);
+        let vocab = pmodel.cfg.vocab_size;
+        // Deterministic repeated-prefix trace: one preamble, per-request
+        // tails varied by a wave seed so the measured warm wave shares
+        // ONLY the preamble with the priming wave.
+        let mk_reqs = |wave: usize| -> Vec<GenRequest> {
+            let shared: Vec<u32> =
+                (0..shared_len).map(|i| ((i * 17) % (vocab - 1) + 1) as u32).collect();
+            (0..n_requests)
+                .map(|r| {
+                    let mut prompt = shared.clone();
+                    prompt.extend(
+                        (0..tail_len)
+                            .map(|t| (((r * 31 + t * 7 + wave * 131) % (vocab - 1)) + 1) as u32),
+                    );
+                    GenRequest::new(r as u64, prompt, max_new)
+                })
+                .collect()
+        };
+        // One wave through an engine: wall seconds + sorted TTFT samples.
+        let run_wave = |engine: &Engine, wave: usize| -> (f64, Vec<f64>) {
+            let t0 = Instant::now();
+            let handles: Vec<_> = mk_reqs(wave).into_iter().map(|r| engine.submit(r)).collect();
+            let responses: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            assert!(responses.iter().all(|r| r.finish.is_completed()), "prefix wave rejected");
+            let mut ttft: Vec<f64> =
+                responses.iter().map(|r| r.ttft.as_secs_f64() * 1e3).collect();
+            ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (wall, ttft)
+        };
+        println!("\n== prefix_cache ==");
+        println!(
+            "{:>8} {:>6} {:>14} {:>10} {:>10}",
+            "kv bits", "mode", "prompt tok/s", "p50 ttft", "p95 ttft"
+        );
+        for &bits in &[32usize, 8] {
+            let dtype = KvDtype::from_bits(bits).unwrap();
+            let mk_engine = |prefix_cache: bool| {
+                Engine::new(
+                    Arc::clone(&pmodel),
+                    EngineConfig {
+                        workers: 1,
+                        batch: BatchConfig {
+                            max_batch: 8,
+                            kv_dtype: dtype,
+                            prefix_cache,
+                            ..Default::default()
+                        },
+                        kv_tokens: 1 << 13,
+                    },
+                )
+            };
+            for (mode, warm) in [("cold", false), ("warm", true)] {
+                let engine = mk_engine(warm);
+                if warm {
+                    // Priming wave publishes the shared pages to the trie;
+                    // discard its timings.
+                    let _ = run_wave(&engine, 0);
+                }
+                let (wall, ttft) = run_wave(&engine, 1);
+                let hit_tokens: usize =
+                    engine.shutdown().iter().map(|m| m.prefix_hit_tokens).sum();
+                if warm {
+                    assert!(hit_tokens > 0, "warm wave must hit the prefix cache");
+                } else {
+                    assert_eq!(hit_tokens, 0, "cold wave ran with the cache off");
+                }
+                let prompt_tok_s = (n_requests * prompt_len) as f64 / wall;
+                let (p50, p95) =
+                    (percentile_sorted(&ttft, 50.0), percentile_sorted(&ttft, 95.0));
+                println!("{bits:>8} {mode:>6} {prompt_tok_s:>14.1} {p50:>9.1}ms {p95:>9.1}ms");
+                prefix_cache_rows.push(obj(vec![
+                    ("kv_bits", num(bits as f64)),
+                    ("mode", s(mode)),
+                    ("requests", num(n_requests as f64)),
+                    ("prompt_len", num(prompt_len as f64)),
+                    ("shared_prefix", num(shared_len as f64)),
+                    ("prefill_tok_s", num(prompt_tok_s)),
+                    ("p50_ttft_ms", num(p50)),
+                    ("p95_ttft_ms", num(p95)),
+                ]));
+            }
+        }
+    }
+
     let report = obj(vec![
         ("bench", s("serving")),
         ("model", s("micro")),
@@ -512,6 +627,7 @@ fn main() {
                 ("capacity", Json::Arr(kv_quant_capacity_rows)),
             ]),
         ),
+        ("prefix_cache", Json::Arr(prefix_cache_rows)),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");

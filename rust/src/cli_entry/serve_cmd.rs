@@ -106,7 +106,17 @@ pub fn run(args: &Args) -> Result<()> {
     let kv_bits = args.usize_or("kv-bits", 32)?;
     let kv_dtype = match KvDtype::from_bits(kv_bits) {
         Some(d) => d,
-        None => anyhow::bail!("--kv-bits must be 8 or 32, got {kv_bits}"),
+        None => anyhow::bail!(
+            "unsupported --kv-bits {kv_bits}: supported bit-widths are {}",
+            KvDtype::SUPPORTED_BITS.map(|b| b.to_string()).join("/")
+        ),
+    };
+    // Prefix cache: reuse whole KV pages across requests with a shared
+    // prompt prefix. On by default; bitwise identical outputs either way.
+    let prefix_cache = match args.str_or("prefix-cache", "on").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--prefix-cache must be on or off, got {other}"),
     };
 
     let model = ctx.model(&model_name)?;
@@ -146,6 +156,7 @@ pub fn run(args: &Args) -> Result<()> {
             token_budget,
             kv_reserve,
             kv_dtype,
+            prefix_cache,
             ..Default::default()
         },
         kv_tokens: args.usize_or("kv-tokens", 1 << 15)?,
@@ -167,7 +178,8 @@ pub fn run(args: &Args) -> Result<()> {
     println!(
         "== serve: {n_requests} requests, {workers} workers, batch {max_batch}, \
          chunk {prefill_chunk}, budget {token_budget}, temperature {temperature}, \
-         kv {kv_dtype} =="
+         kv {kv_dtype}, prefix-cache {} ==",
+        if prefix_cache { "on" } else { "off" }
     );
     println!("  completed      {}", run.responses.len());
     println!("  wall           {:.2}s", run.wall.as_secs_f64());
@@ -183,10 +195,17 @@ pub fn run(args: &Args) -> Result<()> {
         run.ttft_percentile_ms(50.0),
         run.ttft_percentile_ms(95.0)
     );
+    println!(
+        "  prefix cache   {} hits, {} tokens reused, hit-rate {:.1}%",
+        run.prefix_hits(),
+        run.prefix_hit_tokens(),
+        run.prefix_hit_rate() * 100.0
+    );
+    println!("  peak kv        {} tokens (leased + cached, max worker)", run.peak_kv_tokens());
     for (i, m) in run.per_worker.iter().enumerate() {
         println!(
             "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, peak rows {}, \
-             kv-rejects {}, kv-grows {}",
+             kv-rejects {}, kv-grows {}, peak kv {}, prefix hits {} ({} toks)",
             m.requests,
             m.generated_tokens,
             m.iterations,
@@ -194,6 +213,9 @@ pub fn run(args: &Args) -> Result<()> {
             m.peak_iter_tokens,
             m.rejected_capacity,
             m.kv_grows,
+            m.peak_tokens,
+            m.prefix_hits,
+            m.prefix_hit_tokens,
         );
         println!(
             "           finish: eos {}, length {}, truncated-kv {}, cancelled {}, rejected {}",

@@ -59,8 +59,25 @@
 //! quantized GEMM per layer per iteration over Σ span rows, with the
 //! lm_head GEMM run only for rows the scheduler reads back. Between those
 //! GEMMs, per-sequence attention fans out across (sequence × head) work
-//! items on the head-major KV tiles (`Gpt::attn_layer` +
+//! items on the paged head-major KV storage (`Gpt::attn_layer` +
 //! `tensor::attn_kernel`).
+//!
+//! ## Prefix cache (admission reuse)
+//!
+//! Under [`BatchConfig::prefix_cache`] admission asks the pool for the
+//! longest cached prefix of the prompt ([`KvPool::match_prefix`]): the
+//! matched whole-page positions are adopted as the sequence's leading KV
+//! pages (ref-counted, read-only until a divergent write copies them) and
+//! `fed` starts past them, so prefill runs only over the novel suffix —
+//! TTFT reflects the skipped work. When a prefill completes, its
+//! whole-page prefix is published back into the pool's token trie
+//! ([`KvPool::insert_prefix`]) for later requests. The lease still covers
+//! the FULL sequence span including matched positions: prefix reuse saves
+//! compute, not pool accounting, so admission backpressure is unchanged.
+//! Cached pages hold bitwise exactly what a cold prefill would recompute
+//! (per-position attention and per-position int8 quantization are
+//! chunking-invariant), so serving output is identical with the cache on
+//! or off.
 //!
 //! ## KV leases (admission + growth)
 //!
@@ -243,6 +260,12 @@ pub struct BatchConfig {
     /// knob) and sweeps attention through the fused-dequant kernels; `F32`
     /// is the exact baseline.
     pub kv_dtype: KvDtype,
+    /// Reuse cached KV prefix pages at admission and publish every
+    /// completed prefill's whole-page prefix into the pool's token trie.
+    /// Output is bitwise identical on or off (see the module doc); off
+    /// disables both matching and publishing — useful for A/B benches and
+    /// as a kill switch.
+    pub prefix_cache: bool,
 }
 
 impl Default for BatchConfig {
@@ -256,6 +279,7 @@ impl Default for BatchConfig {
             idle_wait: Duration::from_millis(5),
             stop_on_eos: true,
             kv_dtype: KvDtype::F32,
+            prefix_cache: true,
         }
     }
 }
@@ -294,6 +318,14 @@ pub struct BatchMetrics {
     pub finished_eos: usize,
     /// Streams finished [`FinishReason::Length`].
     pub finished_length: usize,
+    /// Pool-occupancy high-water mark over the run: leased + trie-cached
+    /// tokens, sampled after every alloc/grow — the KV pressure signal.
+    pub peak_tokens: usize,
+    /// Admissions that adopted ≥ 1 cached prefix page.
+    pub prefix_hits: usize,
+    /// Prompt tokens skipped at prefill time because a cached prefix page
+    /// already held them (whole `KV_TILE` pages per hit).
+    pub prefix_hit_tokens: usize,
 }
 
 impl BatchMetrics {
@@ -405,14 +437,29 @@ pub fn run_batcher(
                 .min(pool.capacity_tokens());
             match pool.alloc(want) {
                 Some(lease) => {
+                    // Longest cached prefix (whole KV_TILE pages; the match
+                    // always leaves ≥ 1 novel token so the final chunk still
+                    // produces first-token logits). Matched positions are
+                    // adopted as shared read-only pages and skipped by
+                    // prefill; the lease covers the full span regardless —
+                    // reuse saves compute, not accounting.
+                    let (matched, pages) = if cfg.prefix_cache {
+                        pool.match_prefix(&sub.req.prompt, cfg.kv_dtype)
+                    } else {
+                        (0, Vec::new())
+                    };
+                    if matched > 0 {
+                        metrics.prefix_hits += 1;
+                        metrics.prefix_hit_tokens += matched;
+                    }
                     active.push(Active {
                         sampler: Sampler::new(&sub.req.sampling),
-                        // Pre-size the tiles to the lease so prefill never
-                        // repacks mid-flight; decode-time lease growth
+                        // Pre-size the page list to the lease so prefill
+                        // never repages mid-flight; decode-time lease growth
                         // re-sizes lazily on the next span append.
-                        cache: KvCache::with_capacity_dtype(&model.cfg, lease.tokens, cfg.kv_dtype),
+                        cache: pool.new_cache(&model.cfg, cfg.kv_dtype, pages, lease.tokens),
                         lease,
-                        fed: 0,
+                        fed: matched,
                         n_generated: 0,
                         pending: None,
                         first_token_at: None,
@@ -572,7 +619,13 @@ pub fn run_batcher(
                 if a.first_token_at.is_none() && a.fed >= a.req.prompt.len() {
                     // Prefill just completed: its first generated token is
                     // determined by these logits, so TTFT is stamped (and
-                    // streamed) here.
+                    // streamed) here. The finished prefix is published to
+                    // the pool's trie now, while the pages still hold
+                    // exactly the prompt's whole-page positions (the first
+                    // decode write lands past them, or COWs on divergence).
+                    if cfg.prefix_cache {
+                        pool.insert_prefix(&a.req.prompt, &a.cache);
+                    }
                     a.first_token_at = Some(logits_at);
                     a.emit(TokenEvent::PrefillDone { ttft: logits_at - a.req.submitted });
                 }
@@ -618,6 +671,7 @@ pub fn run_batcher(
             on_finish(&a.req, reason);
         }
     }
+    metrics.peak_tokens = pool.peak_tokens();
     metrics
 }
 

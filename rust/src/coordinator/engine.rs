@@ -351,6 +351,19 @@ impl Engine {
         self.workers.iter().map(|w| w.pool.live_leases()).sum()
     }
 
+    /// Tokens parked in the prefix tries across all worker pools (whole
+    /// `KV_TILE` pages held for reuse; evicted under pressure).
+    pub fn kv_cached_tokens(&self) -> usize {
+        self.workers.iter().map(|w| w.pool.cached_tokens()).sum()
+    }
+
+    /// Physical KV pages alive across all worker pools — every `Arc` page
+    /// a live cache or trie holds, COW copies included. The leak-test
+    /// counterpart of [`Engine::kv_used_tokens`] for the paged model.
+    pub fn kv_live_pages(&self) -> usize {
+        self.workers.iter().map(|w| w.pool.live_pages()).sum()
+    }
+
     /// Close the submission side, drain in-flight requests, join the worker
     /// threads, and return their per-worker metrics.
     pub fn shutdown(mut self) -> Vec<BatchMetrics> {

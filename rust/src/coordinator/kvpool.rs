@@ -1,85 +1,91 @@
-//! KV-cache memory: the per-sequence [`KvCache`] (head-major tile storage)
-//! and the [`KvPool`] slot pool that accounts it across concurrent
-//! sequences.
+//! KV-cache memory: ref-counted copy-on-write [`KvPage`]s, the per-sequence
+//! [`KvCache`] page list, and the [`KvPool`] that accounts tokens across
+//! concurrent sequences and indexes live prefixes in a token-trie.
 //!
-//! ## `KvCache` tile layout
+//! ## Page layout
 //!
-//! Keys and values are stored **head-major**: per layer, per head, one
-//! contiguous `cap × hd` panel (position-major within the panel), with a
-//! layer's `nh` panels concatenated into one buffer:
-//!
-//! ```text
-//! keys[layer] = [ head 0: pos 0 | pos 1 | … | pos cap-1 ]
-//!               [ head 1: pos 0 | pos 1 | … | pos cap-1 ] …
-//! ```
-//!
-//! so position `p` of head `h` lives at `(h·cap + p)·hd`. Consecutive cache
-//! positions of one head are `hd` floats apart — the attention score sweep
-//! and weighted-V accumulation (`tensor::attn_kernel`) stream each panel as
-//! one unit-stride run. The previous layout interleaved all heads within a
-//! d-model row, which forced a `d_model` stride between positions and
-//! defeated SIMD loads.
-//!
-//! Capacity grows in [`KV_TILE`]-position quanta via [`KvCache::reserve`]
-//! (amortized doubling; growth repacks each head panel at the new stride).
-//! The batcher pre-sizes caches to their admission lease
-//! ([`KvCache::with_capacity`]) so steady-state prefill/decode never
-//! repacks; decode-time lease growth re-sizes lazily on the next append.
-//! [`KvCache::truncate`] is a length-only rollback (prefix reuse keeps the
-//! allocation), and [`KvCache::bytes`] reports the **live** footprint
-//! (`seen` positions) — capacity is accounted by the pool's leases, not
-//! per-cache.
-//!
-//! ## Quantized tile layout ([`KvDtype::Int8`])
-//!
-//! A cache is dtype-parametric at construction ([`KvCache::new_with`]).
-//! `Int8` caches store the SAME head-major geometry, but each (layer, head)
-//! panel holds `cap × hd` **int8 codes** instead of floats, paired with one
-//! **f32 scale per tile row** (= per cached position per head): per layer a
-//! `nh × cap` scale buffer, position `p` of head `h` at `h·cap + p`, for
-//! keys and values independently:
+//! KV storage is paged: a [`KvPage`] holds exactly [`KV_TILE`] positions of
+//! K and V for **every** layer and head, stored head-major — per (layer,
+//! head) one contiguous `KV_TILE × hd` panel (position-major within the
+//! panel):
 //!
 //! ```text
-//! qkeys[layer]   = [ head 0: cap × hd i8 codes ][ head 1: … ]   (panels)
-//! kscales[layer] = [ head 0: cap f32 scales    ][ head 1: … ]   (rows)
+//! page.keys = [ (l0,h0): pos 0 | … | pos KV_TILE-1 ]
+//!             [ (l0,h1): pos 0 | … | pos KV_TILE-1 ] …
+//!             [ (l1,h0): … ] …
 //! ```
 //!
-//! Rows are quantized symmetrically at **write time** (the staging pass of
-//! `Gpt::attn_layer`, through `quant::act::quantize_tile` — one scale per
-//! roped K row / raw V row, codes in `[-127, 127]`, never −128) and
-//! dequantization is **fused into the attention kernels**
-//! (`tensor::attn_kernel::attn_head_span_int8`): scales are applied at
-//! i32-accumulator writeback, so the code tiles stream straight into the
-//! int8 q·K and P·V loops. Because each position quantizes independently,
-//! codes are invariant to prompt chunking, and [`KvCache::reserve`]'s
-//! repack carries code panels and scale rows to the new `cap` stride with
-//! the same full-panel copy as the f32 path (pending span rows beyond
-//! `seen` survive). `Int8` cuts the per-token footprint to
-//! `2·layers·(d_model + 4·nh)` bytes (codes + scales) vs
-//! `2·layers·d_model·4` for f32 — ~3.2–3.9x more resident sequences per
-//! pool byte budget ([`KvPool::for_model_dtype`] accounts it exactly).
-//! The accessors are dtype-checked: [`KvCache::kv_row_mut`] /
-//! [`KvCache::head_tiles`] serve f32 caches, [`KvCache::kv_row_quant_mut`]
-//! / [`KvCache::head_tiles_quant`] serve int8 caches.
+//! so position `p` of head `h` in layer `l` lives at
+//! `((l·nh + h)·KV_TILE + p)·hd`. Consecutive positions of one head are
+//! `hd` floats apart — the attention kernels (`tensor::attn_kernel`)
+//! stream each panel as one unit-stride run, and the span drivers walk a
+//! sequence's page list segment by segment (a softmax row is computed over
+//! per-page partial score spans, which is bitwise-identical to the old
+//! contiguous sweep because scores and weighted-V accumulation are
+//! per-position independent).
 //!
-//! ## `KvPool`
+//! A [`KvCache`] is a `Vec<Arc<KvPage>>` plus a live-position count
+//! (`seen`); page `i` covers positions `i·KV_TILE .. (i+1)·KV_TILE`.
+//! Capacity grows by appending fresh pages ([`KvCache::reserve`]) — no
+//! repack, growth never copies resident K/V.
 //!
-//! Accounts a fixed token budget across concurrent sequences; the batcher
-//! must hold a lease before admitting a request, which provides the
-//! backpressure that keeps the decode loop inside memory limits. Leases
-//! start right-sized (prompt + a small decode reserve) and are extended
-//! incrementally through [`KvPool::grow`] as decode proceeds — a failed
-//! grow is a normal signal (the batcher finishes the sequence truncated),
-//! not an error. Leases are RAII-free (explicit free) because they cross
-//! thread boundaries with the sequence state.
+//! ## Quantized pages ([`KvDtype::Int8`])
+//!
+//! Pages are dtype-parametric. An `Int8` page stores the same head-major
+//! geometry as int8 codes plus one f32 scale per (layer, head, position)
+//! row for K and V independently (`quant::act::quantize_tile` at write
+//! time, fused dequant in `attn_head_span_int8` at read time). Because
+//! each position quantizes independently, codes are invariant to prompt
+//! chunking — which is also what makes cached prefix pages bit-exact
+//! reusable. `Int8` cuts the per-token footprint to
+//! `2·layers·(d_model + 4·nh)` bytes vs `2·layers·d_model·4` for f32
+//! (~3.2–3.9x more resident tokens per pool byte budget).
+//!
+//! ## Copy-on-write
+//!
+//! Pages are shared by `Arc`: the prefix trie and any number of sequences
+//! may hold the same physical page. Sharing is read-only — every write
+//! path calls [`KvCache::reserve`] for the span it is about to fill, and
+//! `reserve` replaces each page in the write range whose refcount is > 1
+//! with a private deep copy (`Arc::get_mut` then asserts uniqueness at the
+//! actual write). On the serving hot path COW never fires: trie-matched
+//! prefix pages are full (positions `< matched`) and the novel suffix
+//! lands in fresh pages; COW exists for truncate-then-rewrite and cloned
+//! caches.
+//!
+//! ## `KvPool`, prefix trie, and eviction
+//!
+//! The pool accounts a fixed token budget. Sequences hold token-granular
+//! [`Lease`]s exactly as before the page refactor — a lease covers the
+//! **full** sequence span including trie-matched positions (prefix reuse
+//! saves prefill compute, not lease accounting), so admission backpressure
+//! is unchanged. Cached prefix pages are accounted separately
+//! (`cached_tokens`, [`KV_TILE`] tokens per trie page) and the invariant is
+//! `used_tokens + cached_tokens ≤ capacity_tokens`.
+//!
+//! Live prefixes are indexed by a radix tree over token IDs with
+//! [`KV_TILE`]-token chunk edges, one trie per dtype (pages of different
+//! dtypes are never interchangeable). [`KvPool::match_prefix`] walks the
+//! trie over a prompt and returns the longest run of full cached pages,
+//! capped so at least one novel token remains (the final forward must
+//! produce first-token logits). [`KvPool::insert_prefix`] publishes a
+//! finished prefill's fully-covered prompt pages (idempotent; skips pages
+//! that don't fit the budget). Under pressure, [`KvPool::alloc`] /
+//! [`KvPool::grow`] evict LRU trie **leaves** whose page refcount is 1
+//! (nobody but the trie holds them); interior nodes become evictable
+//! leaves once their children go. A failed grow after eviction is still a
+//! normal signal (the batcher finishes the sequence truncated).
 
 use crate::model::ModelConfig;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Positions per capacity-grow quantum of a [`KvCache`] panel.
+/// Positions per KV page (and per trie chunk edge).
 pub const KV_TILE: usize = 64;
 
-/// Storage dtype of a [`KvCache`]'s K/V tiles. `F32` keeps the raw floats;
+/// Storage dtype of a [`KvCache`]'s K/V pages. `F32` keeps the raw floats;
 /// `Int8` stores symmetric int8 codes with one f32 scale per cached row
 /// (per position per head) and relies on the fused-dequant attention
 /// kernels (`tensor::attn_kernel::attn_head_span_int8`) at read time.
@@ -91,6 +97,9 @@ pub enum KvDtype {
 }
 
 impl KvDtype {
+    /// Every `--kv-bits` value that maps to a dtype, for CLI error text.
+    pub const SUPPORTED_BITS: [usize; 2] = [32, 8];
+
     pub fn name(self) -> &'static str {
         match self {
             KvDtype::F32 => "f32",
@@ -114,6 +123,14 @@ impl KvDtype {
             _ => None,
         }
     }
+
+    /// Trie index: one prefix trie per dtype (see the module doc).
+    fn index(self) -> usize {
+        match self {
+            KvDtype::F32 => 0,
+            KvDtype::Int8 => 1,
+        }
+    }
 }
 
 impl std::fmt::Display for KvDtype {
@@ -122,35 +139,139 @@ impl std::fmt::Display for KvDtype {
     }
 }
 
-/// Per-layer KV cache for one sequence, stored as head-major tiles (see the
-/// module doc for the layout). `seen` is the number of positions whose K/V
-/// are live; the forward paths write span positions `seen..seen+t` first
-/// and advance `seen` once per multi-layer forward.
-///
-/// Storage is dtype-parametric: an `F32` cache uses `keys`/`values`, an
-/// `Int8` cache uses `qkeys`/`qvalues` plus the per-row scale buffers. All
-/// six layer vectors always hold `n_layers` entries (the inactive dtype's
-/// inner vectors stay empty) so layer count and capacity logic are shared.
+/// One fixed-size KV page: [`KV_TILE`] positions of K and V for every
+/// (layer, head) panel of one sequence segment (see the module-doc layout).
+/// Pages are shared by `Arc` between sequences and the pool's prefix trie;
+/// the optional `meter` counts physical pages alive per pool (created on
+/// allocation and deep copy, decremented on drop) for leak tests and
+/// observability.
+pub struct KvPage {
+    /// F32 K panels: `layers·nh` panels of `KV_TILE × hd`.
+    keys: Vec<f32>,
+    /// F32 V panels, same layout as `keys`.
+    values: Vec<f32>,
+    /// Int8 K code panels, same geometry as `keys`.
+    qkeys: Vec<i8>,
+    /// Int8 V code panels.
+    qvalues: Vec<i8>,
+    /// Per-row K scales: `layers·nh·KV_TILE`, row `(l·nh + h)·KV_TILE + p`.
+    kscales: Vec<f32>,
+    /// Per-row V scales, same layout as `kscales`.
+    vscales: Vec<f32>,
+    dtype: KvDtype,
+    nh: usize,
+    hd: usize,
+    meter: Option<Arc<AtomicUsize>>,
+}
+
+impl KvPage {
+    fn new(layers: usize, nh: usize, hd: usize, dtype: KvDtype, meter: Option<Arc<AtomicUsize>>) -> KvPage {
+        let panel = layers * nh * KV_TILE * hd;
+        let rows = layers * nh * KV_TILE;
+        let (keys, values, qkeys, qvalues, kscales, vscales) = match dtype {
+            KvDtype::F32 => (vec![0.0; panel], vec![0.0; panel], Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+            KvDtype::Int8 => (Vec::new(), Vec::new(), vec![0; panel], vec![0; panel], vec![0.0; rows], vec![0.0; rows]),
+        };
+        if let Some(m) = &meter {
+            m.fetch_add(1, Ordering::Relaxed);
+        }
+        KvPage { keys, values, qkeys, qvalues, kscales, vscales, dtype, nh, hd, meter }
+    }
+
+    /// The first `n ≤ KV_TILE` positions of (layer, head)'s key and value
+    /// panels as contiguous `n × hd` tiles — one attention-kernel segment.
+    /// F32 pages only; int8 pages use [`KvPage::head_panel_quant`].
+    #[inline]
+    pub fn head_panel(&self, l: usize, h: usize, n: usize) -> (&[f32], &[f32]) {
+        debug_assert!(n <= KV_TILE, "page read of {n} beyond {KV_TILE}");
+        debug_assert_eq!(self.dtype, KvDtype::F32, "head_panel on an int8 page");
+        let off = (l * self.nh + h) * KV_TILE * self.hd;
+        let len = n * self.hd;
+        (&self.keys[off..off + len], &self.values[off..off + len])
+    }
+
+    /// Quantized segment view: `n × hd` K/V code tiles plus the matching
+    /// `n` per-row scales. Int8 pages only.
+    #[inline]
+    pub fn head_panel_quant(&self, l: usize, h: usize, n: usize) -> (&[i8], &[i8], &[f32], &[f32]) {
+        debug_assert!(n <= KV_TILE, "page read of {n} beyond {KV_TILE}");
+        debug_assert_eq!(self.dtype, KvDtype::Int8, "head_panel_quant on an f32 page");
+        let off = (l * self.nh + h) * KV_TILE * self.hd;
+        let len = n * self.hd;
+        let srow = (l * self.nh + h) * KV_TILE;
+        (
+            &self.qkeys[off..off + len],
+            &self.qvalues[off..off + len],
+            &self.kscales[srow..srow + n],
+            &self.vscales[srow..srow + n],
+        )
+    }
+
+    #[inline]
+    fn kv_row_mut(&mut self, l: usize, h: usize, p: usize) -> (&mut [f32], &mut [f32]) {
+        debug_assert_eq!(self.dtype, KvDtype::F32, "kv_row_mut on an int8 page");
+        let off = ((l * self.nh + h) * KV_TILE + p) * self.hd;
+        let hd = self.hd;
+        (&mut self.keys[off..off + hd], &mut self.values[off..off + hd])
+    }
+
+    #[inline]
+    fn kv_row_quant_mut(&mut self, l: usize, h: usize, p: usize) -> (&mut [i8], &mut [i8], &mut f32, &mut f32) {
+        debug_assert_eq!(self.dtype, KvDtype::Int8, "kv_row_quant_mut on an f32 page");
+        let row = (l * self.nh + h) * KV_TILE + p;
+        let off = row * self.hd;
+        let hd = self.hd;
+        let (qk, qv) = (&mut self.qkeys[off..off + hd], &mut self.qvalues[off..off + hd]);
+        (qk, qv, &mut self.kscales[row], &mut self.vscales[row])
+    }
+}
+
+impl Clone for KvPage {
+    /// Deep copy — the COW path. A clone is a new physical page, so the
+    /// pool's page meter is bumped.
+    fn clone(&self) -> KvPage {
+        if let Some(m) = &self.meter {
+            m.fetch_add(1, Ordering::Relaxed);
+        }
+        KvPage {
+            keys: self.keys.clone(),
+            values: self.values.clone(),
+            qkeys: self.qkeys.clone(),
+            qvalues: self.qvalues.clone(),
+            kscales: self.kscales.clone(),
+            vscales: self.vscales.clone(),
+            dtype: self.dtype,
+            nh: self.nh,
+            hd: self.hd,
+            meter: self.meter.clone(),
+        }
+    }
+}
+
+impl Drop for KvPage {
+    fn drop(&mut self) {
+        if let Some(m) = &self.meter {
+            m.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Per-sequence KV cache: an ordered list of shared pages (page `i` covers
+/// positions `i·KV_TILE..(i+1)·KV_TILE`) plus the live-position count.
+/// `seen` is the number of positions whose K/V are live; the forward paths
+/// write span positions `seen..seen+t` first and advance `seen` once per
+/// multi-layer forward. Cloning shares pages (cheap); the first write into
+/// a shared page copies it (see the module-doc COW rules).
 #[derive(Clone)]
 pub struct KvCache {
-    /// keys[layer]: `nh` head panels of `cap × hd`, concatenated (F32).
-    keys: Vec<Vec<f32>>,
-    /// values[layer]: same layout as `keys` (F32).
-    values: Vec<Vec<f32>>,
-    /// qkeys[layer]: `nh` head panels of `cap × hd` int8 codes (Int8).
-    qkeys: Vec<Vec<i8>>,
-    /// qvalues[layer]: same layout as `qkeys` (Int8).
-    qvalues: Vec<Vec<i8>>,
-    /// kscales[layer]: `nh × cap` per-row key scales, row `h·cap + p` (Int8).
-    kscales: Vec<Vec<f32>>,
-    /// vscales[layer]: same layout as `kscales`, for values (Int8).
-    vscales: Vec<Vec<f32>>,
+    pages: Vec<Arc<KvPage>>,
     dtype: KvDtype,
     /// Live positions (decoded so far).
     pub seen: usize,
-    cap: usize,
+    layers: usize,
     nh: usize,
     hd: usize,
+    meter: Option<Arc<AtomicUsize>>,
 }
 
 impl KvCache {
@@ -164,7 +285,7 @@ impl KvCache {
     }
 
     /// A cache pre-sized to `positions` (the batcher sizes to the admission
-    /// lease so prefill never repacks mid-flight).
+    /// lease so steady-state prefill/decode never allocates mid-flight).
     pub fn with_capacity(cfg: &ModelConfig, positions: usize) -> KvCache {
         KvCache::with_capacity_dtype(cfg, positions, KvDtype::F32)
     }
@@ -184,21 +305,17 @@ impl KvCache {
 
     fn with_layers_dtype(cfg: &ModelConfig, n_layers: usize, dtype: KvDtype) -> KvCache {
         KvCache {
-            keys: vec![Vec::new(); n_layers],
-            values: vec![Vec::new(); n_layers],
-            qkeys: vec![Vec::new(); n_layers],
-            qvalues: vec![Vec::new(); n_layers],
-            kscales: vec![Vec::new(); n_layers],
-            vscales: vec![Vec::new(); n_layers],
+            pages: Vec::new(),
             dtype,
             seen: 0,
-            cap: 0,
+            layers: n_layers,
             nh: cfg.n_heads,
             hd: cfg.d_model / cfg.n_heads,
+            meter: None,
         }
     }
 
-    /// Storage dtype of this cache's tiles.
+    /// Storage dtype of this cache's pages.
     pub fn dtype(&self) -> KvDtype {
         self.dtype
     }
@@ -211,9 +328,22 @@ impl KvCache {
         self.seen == 0
     }
 
-    /// Positions the tiles can hold before the next repack.
+    /// Positions the page list can hold before the next page append.
     pub fn capacity(&self) -> usize {
-        self.cap
+        self.pages.len() * KV_TILE
+    }
+
+    /// Number of pages in the list (shared or private).
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Page `i` of the list — covers positions `i·KV_TILE..(i+1)·KV_TILE`.
+    /// The `Arc` is exposed so the pool can publish prompt pages into the
+    /// prefix trie without copying.
+    #[inline]
+    pub fn page(&self, i: usize) -> &Arc<KvPage> {
+        &self.pages[i]
     }
 
     /// Live KV bytes (`seen` positions across all layers). Capacity beyond
@@ -221,63 +351,51 @@ impl KvCache {
     /// For `Int8` this is the true quantized footprint: 1-byte codes plus
     /// one f32 scale per row (K and V each) per position per head.
     pub fn bytes(&self) -> usize {
-        let rows = 2 * self.keys.len() * self.seen * self.nh;
+        let rows = 2 * self.layers * self.seen * self.nh;
         match self.dtype {
             KvDtype::F32 => rows * self.hd * 4,
             KvDtype::Int8 => rows * self.hd + rows * 4,
         }
     }
 
-    /// Ensure the tiles can hold `positions`. Growth rounds up to the next
-    /// [`KV_TILE`] multiple of at least double the current capacity and
-    /// repacks every head panel at the new `cap` stride (full panels are
-    /// copied, so pending span rows beyond `seen` survive too). For `Int8`,
-    /// code panels repack at `unit = hd` and scale rows at `unit = 1` with
-    /// the same per-head copy, so codes and scales stay paired.
+    /// Ensure the page list covers `positions` AND that every page in the
+    /// upcoming write range `seen..positions` is privately owned: shared
+    /// pages (refcount > 1 — held by the prefix trie or a cloned cache) are
+    /// replaced with deep copies before the caller takes `&mut` rows. Every
+    /// write path reserves its span first, so this is the single COW gate.
     pub fn reserve(&mut self, positions: usize) {
-        if positions <= self.cap {
-            return;
+        let want_pages = positions.div_ceil(KV_TILE);
+        while self.pages.len() < want_pages {
+            self.pages.push(Arc::new(KvPage::new(
+                self.layers,
+                self.nh,
+                self.hd,
+                self.dtype,
+                self.meter.clone(),
+            )));
         }
-        let new_cap = positions.max(self.cap * 2).div_ceil(KV_TILE) * KV_TILE;
-        let (nh, old_cap, hd) = (self.nh, self.cap, self.hd);
-        fn repack<T: Copy + Default>(bufs: &mut [Vec<T>], nh: usize, old_cap: usize, new_cap: usize, unit: usize) {
-            for buf in bufs.iter_mut() {
-                let mut nb = vec![T::default(); nh * new_cap * unit];
-                if old_cap > 0 {
-                    for h in 0..nh {
-                        nb[h * new_cap * unit..h * new_cap * unit + old_cap * unit]
-                            .copy_from_slice(&buf[h * old_cap * unit..(h + 1) * old_cap * unit]);
-                    }
+        if positions > self.seen {
+            let first = self.seen / KV_TILE;
+            let last = (positions - 1) / KV_TILE;
+            for i in first..=last {
+                if Arc::strong_count(&self.pages[i]) > 1 {
+                    let private = Arc::new(KvPage::clone(&self.pages[i]));
+                    self.pages[i] = private;
                 }
-                *buf = nb;
             }
         }
-        match self.dtype {
-            KvDtype::F32 => {
-                repack(&mut self.keys, nh, old_cap, new_cap, hd);
-                repack(&mut self.values, nh, old_cap, new_cap, hd);
-            }
-            KvDtype::Int8 => {
-                repack(&mut self.qkeys, nh, old_cap, new_cap, hd);
-                repack(&mut self.qvalues, nh, old_cap, new_cap, hd);
-                repack(&mut self.kscales, nh, old_cap, new_cap, 1);
-                repack(&mut self.vscales, nh, old_cap, new_cap, 1);
-            }
-        }
-        self.cap = new_cap;
     }
 
     /// Mutable K/V rows for (layer, head, position) — the append target of
     /// the span staging pass. The caller must have [`KvCache::reserve`]d
-    /// `pos + 1` positions. F32 caches only; int8 caches use
-    /// [`KvCache::kv_row_quant_mut`].
+    /// `pos + 1` positions (which also runs COW on the write range). F32
+    /// caches only; int8 caches use [`KvCache::kv_row_quant_mut`].
     #[inline]
     pub fn kv_row_mut(&mut self, l: usize, h: usize, pos: usize) -> (&mut [f32], &mut [f32]) {
-        debug_assert!(pos < self.cap, "kv write at {pos} beyond capacity {}", self.cap);
-        debug_assert_eq!(self.dtype, KvDtype::F32, "kv_row_mut on an int8 cache");
-        let off = (h * self.cap + pos) * self.hd;
-        let hd = self.hd;
-        (&mut self.keys[l][off..off + hd], &mut self.values[l][off..off + hd])
+        debug_assert!(pos < self.capacity(), "kv write at {pos} beyond capacity {}", self.capacity());
+        let page = Arc::get_mut(&mut self.pages[pos / KV_TILE])
+            .expect("write to shared KV page (reserve() must precede writes)");
+        page.kv_row_mut(l, h, pos % KV_TILE)
     }
 
     /// Quantized append target for (layer, head, position): the K and V code
@@ -290,70 +408,53 @@ impl KvCache {
         h: usize,
         pos: usize,
     ) -> (&mut [i8], &mut [i8], &mut f32, &mut f32) {
-        debug_assert!(pos < self.cap, "kv write at {pos} beyond capacity {}", self.cap);
-        debug_assert_eq!(self.dtype, KvDtype::Int8, "kv_row_quant_mut on an f32 cache");
-        let row = h * self.cap + pos;
-        let off = row * self.hd;
-        let hd = self.hd;
-        (
-            &mut self.qkeys[l][off..off + hd],
-            &mut self.qvalues[l][off..off + hd],
-            &mut self.kscales[l][row],
-            &mut self.vscales[l][row],
-        )
-    }
-
-    /// The first `n` positions of (layer, head)'s key and value panels as
-    /// contiguous `n × hd` tiles — what the attention kernels stream. F32
-    /// caches only; int8 caches use [`KvCache::head_tiles_quant`].
-    #[inline]
-    pub fn head_tiles(&self, l: usize, h: usize, n: usize) -> (&[f32], &[f32]) {
-        debug_assert!(n <= self.cap, "kv read of {n} beyond capacity {}", self.cap);
-        debug_assert_eq!(self.dtype, KvDtype::F32, "head_tiles on an int8 cache");
-        let off = h * self.cap * self.hd;
-        let len = n * self.hd;
-        (&self.keys[l][off..off + len], &self.values[l][off..off + len])
-    }
-
-    /// Quantized read view of the first `n` positions of (layer, head):
-    /// `n × hd` K and V code tiles plus the matching `n` per-row scales —
-    /// what the fused-dequant attention kernels stream. Int8 caches only.
-    #[inline]
-    pub fn head_tiles_quant(&self, l: usize, h: usize, n: usize) -> (&[i8], &[i8], &[f32], &[f32]) {
-        debug_assert!(n <= self.cap, "kv read of {n} beyond capacity {}", self.cap);
-        debug_assert_eq!(self.dtype, KvDtype::Int8, "head_tiles_quant on an f32 cache");
-        let off = h * self.cap * self.hd;
-        let len = n * self.hd;
-        let srow = h * self.cap;
-        (
-            &self.qkeys[l][off..off + len],
-            &self.qvalues[l][off..off + len],
-            &self.kscales[l][srow..srow + n],
-            &self.vscales[l][srow..srow + n],
-        )
+        debug_assert!(pos < self.capacity(), "kv write at {pos} beyond capacity {}", self.capacity());
+        let page = Arc::get_mut(&mut self.pages[pos / KV_TILE])
+            .expect("write to shared KV page (reserve() must precede writes)");
+        page.kv_row_quant_mut(l, h, pos % KV_TILE)
     }
 
     /// Drop everything after position `n` (prefix reuse). Length-only: the
-    /// tiles keep their allocation, and stale rows beyond `seen` are never
-    /// read (every read is bounded by a caller-passed position count).
+    /// page list keeps its allocation, and stale rows beyond `seen` are
+    /// never read (every read is bounded by a caller-passed position
+    /// count). Rewriting truncated positions COWs any still-shared page.
     pub fn truncate(&mut self, n: usize) {
         self.seen = self.seen.min(n);
     }
 }
 
-#[derive(Debug)]
+/// A live-prefix index node: one [`KV_TILE`]-token chunk edge per child.
+/// A node at depth `d` (1-based) caches page `d-1` of every sequence whose
+/// prompt starts with the concatenated path chunks.
+struct TrieNode {
+    children: HashMap<Vec<u32>, TrieNode>,
+    page: Arc<KvPage>,
+    last_used: u64,
+}
+
 struct PoolState {
     capacity_tokens: usize,
     used_tokens: usize,
+    /// Tokens pinned by trie-cached pages ([`KV_TILE`] per page). Separate
+    /// from `used_tokens`: leases never cover trie retention.
+    cached_tokens: usize,
     next_id: u64,
     live: std::collections::BTreeMap<u64, usize>,
+    /// Peak of `used_tokens + cached_tokens`.
     peak_tokens: usize,
+    /// Monotonic LRU clock, bumped per match/insert.
+    lru_tick: u64,
+    /// One prefix trie per dtype ([`KvDtype::index`]).
+    tries: [HashMap<Vec<u32>, TrieNode>; 2],
 }
 
 /// Shared pool handle.
 #[derive(Clone)]
 pub struct KvPool {
     state: Arc<Mutex<PoolState>>,
+    /// Physical pages alive (allocated or deep-copied minus dropped) across
+    /// every cache and trie node attached to this pool.
+    pages_meter: Arc<AtomicUsize>,
     /// Per-token KV bytes for accounting (2 · n_layers · d_model · 4).
     pub bytes_per_token: usize,
 }
@@ -371,10 +472,14 @@ impl KvPool {
             state: Arc::new(Mutex::new(PoolState {
                 capacity_tokens,
                 used_tokens: 0,
+                cached_tokens: 0,
                 next_id: 1,
                 live: Default::default(),
                 peak_tokens: 0,
+                lru_tick: 0,
+                tries: [HashMap::new(), HashMap::new()],
             })),
+            pages_meter: Arc::new(AtomicUsize::new(0)),
             bytes_per_token,
         }
     }
@@ -392,9 +497,7 @@ impl KvPool {
     }
 
     /// Pool holding `capacity_tokens` positions with byte accounting sized
-    /// from the model config — the one constructor serve-time callers need
-    /// (the engine used to build a throwaway `for_model` pool just to copy
-    /// its `bytes_per_token` into a second `new`).
+    /// from the model config — the one constructor serve-time callers need.
     pub fn for_model_tokens(cfg: &crate::model::ModelConfig, capacity_tokens: usize) -> KvPool {
         KvPool::for_model_tokens_dtype(cfg, capacity_tokens, KvDtype::F32)
     }
@@ -427,30 +530,97 @@ impl KvPool {
         KvPool::new((budget_bytes / per_token).max(1), per_token)
     }
 
-    /// Try to lease `tokens` tokens of KV space.
+    /// Evict LRU trie pages until `need` more tokens fit beside the live
+    /// leases and remaining cached pages. False when the trie is drained
+    /// (or pinned by in-flight sequences) and the request still can't fit.
+    fn make_room(s: &mut PoolState, need: usize) -> bool {
+        while s.used_tokens + s.cached_tokens + need > s.capacity_tokens {
+            if !KvPool::evict_one(s) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Remove the least-recently-used evictable trie leaf (page refcount 1:
+    /// only the trie holds it). Interior nodes are skipped — dropping one
+    /// would take its whole subtree down, including recently-used deeper
+    /// pages; they become leaves, and candidates, as their children go.
+    fn evict_one(s: &mut PoolState) -> bool {
+        let mut best: Option<(u64, usize, Vec<Vec<u32>>)> = None;
+        for (ti, root) in s.tries.iter().enumerate() {
+            KvPool::find_lru_leaf(root, ti, &mut Vec::new(), &mut best);
+        }
+        let Some((_, ti, path)) = best else { return false };
+        KvPool::remove_path(&mut s.tries[ti], &path);
+        s.cached_tokens -= KV_TILE;
+        true
+    }
+
+    fn find_lru_leaf(
+        level: &HashMap<Vec<u32>, TrieNode>,
+        ti: usize,
+        path: &mut Vec<Vec<u32>>,
+        best: &mut Option<(u64, usize, Vec<Vec<u32>>)>,
+    ) {
+        for (chunk, node) in level {
+            path.push(chunk.clone());
+            if node.children.is_empty() {
+                let evictable = Arc::strong_count(&node.page) == 1;
+                let colder = match best {
+                    Some((t, _, _)) => node.last_used < *t,
+                    None => true,
+                };
+                if evictable && colder {
+                    *best = Some((node.last_used, ti, path.clone()));
+                }
+            } else {
+                KvPool::find_lru_leaf(&node.children, ti, path, best);
+            }
+            path.pop();
+        }
+    }
+
+    fn remove_path(level: &mut HashMap<Vec<u32>, TrieNode>, path: &[Vec<u32>]) {
+        match path {
+            [last] => {
+                level.remove(last);
+            }
+            [head, rest @ ..] => {
+                if let Some(node) = level.get_mut(head) {
+                    KvPool::remove_path(&mut node.children, rest);
+                }
+            }
+            [] => {}
+        }
+    }
+
+    /// Try to lease `tokens` tokens of KV space, evicting cached prefix
+    /// pages under pressure (live sequences always outrank the cache).
     pub fn alloc(&self, tokens: usize) -> Option<Lease> {
         let mut s = self.state.lock().unwrap();
-        if s.used_tokens + tokens > s.capacity_tokens {
+        if !KvPool::make_room(&mut s, tokens) {
             return None;
         }
         s.used_tokens += tokens;
-        s.peak_tokens = s.peak_tokens.max(s.used_tokens);
+        s.peak_tokens = s.peak_tokens.max(s.used_tokens + s.cached_tokens);
         let id = s.next_id;
         s.next_id += 1;
         s.live.insert(id, tokens);
         Some(Lease { id, tokens })
     }
 
-    /// Grow an existing lease by `extra` tokens (decode step).
+    /// Grow an existing lease by `extra` tokens (decode step), evicting
+    /// cached prefix pages under pressure.
     pub fn grow(&self, lease: &mut Lease, extra: usize) -> bool {
         let mut s = self.state.lock().unwrap();
-        if s.used_tokens + extra > s.capacity_tokens {
+        if !KvPool::make_room(&mut s, extra) {
             return false;
         }
         let entry = s.live.get_mut(&lease.id).expect("lease alive");
         *entry += extra;
         s.used_tokens += extra;
-        s.peak_tokens = s.peak_tokens.max(s.used_tokens);
+        s.peak_tokens = s.peak_tokens.max(s.used_tokens + s.cached_tokens);
         lease.tokens += extra;
         true
     }
@@ -463,20 +633,155 @@ impl KvPool {
         s.used_tokens -= tokens;
     }
 
+    /// Build a sequence cache attached to this pool's page meter, seeded
+    /// with trie-matched prefix pages (pass an empty vec for a cold start)
+    /// and pre-sized to `positions`. `seen` starts at the matched length —
+    /// the caller feeds only the novel suffix.
+    pub fn new_cache(
+        &self,
+        cfg: &ModelConfig,
+        dtype: KvDtype,
+        prefix_pages: Vec<Arc<KvPage>>,
+        positions: usize,
+    ) -> KvCache {
+        let mut c = KvCache::with_layers_dtype(cfg, cfg.n_layers, dtype);
+        c.meter = Some(Arc::clone(&self.pages_meter));
+        c.seen = prefix_pages.len() * KV_TILE;
+        c.pages = prefix_pages;
+        c.reserve(positions.max(c.seen));
+        c
+    }
+
+    /// Longest cached prefix of `tokens`: walks the dtype's trie over
+    /// [`KV_TILE`]-token chunks, returns `(matched_tokens, pages)` and
+    /// bumps LRU stamps along the path. Capped at
+    /// `(tokens.len() − 1) / KV_TILE` pages so at least one prompt token is
+    /// always prefilled (the final forward must emit first-token logits).
+    pub fn match_prefix(&self, tokens: &[u32], dtype: KvDtype) -> (usize, Vec<Arc<KvPage>>) {
+        if tokens.len() <= 1 {
+            return (0, Vec::new());
+        }
+        let max_pages = (tokens.len() - 1) / KV_TILE;
+        let mut s = self.state.lock().unwrap();
+        s.lru_tick += 1;
+        let tick = s.lru_tick;
+        let mut pages = Vec::new();
+        let mut level = &mut s.tries[dtype.index()];
+        for chunk in tokens.chunks_exact(KV_TILE).take(max_pages) {
+            if let Some(node) = level.get_mut(chunk) {
+                node.last_used = tick;
+                pages.push(Arc::clone(&node.page));
+                level = &mut node.children;
+            } else {
+                break;
+            }
+        }
+        (pages.len() * KV_TILE, pages)
+    }
+
+    /// Publish the fully-prompt-covered pages of a finished prefill into
+    /// the prefix trie: `floor(tokens.len() / KV_TILE)` pages, keyed by
+    /// their token chunks. Idempotent (existing path nodes only get an LRU
+    /// bump); new pages are admitted best-effort against the pool budget
+    /// (evicting colder entries first, never failing the caller).
+    pub fn insert_prefix(&self, tokens: &[u32], cache: &KvCache) {
+        let n_pages = (tokens.len() / KV_TILE).min(cache.page_count()).min(cache.seen / KV_TILE);
+        if n_pages == 0 {
+            return;
+        }
+        let mut s = self.state.lock().unwrap();
+        s.lru_tick += 1;
+        let tick = s.lru_tick;
+        let ti = cache.dtype().index();
+        // Pass 1: how much of the path already exists? (Bump its LRU stamps
+        // while walking — an insert is a use.)
+        let mut present = 0;
+        {
+            let mut level = &mut s.tries[ti];
+            for chunk in tokens.chunks_exact(KV_TILE).take(n_pages) {
+                if let Some(node) = level.get_mut(chunk) {
+                    node.last_used = tick;
+                    present += 1;
+                    level = &mut node.children;
+                } else {
+                    break;
+                }
+            }
+        }
+        let missing = n_pages - present;
+        if missing == 0 {
+            return;
+        }
+        // Pass 2: best-effort room for the missing pages (never evict live
+        // leases; an overfull pool just caches a shorter prefix).
+        let _ = KvPool::make_room(&mut s, missing * KV_TILE);
+        let budget = s.capacity_tokens.saturating_sub(s.used_tokens + s.cached_tokens) / KV_TILE;
+        // Pass 3: upsert the path, creating nodes while the budget lasts.
+        // (Eviction in pass 2 may have removed a pass-1 node whose subtree
+        // was cold — the upsert recreates it from the cache's page, whose
+        // content for that chunk is identical.)
+        let mut created = 0usize;
+        {
+            let mut level = &mut s.tries[ti];
+            for (i, chunk) in tokens.chunks_exact(KV_TILE).take(n_pages).enumerate() {
+                match level.entry(chunk.to_vec()) {
+                    Entry::Occupied(e) => {
+                        let node = e.into_mut();
+                        node.last_used = tick;
+                        level = &mut node.children;
+                    }
+                    Entry::Vacant(e) => {
+                        if created >= budget {
+                            break;
+                        }
+                        created += 1;
+                        let node = e.insert(TrieNode {
+                            children: HashMap::new(),
+                            page: Arc::clone(cache.page(i)),
+                            last_used: tick,
+                        });
+                        level = &mut node.children;
+                    }
+                }
+            }
+        }
+        s.cached_tokens += created * KV_TILE;
+        s.peak_tokens = s.peak_tokens.max(s.used_tokens + s.cached_tokens);
+    }
+
+    /// Drop every cached prefix page (pages shared with live sequences
+    /// survive until those sequences finish).
+    pub fn clear_prefix_cache(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.tries = [HashMap::new(), HashMap::new()];
+        s.cached_tokens = 0;
+    }
+
     pub fn used_tokens(&self) -> usize {
         self.state.lock().unwrap().used_tokens
+    }
+
+    /// Tokens pinned by trie-cached prefix pages ([`KV_TILE`] per page).
+    pub fn cached_tokens(&self) -> usize {
+        self.state.lock().unwrap().cached_tokens
     }
 
     pub fn capacity_tokens(&self) -> usize {
         self.state.lock().unwrap().capacity_tokens
     }
 
+    /// Peak of leased + cached tokens.
     pub fn peak_tokens(&self) -> usize {
         self.state.lock().unwrap().peak_tokens
     }
 
     pub fn live_leases(&self) -> usize {
         self.state.lock().unwrap().live.len()
+    }
+
+    /// Physical KV pages alive across this pool's caches and trie.
+    pub fn live_pages(&self) -> usize {
+        self.pages_meter.load(Ordering::Relaxed)
     }
 
     pub fn used_bytes(&self) -> usize {
@@ -544,7 +849,7 @@ mod tests {
     }
 
     #[test]
-    fn kv_cache_tile_layout_roundtrip() {
+    fn kv_cache_page_layout_roundtrip() {
         let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
         let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
         let mut c = KvCache::new(&cfg);
@@ -553,8 +858,9 @@ mod tests {
         c.reserve(positions);
         assert!(c.capacity() >= positions);
         assert_eq!(c.capacity() % KV_TILE, 0);
+        assert_eq!(c.page_count(), 1);
         // Write a distinct pattern per (layer, head, pos, lane) and read it
-        // back through the tile accessor.
+        // back through the page panel accessor.
         let val = |l: usize, h: usize, p: usize, i: usize| {
             (l * 1000 + h * 100 + p * 10 + i) as f32
         };
@@ -572,7 +878,7 @@ mod tests {
         c.seen = positions;
         for l in 0..cfg.n_layers {
             for h in 0..nh {
-                let (kt, vt) = c.head_tiles(l, h, positions);
+                let (kt, vt) = c.page(0).head_panel(l, h, positions);
                 assert_eq!(kt.len(), positions * hd);
                 for p in 0..positions {
                     for i in 0..hd {
@@ -582,13 +888,14 @@ mod tests {
                 }
             }
         }
-        // Growth repacks panels at the new stride without losing contents.
+        // Growth appends pages without touching resident contents.
         let old_cap = c.capacity();
         c.reserve(old_cap + 1);
         assert!(c.capacity() > old_cap);
+        assert_eq!(c.page_count(), 2);
         for l in 0..cfg.n_layers {
             for h in 0..nh {
-                let (kt, _) = c.head_tiles(l, h, positions);
+                let (kt, _) = c.page(0).head_panel(l, h, positions);
                 for p in 0..positions {
                     for i in 0..hd {
                         assert_eq!(kt[p * hd + i], val(l, h, p, i), "post-grow L{l} h{h} p{p}");
@@ -599,10 +906,10 @@ mod tests {
     }
 
     #[test]
-    fn int8_kv_cache_tile_layout_and_repack_roundtrip() {
-        // The quantized mirror of kv_cache_tile_layout_roundtrip: codes and
+    fn int8_kv_cache_page_layout_roundtrip() {
+        // The quantized mirror of kv_cache_page_layout_roundtrip: codes and
         // per-row scales written through kv_row_quant_mut read back through
-        // head_tiles_quant, and reserve's repack preserves both in lockstep.
+        // head_panel_quant, across a page-grow.
         let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
         let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
         let mut c = KvCache::new_with(&cfg, KvDtype::Int8);
@@ -631,7 +938,7 @@ mod tests {
         let check = |c: &KvCache, tag: &str| {
             for l in 0..cfg.n_layers {
                 for h in 0..nh {
-                    let (kt, vt, ks, vs) = c.head_tiles_quant(l, h, positions);
+                    let (kt, vt, ks, vs) = c.page(0).head_panel_quant(l, h, positions);
                     assert_eq!(kt.len(), positions * hd);
                     assert_eq!(ks.len(), positions);
                     for p in 0..positions {
@@ -650,6 +957,129 @@ mod tests {
         c.reserve(old_cap + 1);
         assert!(c.capacity() > old_cap);
         check(&c, "post-grow");
+    }
+
+    #[test]
+    fn cow_preserves_shared_page_contents() {
+        // A cloned cache shares pages; truncate-then-rewrite on one side
+        // must copy the shared page, leaving the other side's view intact.
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let (nh, hd) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
+        let mut a = KvCache::with_capacity(&cfg, KV_TILE);
+        for p in 0..KV_TILE {
+            for l in 0..cfg.n_layers {
+                for h in 0..nh {
+                    let (k, v) = a.kv_row_mut(l, h, p);
+                    k.fill(p as f32 + 1.0);
+                    v.fill(-(p as f32) - 1.0);
+                }
+            }
+        }
+        a.seen = KV_TILE;
+        let b = a.clone();
+        assert_eq!(Arc::strong_count(a.page(0)), 2, "clone shares the page");
+        // Diverge a at position 10.
+        a.truncate(10);
+        a.reserve(11);
+        assert_eq!(Arc::strong_count(b.page(0)), 1, "COW split the page");
+        for l in 0..cfg.n_layers {
+            for h in 0..nh {
+                let (k, v) = a.kv_row_mut(l, h, 10);
+                k.fill(999.0);
+                v.fill(-999.0);
+            }
+        }
+        a.seen = 11;
+        // b still sees the original contents everywhere…
+        let (kb, _) = b.page(0).head_panel(0, 0, KV_TILE);
+        for p in 0..KV_TILE {
+            assert_eq!(kb[p * hd], p as f32 + 1.0, "b must keep pre-COW contents at {p}");
+        }
+        // …and a sees the shared prefix plus its divergent write.
+        let (ka, _) = a.page(0).head_panel(0, 0, 11);
+        for p in 0..10 {
+            assert_eq!(ka[p * hd], p as f32 + 1.0, "a keeps the shared prefix at {p}");
+        }
+        assert_eq!(ka[10 * hd], 999.0, "a sees its divergent write");
+    }
+
+    #[test]
+    fn prefix_trie_match_insert_evict() {
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let pool = KvPool::new(6 * KV_TILE, 8);
+        let prompt_a: Vec<u32> = (0..150).map(|i| i as u32).collect();
+        // Cold: nothing cached.
+        assert_eq!(pool.match_prefix(&prompt_a, KvDtype::F32).0, 0);
+        // Simulate a finished prefill and publish its prompt pages.
+        let mut ca = pool.new_cache(&cfg, KvDtype::F32, Vec::new(), prompt_a.len());
+        for p in 0..prompt_a.len() {
+            let (k, _) = ca.kv_row_mut(0, 0, p);
+            k.fill(p as f32);
+        }
+        ca.seen = prompt_a.len();
+        pool.insert_prefix(&prompt_a, &ca);
+        assert_eq!(pool.cached_tokens(), 2 * KV_TILE, "150 tokens → 2 full pages");
+        pool.insert_prefix(&prompt_a, &ca); // idempotent
+        assert_eq!(pool.cached_tokens(), 2 * KV_TILE);
+        // A prompt sharing the full preamble matches both pages…
+        let (m, pages) = pool.match_prefix(&prompt_a, KvDtype::F32);
+        assert_eq!((m, pages.len()), (2 * KV_TILE, 2));
+        let (k, _) = pages[1].head_panel(0, 0, KV_TILE);
+        assert_eq!(k[0], KV_TILE as f32, "page 1 starts at position 64");
+        // …an exactly-two-page prompt is capped to one (a novel final token
+        // must remain to produce first-token logits)…
+        assert_eq!(pool.match_prefix(&prompt_a[..2 * KV_TILE], KvDtype::F32).0, KV_TILE);
+        // …a divergent second chunk matches only the first page…
+        let mut div = prompt_a.clone();
+        div[KV_TILE] = 9999;
+        assert_eq!(pool.match_prefix(&div, KvDtype::F32).0, KV_TILE);
+        // …and the other dtype's trie is independent.
+        assert_eq!(pool.match_prefix(&prompt_a, KvDtype::Int8).0, 0);
+        // Seeded caches start past the matched prefix.
+        let warm = pool.new_cache(&cfg, KvDtype::F32, pages, prompt_a.len());
+        assert_eq!(warm.seen, 2 * KV_TILE);
+        assert!(warm.capacity() >= prompt_a.len());
+        drop(warm);
+        // Eviction under pressure: a second, disjoint prefix fills the
+        // budget; an alloc that needs the space reclaims LRU pages.
+        let prompt_b: Vec<u32> = (0..150).map(|i| 10_000 + i as u32).collect();
+        let mut cb = pool.new_cache(&cfg, KvDtype::F32, Vec::new(), prompt_b.len());
+        cb.seen = prompt_b.len();
+        pool.insert_prefix(&prompt_b, &cb);
+        assert_eq!(pool.cached_tokens(), 4 * KV_TILE);
+        drop(ca);
+        drop(cb);
+        // Pages pinned only by the trie now; prefix A is older (B's insert
+        // bumped B's path last). A big alloc forces eviction, oldest first.
+        let lease = pool.alloc(3 * KV_TILE).unwrap();
+        assert!(pool.cached_tokens() <= 3 * KV_TILE, "alloc evicted cached pages");
+        assert_eq!(pool.match_prefix(&prompt_b, KvDtype::F32).0, 2 * KV_TILE, "hotter prefix survives");
+        pool.free(lease);
+        // clear_prefix_cache drops the rest; with no caches alive the
+        // physical page meter drains to the freshly-allocated none.
+        pool.clear_prefix_cache();
+        assert_eq!(pool.cached_tokens(), 0);
+        assert_eq!(pool.live_pages(), 0, "no physical pages after clear + cache drops");
+        assert_eq!(pool.match_prefix(&prompt_a, KvDtype::F32).0, 0);
+    }
+
+    #[test]
+    fn trie_pages_shared_with_live_caches_are_not_evicted() {
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let pool = KvPool::new(2 * KV_TILE, 8);
+        let prompt: Vec<u32> = (0..KV_TILE as u32 + 10).collect();
+        let mut c = pool.new_cache(&cfg, KvDtype::F32, Vec::new(), prompt.len());
+        c.seen = prompt.len();
+        pool.insert_prefix(&prompt, &c);
+        assert_eq!(pool.cached_tokens(), KV_TILE);
+        // The cache still holds the page → refcount 2 → pinned: an alloc
+        // that would need the cached tokens fails instead of evicting.
+        assert!(pool.alloc(2 * KV_TILE).is_none(), "pinned page must not evict");
+        drop(c);
+        // Once the sequence is gone the page is evictable.
+        let lease = pool.alloc(2 * KV_TILE).expect("evictable after cache drop");
+        assert_eq!(pool.cached_tokens(), 0);
+        pool.free(lease);
     }
 
     #[test]
@@ -687,6 +1117,9 @@ mod tests {
         assert_eq!(KvDtype::Int8.bits(), 8);
         assert_eq!(KvDtype::Int8.name(), "int8");
         assert_eq!(format!("{}", KvDtype::F32), "f32");
+        for bits in KvDtype::SUPPORTED_BITS {
+            assert!(KvDtype::from_bits(bits).is_some(), "{bits} advertised but unsupported");
+        }
     }
 
     #[test]

@@ -37,6 +37,34 @@ impl ServerRun {
         toks as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
+    /// Admissions that adopted ≥ 1 cached prefix page, across all workers.
+    pub fn prefix_hits(&self) -> usize {
+        self.per_worker.iter().map(|m| m.prefix_hits).sum()
+    }
+
+    /// Prompt tokens served from cached prefix pages instead of prefill,
+    /// across all workers.
+    pub fn prefix_hit_tokens(&self) -> usize {
+        self.per_worker.iter().map(|m| m.prefix_hit_tokens).sum()
+    }
+
+    /// Fraction of all prompt tokens served from the prefix cache
+    /// (`hit / (hit + prefilled)`); 0.0 when no prompts ran.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hit: usize = self.prefix_hit_tokens();
+        let cold: usize = self.per_worker.iter().map(|m| m.prefill_tokens).sum();
+        if hit + cold == 0 {
+            return 0.0;
+        }
+        hit as f64 / (hit + cold) as f64
+    }
+
+    /// Highest per-worker pool-occupancy high-water mark (leased +
+    /// trie-cached tokens) — the KV pressure headline for summaries.
+    pub fn peak_kv_tokens(&self) -> usize {
+        self.per_worker.iter().map(|m| m.peak_tokens).max().unwrap_or(0)
+    }
+
     /// Latency samples over **completed** requests only
     /// ([`super::batcher::FinishReason::is_completed`]): rejected requests
     /// never ran and

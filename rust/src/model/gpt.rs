@@ -29,15 +29,22 @@
 //! ## Attention engine
 //!
 //! All three paths share ONE attention implementation: [`Gpt::attn_layer`],
-//! a span-batch driver over the head-major KV tiles of
+//! a span-batch driver over the paged head-major KV storage of
 //! [`coordinator::kvpool::KvCache`](crate::coordinator::kvpool). Per layer
 //! it (1) stages RoPE-rotated queries into grow-only arena scratch
 //! ([`AttnArena`], riding inside [`QGemmArena`]) and appends rotated keys +
-//! raw values to each sequence's tiles, then (2) fans the q·K sweep /
-//! softmax / weighted-V inner loops out as **(sequence × head) work items**
-//! over `scope_map` — decode iterations use every core between the
-//! per-layer GEMMs instead of walking sequences serially — and (3)
-//! scatters the per-head output tiles back into row-major activation rows.
+//! raw values to each sequence's pages (COW-splitting shared prefix pages
+//! first via `KvCache::reserve`), then (2) fans the q·K sweep / softmax /
+//! weighted-V inner loops out as **(sequence × head) work items** over
+//! `scope_map` — decode iterations use every core between the per-layer
+//! GEMMs instead of walking sequences serially — and (3) scatters the
+//! per-head output tiles back into row-major activation rows. The sweep
+//! reads K/V through the page indirection (`attn_head_span_paged` /
+//! `attn_head_span_paged_int8`): per attended row it walks the page
+//! list in `KV_TILE`-aligned segments, scoring each segment's head panel
+//! and accumulating weighted V in position order — bitwise identical to
+//! the contiguous single-tile drivers because q·K scores are per-key
+//! independent and the SIMD P·V lane grouping aligns at page boundaries.
 //! The inner loops are the runtime-dispatched SIMD kernels of
 //! [`tensor::attn_kernel`](crate::tensor::attn_kernel) (AVX2 FMA / NEON,
 //! scalar kept as the bitwise reference). Work items share no
@@ -54,10 +61,11 @@
 
 use super::config::{layer_key, ModelConfig};
 use super::linear::Linear;
-use crate::coordinator::kvpool::{KvCache, KvDtype};
+use crate::coordinator::kvpool::{KvCache, KvDtype, KV_TILE};
 use crate::quant::quantize_tile;
 use crate::tensor::attn_kernel::{
-    self, attn_head_span, attn_head_span_int8, AttnArena, AttnKernelKind,
+    self, pv_accum_add, pv_accum_int8_add, qk_scores, qk_scores_int8, softmax, AttnArena,
+    AttnKernelKind,
 };
 use crate::tensor::{Matrix, QGemmArena};
 use crate::util::pool::{scope_map, SendPtr};
@@ -323,15 +331,18 @@ impl Gpt {
     ///
     /// 1. **Stage** (serial): RoPE-rotate each span row's query into
     ///    `arena.q` and append the rotated key + raw value to the cache's
-    ///    head-major tiles at positions `seen..seen+t` (`seen` itself
-    ///    advances once per forward, after all layers). In-span rows attend
-    ///    to each other through the same tiles.
+    ///    head-major pages at positions `seen..seen+t` (`seen` itself
+    ///    advances once per forward, after all layers). `reserve` runs
+    ///    first, so shared prefix pages in the write range copy-on-write
+    ///    before any row is stored. In-span rows attend to each other
+    ///    through the same pages.
     /// 2. **Sweep** (parallel): one work item per (sequence, head) runs
-    ///    [`attn_head_span`] — q·K scores, softmax, weighted-V — over the
-    ///    contiguous tiles, fanned out via `scope_map` when the batch's
-    ///    q·K MAC count clears [`attn_kernel::auto_threads`]'s floor. Items
-    ///    write disjoint arena ranges and share no accumulators, so
-    ///    results are bitwise identical across thread counts.
+    ///    `attn_head_span_paged` — q·K scores, softmax, weighted-V — over
+    ///    the page list in `KV_TILE`-aligned segments, fanned out via
+    ///    `scope_map` when the batch's q·K MAC count clears
+    ///    [`attn_kernel::auto_threads`]'s floor. Items write disjoint
+    ///    arena ranges and share no accumulators, so results are bitwise
+    ///    identical across thread counts.
     /// 3. **Scatter** (serial): copy each head tile back into the
     ///    row-major output rows.
     ///
@@ -343,12 +354,12 @@ impl Gpt {
     /// Caches are dtype-mixed: each sequence's [`KvDtype`] picks its staging
     /// and sweep path independently, so f32 and int8 caches coexist in one
     /// batch. Int8 sequences quantize the roped K row and raw V row into
-    /// the cache's code tiles at stage time (one scale per position per
+    /// the cache's code pages at stage time (one scale per position per
     /// head, via [`quantize_tile`]), quantize each roped query head-slice
-    /// once into the arena, and sweep through [`attn_head_span_int8`] —
-    /// dequantization fused into the kernels, the cache never rematerialized
-    /// to f32. Since every position quantizes independently, the chunking
-    /// invariance above carries over to int8 codes verbatim.
+    /// once into the arena, and sweep through `attn_head_span_paged_int8`
+    /// — dequantization fused into the kernels, the cache never
+    /// rematerialized to f32. Since every position quantizes independently,
+    /// the chunking invariance above carries over to int8 codes verbatim.
     #[allow(clippy::too_many_arguments)]
     fn attn_layer(
         &self,
@@ -471,45 +482,38 @@ impl Gpt {
                 unsafe { std::slice::from_raw_parts_mut(scores_ptr.0.add(scores_off), slen) };
             let tile = unsafe { std::slice::from_raw_parts_mut(tiles_ptr.0.add(tile_off), t * hd) };
             match cache.dtype() {
-                KvDtype::F32 => {
-                    let (keys, values) = cache.head_tiles(l, head, slen);
-                    attn_head_span(
-                        kind,
-                        &q[r0 * d..],
-                        d,
-                        head * hd,
-                        hd,
-                        pos0,
-                        t,
-                        keys,
-                        values,
-                        scale,
-                        scores,
-                        tile,
-                    );
-                }
-                KvDtype::Int8 => {
-                    let (keys, values, k_scales, v_scales) = cache.head_tiles_quant(l, head, slen);
-                    attn_head_span_int8(
-                        kind,
-                        &q_codes[r0 * d..],
-                        &q_scales[r0 * nh..],
-                        nh,
-                        head,
-                        d,
-                        head * hd,
-                        hd,
-                        pos0,
-                        t,
-                        keys,
-                        k_scales,
-                        values,
-                        v_scales,
-                        scale,
-                        scores,
-                        tile,
-                    );
-                }
+                KvDtype::F32 => attn_head_span_paged(
+                    kind,
+                    &q[r0 * d..],
+                    d,
+                    head * hd,
+                    hd,
+                    pos0,
+                    t,
+                    cache,
+                    l,
+                    head,
+                    scale,
+                    scores,
+                    tile,
+                ),
+                KvDtype::Int8 => attn_head_span_paged_int8(
+                    kind,
+                    &q_codes[r0 * d..],
+                    &q_scales[r0 * nh..],
+                    nh,
+                    head,
+                    d,
+                    head * hd,
+                    hd,
+                    pos0,
+                    t,
+                    cache,
+                    l,
+                    scale,
+                    scores,
+                    tile,
+                ),
             }
         });
 
@@ -792,6 +796,106 @@ impl Gpt {
     }
 }
 
+/// Paged twin of [`crate::tensor::attn_kernel::attn_head_span`]: causal
+/// q·K / softmax / weighted-V for one (sequence, head) work item, reading
+/// K/V through the cache's page list instead of a contiguous tile.
+///
+/// Row `j` of the span attends over positions `0..=pos0+j`, walked in
+/// segments that start at page boundaries (`0, KV_TILE, 2·KV_TILE, …`).
+/// q·K scores are per-key independent, so splitting the score pass is
+/// exact; the P·V pass zeroes the output row once and accumulates each
+/// segment in position order with `pv_accum_add`, whose SIMD lane
+/// grouping restarts cleanly at the `KV_TILE`-aligned boundaries — the
+/// result is bitwise identical to the contiguous driver for every page
+/// layout of the same positions.
+#[allow(clippy::too_many_arguments)]
+fn attn_head_span_paged(
+    kind: AttnKernelKind,
+    q: &[f32],
+    d: usize,
+    s: usize,
+    hd: usize,
+    pos0: usize,
+    t: usize,
+    cache: &KvCache,
+    l: usize,
+    head: usize,
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    for j in 0..t {
+        let t_seen = pos0 + j + 1;
+        let qh = &q[j * d + s..j * d + s + hd];
+        let mut p = 0usize;
+        while p < t_seen {
+            let n = (t_seen - p).min(KV_TILE);
+            let (keys, _) = cache.page(p / KV_TILE).head_panel(l, head, n);
+            qk_scores(kind, qh, keys, scale, &mut scores[p..p + n]);
+            p += n;
+        }
+        softmax(kind, &mut scores[..t_seen]);
+        let orow = &mut out[j * hd..(j + 1) * hd];
+        orow.fill(0.0);
+        let mut p = 0usize;
+        while p < t_seen {
+            let n = (t_seen - p).min(KV_TILE);
+            let (_, values) = cache.page(p / KV_TILE).head_panel(l, head, n);
+            pv_accum_add(kind, &scores[p..p + n], values, orow);
+            p += n;
+        }
+    }
+}
+
+/// Int8 twin of [`attn_head_span_paged`] over quantized code pages —
+/// fused dequant via `qk_scores_int8` / `pv_accum_int8_add`, one
+/// per-(position, head) scale row per page panel. The per-row query
+/// scale folds the attention scale exactly as the contiguous
+/// [`crate::tensor::attn_kernel::attn_head_span_int8`] does
+/// (`q_scales[j * nh + head] * scale`), so the paged sweep is bitwise
+/// identical to it for any paging of the same positions.
+#[allow(clippy::too_many_arguments)]
+fn attn_head_span_paged_int8(
+    kind: AttnKernelKind,
+    q_codes: &[i8],
+    q_scales: &[f32],
+    nh: usize,
+    head: usize,
+    d: usize,
+    s: usize,
+    hd: usize,
+    pos0: usize,
+    t: usize,
+    cache: &KvCache,
+    l: usize,
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    for j in 0..t {
+        let t_seen = pos0 + j + 1;
+        let qh = &q_codes[j * d + s..j * d + s + hd];
+        let qs = q_scales[j * nh + head] * scale;
+        let mut p = 0usize;
+        while p < t_seen {
+            let n = (t_seen - p).min(KV_TILE);
+            let (keys, _, k_scales, _) = cache.page(p / KV_TILE).head_panel_quant(l, head, n);
+            qk_scores_int8(kind, qh, keys, k_scales, qs, &mut scores[p..p + n]);
+            p += n;
+        }
+        softmax(kind, &mut scores[..t_seen]);
+        let orow = &mut out[j * hd..(j + 1) * hd];
+        orow.fill(0.0);
+        let mut p = 0usize;
+        while p < t_seen {
+            let n = (t_seen - p).min(KV_TILE);
+            let (_, values, _, v_scales) = cache.page(p / KV_TILE).head_panel_quant(l, head, n);
+            pv_accum_int8_add(kind, &scores[p..p + n], values, v_scales, orow);
+            p += n;
+        }
+    }
+}
+
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in xs.iter().enumerate() {
@@ -988,22 +1092,29 @@ mod tests {
             assert!(d < 1e-4, "row {row}: maxdiff {d}");
         }
         // The mid-prefill cache must hold exactly the scalar-path K/V
-        // (tile-for-tile: the head-major layout is part of the contract).
+        // (page-for-page: the paged head-major layout is part of the
+        // contract, so compare each KV_TILE-aligned panel segment).
         assert_eq!(c_mid.bytes(), c_mid_ref.bytes());
+        assert_eq!(c_mid.page_count(), c_mid_ref.page_count());
         for l in 0..model.cfg.n_layers {
             for h in 0..model.cfg.n_heads {
-                let (got_k, got_v) = c_mid.head_tiles(l, h, c_mid.len());
-                let (ref_k, ref_v) = c_mid_ref.head_tiles(l, h, c_mid_ref.len());
-                let dk = got_k
-                    .iter()
-                    .zip(ref_k)
-                    .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
-                assert!(dk < 1e-4, "layer {l} head {h} keys diverged: {dk}");
-                let dv = got_v
-                    .iter()
-                    .zip(ref_v)
-                    .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
-                assert!(dv < 1e-4, "layer {l} head {h} values diverged: {dv}");
+                let mut p = 0usize;
+                while p < c_mid.len() {
+                    let n = (c_mid.len() - p).min(KV_TILE);
+                    let (got_k, got_v) = c_mid.page(p / KV_TILE).head_panel(l, h, n);
+                    let (ref_k, ref_v) = c_mid_ref.page(p / KV_TILE).head_panel(l, h, n);
+                    let dk = got_k
+                        .iter()
+                        .zip(ref_k)
+                        .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+                    assert!(dk < 1e-4, "layer {l} head {h} pos {p} keys diverged: {dk}");
+                    let dv = got_v
+                        .iter()
+                        .zip(ref_v)
+                        .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()));
+                    assert!(dv < 1e-4, "layer {l} head {h} pos {p} values diverged: {dv}");
+                    p += n;
+                }
             }
         }
     }

@@ -35,11 +35,16 @@
 //! and any single kernel across batch shapes and thread counts (work items
 //! never share accumulators — see `Gpt::attn_layer`).
 //!
-//! All kernels stream **unit-stride tiles**: the head-major `KvCache` layout
-//! (`coordinator::kvpool`) stores each (layer, head) as a contiguous
-//! `cap × hd` panel, so consecutive cache positions are `hd` floats apart —
-//! the score sweep and PV accumulation walk memory linearly instead of
-//! striding `d_model` between positions as the row-major layout forced.
+//! All kernels stream **unit-stride tiles**: the paged head-major `KvCache`
+//! layout (`coordinator::kvpool`) stores each (layer, head) of a page as a
+//! contiguous `KV_TILE × hd` panel, so consecutive cache positions are `hd`
+//! floats apart — the score sweep and PV accumulation walk memory linearly
+//! instead of striding `d_model` between positions as the row-major layout
+//! forced. The paged span drivers in `Gpt` call [`qk_scores`] per page
+//! segment and accumulate PV via [`pv_accum_add`] / [`pv_accum_int8_add`]
+//! (zero once per row, add per segment); [`attn_head_span`] /
+//! [`attn_head_span_int8`] remain the contiguous single-tile drivers for
+//! raw-slice callers (benches, scratch paths, tests).
 //!
 //! ## Int8 KV paths (fused dequant)
 //!
@@ -263,15 +268,27 @@ pub fn softmax(kind: AttnKernelKind, x: &mut [f32]) {
 /// value tile (`values.len() == scores.len() · out.len()`). `out` is fully
 /// overwritten. Same contract on `kind`.
 pub fn pv_accum(kind: AttnKernelKind, scores: &[f32], values: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    pv_accum_add(kind, scores, values, out);
+}
+
+/// [`pv_accum`] without the zero-init: accumulates **into** `out`. The paged
+/// span drivers zero a row once and then add one page segment at a time;
+/// because every kernel walks positions in order with an exact f32
+/// load/store of `out` between calls, a segmented accumulation over
+/// 4-aligned splits is bitwise-identical to one contiguous [`pv_accum`]
+/// (KV pages are [`crate::coordinator::kvpool::KV_TILE`] = 64 positions, so
+/// every split satisfies the AVX2 4-position block alignment).
+pub fn pv_accum_add(kind: AttnKernelKind, scores: &[f32], values: &[f32], out: &mut [f32]) {
     debug_assert_eq!(values.len(), scores.len() * out.len());
     match kind {
-        AttnKernelKind::Scalar => pv_accum_scalar(scores, values, out),
+        AttnKernelKind::Scalar => pv_accum_add_scalar(scores, values, out),
         #[cfg(target_arch = "x86_64")]
         // SAFETY: see `qk_scores`.
-        AttnKernelKind::Avx2 => unsafe { avx2::pv_accum(scores, values, out) },
+        AttnKernelKind::Avx2 => unsafe { avx2::pv_accum_add(scores, values, out) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: see `qk_scores`.
-        AttnKernelKind::Neon => unsafe { neon::pv_accum(scores, values, out) },
+        AttnKernelKind::Neon => unsafe { neon::pv_accum_add(scores, values, out) },
         #[allow(unreachable_patterns)]
         other => unreachable!("kernel {other:?} is not available on this target"),
     }
@@ -348,9 +365,8 @@ fn softmax_scalar(x: &mut [f32]) {
     }
 }
 
-fn pv_accum_scalar(scores: &[f32], values: &[f32], out: &mut [f32]) {
+fn pv_accum_add_scalar(scores: &[f32], values: &[f32], out: &mut [f32]) {
     let hd = out.len();
-    out.fill(0.0);
     for (tk, &w) in scores.iter().enumerate() {
         let vrow = &values[tk * hd..(tk + 1) * hd];
         for (o, &vv) in out.iter_mut().zip(vrow) {
@@ -402,16 +418,30 @@ pub fn pv_accum_int8(
     v_scales: &[f32],
     out: &mut [f32],
 ) {
+    out.fill(0.0);
+    pv_accum_int8_add(kind, scores, values, v_scales, out);
+}
+
+/// [`pv_accum_int8`] without the zero-init — the int8 twin of
+/// [`pv_accum_add`], same segmented-accumulation bitwise contract (the int8
+/// kernels are position-in-order mul-then-add, so any split is exact).
+pub fn pv_accum_int8_add(
+    kind: AttnKernelKind,
+    scores: &[f32],
+    values: &[i8],
+    v_scales: &[f32],
+    out: &mut [f32],
+) {
     debug_assert_eq!(values.len(), scores.len() * out.len());
     debug_assert!(v_scales.len() >= scores.len());
     match kind {
-        AttnKernelKind::Scalar => pv_accum_int8_scalar(scores, values, v_scales, out),
+        AttnKernelKind::Scalar => pv_accum_int8_add_scalar(scores, values, v_scales, out),
         #[cfg(target_arch = "x86_64")]
         // SAFETY: see `qk_scores`.
-        AttnKernelKind::Avx2 => unsafe { avx2::pv_accum_int8(scores, values, v_scales, out) },
+        AttnKernelKind::Avx2 => unsafe { avx2::pv_accum_int8_add(scores, values, v_scales, out) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: see `qk_scores`.
-        AttnKernelKind::Neon => unsafe { neon::pv_accum_int8(scores, values, v_scales, out) },
+        AttnKernelKind::Neon => unsafe { neon::pv_accum_int8_add(scores, values, v_scales, out) },
         #[allow(unreachable_patterns)]
         other => unreachable!("kernel {other:?} is not available on this target"),
     }
@@ -426,9 +456,9 @@ pub fn pv_accum_int8(
 /// per-(row, head) scales, row `j`'s at `j · q_scale_stride + q_scale_off`
 /// (the `Gpt` driver passes stride `nh`, offset `head`). `keys` / `values`
 /// are the head's contiguous `(pos0 + t) × hd` code tiles and
-/// `k_scales` / `v_scales` the matching per-position scales
-/// ([`crate::model::KvCache::head_tiles_quant`]). Masking, chunking
-/// invariance, and the `scores` / `out` contracts match [`attn_head_span`].
+/// `k_scales` / `v_scales` the matching per-position scales (one KV page
+/// panel, or any raw contiguous tile). Masking, chunking invariance, and
+/// the `scores` / `out` contracts match [`attn_head_span`].
 #[allow(clippy::too_many_arguments)]
 pub fn attn_head_span_int8(
     kind: AttnKernelKind,
@@ -496,9 +526,8 @@ fn qk_scores_int8_scalar(q: &[i8], keys: &[i8], k_scales: &[f32], scale: f32, sc
     }
 }
 
-fn pv_accum_int8_scalar(scores: &[f32], values: &[i8], v_scales: &[f32], out: &mut [f32]) {
+fn pv_accum_int8_add_scalar(scores: &[f32], values: &[i8], v_scales: &[f32], out: &mut [f32]) {
     let hd = out.len();
-    out.fill(0.0);
     for (tk, &w) in scores.iter().enumerate() {
         let wv = w * v_scales[tk];
         let vrow = &values[tk * hd..(tk + 1) * hd];
@@ -642,18 +671,20 @@ pub(crate) mod avx2 {
         }
     }
 
-    /// Weighted-V accumulation: 4 broadcast weights per output-register
-    /// round trip (`out` loaded/stored once per 4 positions).
+    /// Weighted-V accumulation into `out` (no zero-init — the dispatcher
+    /// fills for the overwrite variant): 4 broadcast weights per
+    /// output-register round trip (`out` loaded/stored once per 4
+    /// positions). Positions run in order, so a 4-aligned segmented call
+    /// sequence is bitwise-identical to one contiguous call.
     ///
     /// # Safety
     /// Caller must guarantee AVX2+FMA are present and
     /// `values.len() == scores.len() * out.len()`.
     #[target_feature(enable = "avx2,fma")]
-    pub(crate) unsafe fn pv_accum(scores: &[f32], values: &[f32], out: &mut [f32]) {
+    pub(crate) unsafe fn pv_accum_add(scores: &[f32], values: &[f32], out: &mut [f32]) {
         unsafe {
             let hd = out.len();
             let n = scores.len();
-            out.fill(0.0);
             let chunks = hd / 8 * 8;
             let vp = values.as_ptr();
             let op = out.as_mut_ptr();
@@ -767,17 +798,18 @@ pub(crate) mod avx2 {
         }
     }
 
-    /// Int8 weighted-V accumulation with fused dequant: 8 value codes per
-    /// pass widened i8→i32→f32 (exact), then **separate mul-then-add** — no
-    /// FMA — one position at a time in position order, so every lane
-    /// reproduces the scalar `out += (w·v_scale)·code` rounding sequence
-    /// bit-for-bit.
+    /// Int8 weighted-V accumulation into `out` with fused dequant (no
+    /// zero-init — the dispatcher fills for the overwrite variant): 8 value
+    /// codes per pass widened i8→i32→f32 (exact), then **separate
+    /// mul-then-add** — no FMA — one position at a time in position order,
+    /// so every lane reproduces the scalar `out += (w·v_scale)·code`
+    /// rounding sequence bit-for-bit, segmented or not.
     ///
     /// # Safety
     /// Caller must guarantee AVX2+FMA are present and
     /// `values.len() == scores.len() * out.len()`.
     #[target_feature(enable = "avx2,fma")]
-    pub(crate) unsafe fn pv_accum_int8(
+    pub(crate) unsafe fn pv_accum_int8_add(
         scores: &[f32],
         values: &[i8],
         v_scales: &[f32],
@@ -786,7 +818,6 @@ pub(crate) mod avx2 {
         unsafe {
             let hd = out.len();
             let n = scores.len();
-            out.fill(0.0);
             let chunks = hd / 8 * 8;
             let vp = values.as_ptr();
             let op = out.as_mut_ptr();
@@ -885,15 +916,18 @@ pub(crate) mod neon {
         }
     }
 
+    /// Accumulates into `out` without zero-init (the dispatcher fills for
+    /// the overwrite variant); positions run in order so segmented calls
+    /// match one contiguous call bitwise.
+    ///
     /// # Safety
     /// Caller must guarantee NEON is present and
     /// `values.len() == scores.len() * out.len()`.
     #[target_feature(enable = "neon")]
-    pub(crate) unsafe fn pv_accum(scores: &[f32], values: &[f32], out: &mut [f32]) {
+    pub(crate) unsafe fn pv_accum_add(scores: &[f32], values: &[f32], out: &mut [f32]) {
         unsafe {
             let hd = out.len();
             let n = scores.len();
-            out.fill(0.0);
             let chunks = hd / 4 * 4;
             let vp = values.as_ptr();
             let op = out.as_mut_ptr();
@@ -955,15 +989,17 @@ pub(crate) mod neon {
         }
     }
 
-    /// Int8 weighted-V accumulation with fused dequant: 8 codes per pass
-    /// widened i8→i16→i32→f32 (exact), then separate mul-then-add — no FMA
-    /// — in position order, matching the scalar rounding sequence bitwise.
+    /// Int8 weighted-V accumulation into `out` with fused dequant (no
+    /// zero-init — the dispatcher fills for the overwrite variant): 8 codes
+    /// per pass widened i8→i16→i32→f32 (exact), then separate mul-then-add
+    /// — no FMA — in position order, matching the scalar rounding sequence
+    /// bitwise, segmented or not.
     ///
     /// # Safety
     /// Caller must guarantee NEON is present and
     /// `values.len() == scores.len() * out.len()`.
     #[target_feature(enable = "neon")]
-    pub(crate) unsafe fn pv_accum_int8(
+    pub(crate) unsafe fn pv_accum_int8_add(
         scores: &[f32],
         values: &[i8],
         v_scales: &[f32],
@@ -972,7 +1008,6 @@ pub(crate) mod neon {
         unsafe {
             let hd = out.len();
             let n = scores.len();
-            out.fill(0.0);
             let chunks = hd / 8 * 8;
             let vp = values.as_ptr();
             let op = out.as_mut_ptr();

@@ -1349,3 +1349,247 @@ fn prop_engine_int8_greedy_matches_step_oracle() {
     assert_eq!(engine.kv_used_tokens(), 0);
     engine.shutdown();
 }
+
+#[test]
+fn prop_kv_pages_never_leak_under_admit_grow_cancel() {
+    // Page-accounting safety under random admit/grow/cancel/rewrite streams
+    // over both KV dtypes: the physical-page meter, lease accounting, and
+    // trie-cached token count stay consistent at every step, nothing leaks
+    // at drain, and clearing the prefix cache releases every page. Double
+    // frees panic inside KvPool::free, so mere completion covers that half
+    // of the invariant; the COW arm rewrites trie-shared pages, so a missed
+    // copy would panic at the shared-page write.
+    use aser::coordinator::kvpool::{KvCache, Lease, KV_TILE};
+    use aser::coordinator::KvPool;
+    use aser::model::{KvDtype, ModelConfig};
+
+    let mcfg = ModelConfig::by_name("micro").unwrap();
+    // Shared two-page preambles (one per family) so admissions actually
+    // collide in the trie; families map to a fixed dtype so every trie
+    // path stays dtype-consistent.
+    let preamble =
+        |fam: usize| -> Vec<u32> { (0..2 * KV_TILE).map(|i| (1 + fam * 1000 + i) as u32).collect() };
+    check(
+        "kv_page_refcount_invariants",
+        &cfg(16),
+        |rng| {
+            (0..8 + rng.below(40))
+                .map(|_| (rng.below(100) as u8, rng.below(4), rng.below(KV_TILE)))
+                .collect::<Vec<(u8, usize, usize)>>()
+        },
+        |_| Vec::new(),
+        |ops| {
+            let pool = KvPool::new(64 * KV_TILE, 8);
+            let mut live: Vec<(Lease, KvCache)> = Vec::new();
+            // Reserve + write one (layer 0, head 0) row per position —
+            // enough to drive the COW gate without filling every panel.
+            let fill = |cache: &mut KvCache, from: usize, to: usize| {
+                cache.reserve(to);
+                for p in from..to {
+                    match cache.dtype() {
+                        KvDtype::F32 => {
+                            let (k, v) = cache.kv_row_mut(0, 0, p);
+                            k.fill(p as f32);
+                            v.fill(-(p as f32));
+                        }
+                        KvDtype::Int8 => {
+                            let (kc, vc, ks, vs) = cache.kv_row_quant_mut(0, 0, p);
+                            kc.fill((p % 127) as i8);
+                            vc.fill(-((p % 127) as i8));
+                            *ks = 1.0;
+                            *vs = 1.0;
+                        }
+                    }
+                }
+                cache.seen = to;
+            };
+            for &(kind, sel, len) in ops {
+                match kind {
+                    0..=49 => {
+                        // Admit: family preamble + tail (tails of one family
+                        // nest, so trie paths deepen across admits), matched
+                        // against the trie, suffix-prefilled, republished.
+                        let dtype = if sel % 2 == 0 { KvDtype::F32 } else { KvDtype::Int8 };
+                        let mut prompt = preamble(sel);
+                        prompt.extend((0..1 + len).map(|i| (50_000 + sel * 100 + i) as u32));
+                        let (matched, pages) = pool.match_prefix(&prompt, dtype);
+                        let Some(lease) = pool.alloc(prompt.len() + 4) else { continue };
+                        let mut cache = pool.new_cache(&mcfg, dtype, pages, lease.tokens);
+                        assert_eq!(cache.seen, matched, "cache starts at the matched prefix");
+                        fill(&mut cache, matched, prompt.len());
+                        pool.insert_prefix(&prompt, &cache);
+                        live.push((lease, cache));
+                    }
+                    50..=74 => {
+                        // Decode: grow one live sequence by a few tokens.
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = sel % live.len();
+                        let (lease, cache) = &mut live[i];
+                        let extra = 1 + len % 4;
+                        if pool.grow(lease, extra) {
+                            let s = cache.seen;
+                            fill(cache, s, s + extra);
+                        }
+                    }
+                    75..=89 => {
+                        // Cancel/finish: drop the cache, return the lease.
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = sel % live.len();
+                        let (lease, cache) = live.swap_remove(i);
+                        drop(cache);
+                        pool.free(lease);
+                    }
+                    _ => {
+                        // Truncate-and-rewrite inside the (possibly
+                        // trie-shared) leading pages — the COW path: the
+                        // trie keeps its page, the sequence rewrites a
+                        // private copy.
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = sel % live.len();
+                        let (_, cache) = &mut live[i];
+                        let cut = len.min(cache.seen.saturating_sub(1));
+                        let s = cache.seen;
+                        cache.truncate(cut);
+                        fill(cache, cut, s);
+                    }
+                }
+                let (used, cached, cap) =
+                    (pool.used_tokens(), pool.cached_tokens(), pool.capacity_tokens());
+                if used + cached > cap {
+                    return CaseResult::Fail(format!("overcommit: {used} + {cached} > {cap}"));
+                }
+                if pool.live_pages() < cached / KV_TILE {
+                    return CaseResult::Fail(format!(
+                        "page meter {} below trie floor {}",
+                        pool.live_pages(),
+                        cached / KV_TILE
+                    ));
+                }
+            }
+            for (lease, cache) in live.drain(..) {
+                drop(cache);
+                pool.free(lease);
+            }
+            // With every sequence gone, each trie node pins exactly one
+            // physical page — any surplus in the meter is a leaked page.
+            let trie_pages = pool.cached_tokens() / KV_TILE;
+            let drained = all(vec![
+                ensure(pool.used_tokens() == 0, || "leased tokens leaked at drain".into()),
+                ensure(pool.live_leases() == 0, || "leases leaked at drain".into()),
+                ensure(pool.live_pages() == trie_pages, || {
+                    format!(
+                        "{} physical pages alive vs {} trie pages: cache pages leaked",
+                        pool.live_pages(),
+                        trie_pages
+                    )
+                }),
+            ]);
+            pool.clear_prefix_cache();
+            all(vec![
+                drained,
+                ensure(pool.cached_tokens() == 0, || "cached tokens survive clear".into()),
+                ensure(pool.live_pages() == 0, || {
+                    format!("{} pages alive after clear + drain", pool.live_pages())
+                }),
+            ])
+        },
+    );
+}
+
+#[test]
+fn prop_prefix_cache_on_off_streams_bitwise_identical() {
+    // The prefix cache must be a pure compute optimization: with identical
+    // requests, an engine with the cache on — cold AND warm (second wave
+    // adopting trie pages) — emits exactly the token streams of an engine
+    // with it off, for greedy and seeded-sampling requests alike. Holds
+    // because per-position attention and per-position int8 quantization are
+    // chunking-invariant, so a cached page is bit-identical to a recomputed
+    // one and suffix-only prefill is just another chunking; samplers still
+    // consume one private-stream draw per non-greedy token.
+    use aser::coordinator::kvpool::KV_TILE;
+    use aser::coordinator::{BatchConfig, Engine, EngineConfig, GenRequest};
+    use aser::model::{synthetic_model, KvDtype, SamplingParams};
+    use std::sync::Arc;
+
+    let mut model = synthetic_model("micro", 931).unwrap();
+    model.cfg.max_seq = 512; // room for two-page shared prompts (micro is 64)
+    model.refresh_derived();
+    let model = Arc::new(model);
+
+    // Six requests per wave sharing a two-page preamble; tails differ per
+    // request, and odd ids sample at temperature with a fixed seed.
+    let preamble: Vec<u32> = (0..2 * KV_TILE).map(|i| 2 + (i * 13 % 110) as u32).collect();
+    let mk_reqs = || -> Vec<GenRequest> {
+        (0..6usize)
+            .map(|r| {
+                let mut prompt = preamble.clone();
+                prompt.extend((0..4 + r).map(|t| 2 + ((r * 37 + t * 11) % 110) as u32));
+                let mut req = GenRequest::new(r as u64, prompt, 6);
+                if r % 2 == 1 {
+                    req.sampling = SamplingParams {
+                        temperature: 0.9,
+                        top_k: 0,
+                        top_p: 1.0,
+                        seed: 1000 + r as u64,
+                        stop_tokens: Vec::new(),
+                    };
+                }
+                req
+            })
+            .collect()
+    };
+    let run_wave = |engine: &Engine| -> Vec<Vec<u32>> {
+        let handles: Vec<_> = mk_reqs().into_iter().map(|r| engine.submit(r)).collect();
+        let mut out = vec![Vec::new(); handles.len()];
+        for h in handles {
+            let r = h.wait();
+            assert!(r.finish.is_completed(), "req {}: {:?}", r.id, r.finish);
+            out[r.id as usize] = r.tokens;
+        }
+        out
+    };
+
+    for kv_dtype in [KvDtype::F32, KvDtype::Int8] {
+        let mk_engine = |prefix_cache: bool| {
+            Engine::new(
+                Arc::clone(&model),
+                EngineConfig {
+                    workers: 1,
+                    batch: BatchConfig {
+                        stop_on_eos: false,
+                        kv_dtype,
+                        prefix_cache,
+                        ..Default::default()
+                    },
+                    kv_tokens: 1 << 13,
+                },
+            )
+        };
+        let off = mk_engine(false);
+        let want = run_wave(&off);
+        let off_metrics = off.shutdown();
+        let off_hits: usize = off_metrics.iter().map(|m| m.prefix_hit_tokens).sum();
+        assert_eq!(off_hits, 0, "{kv_dtype}: cache-off engine reported prefix hits");
+
+        let on = mk_engine(true);
+        let cold = run_wave(&on);
+        let warm = run_wave(&on); // same prompts → trie hits on the preamble
+        assert_eq!(on.kv_used_tokens(), 0, "{kv_dtype}: leases must drain");
+        assert!(on.kv_cached_tokens() > 0, "{kv_dtype}: trie must retain the preamble");
+        let on_metrics = on.shutdown();
+        let hits: usize = on_metrics.iter().map(|m| m.prefix_hit_tokens).sum();
+        assert!(
+            hits >= 2 * KV_TILE,
+            "{kv_dtype}: warm wave reused only {hits} prefix tokens"
+        );
+
+        assert_eq!(cold, want, "{kv_dtype}: prefix-cache on (cold) diverged from off");
+        assert_eq!(warm, want, "{kv_dtype}: prefix-cache warm wave diverged from off");
+    }
+}
