@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
                     workers: 1,
                     kv_tokens: 1 << 14,
                     batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+                    draft: None,
                 },
             );
             let streamed = engine.submit(GenRequest::new(0, vec![2, 9, 4], 8));

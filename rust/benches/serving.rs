@@ -19,20 +19,23 @@
 //! budget), and a `prefix_cache` section (repeated-prefix workload, both
 //! KV dtypes: cold vs warm prompt-absorption tok/s and p50/p95 TTFT —
 //! warm waves adopt the shared pages from the pool's radix trie and
-//! prefill only the novel tails). `scripts/bench_diff` gates on
-//! long-prompt TTFT, long-context decode, the Engine-path decode tok/s,
-//! int8/f32 decode ≥ 0.9x, int8/f32 capacity ≥ 3x, and warm prefix TTFT
-//! ≤ 0.6x cold. `--kv-bits {8,32}` flips the serving/stream sections onto
-//! the quantized cache.
+//! prefill only the novel tails), and a `spec_decode` section (speculative
+//! decoding with a truncated self-draft at batch 4: decode tok/s,
+//! acceptance rate, and speedup vs `spec_k = 0` — target ≥ 1.2x best-row).
+//! `scripts/bench_diff` gates on long-prompt TTFT, long-context decode,
+//! the Engine-path decode tok/s, int8/f32 decode ≥ 0.9x, int8/f32
+//! capacity ≥ 3x, warm prefix TTFT ≤ 0.6x cold, and spec_decode speedup
+//! ≥ 0.9x baseline. `--kv-bits {8,32}` flips the serving/stream sections
+//! onto the quantized cache.
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
     calibrate_model, poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig,
-    Engine, EngineConfig, FinishReason, GenRequest, ServerConfig, TokenEvent,
+    BatchMetrics, Engine, EngineConfig, FinishReason, GenRequest, ServerConfig, TokenEvent,
 };
 use aser::coordinator::KvPool;
 use aser::methods::{method_by_name, RankPolicy};
-use aser::model::{synthetic_model, ChunkLogits, Gpt, KvCache, KvDtype, SeqChunk};
+use aser::model::{synthetic_model, ChunkLogits, DraftModel, Gpt, KvCache, KvDtype, SeqChunk};
 use aser::quant::Precision;
 use aser::tensor::QGemmArena;
 use aser::util::json::{num, obj, s, Json};
@@ -148,6 +151,7 @@ fn main() {
     let mut kv_quant_decode_rows: Vec<Json> = Vec::new();
     let mut kv_quant_capacity_rows: Vec<Json> = Vec::new();
     let mut prefix_cache_rows: Vec<Json> = Vec::new();
+    let mut spec_decode_rows: Vec<Json> = Vec::new();
 
     for variant in ["fp16", "aser-w4a8"] {
         let model = if variant == "fp16" {
@@ -307,6 +311,7 @@ fn main() {
                     workers: 1,
                     batch: BatchConfig { max_batch: 8, kv_dtype, ..Default::default() },
                     kv_tokens: 1 << 14,
+                    draft: None,
                 },
             );
             let reqs =
@@ -348,6 +353,7 @@ fn main() {
                     workers: 1,
                     batch: BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() },
                     kv_tokens: 1 << 14,
+                    draft: None,
                 },
             );
             let mut cancel_ms: Vec<f64> = Vec::new();
@@ -574,6 +580,7 @@ fn main() {
                             ..Default::default()
                         },
                         kv_tokens: 1 << 13,
+                        draft: None,
                     },
                 )
             };
@@ -610,6 +617,105 @@ fn main() {
         }
     }
 
+    // ---- spec_decode: speculative decoding with a truncated self-draft.
+    //      The draft proposes spec_k tokens per sequence with the target's
+    //      first layer only (half the depth on micro), the target verifies
+    //      all k+1 rows in ONE ragged forward span, and the acceptance walk
+    //      keeps streams bitwise identical to plain decode (pinned in
+    //      tests/properties.rs). Measured end-to-end at batch 4 on the
+    //      W4A8 model, decode-dominated workload (short prompt, 48 new
+    //      tokens). Acceptance: best spec row ≥ 1.2x the spec_k=0
+    //      baseline; scripts/bench_diff gates regressions at 0.9x. ----
+    {
+        let m = synthetic_model("micro", 7).unwrap();
+        let method = method_by_name("aser", RankPolicy::Fixed(8), 4).unwrap();
+        let qm =
+            Arc::new(run_ptq(m, &stats, method.as_ref(), Precision::w4a8(), 0).unwrap().0);
+        let draft = DraftModel::self_draft(Arc::clone(&qm), 1).unwrap();
+        let target_layers = qm.cfg.n_layers;
+        let batch = 4usize;
+        let prompt_len = 8usize;
+        let max_new = 48usize;
+        let run_k = |spec_k: usize| -> (f64, BatchMetrics) {
+            let engine = Engine::new(
+                Arc::clone(&qm),
+                EngineConfig {
+                    workers: 1,
+                    batch: BatchConfig {
+                        max_batch: batch,
+                        stop_on_eos: false,
+                        prefix_cache: false,
+                        spec_k,
+                        ..Default::default()
+                    },
+                    kv_tokens: 1 << 14,
+                    draft: if spec_k > 0 { Some(draft.clone()) } else { None },
+                },
+            );
+            let mut wall = 1e-9f64;
+            let mut tokens = 0usize;
+            // Wave 0 warms the allocator/arena/thread pool; wave 1 is
+            // measured. stop_on_eos is off, so every request decodes its
+            // full max_new and all configs do identical token work.
+            for wave in 0..2u64 {
+                let reqs =
+                    synthetic_requests(qm.cfg.vocab_size, batch, prompt_len, max_new, 37 + wave)
+                        .unwrap();
+                let t0 = Instant::now();
+                let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r)).collect();
+                let n: usize = handles.into_iter().map(|h| h.wait().tokens.len()).sum();
+                assert_eq!(n, batch * max_new, "spec_decode wave under-generated");
+                if wave == 1 {
+                    wall = t0.elapsed().as_secs_f64().max(1e-9);
+                    tokens = n;
+                }
+            }
+            let metrics = engine.shutdown().remove(0);
+            (tokens as f64 / wall, metrics)
+        };
+        println!("\n== spec_decode (batch {batch}, draft self:1, {max_new} new) ==");
+        println!(
+            "{:>7} {:>14} {:>12} {:>10} {:>9}",
+            "spec_k", "decode tok/s", "accept rate", "acc/iter", "speedup"
+        );
+        let (base_tok_s, _) = run_k(0);
+        println!("{:>7} {base_tok_s:>14.1} {:>12} {:>10} {:>9}", 0, "-", "-", "1.00x");
+        spec_decode_rows.push(obj(vec![
+            ("variant", s("aser-w4a8")),
+            ("draft", s("off")),
+            ("spec_k", num(0.0)),
+            ("batch", num(batch as f64)),
+            ("max_new", num(max_new as f64)),
+            ("decode_tok_s", num(base_tok_s)),
+            ("acceptance_rate", num(0.0)),
+            ("accepted_per_iteration", num(0.0)),
+            ("draft_depth_fraction", num(0.0)),
+            ("speedup_vs_k0", num(1.0)),
+        ]));
+        for &k in &[1usize, 2, 4] {
+            let (tok_s, m) = run_k(k);
+            let rate = m.spec_accepted as f64 / (m.spec_drafted as f64).max(1.0);
+            let acc_per_iter = m.spec_accepted as f64 / (m.iterations as f64).max(1.0);
+            let speedup = tok_s / base_tok_s.max(1e-9);
+            println!(
+                "{k:>7} {tok_s:>14.1} {:>11.1}% {acc_per_iter:>10.2} {speedup:>8.2}x",
+                100.0 * rate
+            );
+            spec_decode_rows.push(obj(vec![
+                ("variant", s("aser-w4a8")),
+                ("draft", s(draft.label())),
+                ("spec_k", num(k as f64)),
+                ("batch", num(batch as f64)),
+                ("max_new", num(max_new as f64)),
+                ("decode_tok_s", num(tok_s)),
+                ("acceptance_rate", num(rate)),
+                ("accepted_per_iteration", num(acc_per_iter)),
+                ("draft_depth_fraction", num(draft.depth_fraction(target_layers))),
+                ("speedup_vs_k0", num(speedup)),
+            ]));
+        }
+    }
+
     let report = obj(vec![
         ("bench", s("serving")),
         ("model", s("micro")),
@@ -628,6 +734,7 @@ fn main() {
             ]),
         ),
         ("prefix_cache", Json::Arr(prefix_cache_rows)),
+        ("spec_decode", Json::Arr(spec_decode_rows)),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");

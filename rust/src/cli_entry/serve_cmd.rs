@@ -9,10 +9,11 @@
 
 use super::ctx::Ctx;
 use crate::coordinator::{
-    poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig, Engine,
-    EngineConfig, FinishReason, RequestHandle, Response, ServerRun, TokenEvent,
+    poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig, BatchMetrics,
+    Engine, EngineConfig, FinishReason, RequestHandle, Response, ServerRun, TokenEvent,
 };
-use crate::model::{KvDtype, SamplingParams};
+use crate::methods::{method_by_name, RankPolicy};
+use crate::model::{DraftModel, DraftSpec, KvDtype, SamplingParams};
 use crate::quant::Precision;
 use crate::util::cli::Args;
 use anyhow::Result;
@@ -118,6 +119,21 @@ pub fn run(args: &Args) -> Result<()> {
         "off" => false,
         other => anyhow::bail!("--prefix-cache must be on or off, got {other}"),
     };
+    // Speculative decoding: `--draft self:<n>` proposes with the target's
+    // own first n layers (weights shared, nothing copied); `--draft rtn`
+    // proposes with an independently RTN-quantized sibling. `--spec-k` is
+    // the proposals per sequence per iteration (defaults to 4 once a draft
+    // is chosen). Outputs stay bitwise identical to --draft off.
+    let draft_spec =
+        DraftSpec::parse(&args.str_or("draft", "off")).map_err(anyhow::Error::msg)?;
+    let spec_k =
+        args.usize_or("spec-k", if draft_spec == DraftSpec::Off { 0 } else { 4 })?;
+    if spec_k > 0 && draft_spec == DraftSpec::Off {
+        anyhow::bail!("--spec-k {spec_k} needs a proposer: pass --draft self:<n> or --draft rtn");
+    }
+    if spec_k == 0 && draft_spec != DraftSpec::Off {
+        anyhow::bail!("--draft {draft_spec} does nothing with --spec-k 0; drop one of the two");
+    }
 
     let model = ctx.model(&model_name)?;
     let model = if method_name == "fp16" {
@@ -148,6 +164,29 @@ pub fn run(args: &Args) -> Result<()> {
         };
     }
 
+    let model = Arc::new(model);
+    let draft = match &draft_spec {
+        DraftSpec::Off => None,
+        DraftSpec::SelfLayers(n) => {
+            Some(DraftModel::self_draft(Arc::clone(&model), *n).map_err(anyhow::Error::msg)?)
+        }
+        DraftSpec::Rtn => {
+            // Quantize the same base model with plain RTN at the serving
+            // precision — the cheap sibling the paper's methods improve on,
+            // recycled here as a proposer (acceptance checks keep outputs
+            // exact regardless of its quality).
+            let base = ctx.model(&model_name)?;
+            let prec = Precision::parse(&args.str_or("prec", "w4a8"))?;
+            let stats = ctx.calib(&base, &args.str_or("profile", "wiki"))?;
+            let method = method_by_name("rtn", RankPolicy::Fixed(0), 0)?;
+            let (dmodel, report) = run_ptq(base, &stats, method.as_ref(), prec, 0)?;
+            println!("[draft] rtn @ {prec}: mean rel err {:.5}", report.mean_rel_error());
+            Some(
+                DraftModel::independent(Arc::new(dmodel), &model.cfg, "rtn")
+                    .map_err(anyhow::Error::msg)?,
+            )
+        }
+    };
     let cfg = EngineConfig {
         workers,
         batch: BatchConfig {
@@ -157,11 +196,12 @@ pub fn run(args: &Args) -> Result<()> {
             kv_reserve,
             kv_dtype,
             prefix_cache,
+            spec_k,
             ..Default::default()
         },
         kv_tokens: args.usize_or("kv-tokens", 1 << 15)?,
+        draft,
     };
-    let model = Arc::new(model);
     let run = if stream {
         let t0 = Instant::now();
         let engine = Engine::new(model, cfg);
@@ -178,7 +218,7 @@ pub fn run(args: &Args) -> Result<()> {
     println!(
         "== serve: {n_requests} requests, {workers} workers, batch {max_batch}, \
          chunk {prefill_chunk}, budget {token_budget}, temperature {temperature}, \
-         kv {kv_dtype}, prefix-cache {} ==",
+         kv {kv_dtype}, prefix-cache {}, draft {draft_spec} (k={spec_k}) ==",
         if prefix_cache { "on" } else { "off" }
     );
     println!("  completed      {}", run.responses.len());
@@ -202,25 +242,101 @@ pub fn run(args: &Args) -> Result<()> {
         run.prefix_hit_rate() * 100.0
     );
     println!("  peak kv        {} tokens (leased + cached, max worker)", run.peak_kv_tokens());
-    for (i, m) in run.per_worker.iter().enumerate() {
+    let (drafted, accepted) = run
+        .per_worker
+        .iter()
+        .fold((0usize, 0usize), |(d, a), m| (d + m.spec_drafted, a + m.spec_accepted));
+    if drafted > 0 {
         println!(
-            "  worker{i}: {} reqs, {} decode toks, {} iters, peak batch {}, peak rows {}, \
-             kv-rejects {}, kv-grows {}, peak kv {}, prefix hits {} ({} toks)",
-            m.requests,
-            m.generated_tokens,
-            m.iterations,
-            m.peak_batch,
-            m.peak_iter_tokens,
-            m.rejected_capacity,
-            m.kv_grows,
-            m.peak_tokens,
-            m.prefix_hits,
-            m.prefix_hit_tokens,
-        );
-        println!(
-            "           finish: eos {}, length {}, truncated-kv {}, cancelled {}, rejected {}",
-            m.finished_eos, m.finished_length, m.truncated_kv, m.cancelled, m.rejected_impossible
+            "  speculation    {accepted}/{drafted} drafted tokens accepted ({:.1}%)",
+            100.0 * accepted as f64 / drafted as f64
         );
     }
+    for (i, m) in run.per_worker.iter().enumerate() {
+        print!("{}", worker_summary(i, m));
+    }
     Ok(())
+}
+
+/// One worker's metrics block for the serve summary. Every [`BatchMetrics`]
+/// counter appears here exactly once — `worker_summary_surfaces_every_counter`
+/// builds the metrics with an exhaustive struct literal, so adding a counter
+/// without surfacing it fails the build, and dropping or double-printing one
+/// fails the test.
+fn worker_summary(i: usize, m: &BatchMetrics) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "  worker{i}: {} reqs, {} decode toks, {} prefill toks, {} iters, peak batch {}, \
+         peak rows {}, kv-rejects {}, kv-grows {}, peak kv {}, prefix hits {} ({} toks)",
+        m.requests,
+        m.generated_tokens,
+        m.prefill_tokens,
+        m.iterations,
+        m.peak_batch,
+        m.peak_iter_tokens,
+        m.rejected_capacity,
+        m.kv_grows,
+        m.peak_tokens,
+        m.prefix_hits,
+        m.prefix_hit_tokens,
+    );
+    let _ = writeln!(
+        s,
+        "           finish: eos {}, length {}, truncated-kv {}, cancelled {}, rejected {}",
+        m.finished_eos, m.finished_length, m.truncated_kv, m.cancelled, m.rejected_impossible
+    );
+    let _ = writeln!(
+        s,
+        "           spec: drafted {}, accepted {}, rejected {}",
+        m.spec_drafted, m.spec_accepted, m.spec_rejected
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite guard: every `BatchMetrics` counter shows up in the serve
+    /// summary exactly once. The struct literal is deliberately exhaustive
+    /// (no `..Default::default()`): a new counter fails compilation here
+    /// until it is both given a sentinel and printed by `worker_summary`.
+    #[test]
+    fn worker_summary_surfaces_every_counter() {
+        let m = BatchMetrics {
+            requests: 3101,
+            generated_tokens: 3203,
+            prefill_tokens: 3307,
+            iterations: 3409,
+            peak_batch: 3511,
+            peak_iter_tokens: 3613,
+            rejected_capacity: 3719,
+            rejected_impossible: 3821,
+            kv_grows: 3923,
+            truncated_kv: 4027,
+            cancelled: 4129,
+            finished_eos: 4231,
+            finished_length: 4337,
+            peak_tokens: 4439,
+            prefix_hits: 4541,
+            prefix_hit_tokens: 4643,
+            spec_drafted: 4745,
+            spec_accepted: 4847,
+            spec_rejected: 4951,
+        };
+        let s = worker_summary(7, &m);
+        // Distinct 4-digit sentinels, always delimited by non-digits in the
+        // output, so a plain substring count is collision-free.
+        for v in [
+            3101, 3203, 3307, 3409, 3511, 3613, 3719, 3821, 3923, 4027, 4129, 4231, 4337,
+            4439, 4541, 4643, 4745, 4847, 4951,
+        ] {
+            let needle = v.to_string();
+            let n = s.matches(&needle).count();
+            assert_eq!(n, 1, "counter value {v} appears {n} times in summary:\n{s}");
+        }
+        assert!(s.contains("worker7"));
+    }
 }

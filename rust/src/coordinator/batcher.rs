@@ -92,6 +92,26 @@
 //! token the sequence finishes gracefully with
 //! [`FinishReason::TruncatedKv`].
 //!
+//! ## Speculative decoding ([`BatchConfig::spec_k`] + a [`DraftModel`])
+//!
+//! With a draft model attached ([`run_batcher_spec`]) and `spec_k ≥ 1`,
+//! each decode-ready sequence runs the draft/verify/rollback protocol
+//! documented in [`crate::model::draft`]: the draft proposes up to
+//! `spec_k` tokens (batched across sequences at draft depth), the planner
+//! stacks `[pending, d₁ … d_k]` as one [`ChunkLogits::All`] span of the
+//! SAME ragged target forward prefill shares, and writeback walks the
+//! `k+1` logits rows accepting the longest draft prefix plus one
+//! corrected (or bonus) token via [`Sampler::accept`]. Unconfirmed
+//! positions roll back with `KvCache::truncate` on both the target and
+//! draft caches — whole rolled-back pages return to the pool meter. The
+//! per-sequence depth degrades (never the correctness) near `max_new`,
+//! the KV window, or an ungrowable lease, and `spec_k = 0` (or no draft)
+//! is exactly the non-speculative path. Output streams are bitwise
+//! invariant to `spec_k` — see the distribution argument in
+//! [`crate::model::draft`] — so speculation is purely a throughput knob,
+//! accounted by `BatchMetrics::{spec_drafted, spec_accepted,
+//! spec_rejected}`.
+//!
 //! TTFT is stamped when the chunked forward that ends a sequence's prefill
 //! writes its logits back — the instant its first token is sampled — and
 //! delivered immediately as `PrefillDone`.
@@ -106,7 +126,8 @@
 use super::kvpool::{KvPool, Lease};
 use crate::data::vocab::EOS;
 use crate::model::{
-    ChunkLogits, Gpt, KvCache, KvDtype, Sampler, SamplingParams, SeqChunk, PREFILL_CHUNK,
+    ChunkLogits, DraftModel, Gpt, KvCache, KvDtype, Sampler, SamplingParams, SeqChunk,
+    PREFILL_CHUNK,
 };
 use crate::tensor::QGemmArena;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -203,6 +224,15 @@ impl Submission {
     }
 }
 
+/// Per-sequence speculative-decoding state (present only when a draft
+/// model is attached): the draft's private layer-truncated KV cache plus
+/// the full emitted token history (prompt + generated) the draft trails
+/// behind on. `hist[cache.len()..]` is always the catch-up tail.
+struct DraftSeq {
+    cache: KvCache,
+    hist: Vec<u32>,
+}
+
 /// An in-flight sequence.
 struct Active {
     req: GenRequest,
@@ -220,6 +250,11 @@ struct Active {
     first_token_at: Option<Instant>,
     /// Set when a terminal condition is decided; retired at end of iteration.
     finish: Option<FinishReason>,
+    /// Speculation state; `None` when serving non-speculatively.
+    draft: Option<DraftSeq>,
+    /// This iteration's draft proposals (set at planning, consumed at
+    /// writeback by the acceptance walk).
+    proposed: Vec<u32>,
 }
 
 impl Active {
@@ -266,6 +301,11 @@ pub struct BatchConfig {
     /// disables both matching and publishing — useful for A/B benches and
     /// as a kill switch.
     pub prefix_cache: bool,
+    /// Speculation depth: draft tokens proposed per sequence per decode
+    /// iteration (effective only when a [`DraftModel`] is attached via
+    /// [`run_batcher_spec`]). `0` disables speculation; output streams are
+    /// bitwise invariant to this knob (see the module doc).
+    pub spec_k: usize,
 }
 
 impl Default for BatchConfig {
@@ -280,6 +320,7 @@ impl Default for BatchConfig {
             stop_on_eos: true,
             kv_dtype: KvDtype::F32,
             prefix_cache: true,
+            spec_k: 0,
         }
     }
 }
@@ -297,8 +338,9 @@ pub struct BatchMetrics {
     pub iterations: usize,
     pub peak_batch: usize,
     /// Most token rows fed in one ragged forward. Bounded by
-    /// `max(token_budget, concurrent decode rows)` — decode rows (≤
-    /// `max_batch`) are planned unconditionally; only prompt chunks are
+    /// `max(token_budget, concurrent decode rows · (1 + spec_k))` — decode
+    /// rows (≤ `max_batch`, up to `1 + spec_k` rows each when
+    /// speculating) are planned unconditionally; only prompt chunks are
     /// budget-limited.
     pub peak_iter_tokens: usize,
     /// Transient pool pushback: the request was re-queued and admitted
@@ -326,6 +368,14 @@ pub struct BatchMetrics {
     /// Prompt tokens skipped at prefill time because a cached prefix page
     /// already held them (whole `KV_TILE` pages per hit).
     pub prefix_hit_tokens: usize,
+    /// Draft tokens proposed across all speculative verify spans.
+    pub spec_drafted: usize,
+    /// Draft tokens confirmed by the target's acceptance walk — each one
+    /// is a decode token that skipped its own target iteration.
+    pub spec_accepted: usize,
+    /// Draft tokens rolled back (`spec_drafted − spec_accepted`): rejected
+    /// by the acceptance sample, or discarded past a mid-span finish.
+    pub spec_rejected: usize,
 }
 
 impl BatchMetrics {
@@ -368,8 +418,26 @@ pub fn run_batcher(
     pool: &KvPool,
     cfg: &BatchConfig,
     rx: Receiver<Submission>,
+    on_finish: impl FnMut(&GenRequest, FinishReason),
+) -> BatchMetrics {
+    run_batcher_spec(model, None, pool, cfg, rx, on_finish)
+}
+
+/// [`run_batcher`] with an optional speculative draft model. Speculation
+/// engages only when BOTH a draft is supplied and `cfg.spec_k ≥ 1`;
+/// otherwise this is exactly the non-speculative loop. See the module
+/// doc's speculation section for the protocol.
+pub fn run_batcher_spec(
+    model: &Gpt,
+    draft: Option<&DraftModel>,
+    pool: &KvPool,
+    cfg: &BatchConfig,
+    rx: Receiver<Submission>,
     mut on_finish: impl FnMut(&GenRequest, FinishReason),
 ) -> BatchMetrics {
+    // Speculation is on for the whole run or not at all; per-sequence
+    // depth still degrades dynamically near limits.
+    let draft = if cfg.spec_k > 0 { draft } else { None };
     let mut active: Vec<Active> = Vec::new();
     let mut metrics = BatchMetrics::default();
     let mut channel_open = true;
@@ -464,6 +532,13 @@ pub fn run_batcher(
                         pending: None,
                         first_token_at: None,
                         finish: None,
+                        // The draft trails the FULL prompt even under a
+                        // prefix-cache hit: its private cache is cold.
+                        draft: draft.map(|d| DraftSeq {
+                            cache: d.new_cache(),
+                            hist: sub.req.prompt.clone(),
+                        }),
+                        proposed: Vec::new(),
                         req: sub.req,
                         events: sub.events,
                         cancel: sub.cancel,
@@ -514,7 +589,10 @@ pub fn run_batcher(
         let mut spans: Vec<(usize, usize, usize, ChunkLogits)> = Vec::new();
 
         // Decode rows first: every decoding sequence feeds its pending
-        // token regardless of prefill pressure.
+        // token regardless of prefill pressure. Speculation candidates are
+        // collected as (active idx, depth, pending token) — their spans
+        // are planned after the batched draft proposal below.
+        let mut spec: Vec<(usize, usize, u32)> = Vec::new();
         for (i, a) in active.iter_mut().enumerate() {
             if a.finish.is_some() || a.fed < a.req.prompt.len() {
                 continue;
@@ -545,11 +623,70 @@ pub fn run_batcher(
                     continue;
                 }
             }
-            spans.push((i, flat.len(), 1, ChunkLogits::Last));
-            flat.push(next);
+            // Speculation depth for this step, degraded (never failed)
+            // near limits: emit at most the `max_new` remainder; sample
+            // row j only where non-speculative decode would still have
+            // fed a token (so Length finishes land on the same stream
+            // position); stay within the grown lease.
+            let mut k_eff = 0usize;
+            if a.draft.is_some() {
+                k_eff = cfg
+                    .spec_k
+                    .min((a.req.max_new - a.n_generated).saturating_sub(1))
+                    .min((model.cfg.max_seq - a.cache.len()).saturating_sub(2));
+                if k_eff > 0 && a.cache.len() + 1 + k_eff > a.lease.tokens {
+                    let extra = a.cache.len() + 1 + k_eff - a.lease.tokens;
+                    if pool.grow(&mut a.lease, extra) {
+                        metrics.kv_grows += 1;
+                    } else {
+                        k_eff = a.lease.tokens - a.cache.len() - 1;
+                    }
+                }
+            }
+            if k_eff > 0 {
+                spec.push((i, k_eff, next));
+            } else {
+                spans.push((i, flat.len(), 1, ChunkLogits::Last));
+                flat.push(next);
+            }
             a.pending = None;
         }
-        let mut budget_left = budget.saturating_sub(spans.len());
+
+        // Batched draft proposal: one ragged catch-up forward over every
+        // speculating sequence's unseen tail, then ≤ spec_k − 1 batched
+        // single-row rounds — all at draft depth. Verify spans stack
+        // `[pending, d₁ … d_k]` with ChunkLogits::All for the acceptance
+        // walk at writeback.
+        if !spec.is_empty() {
+            let d = draft.expect("spec candidates only exist with a draft");
+            let tails: Vec<Vec<u32>> = spec
+                .iter()
+                .map(|&(i, ..)| {
+                    let ds = active[i].draft.as_ref().expect("speculating without draft state");
+                    ds.hist[ds.cache.len()..].to_vec()
+                })
+                .collect();
+            let ks: Vec<usize> = spec.iter().map(|&(_, k, _)| k).collect();
+            let props = {
+                let mut want = spec.iter().map(|&(i, ..)| i).peekable();
+                let mut dcaches: Vec<&mut KvCache> = Vec::with_capacity(spec.len());
+                for (i, a) in active.iter_mut().enumerate() {
+                    if want.peek() == Some(&i) {
+                        want.next();
+                        dcaches.push(&mut a.draft.as_mut().unwrap().cache);
+                    }
+                }
+                d.propose_batch(&tails, &ks, &mut dcaches, &mut arena)
+            };
+            for (ps, &(i, k, next)) in props.into_iter().zip(&spec) {
+                metrics.spec_drafted += k;
+                spans.push((i, flat.len(), 1 + k, ChunkLogits::All));
+                flat.push(next);
+                flat.extend_from_slice(&ps);
+                active[i].proposed = ps;
+            }
+        }
+        let mut budget_left = budget.saturating_sub(flat.len());
 
         // Prompt chunks from the leftover budget, rotating the start index
         // so chunk grants are fair across prefilling sequences.
@@ -609,13 +746,76 @@ pub fn run_batcher(
             // iteration to argmax.
             let logits_at = Instant::now();
             let mut row = 0usize;
-            for &(i, _, _, lg) in &spans {
-                if lg == ChunkLogits::None {
+            for &(i, _, len, lg) in &spans {
+                let nrows = lg.rows(len);
+                if nrows == 0 {
                     continue;
                 }
                 let a = &mut active[i];
-                let lrow = logits.row(row);
-                row += 1;
+                let r0 = row;
+                row += nrows;
+                if lg == ChunkLogits::All {
+                    // Speculative verify span `[pending, d₁ … d_k]`:
+                    // acceptance walk over the k+1 rows in position order.
+                    // Each emitted token is a plain sampler draw from the
+                    // target's row — the draft only decides whether the
+                    // walk continues — so RNG consumption and the emitted
+                    // stream match non-speculative decode exactly.
+                    let props = std::mem::take(&mut a.proposed);
+                    let k = nrows - 1;
+                    debug_assert_eq!(props.len(), k);
+                    // `seen` already advanced over the whole span.
+                    let base = a.cache.len() - nrows;
+                    let mut n_acc = 0usize;
+                    for j in 0..nrows {
+                        let lrow = logits.row(r0 + j);
+                        let (tok, accepted) = if j < k {
+                            a.sampler.accept(lrow, props[j])
+                        } else {
+                            (a.sampler.sample(lrow), false) // bonus row
+                        };
+                        let index = a.n_generated;
+                        a.n_generated += 1;
+                        metrics.generated_tokens += 1;
+                        a.emit(TokenEvent::Token { token: tok, index });
+                        if accepted {
+                            n_acc += 1;
+                        }
+                        if a.finish.is_some() {
+                            break; // channel died mid-emit
+                        }
+                        if let Some(ds) = a.draft.as_mut() {
+                            ds.hist.push(tok);
+                        }
+                        if (cfg.stop_on_eos && tok == EOS) || a.req.sampling.is_stop_token(tok) {
+                            a.finish = Some(FinishReason::Eos);
+                        } else if a.n_generated >= a.req.max_new {
+                            a.finish = Some(FinishReason::Length);
+                        } else if !accepted {
+                            // Correction (j < k) or bonus (j == k) token:
+                            // it was emitted from a valid row but never
+                            // fed — it becomes the next pending token.
+                            a.pending = Some(tok);
+                        }
+                        if a.finish.is_some() || !accepted {
+                            break;
+                        }
+                    }
+                    metrics.spec_accepted += n_acc;
+                    metrics.spec_rejected += k - n_acc;
+                    // Roll back unconfirmed suffix positions on BOTH
+                    // caches: the target keeps pending + accepted drafts;
+                    // the draft (which consumed its tail + k−1 proposals)
+                    // keeps its context + accepted drafts. Whole freed
+                    // pages return to the pool meter.
+                    a.cache.truncate(base + 1 + n_acc);
+                    if let Some(ds) = a.draft.as_mut() {
+                        let ctx = ds.cache.len() + 1 - k;
+                        ds.cache.truncate(ctx + n_acc);
+                    }
+                    continue;
+                }
+                let lrow = logits.row(r0);
                 if a.first_token_at.is_none() && a.fed >= a.req.prompt.len() {
                     // Prefill just completed: its first generated token is
                     // determined by these logits, so TTFT is stamped (and
@@ -639,6 +839,11 @@ pub fn run_batcher(
                 a.emit(TokenEvent::Token { token: tok, index });
                 if a.finish.is_some() {
                     continue; // channel died mid-emit
+                }
+                if let Some(ds) = a.draft.as_mut() {
+                    // Keep the draft's history in sync on non-speculative
+                    // steps too (prefill-final rows, degraded-depth steps).
+                    ds.hist.push(tok);
                 }
                 if (cfg.stop_on_eos && tok == EOS) || a.req.sampling.is_stop_token(tok) {
                     a.finish = Some(FinishReason::Eos);
@@ -1136,6 +1341,140 @@ mod tests {
         assert_eq!(out.iter().find(|r| r.id == 2).unwrap().reason, FinishReason::Rejected);
         assert_eq!(m.requests, 1, "max_new 0 finishes at admission");
         assert_eq!(m.rejected_impossible, 1);
+    }
+
+    /// Serve with a self-draft attached at the given depth/spec_k.
+    fn serve_spec(
+        reqs: Vec<GenRequest>,
+        cfg: BatchConfig,
+        kv_tokens: usize,
+        draft_layers: usize,
+    ) -> (Vec<Served>, BatchMetrics) {
+        let model = Arc::new(synthetic_model("micro", 51).unwrap());
+        let draft = crate::model::DraftModel::self_draft(Arc::clone(&model), draft_layers).unwrap();
+        let pool = KvPool::new(kv_tokens, 8);
+        let (tx, rx) = channel();
+        let mut streams = Vec::new();
+        for r in reqs {
+            let id = r.id;
+            let (sub, erx, _cancel) = Submission::channel(r);
+            tx.send(sub).unwrap();
+            streams.push((id, erx));
+        }
+        drop(tx);
+        let m = run_batcher_spec(&model, Some(&draft), &pool, &cfg, rx, |_, _| {});
+        assert_eq!(pool.used_tokens(), 0, "all leases freed");
+        let out = streams
+            .iter()
+            .map(|(id, erx)| {
+                let (tokens, reason, ttft, total) = drain(erx);
+                Served { id: *id, tokens, reason, ttft, total }
+            })
+            .collect();
+        (out, m)
+    }
+
+    #[test]
+    fn speculative_streams_match_plain_serving_bitwise() {
+        // The headline invariant: with a draft attached, every stream —
+        // token for token, finish reason for finish reason — equals the
+        // non-speculative serve, across spec_k and draft depths. Mixed
+        // greedy + seeded-sampling traffic, plus a stop-token request.
+        let reqs = || -> Vec<GenRequest> {
+            let mut v: Vec<GenRequest> = (0..4u64)
+                .map(|i| req(i, vec![5 + i as u32, 9, 13 + i as u32], 12))
+                .collect();
+            v[1].sampling = SamplingParams {
+                temperature: 2.0,
+                top_k: 8,
+                top_p: 0.9,
+                seed: 77,
+                stop_tokens: vec![],
+            };
+            v[2].sampling = SamplingParams::with_temperature(1.0, 5);
+            v
+        };
+        let base_cfg =
+            || BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() };
+        let (want, _) = serve_cfg(reqs(), base_cfg(), 10_000);
+        for draft_layers in [1usize, 2] {
+            for k in [1usize, 2, 4] {
+                let cfg = BatchConfig { spec_k: k, ..base_cfg() };
+                let (got, m) = serve_spec(reqs(), cfg, 10_000, draft_layers);
+                for id in 0..4u64 {
+                    let w = want.iter().find(|r| r.id == id).unwrap();
+                    let g = got.iter().find(|r| r.id == id).unwrap();
+                    assert_eq!(
+                        g.tokens, w.tokens,
+                        "stream diverged: id {id}, draft self:{draft_layers}, spec_k {k}"
+                    );
+                    assert_eq!(g.reason, w.reason, "finish reason drift: id {id}, spec_k {k}");
+                }
+                assert!(m.spec_drafted > 0, "speculation must engage at spec_k {k}");
+                assert_eq!(m.spec_drafted, m.spec_accepted + m.spec_rejected);
+            }
+        }
+    }
+
+    #[test]
+    fn full_depth_self_draft_accepts_everything_greedy() {
+        // A self-draft over ALL layers proposes exactly the target's greedy
+        // tokens, so greedy requests must accept every draft (only the
+        // final short span near max_new degrades the depth).
+        let cfg = BatchConfig { max_batch: 2, stop_on_eos: false, spec_k: 4, ..Default::default() };
+        let (out, m) = serve_spec(
+            (0..2u64).map(|i| req(i, vec![5 + i as u32, 9], 13)).collect(),
+            cfg,
+            10_000,
+            2,
+        );
+        assert!(out.iter().all(|r| r.reason.is_completed() && r.tokens.len() == 13));
+        assert_eq!(m.spec_rejected, 0, "full-depth greedy self-draft must never miss");
+        assert!(m.spec_accepted > 0);
+        // Accepted drafts shrink the iteration count well below one
+        // target pass per token.
+        assert!(
+            m.iterations < 2 + 13,
+            "speculation should cut iterations, got {}",
+            m.iterations
+        );
+    }
+
+    #[test]
+    fn spec_zero_and_missing_draft_are_plain_serving() {
+        let reqs = || vec![req(0, vec![5, 9, 13], 6)];
+        let (want, wm) = serve_cfg(reqs(), BatchConfig::default(), 10_000);
+        // spec_k = 0 with a draft attached: draft must never run.
+        let (got, m) = serve_spec(reqs(), BatchConfig { spec_k: 0, ..Default::default() }, 10_000, 1);
+        assert_eq!(got[0].tokens, want[0].tokens);
+        assert_eq!((m.spec_drafted, m.spec_accepted, m.spec_rejected), (0, 0, 0));
+        assert_eq!(m.iterations, wm.iterations, "spec_k 0 must be the identical loop");
+        // spec_k > 0 without a draft: run_batcher has none to use.
+        let model = synthetic_model("micro", 51).unwrap();
+        let pool = KvPool::new(10_000, 8);
+        let (tx, rx) = channel();
+        let (sub, erx, _c) = Submission::channel(req(0, vec![5, 9, 13], 6));
+        tx.send(sub).unwrap();
+        drop(tx);
+        let m2 =
+            run_batcher(&model, &pool, &BatchConfig { spec_k: 3, ..Default::default() }, rx, |_, _| {});
+        let (tokens, ..) = drain(&erx);
+        assert_eq!(tokens, want[0].tokens);
+        assert_eq!(m2.spec_drafted, 0);
+    }
+
+    #[test]
+    fn speculation_respects_kv_window_edge() {
+        // 63-token prompt on a 64-position window: exactly one token fits.
+        // Speculation must degrade to zero depth, emit the same single
+        // token, and finish Length — not overrun the window.
+        let edge: Vec<u32> = (0..63).map(|i| 1 + (i % 100) as u32).collect();
+        let cfg = BatchConfig { max_batch: 2, spec_k: 4, ..Default::default() };
+        let (out, _) = serve_spec(vec![req(0, edge.clone(), 5)], cfg, 10_000, 1);
+        assert_eq!(out[0].tokens.len(), 1, "KV window leaves room for exactly one token");
+        assert_eq!(out[0].reason, FinishReason::Length);
+        let (want, _) = serve(vec![req(0, edge, 5)], 2, 10_000);
+        assert_eq!(out[0].tokens, want[0].tokens);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! (`serve_requests(model, cfg, Vec<GenRequest>) -> ServerRun`) that blocked
 //! until every response was collected and decoded greedy-only. [`Engine`] is
 //! the request-granular redesign: it owns the worker threads (each running
-//! [`super::batcher::run_batcher`] over its own [`KvPool`]), routes each
+//! [`super::batcher::run_batcher_spec`] over its own [`KvPool`], with an
+//! optional speculative [`DraftModel`] proposer), routes each
 //! submission to the least-loaded worker, and hands back a
 //! [`RequestHandle`] immediately — tokens stream out as they are generated,
 //! and the handle can cancel the request mid-flight.
@@ -57,10 +58,10 @@
 //! handle, and aggregates a `ServerRun`.
 
 use super::batcher::{
-    run_batcher, BatchConfig, BatchMetrics, FinishReason, GenRequest, Submission, TokenEvent,
+    run_batcher_spec, BatchConfig, BatchMetrics, FinishReason, GenRequest, Submission, TokenEvent,
 };
 use super::kvpool::KvPool;
-use crate::model::Gpt;
+use crate::model::{DraftModel, Gpt};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -75,11 +76,20 @@ pub struct EngineConfig {
     pub batch: BatchConfig,
     /// KV token budget per worker.
     pub kv_tokens: usize,
+    /// Speculative-decoding proposer, cloned into every worker (the handle
+    /// is `Arc`-backed, so no weights are copied). Inert unless
+    /// `batch.spec_k > 0`.
+    pub draft: Option<DraftModel>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: 2, batch: BatchConfig::default(), kv_tokens: 1 << 16 }
+        EngineConfig {
+            workers: 2,
+            batch: BatchConfig::default(),
+            kv_tokens: 1 << 16,
+            draft: None,
+        }
     }
 }
 
@@ -301,10 +311,11 @@ impl Engine {
             let worker_pool = pool.clone();
             let model = Arc::clone(&model);
             let bcfg = cfg.batch.clone();
+            let draft = cfg.draft.clone();
             let load = Arc::new(AtomicUsize::new(0));
             let load2 = Arc::clone(&load);
             let handle = thread::spawn(move || {
-                run_batcher(&model, &worker_pool, &bcfg, rx, |req, _| {
+                run_batcher_spec(&model, draft.as_ref(), &worker_pool, &bcfg, rx, |req, _| {
                     load2.fetch_sub(req.prompt.len() + req.max_new, Ordering::SeqCst);
                 })
             });
@@ -469,6 +480,7 @@ mod tests {
                 workers: 1,
                 kv_tokens: 1 << 14,
                 batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+                draft: None,
             },
         );
         let mut req = GenRequest::new(0, vec![2, 3, 4], 5000);
@@ -544,6 +556,29 @@ mod tests {
         assert!(terminals.iter().all(|&t| t == 1), "one terminal per stream: {terminals:?}");
         assert!(tokens.iter().all(|&t| (1..=4).contains(&t)));
         engine.shutdown();
+    }
+
+    #[test]
+    fn speculative_engine_streams_match_greedy_bitwise() {
+        let model = Arc::new(synthetic_model("micro", 71).unwrap());
+        let prompt = vec![3u32, 5, 7];
+        let want = model.generate_greedy(&prompt, 8);
+        let draft = DraftModel::self_draft(Arc::clone(&model), 1).unwrap();
+        let engine = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                workers: 1,
+                kv_tokens: 4096,
+                batch: BatchConfig { spec_k: 3, stop_on_eos: false, ..Default::default() },
+                draft: Some(draft),
+            },
+        );
+        let r = engine.submit(GenRequest::new(0, prompt, 8)).wait();
+        assert_eq!(r.tokens, want, "speculative greedy stream must be bitwise-identical");
+        assert_eq!(engine.kv_used_tokens(), 0);
+        let m = engine.shutdown();
+        assert_eq!(m[0].spec_drafted, m[0].spec_accepted + m[0].spec_rejected);
+        assert!(m[0].spec_drafted > 0, "draft must have proposed");
     }
 
     #[test]

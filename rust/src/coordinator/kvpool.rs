@@ -303,6 +303,15 @@ impl KvCache {
         KvCache::with_layers_dtype(cfg, 1, KvDtype::F32)
     }
 
+    /// Layer-truncated cache for a truncated-layer draft forward
+    /// ([`crate::model::DraftModel`]): K/V pages cover only the first
+    /// `n_layers` blocks, so a self-draft's cache costs
+    /// `n_layers / cfg.n_layers` of the target's per-token bytes.
+    pub fn for_layers(cfg: &ModelConfig, n_layers: usize) -> KvCache {
+        assert!(n_layers >= 1 && n_layers <= cfg.n_layers, "draft layers out of range");
+        KvCache::with_layers_dtype(cfg, n_layers, KvDtype::F32)
+    }
+
     fn with_layers_dtype(cfg: &ModelConfig, n_layers: usize, dtype: KvDtype) -> KvCache {
         KvCache {
             pages: Vec::new(),
@@ -414,12 +423,17 @@ impl KvCache {
         page.kv_row_quant_mut(l, h, pos % KV_TILE)
     }
 
-    /// Drop everything after position `n` (prefix reuse). Length-only: the
-    /// page list keeps its allocation, and stale rows beyond `seen` are
+    /// Drop everything after position `n` (speculative rollback, cancel,
+    /// prefix reuse). Clamps `seen` and releases whole pages past the last
+    /// live one: dropping the `Arc` decrements the pool's page meter when
+    /// this cache held the final reference, so rolled-back positions stop
+    /// pinning physical memory. Stale rows within the kept tail page are
     /// never read (every read is bounded by a caller-passed position
-    /// count). Rewriting truncated positions COWs any still-shared page.
+    /// count), and rewriting truncated positions COWs any still-shared
+    /// page via [`KvCache::reserve`].
     pub fn truncate(&mut self, n: usize) {
         self.seen = self.seen.min(n);
+        self.pages.truncate(self.seen.div_ceil(KV_TILE));
     }
 }
 
@@ -1133,9 +1147,39 @@ mod tests {
         c.truncate(2);
         assert_eq!(c.len(), 2);
         assert!(c.bytes() < live4);
-        assert!(c.capacity() >= 10, "truncate keeps the allocation");
+        assert!(c.capacity() >= 10, "truncate keeps the partially-live page");
         c.truncate(7); // truncating above seen is a no-op
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn truncate_releases_whole_pages_to_the_meter() {
+        // Rollback past a page boundary must drop the now-unreferenced
+        // pages (speculative rejection / cancel must not pin memory).
+        let cfg = crate::model::ModelConfig::by_name("micro").unwrap();
+        let pool = KvPool::for_model_tokens(&cfg, 16 * KV_TILE);
+        let mut c = pool.new_cache(&cfg, KvDtype::F32, Vec::new(), 3 * KV_TILE);
+        assert_eq!((c.page_count(), pool.live_pages()), (3, 3));
+        c.seen = 3 * KV_TILE;
+        // Truncate into page 1: page 2 is released, page 1 (partially
+        // live) and page 0 stay.
+        c.truncate(KV_TILE + 5);
+        assert_eq!((c.page_count(), pool.live_pages()), (2, 2));
+        assert_eq!(c.len(), KV_TILE + 5);
+        // Truncate to a page boundary keeps exactly the covering pages.
+        c.truncate(KV_TILE);
+        assert_eq!((c.page_count(), pool.live_pages()), (1, 1));
+        // Pages shared with another holder survive elsewhere: the meter
+        // only drains when the last reference goes.
+        let shared = Arc::clone(c.page(0));
+        c.truncate(0);
+        assert_eq!(c.page_count(), 0);
+        assert_eq!(pool.live_pages(), 1, "shared page still alive");
+        drop(shared);
+        assert_eq!(pool.live_pages(), 0);
+        // Re-growing after a full truncate allocates fresh pages.
+        c.reserve(1);
+        assert_eq!((c.page_count(), pool.live_pages()), (1, 1));
     }
 
     #[test]

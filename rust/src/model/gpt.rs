@@ -99,7 +99,7 @@ pub struct SeqChunk<'a> {
 
 impl ChunkLogits {
     /// Number of logits rows a span of `t` tokens contributes.
-    fn rows(self, t: usize) -> usize {
+    pub fn rows(self, t: usize) -> usize {
         match self {
             ChunkLogits::None => 0,
             ChunkLogits::Last => 1,
@@ -597,6 +597,24 @@ impl Gpt {
         caches: &mut [&mut KvCache],
         arena: &mut QGemmArena,
     ) -> Matrix {
+        self.forward_chunk_batch_layers(chunks, caches, arena, self.blocks.len())
+    }
+
+    /// [`Gpt::forward_chunk_batch`] over only the first `n_layers` blocks —
+    /// the truncated-layer draft forward ([`crate::model::DraftModel`]).
+    /// The final norm and lm_head still apply on top of the truncated
+    /// residual stream (the residual path makes early-exit logits a usable
+    /// next-token predictor), so a self-draft shares every packed weight
+    /// with the target. Caches must have been built for (at least)
+    /// `n_layers` layers; [`KvCache::for_layers`] sizes a draft cache to
+    /// exactly the layers it writes.
+    pub fn forward_chunk_batch_layers(
+        &self,
+        chunks: &[SeqChunk],
+        caches: &mut [&mut KvCache],
+        arena: &mut QGemmArena,
+        n_layers: usize,
+    ) -> Matrix {
         let cfg = &self.cfg;
         let b = chunks.len();
         assert_eq!(b, caches.len(), "chunk/cache count mismatch");
@@ -621,7 +639,7 @@ impl Gpt {
         let spans: Vec<(usize, usize)> =
             offsets.iter().zip(chunks).map(|(&r0, ch)| (r0, ch.tokens.len())).collect();
         let kind = attn_kernel::detect_attn_kernel();
-        for (l, block) in self.blocks.iter().enumerate() {
+        for (l, block) in self.blocks[..n_layers].iter().enumerate() {
             // ---- attention: one batched qkv/out_proj GEMM, then the span
             //      engine fanning (sequence × head) items across cores ----
             let mut x_norm = Matrix::zeros(total, d);

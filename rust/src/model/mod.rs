@@ -4,6 +4,7 @@
 //! outlier injection.
 
 pub mod config;
+pub mod draft;
 pub mod gpt;
 pub mod init;
 pub mod linear;
@@ -11,6 +12,7 @@ pub mod sampling;
 
 pub use crate::coordinator::kvpool::{KvCache, KvDtype};
 pub use config::{layer_key, ModelConfig, LINEAR_NAMES};
+pub use draft::{DraftModel, DraftSpec};
 pub use gpt::{
     argmax, rope_inplace, rope_inplace_cached, rope_inv_freq, ActSink, Block, ChunkLogits, Gpt,
     NullSink, SeqChunk, PREFILL_CHUNK,

@@ -230,6 +230,24 @@ impl Sampler {
         }
     }
 
+    /// Speculative acceptance step: draw the next token from `logits`
+    /// exactly as [`Sampler::sample`] would — the identical argmax for
+    /// greedy parameters (no RNG touch), the identical single uniform draw
+    /// otherwise — and report whether it confirms the draft proposal.
+    ///
+    /// Distribution preservation falls out of the construction: the
+    /// emitted token IS a plain `sample()` from the **target's** logits
+    /// row; the draft token only decides whether the already-verified
+    /// context extends to the next row. Because the batcher calls this once
+    /// per *emitted* token in stream order (never for rolled-back rows),
+    /// RNG consumption matches non-speculative decoding draw-for-draw, so
+    /// seeded streams are bitwise invariant to the speculation depth and
+    /// greedy acceptance (`temperature → 0`) is exactly argmax acceptance.
+    pub fn accept(&mut self, logits: &[f32], draft: u32) -> (u32, bool) {
+        let tok = self.sample(logits);
+        (tok, tok == draft)
+    }
+
     /// Draw one token from `self.weights[..keep]` (candidates in
     /// `self.order`), consuming exactly one uniform.
     fn draw(&mut self, keep: usize) -> u32 {

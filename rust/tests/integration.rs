@@ -187,6 +187,7 @@ fn e2e_int8_kv_serving_completes_and_drains() {
                 ..Default::default()
             },
             kv_tokens: 4096,
+            draft: None,
         },
     );
     let handles: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone())).collect();
@@ -237,6 +238,7 @@ fn e2e_cancel_mid_decode_frees_kv_promptly() {
             workers: 1,
             batch: BatchConfig { stop_on_eos: false, ..Default::default() },
             kv_tokens: 1 << 14,
+            draft: None,
         },
     );
     let victim = engine.submit(GenRequest::new(0, vec![2, 3, 4], 2000));

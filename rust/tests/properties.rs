@@ -724,6 +724,7 @@ fn prop_engine_greedy_matches_pre_redesign_serving() {
                     // here too for exact stream equality.
                     batch: BatchConfig { stop_on_eos: false, ..Default::default() },
                     kv_tokens: 4096,
+                    draft: None,
                 },
             );
             let handles: Vec<_> = prompts
@@ -1330,6 +1331,7 @@ fn prop_engine_int8_greedy_matches_step_oracle() {
                 ..Default::default()
             },
             kv_tokens: 4096,
+            draft: None,
         },
     );
     let handles: Vec<_> = prompts
@@ -1568,6 +1570,7 @@ fn prop_prefix_cache_on_off_streams_bitwise_identical() {
                         ..Default::default()
                     },
                     kv_tokens: 1 << 13,
+                    draft: None,
                 },
             )
         };
@@ -1591,5 +1594,258 @@ fn prop_prefix_cache_on_off_streams_bitwise_identical() {
 
         assert_eq!(cold, want, "{kv_dtype}: prefix-cache on (cold) diverged from off");
         assert_eq!(warm, want, "{kv_dtype}: prefix-cache warm wave diverged from off");
+    }
+}
+
+#[test]
+fn prop_accept_is_sample_plus_comparison() {
+    // The speculative acceptance draw IS the sampling draw: two samplers
+    // with identical params and seed, one stepped with `sample` and one
+    // with `accept`, emit identical token streams whatever the proposals
+    // are. At (or under) the greedy temperature epsilon the accepted token
+    // is exactly the argmax, so temperature → 0 acceptance degenerates to
+    // argmax equality with the proposal.
+    use aser::model::{argmax, Sampler, SamplingParams};
+
+    check(
+        "accept_is_sample_plus_comparison",
+        &cfg(64),
+        |rng| {
+            let steps = 1 + rng.below(8);
+            let vocab = 4 + rng.below(60);
+            let rows: Vec<Vec<f32>> = (0..steps)
+                .map(|_| (0..vocab).map(|_| rng.heavy_tailed(0.5, 8.0)).collect())
+                .collect();
+            let drafts: Vec<u32> = (0..steps).map(|_| rng.below(vocab) as u32).collect();
+            // 0 / sub-epsilon pin the argmax path; the rest draw for real.
+            let temperature = [0.0f32, 5e-4, 0.7, 1.8][rng.below(4)];
+            let seed = rng.next_u64();
+            (rows, drafts, temperature, seed)
+        },
+        |_| Vec::new(),
+        |(rows, drafts, temperature, seed)| {
+            let params = if *temperature == 0.0 {
+                SamplingParams::greedy()
+            } else {
+                SamplingParams::with_temperature(*temperature, *seed)
+            };
+            let mut plain = Sampler::new(&params);
+            let mut spec = Sampler::new(&params);
+            let mut checks = Vec::new();
+            for (row, &d) in rows.iter().zip(drafts) {
+                let want = plain.sample(row);
+                let (got, ok) = spec.accept(row, d);
+                checks.push(ensure(got == want, || {
+                    format!("accept drew {got}, sample drew {want}")
+                }));
+                checks.push(ensure(ok == (got == d), || "acceptance flag lies".into()));
+                if params.is_greedy() {
+                    let am = argmax(row) as u32;
+                    checks.push(ensure(got == am, || {
+                        format!("greedy accept drew {got}, argmax is {am}")
+                    }));
+                    checks.push(ensure(ok == (d == am), || {
+                        "greedy acceptance must be argmax equality".into()
+                    }));
+                }
+            }
+            all(checks)
+        },
+    );
+}
+
+#[test]
+fn prop_speculative_streams_invariant_to_spec_k() {
+    // spec_k is a pure scheduling knob: for mixed greedy + seeded sampled
+    // requests on a quantized model with a truncated self-draft proposing,
+    // the emitted streams (tokens AND finish reasons) are bitwise identical
+    // for spec_k ∈ {0, 1, 2, 4}. Holds because every emitted token is still
+    // one sampler draw, in stream order, from a target logits row computed
+    // over exactly the already-emitted context (the verify pass), and the
+    // quantized forward is bitwise chunking-invariant.
+    use aser::calib::CalibConfig;
+    use aser::coordinator::batcher::run_batcher_spec;
+    use aser::coordinator::{
+        calibrate_model, run_ptq, BatchConfig, FinishReason, GenRequest, KvPool, Submission,
+        TokenEvent,
+    };
+    use aser::model::{synthetic_model, DraftModel, SamplingParams};
+    use std::sync::Arc;
+
+    let base = synthetic_model("micro", 941).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 43 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+    let m = method_by_name("aser", RankPolicy::Fixed(6), 4).unwrap();
+    let (qm, _) =
+        run_ptq(synthetic_model("micro", 941).unwrap(), &stats, m.as_ref(), Precision::w4a8(), 0)
+            .unwrap();
+    let qm = Arc::new(qm);
+    let draft = DraftModel::self_draft(Arc::clone(&qm), 1).unwrap();
+
+    let serve_k = |spec_k: usize, reqs: Vec<GenRequest>| -> Vec<(Vec<u32>, FinishReason)> {
+        let pool = KvPool::new(10_000, 8);
+        let bcfg =
+            BatchConfig { max_batch: 4, stop_on_eos: false, spec_k, ..Default::default() };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let rxs: Vec<_> = reqs
+            .into_iter()
+            .map(|r| {
+                let (sub, erx, _c) = Submission::channel(r);
+                tx.send(sub).unwrap();
+                erx
+            })
+            .collect();
+        drop(tx);
+        let metrics = run_batcher_spec(&qm, Some(&draft), &pool, &bcfg, rx, |_, _| {});
+        assert_eq!(pool.used_tokens(), 0, "kv leak at spec_k={spec_k}");
+        if spec_k == 0 {
+            assert_eq!(metrics.spec_drafted, 0, "spec_k=0 must not draft");
+        } else {
+            // Every request decodes ≥ 2 tokens, so at least one iteration
+            // had headroom (max_new − emitted − 1 ≥ 1) to speculate.
+            assert!(metrics.spec_drafted > 0, "spec_k={spec_k} never drafted");
+            assert_eq!(
+                metrics.spec_drafted,
+                metrics.spec_accepted + metrics.spec_rejected,
+                "draft counters must balance"
+            );
+        }
+        rxs.iter()
+            .map(|erx| {
+                let mut toks = Vec::new();
+                let mut fin = None;
+                while let Ok(ev) = erx.try_recv() {
+                    match ev {
+                        TokenEvent::Token { token, .. } => toks.push(token),
+                        TokenEvent::Finished { reason, .. } => fin = Some(reason),
+                        TokenEvent::PrefillDone { .. } => {}
+                    }
+                }
+                (toks, fin.expect("terminal event"))
+            })
+            .collect()
+    };
+
+    check(
+        "spec_k_stream_invariance",
+        &cfg(6),
+        |rng| {
+            (0..2 + rng.below(3))
+                .map(|_| {
+                    let plen = 2 + rng.below(10);
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|_| 2 + rng.below(120) as u32).collect();
+                    let max_new = 3 + rng.below(7);
+                    let params = if rng.f32() < 0.4 {
+                        SamplingParams::greedy()
+                    } else {
+                        SamplingParams {
+                            temperature: 0.4 + rng.f32() * 2.0,
+                            top_k: if rng.f32() < 0.5 { 1 + rng.below(32) } else { 0 },
+                            top_p: if rng.f32() < 0.5 { 0.5 + 0.5 * rng.f32() } else { 1.0 },
+                            seed: rng.next_u64(),
+                            stop_tokens: Vec::new(),
+                        }
+                    };
+                    (prompt, max_new, params)
+                })
+                .collect::<Vec<_>>()
+        },
+        |_| Vec::new(),
+        |reqs| {
+            let mk = || -> Vec<GenRequest> {
+                reqs.iter()
+                    .enumerate()
+                    .map(|(i, (p, mn, s))| {
+                        let mut r = GenRequest::new(i as u64, p.clone(), *mn);
+                        r.sampling = s.clone();
+                        r
+                    })
+                    .collect()
+            };
+            let want = serve_k(0, mk());
+            let mut checks = Vec::new();
+            for k in [1usize, 2, 4] {
+                let got = serve_k(k, mk());
+                checks.push(ensure(got == want, || {
+                    format!("spec_k={k} changed streams:\n  {got:?}\nvs\n  {want:?}")
+                }));
+            }
+            all(checks)
+        },
+    );
+}
+
+#[test]
+fn prop_greedy_speculation_bitwise_across_method_grid() {
+    // Greedy speculative serving must be bitwise identical to plain greedy
+    // decoding (oracle: generate_greedy) across the quantization method
+    // grid × both activation widths × spec_k ∈ {1, 2, 4}, with a truncated
+    // self-draft proposing. The draft's quality only moves the acceptance
+    // rate — never the stream.
+    use aser::calib::CalibConfig;
+    use aser::coordinator::batcher::run_batcher_spec;
+    use aser::coordinator::{
+        calibrate_model, run_ptq, BatchConfig, GenRequest, KvPool, Submission, TokenEvent,
+    };
+    use aser::model::{synthetic_model, DraftModel};
+    use std::sync::Arc;
+
+    let base = synthetic_model("micro", 947).unwrap();
+    let ccfg = CalibConfig { n_seqs: 4, seq_len: 24, max_sample: 64, seed: 47 };
+    let stats = calibrate_model(&base, "wiki", &ccfg).unwrap();
+    let mut rng = Pcg64::seed(0x5bec);
+    for method in ["rtn", "aser", "aser-er"] {
+        for prec in [Precision::w4a8(), Precision::w4a16()] {
+            let m = method_by_name(method, RankPolicy::Fixed(6), 4).unwrap();
+            let (qm, _) =
+                run_ptq(synthetic_model("micro", 947).unwrap(), &stats, m.as_ref(), prec, 0)
+                    .unwrap();
+            let qm = Arc::new(qm);
+            let draft = DraftModel::self_draft(Arc::clone(&qm), 1).unwrap();
+            let prompts: Vec<Vec<u32>> = (0..3)
+                .map(|_| (0..3 + rng.below(10)).map(|_| 2 + rng.below(120) as u32).collect())
+                .collect();
+            let max_new = 7usize;
+            let want: Vec<Vec<u32>> =
+                prompts.iter().map(|p| qm.generate_greedy(p, max_new)).collect();
+            for spec_k in [1usize, 2, 4] {
+                let pool = KvPool::new(10_000, 8);
+                let bcfg = BatchConfig {
+                    max_batch: 4,
+                    stop_on_eos: false,
+                    spec_k,
+                    ..Default::default()
+                };
+                let (tx, rx) = std::sync::mpsc::channel();
+                let rxs: Vec<_> = prompts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        let (sub, erx, _c) =
+                            Submission::channel(GenRequest::new(i as u64, p.clone(), max_new));
+                        tx.send(sub).unwrap();
+                        erx
+                    })
+                    .collect();
+                drop(tx);
+                let metrics = run_batcher_spec(&qm, Some(&draft), &pool, &bcfg, rx, |_, _| {});
+                assert_eq!(pool.used_tokens(), 0, "{method} {prec} k={spec_k}: kv leak");
+                assert!(metrics.spec_drafted > 0, "{method} {prec} k={spec_k}: no drafting");
+                for (i, erx) in rxs.iter().enumerate() {
+                    let mut toks = Vec::new();
+                    while let Ok(ev) = erx.try_recv() {
+                        if let TokenEvent::Token { token, .. } = ev {
+                            toks.push(token);
+                        }
+                    }
+                    assert_eq!(
+                        toks, want[i],
+                        "{method} {prec} spec_k={spec_k} req {i}: speculative greedy \
+                         diverged from generate_greedy"
+                    );
+                }
+            }
+        }
     }
 }
