@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
         workers: 2,
         batch: BatchConfig { max_batch: 6, ..Default::default() },
         kv_tokens: 1 << 14,
+        ..Default::default()
     };
 
     for variant in ["fp16", "aser-w4a8"] {
@@ -54,11 +55,11 @@ fn main() -> anyhow::Result<()> {
                     workers: 1,
                     kv_tokens: 1 << 14,
                     batch: BatchConfig { stop_on_eos: false, ..Default::default() },
-                    draft: None,
+                    ..Default::default()
                 },
             );
-            let streamed = engine.submit(GenRequest::new(0, vec![2, 9, 4], 8));
-            let doomed = engine.submit(GenRequest::new(1, vec![3, 7], 64));
+            let streamed = engine.submit(GenRequest::new(0, vec![2, 9, 4], 8)).unwrap();
+            let doomed = engine.submit(GenRequest::new(1, vec![3, 7], 64)).unwrap();
             // Cancel as soon as the doomed stream produces its first token.
             while let Some(ev) = doomed.recv() {
                 if matches!(ev, TokenEvent::Token { .. }) {

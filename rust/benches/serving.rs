@@ -21,17 +21,23 @@
 //! warm waves adopt the shared pages from the pool's radix trie and
 //! prefill only the novel tails), and a `spec_decode` section (speculative
 //! decoding with a truncated self-draft at batch 4: decode tok/s,
-//! acceptance rate, and speedup vs `spec_k = 0` — target ≥ 1.2x best-row).
+//! acceptance rate, and speedup vs `spec_k = 0` — target ≥ 1.2x best-row),
+//! and a `resilience` section (the engine resilience layer under pressure:
+//! time-to-drain for a mid-stream `shutdown(Drain)`, deadline-hit rate on
+//! an oversubscribed worker, p99 TTFT under `queue_cap` shedding, and
+//! decode tok/s with the layer installed but idle).
 //! `scripts/bench_diff` gates on long-prompt TTFT, long-context decode,
 //! the Engine-path decode tok/s, int8/f32 decode ≥ 0.9x, int8/f32
-//! capacity ≥ 3x, warm prefix TTFT ≤ 0.6x cold, and spec_decode speedup
-//! ≥ 0.9x baseline. `--kv-bits {8,32}` flips the serving/stream sections
-//! onto the quantized cache.
+//! capacity ≥ 3x, warm prefix TTFT ≤ 0.6x cold, spec_decode speedup
+//! ≥ 0.9x baseline, and faults-off resilience decode ≥ 0.9x baseline.
+//! `--kv-bits {8,32}` flips the serving/stream sections onto the
+//! quantized cache.
 
 use aser::calib::CalibConfig;
 use aser::coordinator::{
     calibrate_model, poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig,
-    BatchMetrics, Engine, EngineConfig, FinishReason, GenRequest, ServerConfig, TokenEvent,
+    BatchMetrics, Engine, EngineConfig, FinishReason, GenRequest, ServerConfig, Shutdown,
+    SubmitError, TokenEvent,
 };
 use aser::coordinator::KvPool;
 use aser::methods::{method_by_name, RankPolicy};
@@ -41,7 +47,7 @@ use aser::tensor::QGemmArena;
 use aser::util::json::{num, obj, s, Json};
 use aser::util::stats::{black_box, percentile_sorted};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Caches with a short prefix already decoded, so the comparison below
 /// measures steady-state decode, not cold-cache behavior.
@@ -173,6 +179,7 @@ fn main() {
                 workers,
                 batch: BatchConfig { max_batch: batch, kv_dtype, ..Default::default() },
                 kv_tokens: 1 << 14,
+                ..Default::default()
             };
             let run = serve_requests(Arc::clone(&model), &cfg, reqs);
             let iters: usize = run.per_worker.iter().map(|m| m.iterations).sum();
@@ -311,13 +318,13 @@ fn main() {
                     workers: 1,
                     batch: BatchConfig { max_batch: 8, kv_dtype, ..Default::default() },
                     kv_tokens: 1 << 14,
-                    draft: None,
+                    ..Default::default()
                 },
             );
             let reqs =
                 synthetic_requests(model.cfg.vocab_size, n_requests, 8, max_new, 23).unwrap();
             let t0 = Instant::now();
-            let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r)).collect();
+            let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r).unwrap()).collect();
             // poll_streams drains round-robin, so receive time tracks
             // generation time for every stream, not just the first handle.
             let mut last_at: Vec<Option<Instant>> = vec![None; handles.len()];
@@ -353,7 +360,7 @@ fn main() {
                     workers: 1,
                     batch: BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() },
                     kv_tokens: 1 << 14,
-                    draft: None,
+                    ..Default::default()
                 },
             );
             let mut cancel_ms: Vec<f64> = Vec::new();
@@ -362,7 +369,7 @@ fn main() {
                     .unwrap()
                     .remove(0);
                 req.id = rep;
-                let h = cancel_engine.submit(req);
+                let h = cancel_engine.submit(req).unwrap();
                 let mut seen = 0usize;
                 let cancelled_at = loop {
                     match h.recv().expect("stream open") {
@@ -428,7 +435,8 @@ fn main() {
             ),
         ] {
             let reqs = synthetic_requests(model.cfg.vocab_size, 24, 48, 8, 17).unwrap();
-            let cfg = ServerConfig { workers: 1, batch: bcfg, kv_tokens: 1 << 14 };
+            let cfg =
+                ServerConfig { workers: 1, batch: bcfg, kv_tokens: 1 << 14, ..Default::default() };
             let run = serve_requests(Arc::clone(&model), &cfg, reqs);
             let (p50, p95) = (run.ttft_percentile_ms(50.0), run.ttft_percentile_ms(95.0));
             println!(
@@ -552,7 +560,7 @@ fn main() {
         // One wave through an engine: wall seconds + sorted TTFT samples.
         let run_wave = |engine: &Engine, wave: usize| -> (f64, Vec<f64>) {
             let t0 = Instant::now();
-            let handles: Vec<_> = mk_reqs(wave).into_iter().map(|r| engine.submit(r)).collect();
+            let handles: Vec<_> = mk_reqs(wave).into_iter().map(|r| engine.submit(r).unwrap()).collect();
             let responses: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
             let wall = t0.elapsed().as_secs_f64().max(1e-9);
             assert!(responses.iter().all(|r| r.finish.is_completed()), "prefix wave rejected");
@@ -580,7 +588,7 @@ fn main() {
                             ..Default::default()
                         },
                         kv_tokens: 1 << 13,
-                        draft: None,
+                        ..Default::default()
                     },
                 )
             };
@@ -650,6 +658,7 @@ fn main() {
                     },
                     kv_tokens: 1 << 14,
                     draft: if spec_k > 0 { Some(draft.clone()) } else { None },
+                    ..Default::default()
                 },
             );
             let mut wall = 1e-9f64;
@@ -662,7 +671,7 @@ fn main() {
                     synthetic_requests(qm.cfg.vocab_size, batch, prompt_len, max_new, 37 + wave)
                         .unwrap();
                 let t0 = Instant::now();
-                let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r)).collect();
+                let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r).unwrap()).collect();
                 let n: usize = handles.into_iter().map(|h| h.wait().tokens.len()).sum();
                 assert_eq!(n, batch * max_new, "spec_decode wave under-generated");
                 if wave == 1 {
@@ -716,6 +725,142 @@ fn main() {
         }
     }
 
+    // ---- resilience: the engine resilience layer under pressure. Four
+    //      numbers: decode tok/s with the layer installed but nothing
+    //      firing (no deadlines, no cap, no faults — the bench_diff 0.9x
+    //      gate pins "resilience is free when nothing goes wrong"),
+    //      time-to-drain for shutdown(Drain) issued mid-stream,
+    //      deadline-hit rate on an oversubscribed worker with tight
+    //      per-request deadlines, and p99 TTFT under queue_cap pressure
+    //      where bounded admission sheds instead of queueing. ----
+    let resilience = {
+        let model = Arc::new(synthetic_model("micro", 7).unwrap());
+        let vocab = model.cfg.vocab_size;
+
+        // (1) faults-off decode throughput through the streaming path.
+        let engine = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                workers: 1,
+                batch: BatchConfig { max_batch: 8, ..Default::default() },
+                kv_tokens: 1 << 14,
+                ..Default::default()
+            },
+        );
+        let reqs = synthetic_requests(vocab, 16, 8, 16, 41).unwrap();
+        let t0 = Instant::now();
+        let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r).unwrap()).collect();
+        let mut total_tokens = 0usize;
+        poll_streams(&handles, |_, ev| {
+            if matches!(ev, Some(TokenEvent::Token { .. })) {
+                total_tokens += 1;
+            }
+        });
+        let faults_off_tok_s = total_tokens as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        drop(handles);
+        engine.shutdown();
+
+        // (2) time-to-drain: shutdown(Drain) lands with streams mid-flight
+        //     and must finish every admitted request before returning.
+        let engine = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                workers: 1,
+                batch: BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() },
+                kv_tokens: 1 << 14,
+                ..Default::default()
+            },
+        );
+        let n_drain = 8usize;
+        let reqs = synthetic_requests(vocab, n_drain, 8, 24, 43).unwrap();
+        let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r).unwrap()).collect();
+        let _ = handles[0].recv(); // ensure the drain starts mid-stream
+        let t0 = Instant::now();
+        engine.shutdown_mode(Shutdown::Drain, Some(Duration::from_secs(30)));
+        let drain_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let drained =
+            handles.into_iter().map(|h| h.wait()).filter(|r| r.finish.is_completed()).count();
+        assert_eq!(drained, n_drain, "drain must finish every admitted stream");
+
+        // (3) deadline-hit rate: one worker, max_batch 2, 12 requests —
+        //     odd-indexed requests carry a 1 ms deadline they cannot meet
+        //     once anything is queued ahead of them.
+        let engine = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                workers: 1,
+                batch: BatchConfig { max_batch: 2, stop_on_eos: false, ..Default::default() },
+                kv_tokens: 1 << 14,
+                ..Default::default()
+            },
+        );
+        let mut reqs = synthetic_requests(vocab, 12, 24, 12, 47).unwrap();
+        for (i, r) in reqs.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                r.deadline = Some(Duration::from_millis(1));
+            }
+        }
+        let n_deadline = reqs.len();
+        let handles: Vec<_> = reqs.into_iter().map(|r| engine.submit(r).unwrap()).collect();
+        let expired = handles
+            .into_iter()
+            .map(|h| h.wait())
+            .filter(|r| r.finish == FinishReason::DeadlineExceeded)
+            .count();
+        let hit_rate = expired as f64 / n_deadline as f64;
+        engine.shutdown();
+
+        // (4) p99 TTFT under bounded admission: queue_cap 2 on one worker;
+        //     submit_wait blocks up to 20 ms for a slot, overflow is shed.
+        let queue_cap = 2usize;
+        let engine = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                workers: 1,
+                batch: BatchConfig { max_batch: 4, stop_on_eos: false, ..Default::default() },
+                kv_tokens: 1 << 14,
+                queue_cap,
+                ..Default::default()
+            },
+        );
+        let reqs = synthetic_requests(vocab, 24, 8, 12, 53).unwrap();
+        let mut shed = 0usize;
+        let mut handles = Vec::new();
+        for req in reqs {
+            match engine.submit_wait(req, Duration::from_millis(20)) {
+                Ok(h) => handles.push(h),
+                Err(SubmitError::QueueFull(_)) => shed += 1,
+                Err(SubmitError::Closed(_)) => panic!("engine closed during bench"),
+            }
+        }
+        let mut ttft: Vec<f64> = handles
+            .into_iter()
+            .map(|h| h.wait())
+            .filter(|r| r.finish.is_completed())
+            .map(|r| r.ttft.as_secs_f64() * 1e3)
+            .collect();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = if ttft.is_empty() { 0.0 } else { percentile_sorted(&ttft, 99.0) };
+        engine.shutdown();
+
+        println!("\n== resilience ==");
+        println!(
+            "drain {drain_ms:.1} ms | deadline-hit {:.1}% | p99 TTFT @cap{queue_cap} \
+             {p99:.1} ms ({shed} shed) | faults-off decode {faults_off_tok_s:.1} tok/s",
+            100.0 * hit_rate
+        );
+        obj(vec![
+            ("time_to_drain_ms", num(drain_ms)),
+            ("drained_requests", num(drained as f64)),
+            ("deadline_hit_rate", num(hit_rate)),
+            ("deadline_requests", num(n_deadline as f64)),
+            ("p99_ttft_ms_at_queue_cap", num(p99)),
+            ("queue_cap", num(queue_cap as f64)),
+            ("shed_at_submit", num(shed as f64)),
+            ("decode_tok_s_faults_off", num(faults_off_tok_s)),
+        ])
+    };
+
     let report = obj(vec![
         ("bench", s("serving")),
         ("model", s("micro")),
@@ -735,6 +880,7 @@ fn main() {
         ),
         ("prefix_cache", Json::Arr(prefix_cache_rows)),
         ("spec_decode", Json::Arr(spec_decode_rows)),
+        ("resilience", resilience),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");

@@ -10,7 +10,8 @@
 use super::ctx::Ctx;
 use crate::coordinator::{
     poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig, BatchMetrics,
-    Engine, EngineConfig, FinishReason, RequestHandle, Response, ServerRun, TokenEvent,
+    Engine, EngineConfig, FinishReason, RequestHandle, Response, ServerRun, Shutdown,
+    SubmitError, TokenEvent,
 };
 use crate::methods::{method_by_name, RankPolicy};
 use crate::model::{DraftModel, DraftSpec, KvDtype, SamplingParams};
@@ -59,7 +60,7 @@ fn drain_streaming(handles: Vec<RequestHandle>) -> Vec<Response> {
             None => {
                 // Worker gone without a terminal event.
                 a.total = handles[i].elapsed();
-                a.finish = Some(FinishReason::Cancelled);
+                a.finish = Some(FinishReason::WorkerFailed);
                 println!("[stream] req {id:>3}: stream closed (worker gone)");
             }
         }
@@ -134,6 +135,18 @@ pub fn run(args: &Args) -> Result<()> {
     if spec_k == 0 && draft_spec != DraftSpec::Off {
         anyhow::bail!("--draft {draft_spec} does nothing with --spec-k 0; drop one of the two");
     }
+    // Resilience knobs: a per-request end-to-end deadline (0 = none), a
+    // bounded per-worker submit queue (0 = unbounded; overflow sheds with
+    // QueueFull instead of queueing forever), and the shutdown policy for
+    // the streaming path (drain finishes in-flight work, abort cancels it).
+    let deadline_ms = args.usize_or("deadline-ms", 0)?;
+    let queue_cap = args.usize_or("queue-cap", 0)?;
+    let shutdown_mode = match args.str_or("shutdown", "drain").as_str() {
+        "drain" => Shutdown::Drain,
+        "abort" => Shutdown::Abort,
+        other => anyhow::bail!("--shutdown must be drain or abort, got {other}"),
+    };
+    let shutdown_timeout_ms = args.usize_or("shutdown-timeout-ms", 0)?;
 
     let model = ctx.model(&model_name)?;
     let model = if method_name == "fp16" {
@@ -162,6 +175,9 @@ pub fn run(args: &Args) -> Result<()> {
             seed: sample_seed.wrapping_add(req.id),
             stop_tokens: Vec::new(),
         };
+        if deadline_ms > 0 {
+            req.deadline = Some(Duration::from_millis(deadline_ms as u64));
+        }
     }
 
     let model = Arc::new(model);
@@ -201,14 +217,28 @@ pub fn run(args: &Args) -> Result<()> {
         },
         kv_tokens: args.usize_or("kv-tokens", 1 << 15)?,
         draft,
+        queue_cap,
+        faults: None,
     };
+    let mut shed_at_submit = 0usize;
     let run = if stream {
         let t0 = Instant::now();
         let engine = Engine::new(model, cfg);
-        let handles: Vec<RequestHandle> =
-            requests.into_iter().map(|req| engine.submit(req)).collect();
+        // Under a bounded queue, block briefly for a slot; a request that
+        // still cannot get in is shed (it never gets a stream) — exactly
+        // the behavior a front end would surface as HTTP 429.
+        let mut handles: Vec<RequestHandle> = Vec::new();
+        for req in requests {
+            match engine.submit_wait(req, Duration::from_millis(50)) {
+                Ok(h) => handles.push(h),
+                Err(SubmitError::QueueFull(_)) => shed_at_submit += 1,
+                Err(SubmitError::Closed(_)) => anyhow::bail!("engine closed during submit"),
+            }
+        }
         let responses = drain_streaming(handles);
-        let per_worker = engine.shutdown();
+        let timeout = (shutdown_timeout_ms > 0)
+            .then(|| Duration::from_millis(shutdown_timeout_ms as u64));
+        let per_worker = engine.shutdown_mode(shutdown_mode, timeout);
         ServerRun { responses, per_worker, wall: t0.elapsed() }
     } else {
         // The blocking path IS the compat wrapper — one implementation.
@@ -252,6 +282,9 @@ pub fn run(args: &Args) -> Result<()> {
             100.0 * accepted as f64 / drafted as f64
         );
     }
+    if shed_at_submit > 0 {
+        println!("  shed           {shed_at_submit} requests (queue full at submit)");
+    }
     for (i, m) in run.per_worker.iter().enumerate() {
         print!("{}", worker_summary(i, m));
     }
@@ -292,6 +325,11 @@ fn worker_summary(i: usize, m: &BatchMetrics) -> String {
         "           spec: drafted {}, accepted {}, rejected {}",
         m.spec_drafted, m.spec_accepted, m.spec_rejected
     );
+    let _ = writeln!(
+        s,
+        "           resilience: deadline-expired {}, worker-failed {}, shed-queue-full {}",
+        m.deadline_expired, m.worker_failed, m.shed_queue_full
+    );
     s
 }
 
@@ -325,13 +363,16 @@ mod tests {
             spec_drafted: 4745,
             spec_accepted: 4847,
             spec_rejected: 4951,
+            deadline_expired: 5051,
+            worker_failed: 5153,
+            shed_queue_full: 5257,
         };
         let s = worker_summary(7, &m);
         // Distinct 4-digit sentinels, always delimited by non-digits in the
         // output, so a plain substring count is collision-free.
         for v in [
             3101, 3203, 3307, 3409, 3511, 3613, 3719, 3821, 3923, 4027, 4129, 4231, 4337,
-            4439, 4541, 4643, 4745, 4847, 4951,
+            4439, 4541, 4643, 4745, 4847, 4951, 5051, 5153, 5257,
         ] {
             let needle = v.to_string();
             let n = s.matches(&needle).count();

@@ -130,9 +130,10 @@ use crate::model::{
     PREFILL_CHUNK,
 };
 use crate::tensor::QGemmArena;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One generation request, as submitted through `Engine::submit` (or the
@@ -146,6 +147,16 @@ pub struct GenRequest {
     /// deterministic seed, extra stop tokens).
     pub sampling: SamplingParams,
     pub submitted: Instant,
+    /// Time-to-first-token budget, measured from `submitted`. A request
+    /// still queued or prefilling when it elapses finishes with
+    /// [`FinishReason::DeadlineExceeded`] on the next sweep; once the first
+    /// token is out this deadline is moot.
+    pub ttft_deadline: Option<Duration>,
+    /// End-to-end budget, measured from `submitted`. Swept once per batcher
+    /// iteration (and at admission), so an expired stream keeps whatever
+    /// tokens it already emitted and its KV lease is released within one
+    /// iteration.
+    pub deadline: Option<Duration>,
 }
 
 impl GenRequest {
@@ -157,7 +168,41 @@ impl GenRequest {
             max_new,
             sampling: SamplingParams::greedy(),
             submitted: Instant::now(),
+            ttft_deadline: None,
+            deadline: None,
         }
+    }
+
+    /// Builder-style end-to-end deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> GenRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder-style TTFT deadline.
+    pub fn with_ttft_deadline(mut self, deadline: Duration) -> GenRequest {
+        self.ttft_deadline = Some(deadline);
+        self
+    }
+
+    /// Has this request blown a deadline as of `now`? `first_token_out`
+    /// gates the TTFT deadline: it only applies while the first token is
+    /// still pending.
+    fn expired(&self, now: Instant, first_token_out: bool) -> bool {
+        let elapsed = now.saturating_duration_since(self.submitted);
+        if let Some(d) = self.deadline {
+            if elapsed > d {
+                return true;
+            }
+        }
+        if !first_token_out {
+            if let Some(d) = self.ttft_deadline {
+                if elapsed > d {
+                    return true;
+                }
+            }
+        }
+        false
     }
 }
 
@@ -180,11 +225,22 @@ pub enum FinishReason {
     /// Refused at admission: the request could never run (empty prompt, or
     /// `prompt + 1` beyond the KV window or the whole pool). No tokens.
     Rejected,
+    /// The request's `deadline` (or `ttft_deadline`, while the first token
+    /// was still pending) elapsed. The stream keeps everything generated
+    /// before expiry; the KV lease was released the same iteration.
+    DeadlineExceeded,
+    /// The worker serving this request died mid-flight (a panic caught by
+    /// the batcher's isolation layer, or a stranded queue drained at
+    /// shutdown). In-flight progress is lost; queued requests are
+    /// re-dispatched to surviving workers instead, so this reason is only
+    /// seen when no worker could take the request over.
+    WorkerFailed,
 }
 
 impl FinishReason {
     /// True for streams that ran to a natural end (served requests):
-    /// rejected and cancelled streams carry no complete latency signal.
+    /// rejected, cancelled, expired, and worker-failed streams carry no
+    /// complete latency signal.
     pub fn is_completed(&self) -> bool {
         matches!(self, FinishReason::Eos | FinishReason::Length | FinishReason::TruncatedKv)
     }
@@ -205,6 +261,31 @@ pub enum TokenEvent {
     Finished { reason: FinishReason, n_tokens: usize, ttft: Duration, total: Duration },
 }
 
+/// A drop-guard that releases one unit of engine-side accounting exactly
+/// once, no matter which worker (or cleanup path) retires the request it
+/// rides on. `counter -= amount` on drop; panic-safe by construction —
+/// worker-failure cleanup drops the owning `Submission`/`Active` and the
+/// accounting drains with it, so load/queue counters can never wedge the
+/// engine's routing or `submit_wait`.
+pub struct CountGuard {
+    counter: Arc<AtomicUsize>,
+    amount: usize,
+}
+
+impl CountGuard {
+    /// Add `amount` to `counter` now; subtract it back when dropped.
+    pub fn add(counter: &Arc<AtomicUsize>, amount: usize) -> CountGuard {
+        counter.fetch_add(amount, Ordering::SeqCst);
+        CountGuard { counter: Arc::clone(counter), amount }
+    }
+}
+
+impl Drop for CountGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(self.amount, Ordering::SeqCst);
+    }
+}
+
 /// A request paired with its event channel and cancellation flag — the unit
 /// the engine routes to a worker. Public so tests can drive [`run_batcher`]
 /// directly; `Engine::submit` is the normal constructor.
@@ -212,6 +293,13 @@ pub struct Submission {
     pub req: GenRequest,
     pub events: Sender<TokenEvent>,
     pub cancel: Arc<AtomicBool>,
+    /// Engine load accounting (`prompt + max_new` against the origin
+    /// worker), released at the terminal event by whichever worker (or
+    /// cleanup path) gets there. `None` for direct batcher tests.
+    pub load: Option<CountGuard>,
+    /// Engine queue-depth accounting, released at admission (or a queued
+    /// finish) — the counter behind `EngineConfig::queue_cap`.
+    pub queue_slot: Option<CountGuard>,
 }
 
 impl Submission {
@@ -220,8 +308,88 @@ impl Submission {
     pub fn channel(req: GenRequest) -> (Submission, Receiver<TokenEvent>, Arc<AtomicBool>) {
         let (tx, rx) = std::sync::mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
-        (Submission { req, events: tx, cancel: Arc::clone(&cancel) }, rx, cancel)
+        (
+            Submission {
+                req,
+                events: tx,
+                cancel: Arc::clone(&cancel),
+                load: None,
+                queue_slot: None,
+            },
+            rx,
+            cancel,
+        )
     }
+}
+
+/// Cross-worker hand-off shelf for requests stranded by a dead worker: the
+/// panic-isolation path pushes its queued (not-yet-admitted) submissions
+/// here, and every surviving worker adopts from it during intake. Whatever
+/// is still here after all workers have joined is failed by the engine with
+/// [`FinishReason::WorkerFailed`] terminal events — the backstop that keeps
+/// "exactly one terminal event per submission" true even when the last
+/// worker dies.
+#[derive(Default)]
+pub struct Orphanage {
+    /// Queued submissions a dying worker shelved for re-dispatch.
+    subs: Mutex<Vec<Submission>>,
+    /// Dead workers' submission receivers, parked so the channels stay
+    /// open: a submit that raced the worker's death lands here instead of
+    /// vanishing into a dropped `Receiver`, and [`Orphanage::adopt`] picks
+    /// it up.
+    rxs: Mutex<Vec<Receiver<Submission>>>,
+}
+
+impl Orphanage {
+    pub fn new() -> Orphanage {
+        Orphanage::default()
+    }
+
+    /// Shelve queued submissions from a dying worker.
+    pub fn push_all(&self, subs: impl IntoIterator<Item = Submission>) {
+        // A worker cannot panic while holding these locks (no user code
+        // runs under them), but recover from poisoning anyway.
+        self.subs.lock().unwrap_or_else(|e| e.into_inner()).extend(subs);
+    }
+
+    /// Park a dead worker's receiver so its channel never closes with a
+    /// submission still in flight.
+    pub fn park_receiver(&self, rx: Receiver<Submission>) {
+        self.rxs.lock().unwrap_or_else(|e| e.into_inner()).push(rx);
+    }
+
+    /// Take everything stranded right now: the shelf, plus whatever is
+    /// readable from parked dead-worker channels.
+    pub fn adopt(&self) -> Vec<Submission> {
+        let mut out = std::mem::take(&mut *self.subs.lock().unwrap_or_else(|e| e.into_inner()));
+        for rx in self.rxs.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            while let Ok(sub) = rx.try_recv() {
+                out.push(sub);
+            }
+        }
+        out
+    }
+}
+
+/// Per-worker runtime environment for [`run_batcher_env`]: everything the
+/// resilience layer threads into the loop. `RunEnv::default()` is the
+/// plain single-worker setup the direct batcher tests use.
+#[derive(Default)]
+pub struct RunEnv {
+    /// Worker index, for fault attribution and diagnostics.
+    pub worker: usize,
+    /// Engine-raised abort switch: when set, the loop cancels every active
+    /// and queued request and exits without further model work.
+    pub abort: Option<Arc<AtomicBool>>,
+    /// Cleared (set `false`) when this worker's loop exits for any reason —
+    /// the engine routes submissions only to workers still flagged alive.
+    pub alive: Option<Arc<AtomicBool>>,
+    /// Shared shelf for dead workers' queued requests; surviving workers
+    /// adopt from it during intake.
+    pub orphans: Option<Arc<Orphanage>>,
+    /// Deterministic fault schedule (injected panics / KV clamps / stalls)
+    /// for this worker; see [`super::faults`].
+    pub faults: Option<super::faults::WorkerFaults>,
 }
 
 /// Per-sequence speculative-decoding state (present only when a draft
@@ -255,6 +423,9 @@ struct Active {
     /// This iteration's draft proposals (set at planning, consumed at
     /// writeback by the acceptance walk).
     proposed: Vec<u32>,
+    /// Engine load accounting, released on drop (i.e. when this sequence
+    /// retires — by any path, including worker-failure cleanup).
+    _load: Option<CountGuard>,
 }
 
 impl Active {
@@ -376,16 +547,29 @@ pub struct BatchMetrics {
     /// Draft tokens rolled back (`spec_drafted − spec_accepted`): rejected
     /// by the acceptance sample, or discarded past a mid-span finish.
     pub spec_rejected: usize,
+    /// Streams finished [`FinishReason::DeadlineExceeded`] — TTFT or
+    /// end-to-end budget blown while queued, prefilling, or decoding.
+    pub deadline_expired: usize,
+    /// Streams finished [`FinishReason::WorkerFailed`]: in-flight on a
+    /// worker when it died, or stranded in a queue no survivor could adopt.
+    pub worker_failed: usize,
+    /// Submissions the engine refused with `SubmitError::QueueFull`
+    /// (per-worker queue depth at `EngineConfig::queue_cap`). Counted by
+    /// the engine at reject time and folded into this worker's metrics at
+    /// join — these requests never produced a stream.
+    pub shed_queue_full: usize,
 }
 
 impl BatchMetrics {
-    fn count_finish(&mut self, reason: FinishReason) {
+    pub(crate) fn count_finish(&mut self, reason: FinishReason) {
         match reason {
             FinishReason::Eos => self.finished_eos += 1,
             FinishReason::Length => self.finished_length += 1,
             FinishReason::Cancelled => self.cancelled += 1,
             FinishReason::TruncatedKv => self.truncated_kv += 1,
             FinishReason::Rejected => self.rejected_impossible += 1,
+            FinishReason::DeadlineExceeded => self.deadline_expired += 1,
+            FinishReason::WorkerFailed => self.worker_failed += 1,
         }
     }
 }
@@ -433,23 +617,213 @@ pub fn run_batcher_spec(
     pool: &KvPool,
     cfg: &BatchConfig,
     rx: Receiver<Submission>,
+    on_finish: impl FnMut(&GenRequest, FinishReason),
+) -> BatchMetrics {
+    run_batcher_env(model, draft, pool, cfg, rx, RunEnv::default(), on_finish)
+}
+
+/// Loop state that outlives one iteration — kept outside the
+/// `catch_unwind` boundary so the failure path can still walk the active
+/// set, free leases, and re-home queued requests after a panic. Every
+/// mutation inside an iteration leaves this structurally valid (panics can
+/// interrupt a forward pass, never a `Vec` splice).
+struct LoopState {
+    active: Vec<Active>,
+    metrics: BatchMetrics,
+    channel_open: bool,
+    pending: Vec<Submission>,
+    /// Reusable activation-quantization scratch for the chunked forward.
+    arena: QGemmArena,
+    /// Rotating start index for prefill chunk grants (fairness).
+    prefill_rr: usize,
+    /// Loop-pass counter. Unlike `metrics.iterations` it advances on idle
+    /// passes too — fault schedules key off it, so a clamp window always
+    /// lifts even when the clamp itself has emptied the active set.
+    pass: usize,
+}
+
+/// What one loop pass decided.
+enum Step {
+    Continue,
+    Done,
+}
+
+/// [`run_batcher_spec`] with an explicit worker environment — the full
+/// resilience-aware entry point the engine uses. Each loop pass runs under
+/// `catch_unwind`: a panic anywhere in the iteration body (injected fault
+/// or real bug) terminates this worker's in-flight streams with
+/// [`FinishReason::WorkerFailed`], frees their leases, quarantines the
+/// prefix trie, and hands queued requests (plus the still-open submission
+/// channel) to the [`Orphanage`] so surviving workers adopt them — the
+/// worker dies, the engine doesn't. An engine-raised `env.abort` cancels
+/// everything and exits without further model work (the engine drops the
+/// sender right after raising it, so the final drain terminates).
+pub fn run_batcher_env(
+    model: &Gpt,
+    draft: Option<&DraftModel>,
+    pool: &KvPool,
+    cfg: &BatchConfig,
+    rx: Receiver<Submission>,
+    mut env: RunEnv,
     mut on_finish: impl FnMut(&GenRequest, FinishReason),
 ) -> BatchMetrics {
     // Speculation is on for the whole run or not at all; per-sequence
     // depth still degrades dynamically near limits.
     let draft = if cfg.spec_k > 0 { draft } else { None };
-    let mut active: Vec<Active> = Vec::new();
-    let mut metrics = BatchMetrics::default();
-    let mut channel_open = true;
-    let mut pending: Vec<Submission> = Vec::new();
-    // Reusable activation-quantization scratch for the chunked forward.
-    let mut arena = QGemmArena::new();
-    // Rotating start index for prefill chunk grants (fairness).
-    let mut prefill_rr = 0usize;
+    let mut st = LoopState {
+        active: Vec::new(),
+        metrics: BatchMetrics::default(),
+        channel_open: true,
+        pending: Vec::new(),
+        arena: QGemmArena::new(),
+        prefill_rr: 0,
+        pass: 0,
+    };
+    let mut failed = false;
+    loop {
+        if env.abort.as_ref().is_some_and(|a| a.load(Ordering::Acquire)) {
+            abort_all(&mut st, pool, &rx, &mut on_finish);
+            break;
+        }
+        let step = catch_unwind(AssertUnwindSafe(|| {
+            iteration(model, draft, pool, cfg, &rx, &mut st, &mut env, &mut on_finish)
+        }));
+        match step {
+            Ok(Step::Continue) => {}
+            Ok(Step::Done) => break,
+            Err(_) => {
+                worker_failed_cleanup(&mut st, pool, &rx, &mut env, &mut on_finish);
+                failed = true;
+                break;
+            }
+        }
+    }
+    // Flip alive BEFORE parking the receiver: the engine routes only to
+    // alive workers, and anything that raced past the check lands in the
+    // parked channel where survivors (or the engine's shutdown drain)
+    // adopt it — no submission is ever silently dropped.
+    if let Some(alive) = &env.alive {
+        alive.store(false, Ordering::Release);
+    }
+    if failed {
+        if let Some(orph) = &env.orphans {
+            orph.park_receiver(rx);
+        }
+    }
+    st.metrics.peak_tokens = pool.peak_tokens();
+    st.metrics
+}
 
-    while channel_open || !active.is_empty() || !pending.is_empty() {
+/// Engine-raised abort: cancel every in-flight and queued request with a
+/// terminal event, free leases, and drain the submission channel until it
+/// disconnects (the engine drops the sender right after raising abort).
+fn abort_all(
+    st: &mut LoopState,
+    pool: &KvPool,
+    rx: &Receiver<Submission>,
+    on_finish: &mut impl FnMut(&GenRequest, FinishReason),
+) {
+    for a in st.active.drain(..) {
+        retire_one(a, FinishReason::Cancelled, pool, &mut st.metrics, on_finish);
+    }
+    for sub in st.pending.drain(..) {
+        finish_queued(sub, FinishReason::Cancelled, &mut st.metrics, on_finish);
+    }
+    loop {
+        match rx.try_recv() {
+            Ok(sub) => finish_queued(sub, FinishReason::Cancelled, &mut st.metrics, on_finish),
+            Err(TryRecvError::Empty) => std::thread::sleep(Duration::from_micros(200)),
+            Err(TryRecvError::Disconnected) => break,
+        }
+    }
+}
+
+/// The panic-isolation path: the iteration body unwound. In-flight streams
+/// terminate with [`FinishReason::WorkerFailed`] (lease freed before the
+/// terminal event, as everywhere), the prefix trie is quarantined — a
+/// panic may have interrupted a page write, and dropping the trie both
+/// discards any suspect cached state and lets the page meter drain — and
+/// queued requests are shelved for surviving workers (or failed here when
+/// running without an engine).
+fn worker_failed_cleanup(
+    st: &mut LoopState,
+    pool: &KvPool,
+    rx: &Receiver<Submission>,
+    env: &mut RunEnv,
+    on_finish: &mut impl FnMut(&GenRequest, FinishReason),
+) {
+    // A worker that dies inside a fault clamp window must not leave its
+    // pool pinched forever.
+    if let Some(f) = env.faults.as_mut() {
+        f.restore(pool);
+    }
+    pool.clear_prefix_cache();
+    for a in st.active.drain(..) {
+        retire_one(a, FinishReason::WorkerFailed, pool, &mut st.metrics, on_finish);
+    }
+    let mut stranded: Vec<Submission> = st.pending.drain(..).collect();
+    while let Ok(sub) = rx.try_recv() {
+        stranded.push(sub);
+    }
+    match env.orphans.as_deref() {
+        Some(orph) => orph.push_all(stranded),
+        None => {
+            for sub in stranded {
+                finish_queued(sub, FinishReason::WorkerFailed, &mut st.metrics, on_finish);
+            }
+        }
+    }
+}
+
+/// Free the lease and emit the terminal event for one active sequence —
+/// the single retire path shared by the normal loop, abort, and
+/// worker-failure cleanup.
+fn retire_one(
+    mut a: Active,
+    reason: FinishReason,
+    pool: &KvPool,
+    metrics: &mut BatchMetrics,
+    on_finish: &mut impl FnMut(&GenRequest, FinishReason),
+) {
+    // Free the lease BEFORE the terminal event: once `Finished` is
+    // observable, the capacity is back in the pool.
+    pool.free(a.lease);
+    metrics.count_finish(reason);
+    let now = Instant::now();
+    let total = now - a.req.submitted;
+    let ttft = a.first_token_at.map(|t| t - a.req.submitted).unwrap_or(total);
+    let n_tokens = a.n_generated;
+    a.emit(TokenEvent::Finished { reason, n_tokens, ttft, total });
+    on_finish(&a.req, reason);
+}
+
+/// One pass of the batcher loop: faults → intake (incl. orphan adoption) →
+/// admission → cancellation/deadline sweep → ragged plan → one forward →
+/// sample/emit → retire. Runs under `catch_unwind` in
+/// [`run_batcher_env`].
+#[allow(clippy::too_many_arguments)]
+fn iteration(
+    model: &Gpt,
+    draft: Option<&DraftModel>,
+    pool: &KvPool,
+    cfg: &BatchConfig,
+    rx: &Receiver<Submission>,
+    st: &mut LoopState,
+    env: &mut RunEnv,
+    mut on_finish: impl FnMut(&GenRequest, FinishReason),
+) -> Step {
+    let LoopState { active, metrics, channel_open, pending, arena, prefill_rr, pass } = st;
+    *pass += 1;
+    // Injected faults fire before any pool or model work this pass: stalls
+    // sleep, capacity clamps retune the pool, panics unwind into the
+    // isolation layer above.
+    if let Some(f) = env.faults.as_mut() {
+        f.before_pass(*pass, pool);
+    }
+
+    {
         // ---- intake ----
-        while active.len() < cfg.max_batch && channel_open {
+        while active.len() < cfg.max_batch && *channel_open {
             match rx.recv_timeout(if active.is_empty() && pending.is_empty() {
                 cfg.idle_wait
             } else {
@@ -458,16 +832,34 @@ pub fn run_batcher_spec(
                 Ok(sub) => pending.push(sub),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
-                    channel_open = false;
+                    *channel_open = false;
                 }
             }
+        }
+        // Adopt requests stranded by dead sibling workers (their queued
+        // submissions, plus anything still readable from their parked
+        // channels).
+        if let Some(orph) = env.orphans.as_deref() {
+            pending.extend(orph.adopt());
+        }
+        if !*channel_open && active.is_empty() && pending.is_empty() {
+            return Step::Done;
         }
 
         // ---- admission ----
         let mut still_pending = Vec::new();
+        let admit_now = Instant::now();
         for sub in pending.drain(..) {
             if sub.cancel.load(Ordering::Acquire) {
-                finish_queued(sub, FinishReason::Cancelled, &mut metrics, &mut on_finish);
+                finish_queued(sub, FinishReason::Cancelled, metrics, &mut on_finish);
+                continue;
+            }
+            // Queued requests are swept against their deadlines too: a
+            // request that blew its TTFT (or total) budget while waiting
+            // for batch room or pool capacity sheds here instead of
+            // burning a prefill it can no longer use.
+            if sub.req.expired(admit_now, false) {
+                finish_queued(sub, FinishReason::DeadlineExceeded, metrics, &mut on_finish);
                 continue;
             }
             if active.len() >= cfg.max_batch {
@@ -485,7 +877,7 @@ pub fn run_batcher_spec(
                 || min_need > model.cfg.max_seq
                 || min_need > pool.capacity_tokens()
             {
-                finish_queued(sub, FinishReason::Rejected, &mut metrics, &mut on_finish);
+                finish_queued(sub, FinishReason::Rejected, metrics, &mut on_finish);
                 continue;
             }
             if sub.req.max_new == 0 {
@@ -494,7 +886,7 @@ pub fn run_batcher_spec(
                 // sampled token would overshoot the limit. (Checked after
                 // the validity rules so an impossible request still reports
                 // Rejected, not a "completed" empty stream.)
-                finish_queued(sub, FinishReason::Length, &mut metrics, &mut on_finish);
+                finish_queued(sub, FinishReason::Length, metrics, &mut on_finish);
                 continue;
             }
             // Right-sized lease: prompt + min(max_new, kv_reserve), clamped
@@ -539,10 +931,13 @@ pub fn run_batcher_spec(
                             hist: sub.req.prompt.clone(),
                         }),
                         proposed: Vec::new(),
+                        _load: sub.load,
                         req: sub.req,
                         events: sub.events,
                         cancel: sub.cancel,
                     });
+                    // `sub.queue_slot` drops here: the request has left the
+                    // submit queue, freeing one `queue_cap` slot.
                     metrics.requests += 1;
                 }
                 None => {
@@ -551,23 +946,27 @@ pub fn run_batcher_spec(
                 }
             }
         }
-        pending = still_pending;
+        *pending = still_pending;
         metrics.peak_batch = metrics.peak_batch.max(active.len());
 
-        // ---- cancellation sweep ----
-        // Raised flags finish this iteration: the sequence is skipped by
-        // the planner below and its lease is freed in the retire phase at
-        // the bottom — cancellation-to-lease-return is at most one
-        // iteration.
+        // ---- cancellation + deadline sweep ----
+        // Raised flags (and blown deadlines) finish this iteration: the
+        // sequence is skipped by the planner below and its lease is freed
+        // in the retire phase at the bottom — cancellation- (or expiry-)
+        // to-lease-return is at most one iteration.
+        let sweep_now = Instant::now();
         for a in active.iter_mut() {
             if a.finish.is_none() && a.cancel.load(Ordering::Acquire) {
                 a.finish = Some(FinishReason::Cancelled);
             }
+            if a.finish.is_none() && a.req.expired(sweep_now, a.first_token_at.is_some()) {
+                a.finish = Some(FinishReason::DeadlineExceeded);
+            }
         }
 
         if active.is_empty() {
-            if !channel_open && pending.is_empty() {
-                break;
+            if !*channel_open && pending.is_empty() {
+                return Step::Done;
             }
             if !pending.is_empty() {
                 // Feasible requests are waiting on pool space held outside
@@ -575,7 +974,7 @@ pub fn run_batcher_spec(
                 // spinning the admission loop hot.
                 std::thread::sleep(cfg.idle_wait);
             }
-            continue;
+            return Step::Continue;
         }
 
         // ---- one iteration: plan a ragged prefill+decode batch under the
@@ -676,7 +1075,7 @@ pub fn run_batcher_spec(
                         dcaches.push(&mut a.draft.as_mut().unwrap().cache);
                     }
                 }
-                d.propose_batch(&tails, &ks, &mut dcaches, &mut arena)
+                d.propose_batch(&tails, &ks, &mut dcaches, arena)
             };
             for (ps, &(i, k, next)) in props.into_iter().zip(&spec) {
                 metrics.spec_drafted += k;
@@ -697,8 +1096,8 @@ pub fn run_batcher_spec(
             .map(|(i, _)| i)
             .collect();
         if !prefilling.is_empty() {
-            let start = prefill_rr % prefilling.len();
-            prefill_rr = prefill_rr.wrapping_add(1);
+            let start = *prefill_rr % prefilling.len();
+            *prefill_rr = prefill_rr.wrapping_add(1);
             for k in 0..prefilling.len() {
                 if budget_left == 0 {
                     break;
@@ -738,7 +1137,7 @@ pub fn run_batcher_spec(
                         caches.push(&mut a.cache);
                     }
                 }
-                model.forward_chunk_batch(&chunks, &mut caches, &mut arena)
+                model.forward_chunk_batch(&chunks, &mut caches, arena)
             };
             // Logits are materialized now: sample each row's next token at
             // this instant — generation time — and emit it immediately,
@@ -862,22 +1261,12 @@ pub fn run_batcher_spec(
                 i += 1;
                 continue;
             }
-            let mut a = active.swap_remove(i);
-            let reason = a.finish.unwrap();
-            // Free the lease BEFORE the terminal event: once `Finished` is
-            // observable, the capacity is back in the pool.
-            pool.free(a.lease);
-            metrics.count_finish(reason);
-            let now = Instant::now();
-            let total = now - a.req.submitted;
-            let ttft = a.first_token_at.map(|t| t - a.req.submitted).unwrap_or(total);
-            let n_tokens = a.n_generated;
-            a.emit(TokenEvent::Finished { reason, n_tokens, ttft, total });
-            on_finish(&a.req, reason);
+            let a = active.swap_remove(i);
+            let reason = a.finish.unwrap_or(FinishReason::Cancelled);
+            retire_one(a, reason, pool, metrics, &mut on_finish);
         }
     }
-    metrics.peak_tokens = pool.peak_tokens();
-    metrics
+    Step::Continue
 }
 
 #[cfg(test)]

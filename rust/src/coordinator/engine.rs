@@ -18,7 +18,7 @@
 //! let mut req = GenRequest::new(0, prompt, 64);
 //! req.sampling = SamplingParams { temperature: 0.8, top_k: 40, top_p: 0.95,
 //!                                 seed: 7, stop_tokens: vec![] };
-//! let handle = engine.submit(req);          // returns immediately
+//! let handle = engine.submit(req)?;         // returns immediately (QueueFull sheds)
 //! while let Some(ev) = handle.recv() {      // blocking receipt
 //!     match ev {
 //!         TokenEvent::PrefillDone { ttft } => ...,
@@ -31,45 +31,84 @@
 //! let per_worker = engine.shutdown();        // drain + join workers
 //! ```
 //!
-//! ## Request lifecycle
+//! ## Request lifecycle — the full state machine
 //!
 //! ```text
-//!  submit(GenRequest{ sampling, .. })
+//!  submit(GenRequest{ sampling, deadline, .. })
+//!     │  admission gate: alive workers only, per-worker queue depth
+//!     │  < queue_cap — else Err(SubmitError::QueueFull / Closed),
+//!     │  no stream is ever created          (shed_queue_full metric)
 //!     │  least-loaded routing (outstanding prompt+max_new tokens)
 //!     ▼
-//!  worker queue ──► admission ──► Active { Sampler, KvCache, Lease }
-//!     │   impossible → Finished{Rejected}       │ per-iteration loop:
-//!     │                                         │  cancel sweep → ragged
-//!     ▼                                         │  forward → sample+emit
-//!  RequestHandle ◄── PrefillDone{ttft} ◄────────┤
-//!     │          ◄── Token{token,index}* ◄──────┤   (generation time)
+//!  QUEUED ──────────► admission ──────► ACTIVE (prefill → decode)
+//!     │  impossible → Finished{Rejected}    │ per-iteration loop:
+//!     │  expired    → Finished{Deadline-    │  cancel + deadline sweep →
+//!     │               Exceeded}             │  ragged plan → forward →
+//!     │  worker died, no survivor to adopt  │  sample+emit → retire
+//!     │            → Finished{WorkerFailed} │
+//!     ▼                                     ▼
+//!  RequestHandle ◄── PrefillDone{ttft} ◄────┤
+//!     │          ◄── Token{token,index}* ◄──┤   (generation time)
 //!     │          ◄── Finished{reason,..} ◄── lease freed BEFORE the
-//!     │                                       terminal event
+//!     │                                      terminal event
 //!     └── cancel() / drop ──► flag swept each iteration ──► Cancelled
 //! ```
 //!
-//! Every stream terminates with exactly one `Finished` carrying a
-//! [`FinishReason`] (eos / length / cancelled / truncated-kv / rejected).
-//! Dropping a handle without draining it cancels the request — abandoned
-//! streams never pin KV capacity.
+//! Terminal exits, exhaustively: `Eos` / `Length` / `TruncatedKv`
+//! (completed), `Rejected` (admission refused), `Cancelled` (flag or
+//! dropped handle), `DeadlineExceeded` (TTFT or end-to-end budget blown —
+//! swept every iteration, lease freed the same pass), and `WorkerFailed`
+//! (the serving worker panicked mid-flight; queued requests re-dispatch to
+//! surviving workers first, so only in-flight work and orphans with no
+//! survivor left see this reason). A request refused with
+//! [`SubmitError::QueueFull`] never enters the machine at all — no stream,
+//! no terminal event — which is what distinguishes *shedding* from
+//! *failing*.
+//!
+//! Every accepted stream terminates with exactly one `Finished`. Dropping a
+//! handle without draining it cancels the request — abandoned streams never
+//! pin KV capacity.
+//!
+//! ## Failure containment
+//!
+//! Each worker's iteration body runs under `catch_unwind`
+//! ([`super::batcher::run_batcher_env`]): a panic kills that worker only.
+//! Its in-flight streams end with `WorkerFailed`, its queued submissions go
+//! to a shared [`Orphanage`] that surviving workers adopt from during
+//! intake, and its submission receiver is parked there so a submit racing
+//! the death still lands somewhere observable. The engine's shutdown path
+//! drains the orphanage one last time after joining all workers, so
+//! "exactly one terminal event per accepted submission" holds even when
+//! every worker dies.
+//!
+//! ## Shutdown
+//!
+//! [`Engine::shutdown_mode`] takes a [`Shutdown`] policy: `Drain` closes
+//! admission and lets in-flight work finish (escalating to abort if the
+//! timeout expires), `Abort` raises every worker's abort flag and cancels
+//! everything immediately. [`Engine::shutdown`] is drain-without-deadline;
+//! `Drop` aborts — dropping the facade mid-stream joins the workers and
+//! frees every KV page rather than hanging on stragglers.
 //!
 //! The old batch-and-drain surface survives as a thin compat wrapper:
 //! [`super::router::serve_requests`] submits everything, waits on every
 //! handle, and aggregates a `ServerRun`.
 
 use super::batcher::{
-    run_batcher_spec, BatchConfig, BatchMetrics, FinishReason, GenRequest, Submission, TokenEvent,
+    run_batcher_env, BatchConfig, BatchMetrics, CountGuard, FinishReason, GenRequest, Orphanage,
+    RunEnv, Submission, TokenEvent,
 };
+use super::faults::FaultPlan;
 use super::kvpool::KvPool;
 use crate::model::{DraftModel, Gpt};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 /// Engine sizing: worker replicas, per-worker batcher policy, per-worker KV
-/// pool capacity (tokens).
+/// pool capacity (tokens), admission bound, and an optional fault schedule.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub workers: usize,
@@ -80,6 +119,14 @@ pub struct EngineConfig {
     /// is `Arc`-backed, so no weights are copied). Inert unless
     /// `batch.spec_k > 0`.
     pub draft: Option<DraftModel>,
+    /// Max requests queued (submitted but not yet admitted) per worker.
+    /// When every alive worker is at the cap, [`Engine::submit`] sheds the
+    /// request with [`SubmitError::QueueFull`] instead of letting latency
+    /// grow unboundedly. `0` means unbounded (the pre-resilience behavior).
+    pub queue_cap: usize,
+    /// Deterministic fault-injection schedule (test/chaos harness); worker
+    /// `w` runs `faults.worker(w)`. `None` in production.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for EngineConfig {
@@ -89,8 +136,47 @@ impl Default for EngineConfig {
             batch: BatchConfig::default(),
             kv_tokens: 1 << 16,
             draft: None,
+            queue_cap: 0,
+            faults: None,
         }
     }
+}
+
+/// Why [`Engine::submit`] refused a request. Shed requests never produce a
+/// stream or a terminal event — the caller still owns the `GenRequest`.
+#[derive(Clone, Debug)]
+pub enum SubmitError {
+    /// Every alive worker's queue is at [`EngineConfig::queue_cap`]. The
+    /// request is returned so the caller can retry (see
+    /// [`Engine::submit_wait`]), downgrade, or fail fast.
+    QueueFull(GenRequest),
+    /// No alive worker remains (all panicked, or shutdown began). Retrying
+    /// cannot succeed.
+    Closed(GenRequest),
+}
+
+impl SubmitError {
+    /// Take the request back out of the error.
+    pub fn into_request(self) -> GenRequest {
+        match self {
+            SubmitError::QueueFull(r) | SubmitError::Closed(r) => r,
+        }
+    }
+
+    pub fn is_queue_full(&self) -> bool {
+        matches!(self, SubmitError::QueueFull(_))
+    }
+}
+
+/// Shutdown policy for [`Engine::shutdown_mode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shutdown {
+    /// Close admission, let in-flight and queued work finish. If a timeout
+    /// is given and expires, escalate to `Abort` for whatever remains.
+    Drain,
+    /// Raise every worker's abort flag: in-flight and queued streams end
+    /// with `Finished{Cancelled}` immediately, no further model work runs.
+    Abort,
 }
 
 /// Aggregated outcome of one request, built by [`RequestHandle::wait`] (and
@@ -193,15 +279,24 @@ impl RequestHandle {
         }
     }
 
-    /// Blocking receipt with a deadline.
-    pub fn recv_timeout(&self, timeout: Duration) -> Option<TokenEvent> {
-        self.events.recv_timeout(timeout).ok()
+    /// Blocking receipt with a deadline. Returns [`TryEvent::Empty`] when
+    /// the timeout elapsed with the stream still open (poll again) and
+    /// [`TryEvent::Closed`] when the worker is gone — the old
+    /// `Option<TokenEvent>` return conflated the two, so callers could not
+    /// tell a slow stream from a dead one.
+    pub fn recv_timeout(&self, timeout: Duration) -> TryEvent {
+        match self.events.recv_timeout(timeout) {
+            Ok(ev) => TryEvent::Event(ev),
+            Err(RecvTimeoutError::Timeout) => TryEvent::Empty,
+            Err(RecvTimeoutError::Disconnected) => TryEvent::Closed,
+        }
     }
 
     /// Drain the stream to completion and aggregate it into a [`Response`]
-    /// — the submit-all/drain-all compat path. If the worker disappears
-    /// without a terminal event (it panicked), the partial stream is
-    /// reported as `Cancelled`.
+    /// — the submit-all/drain-all compat path. If the channel closes
+    /// without a terminal event (which the worker-failure and shutdown
+    /// backstops make vanishingly rare), the partial stream is reported as
+    /// `WorkerFailed`.
     pub fn wait(self) -> Response {
         let mut tokens = Vec::new();
         let mut ttft = None;
@@ -227,7 +322,7 @@ impl RequestHandle {
                         ttft: ttft.unwrap_or(total),
                         total,
                         prompt_len: self.prompt_len,
-                        finish: FinishReason::Cancelled,
+                        finish: FinishReason::WorkerFailed,
                     };
                 }
             }
@@ -288,14 +383,34 @@ pub fn poll_streams(
 
 struct Worker {
     tx: Sender<Submission>,
+    /// Outstanding `prompt + max_new` token estimate (routing signal),
+    /// maintained by `CountGuard`s riding on submissions.
     load: Arc<AtomicUsize>,
+    /// Submitted-but-not-yet-admitted depth (admission bound).
+    queued: Arc<AtomicUsize>,
+    /// Requests shed at this worker with `QueueFull`; folded into its
+    /// metrics at join.
+    shed: Arc<AtomicUsize>,
+    /// Cleared by the batcher loop on exit (panic or drain); submit routes
+    /// only to alive workers.
+    alive: Arc<AtomicBool>,
+    /// Engine-raised abort switch for [`Shutdown::Abort`].
+    abort: Arc<AtomicBool>,
     pool: KvPool,
     handle: thread::JoinHandle<BatchMetrics>,
+}
+
+impl Worker {
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
 }
 
 /// Multi-worker streaming serving engine. See the module doc.
 pub struct Engine {
     workers: Vec<Worker>,
+    orphans: Arc<Orphanage>,
+    queue_cap: usize,
 }
 
 impl Engine {
@@ -303,8 +418,9 @@ impl Engine {
     /// [`KvPool`] sized from the model config, over a shared immutable model
     /// snapshot.
     pub fn new(model: Arc<Gpt>, cfg: EngineConfig) -> Engine {
+        let orphans = Arc::new(Orphanage::new());
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
-        for _ in 0..cfg.workers.max(1) {
+        for i in 0..cfg.workers.max(1) {
             let (tx, rx) = std::sync::mpsc::channel::<Submission>();
             let pool =
                 KvPool::for_model_tokens_dtype(&model.cfg, cfg.kv_tokens, cfg.batch.kv_dtype);
@@ -313,29 +429,69 @@ impl Engine {
             let bcfg = cfg.batch.clone();
             let draft = cfg.draft.clone();
             let load = Arc::new(AtomicUsize::new(0));
-            let load2 = Arc::clone(&load);
+            let queued = Arc::new(AtomicUsize::new(0));
+            let shed = Arc::new(AtomicUsize::new(0));
+            let alive = Arc::new(AtomicBool::new(true));
+            let abort = Arc::new(AtomicBool::new(false));
+            let env = RunEnv {
+                worker: i,
+                abort: Some(Arc::clone(&abort)),
+                alive: Some(Arc::clone(&alive)),
+                orphans: Some(Arc::clone(&orphans)),
+                faults: cfg.faults.as_ref().map(|p| p.worker(i)),
+            };
             let handle = thread::spawn(move || {
-                run_batcher_spec(&model, draft.as_ref(), &worker_pool, &bcfg, rx, |req, _| {
-                    load2.fetch_sub(req.prompt.len() + req.max_new, Ordering::SeqCst);
-                })
+                // Load/queue accounting rides on the submissions as drop
+                // guards (panic-safe); nothing to do at finish time.
+                run_batcher_env(&model, draft.as_ref(), &worker_pool, &bcfg, rx, env, |_, _| {})
             });
-            workers.push(Worker { tx, load, pool, handle });
+            workers.push(Worker { tx, load, queued, shed, alive, abort, pool, handle });
         }
-        Engine { workers }
+        Engine { workers, orphans, queue_cap: cfg.queue_cap }
     }
 
-    /// Submit a request to the least-loaded worker (outstanding
+    /// Submit a request to the least-loaded alive worker (outstanding
     /// `prompt + max_new` token estimate) and return its stream handle
-    /// immediately.
-    pub fn submit(&self, req: GenRequest) -> RequestHandle {
+    /// immediately. Sheds with [`SubmitError::QueueFull`] when every alive
+    /// worker's queue is at [`EngineConfig::queue_cap`], and with
+    /// [`SubmitError::Closed`] when no alive worker remains.
+    pub fn submit(&self, req: GenRequest) -> Result<RequestHandle, SubmitError> {
+        let mut best: Option<&Worker> = None;
+        let mut any_alive = false;
+        for w in &self.workers {
+            if !w.is_alive() {
+                continue;
+            }
+            any_alive = true;
+            if self.queue_cap > 0 && w.queued.load(Ordering::SeqCst) >= self.queue_cap {
+                continue;
+            }
+            if best.map_or(true, |b| w.load.load(Ordering::SeqCst) < b.load.load(Ordering::SeqCst))
+            {
+                best = Some(w);
+            }
+        }
+        let Some(w) = best else {
+            return Err(if any_alive {
+                // Attribute the shed to the least-loaded alive worker so
+                // per-worker metrics sum to the engine-wide shed count.
+                if let Some(w) = self
+                    .workers
+                    .iter()
+                    .filter(|w| w.is_alive())
+                    .min_by_key(|w| w.load.load(Ordering::SeqCst))
+                {
+                    w.shed.fetch_add(1, Ordering::SeqCst);
+                }
+                SubmitError::QueueFull(req)
+            } else {
+                SubmitError::Closed(req)
+            });
+        };
         let cost = req.prompt.len() + req.max_new;
-        let w = self
-            .workers
-            .iter()
-            .min_by_key(|w| w.load.load(Ordering::SeqCst))
-            .expect("engine has workers");
-        w.load.fetch_add(cost, Ordering::SeqCst);
-        let (sub, events, cancel) = Submission::channel(req);
+        let (mut sub, events, cancel) = Submission::channel(req);
+        sub.load = Some(CountGuard::add(&w.load, cost));
+        sub.queue_slot = Some(CountGuard::add(&w.queued, 1));
         let handle = RequestHandle {
             id: sub.req.id,
             prompt_len: sub.req.prompt.len(),
@@ -343,12 +499,50 @@ impl Engine {
             events,
             cancel,
         };
-        w.tx.send(sub).expect("engine worker alive");
-        handle
+        // The worker's receiver outlives the worker (parked in the
+        // orphanage on death), so this send can only fail if the engine is
+        // already tearing down — in which case the shutdown backstop
+        // would never see the sub either; hand it to the orphanage
+        // directly rather than dropping it on the floor.
+        if let Err(e) = w.tx.send(sub) {
+            self.orphans.push_all([e.0]);
+        }
+        Ok(handle)
+    }
+
+    /// Blocking [`Engine::submit`]: on `QueueFull`, retry with a short
+    /// backoff until `timeout` elapses. Returns the final error (with the
+    /// request inside) if the queues never opened up, or immediately on
+    /// `Closed`.
+    pub fn submit_wait(
+        &self,
+        req: GenRequest,
+        timeout: Duration,
+    ) -> Result<RequestHandle, SubmitError> {
+        let deadline = Instant::now() + timeout;
+        let mut req = req;
+        loop {
+            match self.submit(req) {
+                Ok(h) => return Ok(h),
+                Err(SubmitError::Closed(r)) => return Err(SubmitError::Closed(r)),
+                Err(SubmitError::QueueFull(r)) => {
+                    if Instant::now() >= deadline {
+                        return Err(SubmitError::QueueFull(r));
+                    }
+                    req = r;
+                    thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
     }
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Workers whose batcher loop is still running.
+    pub fn alive_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.is_alive()).count()
     }
 
     /// KV tokens currently leased across all worker pools (observability +
@@ -375,34 +569,113 @@ impl Engine {
         self.workers.iter().map(|w| w.pool.live_pages()).sum()
     }
 
-    /// Close the submission side, drain in-flight requests, join the worker
-    /// threads, and return their per-worker metrics.
-    pub fn shutdown(mut self) -> Vec<BatchMetrics> {
-        self.drain_workers()
+    /// Clones of every worker's pool handle (the state is shared, not
+    /// copied). Lets an observer — a leak test, a metrics exporter — keep
+    /// watching the lease/page meters even across the engine's own
+    /// teardown, e.g. to assert the meters drained to zero after `Drop`.
+    pub fn kv_pool_handles(&self) -> Vec<KvPool> {
+        self.workers.iter().map(|w| w.pool.clone()).collect()
     }
 
-    fn drain_workers(&mut self) -> Vec<BatchMetrics> {
-        let mut per_worker = Vec::with_capacity(self.workers.len());
-        for w in self.workers.drain(..) {
-            drop(w.tx);
-            per_worker.push(w.handle.join().expect("worker panicked"));
+    /// Close the submission side, drain in-flight requests to completion
+    /// (no deadline), join the worker threads, and return their per-worker
+    /// metrics — `shutdown_mode(Shutdown::Drain, None)`.
+    pub fn shutdown(self) -> Vec<BatchMetrics> {
+        self.shutdown_mode(Shutdown::Drain, None)
+    }
+
+    /// Shut the engine down under an explicit policy. `Drain` closes
+    /// admission and waits for in-flight work; if `timeout` expires first,
+    /// the remaining workers are aborted (their streams end `Cancelled`) so
+    /// the call is bounded. `Abort` cancels everything immediately. Either
+    /// way all workers are joined, the orphanage backstop fails any
+    /// stranded submission with a terminal event, and per-worker metrics
+    /// (shed counts folded in) are returned.
+    pub fn shutdown_mode(mut self, mode: Shutdown, timeout: Option<Duration>) -> Vec<BatchMetrics> {
+        // Drop still runs afterwards, but with `workers` drained it is a
+        // no-op beyond one extra (empty) orphanage sweep.
+        self.teardown(mode, timeout)
+    }
+
+    /// Shared teardown for `shutdown_mode` and `Drop`.
+    fn teardown(&mut self, mode: Shutdown, timeout: Option<Duration>) -> Vec<BatchMetrics> {
+        if mode == Shutdown::Abort {
+            for w in &self.workers {
+                w.abort.store(true, Ordering::Release);
+            }
+        }
+        // Closing the senders both ends drain-mode intake and lets the
+        // abort path's final channel drain disconnect.
+        let mut workers: Vec<Worker> = self.workers.drain(..).collect();
+        for w in &mut workers {
+            let (dead_tx, _) = std::sync::mpsc::channel();
+            drop(std::mem::replace(&mut w.tx, dead_tx));
+        }
+        if mode == Shutdown::Drain {
+            if let Some(t) = timeout {
+                let deadline = Instant::now() + t;
+                while Instant::now() < deadline
+                    && workers.iter().any(|w| !w.handle.is_finished())
+                {
+                    thread::sleep(Duration::from_micros(500));
+                }
+                // Escalate: whatever has not finished draining gets aborted
+                // so shutdown stays bounded.
+                for w in &workers {
+                    if !w.handle.is_finished() {
+                        w.abort.store(true, Ordering::Release);
+                    }
+                }
+            }
+        }
+        let mut per_worker = Vec::with_capacity(workers.len());
+        for w in workers {
+            let mut m = match w.handle.join() {
+                Ok(m) => m,
+                // The loop itself never unwinds (the iteration body is
+                // isolated); a join error means a panic in thread teardown.
+                // Keep shutting down — resilience over diagnostics here.
+                Err(_) => BatchMetrics::default(),
+            };
+            m.shed_queue_full = w.shed.load(Ordering::SeqCst);
+            per_worker.push(m);
+        }
+        // Backstop: every worker is joined, so nothing will ever adopt
+        // what is still stranded — fail it with a terminal event now.
+        let stranded_reason = match mode {
+            Shutdown::Drain => FinishReason::WorkerFailed,
+            Shutdown::Abort => FinishReason::Cancelled,
+        };
+        for sub in self.orphans.adopt() {
+            let waited = sub.req.submitted.elapsed();
+            let _ = sub.events.send(TokenEvent::Finished {
+                reason: stranded_reason,
+                n_tokens: 0,
+                ttft: waited,
+                total: waited,
+            });
+            if let Some(m) = per_worker.first_mut() {
+                m.count_finish(stranded_reason);
+            }
         }
         per_worker
     }
 }
 
 impl Drop for Engine {
-    /// Dropping the engine without [`Engine::shutdown`] still drains and
-    /// joins the workers (in-flight requests run to completion) so no
-    /// detached thread outlives the facade.
+    /// Dropping the engine without [`Engine::shutdown`] aborts: in-flight
+    /// streams end `Cancelled`, workers are joined, every KV page is freed.
+    /// No detached thread outlives the facade, and a drop mid-stream cannot
+    /// hang on a straggler the way a drain would.
     fn drop(&mut self) {
-        let _ = self.drain_workers();
+        let _ = self.teardown(Shutdown::Abort, None);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::{self, Fault};
     use crate::model::{synthetic_model, SamplingParams};
 
     fn micro_engine(workers: usize) -> Engine {
@@ -420,7 +693,7 @@ mod tests {
         let want = model.generate_greedy(&prompt, 5);
         let engine =
             Engine::new(Arc::clone(&model), EngineConfig { workers: 1, kv_tokens: 4096, ..Default::default() });
-        let handle = engine.submit(GenRequest::new(9, prompt, 5));
+        let handle = engine.submit(GenRequest::new(9, prompt, 5)).unwrap();
         assert_eq!(handle.id(), 9);
         let mut tokens = Vec::new();
         let mut saw_prefill = false;
@@ -452,7 +725,7 @@ mod tests {
     fn wait_aggregates_a_response() {
         let engine = micro_engine(2);
         let handles: Vec<RequestHandle> = (0..6)
-            .map(|i| engine.submit(GenRequest::new(i, vec![2 + i as u32, 3], 4)))
+            .map(|i| engine.submit(GenRequest::new(i, vec![2 + i as u32, 3], 4)).unwrap())
             .collect();
         let responses: Vec<Response> = handles.into_iter().map(|h| h.wait()).collect();
         assert_eq!(responses.len(), 6);
@@ -481,11 +754,12 @@ mod tests {
                 kv_tokens: 1 << 14,
                 batch: BatchConfig { stop_on_eos: false, ..Default::default() },
                 draft: None,
+                ..Default::default()
             },
         );
         let mut req = GenRequest::new(0, vec![2, 3, 4], 5000);
         req.sampling = SamplingParams::greedy();
-        let handle = engine.submit(req);
+        let handle = engine.submit(req).unwrap();
         // First token, then cancel.
         loop {
             match handle.recv().expect("stream open") {
@@ -525,12 +799,12 @@ mod tests {
             stop_tokens: vec![],
         };
         let greedy = GenRequest::new(1, prompt, 6);
-        let hs = engine.submit(sampled.clone());
-        let hg = engine.submit(greedy);
+        let hs = engine.submit(sampled.clone()).unwrap();
+        let hg = engine.submit(greedy).unwrap();
         let rs1 = hs.wait();
         let rg = hg.wait();
         // Reproducible under the same seed on a fresh submit.
-        let rs2 = engine.submit(sampled).wait();
+        let rs2 = engine.submit(sampled).unwrap().wait();
         assert_eq!(rs1.tokens, rs2.tokens, "seeded resubmit must reproduce");
         assert!(!rg.tokens.is_empty());
         drop(engine);
@@ -540,7 +814,7 @@ mod tests {
     fn poll_streams_delivers_every_stream_once() {
         let engine = micro_engine(2);
         let handles: Vec<RequestHandle> = (0..5)
-            .map(|i| engine.submit(GenRequest::new(i, vec![2 + i as u32, 3], 4)))
+            .map(|i| engine.submit(GenRequest::new(i, vec![2 + i as u32, 3], 4)).unwrap())
             .collect();
         let mut tokens = vec![0usize; handles.len()];
         let mut terminals = vec![0usize; handles.len()];
@@ -571,9 +845,10 @@ mod tests {
                 kv_tokens: 4096,
                 batch: BatchConfig { spec_k: 3, stop_on_eos: false, ..Default::default() },
                 draft: Some(draft),
+                ..Default::default()
             },
         );
-        let r = engine.submit(GenRequest::new(0, prompt, 8)).wait();
+        let r = engine.submit(GenRequest::new(0, prompt, 8)).unwrap().wait();
         assert_eq!(r.tokens, want, "speculative greedy stream must be bitwise-identical");
         assert_eq!(engine.kv_used_tokens(), 0);
         let m = engine.shutdown();
@@ -584,9 +859,256 @@ mod tests {
     #[test]
     fn drop_joins_workers() {
         let engine = micro_engine(2);
-        let h = engine.submit(GenRequest::new(0, vec![4, 5], 3));
+        let h = engine.submit(GenRequest::new(0, vec![4, 5], 3)).unwrap();
         let r = h.wait();
         assert!(r.finish.is_completed());
         drop(engine); // must not leak detached threads or hang
+    }
+
+    /// A model with a stretched context window so a long-running stream
+    /// keeps decoding until something (cancel, deadline, abort) stops it.
+    fn roomy_engine(batch: BatchConfig, queue_cap: usize) -> Engine {
+        let mut base = synthetic_model("micro", 71).unwrap();
+        base.cfg.max_seq = 8192;
+        base.refresh_derived();
+        Engine::new(
+            Arc::new(base),
+            EngineConfig {
+                workers: 1,
+                kv_tokens: 1 << 14,
+                batch,
+                queue_cap,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn deadline_expires_mid_decode_and_frees_lease() {
+        let engine =
+            roomy_engine(BatchConfig { stop_on_eos: false, ..Default::default() }, 0);
+        let req = GenRequest::new(0, vec![2, 3, 4], 5000)
+            .with_deadline(Duration::from_millis(10));
+        let r = engine.submit(req).unwrap().wait();
+        assert_eq!(r.finish, FinishReason::DeadlineExceeded);
+        assert!(r.tokens.len() < 5000, "expired stream must not run to max_new");
+        // The lease came back the same iteration the deadline was swept.
+        assert_eq!(engine.kv_used_tokens(), 0);
+        assert_eq!(engine.kv_live_leases(), 0);
+        let m = engine.shutdown();
+        assert_eq!(m[0].deadline_expired, 1);
+    }
+
+    #[test]
+    fn ttft_deadline_only_applies_before_first_token() {
+        let engine = micro_engine(1);
+        // Already blown at admission: expires with zero tokens.
+        let doomed = engine
+            .submit(GenRequest::new(0, vec![2, 3], 8).with_ttft_deadline(Duration::ZERO))
+            .unwrap();
+        // Generous TTFT budget: moot once the first token is out, so the
+        // stream must run to its natural end.
+        let served = engine
+            .submit(
+                GenRequest::new(1, vec![4, 5], 4)
+                    .with_ttft_deadline(Duration::from_secs(30)),
+            )
+            .unwrap();
+        let rd = doomed.wait();
+        assert_eq!(rd.finish, FinishReason::DeadlineExceeded);
+        assert!(rd.tokens.is_empty(), "expired before prefill: no tokens");
+        let rs = served.wait();
+        assert!(rs.finish.is_completed(), "unmet TTFT budget must not expire: {:?}", rs.finish);
+        assert!(!rs.tokens.is_empty());
+        let m = engine.shutdown();
+        assert_eq!(m[0].deadline_expired, 1);
+    }
+
+    #[test]
+    fn queue_cap_sheds_and_submit_wait_times_out() {
+        let engine = roomy_engine(
+            BatchConfig { max_batch: 1, stop_on_eos: false, ..Default::default() },
+            1,
+        );
+        // Occupies the single batch slot indefinitely (until cancelled).
+        let blocker = engine.submit(GenRequest::new(0, vec![2, 3], 5000)).unwrap();
+        // Wait until it is admitted (its queue slot is released on
+        // admission), so the next submit deterministically fills the queue.
+        loop {
+            match blocker.recv().expect("blocker stream open") {
+                TokenEvent::Token { .. } => break,
+                TokenEvent::Finished { .. } => panic!("blocker finished early"),
+                TokenEvent::PrefillDone { .. } => {}
+            }
+        }
+        let queued = engine.submit(GenRequest::new(1, vec![4, 5], 4)).unwrap();
+        let shed = match engine.submit(GenRequest::new(2, vec![6, 7], 4)) {
+            Err(e) => e,
+            Ok(_) => panic!("third submit must shed at queue_cap 1"),
+        };
+        assert!(shed.is_queue_full());
+        assert_eq!(shed.into_request().id, 2, "the request comes back in the error");
+        // submit_wait keeps retrying until its timeout, then returns the
+        // request too.
+        let t0 = Instant::now();
+        match engine.submit_wait(GenRequest::new(3, vec![8, 9], 4), Duration::from_millis(30)) {
+            Err(SubmitError::QueueFull(r)) => assert_eq!(r.id, 3),
+            other => panic!("expected QueueFull after timeout, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        blocker.cancel();
+        let q = queued.wait();
+        assert!(q.finish.is_completed(), "queued request runs once the slot frees");
+        let m = engine.shutdown();
+        assert!(m[0].shed_queue_full >= 2, "both sheds counted: {}", m[0].shed_queue_full);
+    }
+
+    #[test]
+    fn worker_panic_is_isolated_and_survivor_serves() {
+        faults::silence_injected_panics();
+        let model = Arc::new(synthetic_model("micro", 71).unwrap());
+        // Worker 0 dies on its second pass; worker 1 is healthy.
+        let plan = FaultPlan { per_worker: vec![vec![Fault::Panic { at: 2 }], Vec::new()] };
+        let engine = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                workers: 2,
+                kv_tokens: 4096,
+                faults: Some(plan),
+                ..Default::default()
+            },
+        );
+        let handles: Vec<RequestHandle> = (0..8)
+            .map(|i| engine.submit(GenRequest::new(i, vec![2 + i as u32, 3], 4)).unwrap())
+            .collect();
+        // Every stream must reach exactly one terminal — completed, failed
+        // over, or (worst case) closed — and none may hang.
+        let mut terminals = vec![0usize; handles.len()];
+        poll_streams(&handles, |i, ev| match ev {
+            Some(TokenEvent::Finished { .. }) | None => terminals[i] += 1,
+            _ => {}
+        });
+        assert!(terminals.iter().all(|&t| t == 1), "one terminal per stream: {terminals:?}");
+        // The dead worker must be observed as such, and the survivor must
+        // still take new work.
+        let t0 = Instant::now();
+        while engine.alive_workers() != 1 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "worker death never observed");
+            thread::sleep(Duration::from_millis(1));
+        }
+        let r = engine.submit(GenRequest::new(99, vec![5, 6], 4)).unwrap().wait();
+        assert!(r.finish.is_completed(), "survivor must serve: {:?}", r.finish);
+        assert_eq!(engine.kv_used_tokens(), 0, "meters drain despite the panic");
+        assert_eq!(engine.kv_live_leases(), 0);
+        let per_worker = engine.shutdown();
+        let terminal_count: usize = per_worker
+            .iter()
+            .map(|m| {
+                m.finished_eos
+                    + m.finished_length
+                    + m.cancelled
+                    + m.truncated_kv
+                    + m.rejected_impossible
+                    + m.deadline_expired
+                    + m.worker_failed
+            })
+            .sum();
+        assert_eq!(terminal_count, 9, "all 9 submissions accounted for");
+    }
+
+    #[test]
+    fn abort_shutdown_cancels_in_flight_streams() {
+        let engine =
+            roomy_engine(BatchConfig { stop_on_eos: false, ..Default::default() }, 0);
+        let h = engine.submit(GenRequest::new(0, vec![2, 3, 4], 5000)).unwrap();
+        loop {
+            match h.recv().expect("stream open") {
+                TokenEvent::Token { .. } => break,
+                TokenEvent::Finished { .. } => panic!("finished before abort"),
+                TokenEvent::PrefillDone { .. } => {}
+            }
+        }
+        let pools = engine.kv_pool_handles();
+        engine.shutdown_mode(Shutdown::Abort, None);
+        let r = h.wait();
+        assert_eq!(r.finish, FinishReason::Cancelled);
+        assert!(r.tokens.len() < 5000);
+        assert!(pools.iter().all(|p| p.used_tokens() == 0 && p.live_leases() == 0));
+    }
+
+    #[test]
+    fn drain_timeout_escalates_to_abort() {
+        let engine =
+            roomy_engine(BatchConfig { stop_on_eos: false, ..Default::default() }, 0);
+        let h = engine.submit(GenRequest::new(0, vec![2, 3, 4], 5000)).unwrap();
+        let _ = h.recv();
+        let t0 = Instant::now();
+        engine.shutdown_mode(Shutdown::Drain, Some(Duration::from_millis(50)));
+        // Bounded: far below the time 5000 decode steps would take.
+        assert!(t0.elapsed() < Duration::from_secs(10), "drain timeout must bound shutdown");
+        let r = h.wait();
+        assert_eq!(r.finish, FinishReason::Cancelled, "stragglers are aborted");
+    }
+
+    #[test]
+    fn recv_timeout_distinguishes_empty_from_closed() {
+        let engine = roomy_engine(
+            BatchConfig { max_batch: 1, stop_on_eos: false, ..Default::default() },
+            0,
+        );
+        let blocker = engine.submit(GenRequest::new(0, vec![2, 3], 5000)).unwrap();
+        let starved = engine.submit(GenRequest::new(1, vec![4, 5], 2)).unwrap();
+        // The starved stream is queued behind the blocker: open but silent.
+        // The old Option return reported this the same as a dead worker.
+        assert!(
+            matches!(starved.recv_timeout(Duration::from_millis(5)), TryEvent::Empty),
+            "open-but-slow stream must read as Empty"
+        );
+        blocker.cancel();
+        let reason = loop {
+            match starved.recv_timeout(Duration::from_secs(10)) {
+                TryEvent::Event(TokenEvent::Finished { reason, .. }) => break reason,
+                TryEvent::Event(_) => {}
+                TryEvent::Empty => {}
+                TryEvent::Closed => panic!("stream closed without terminal event"),
+            }
+        };
+        assert!(reason.is_completed());
+        // Terminal delivered and the worker retired the stream: the sender
+        // is dropped, so the channel reads Closed — not Empty — from a
+        // generous timeout.
+        assert!(
+            matches!(starved.recv_timeout(Duration::from_secs(10)), TryEvent::Closed),
+            "finished stream must read as Closed"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn drop_mid_stream_aborts_joins_and_frees_kv() {
+        let engine =
+            roomy_engine(BatchConfig { stop_on_eos: false, ..Default::default() }, 0);
+        let handles: Vec<RequestHandle> = (0..4)
+            .map(|i| engine.submit(GenRequest::new(i, vec![2 + i as u32, 3], 5000)).unwrap())
+            .collect();
+        loop {
+            match handles[0].recv().expect("stream open") {
+                TokenEvent::Token { .. } => break,
+                TokenEvent::Finished { .. } => panic!("finished before drop"),
+                TokenEvent::PrefillDone { .. } => {}
+            }
+        }
+        let pools = engine.kv_pool_handles();
+        // Drop aborts: workers joined before this returns, so the meters
+        // below are final, not racing a live batcher.
+        drop(engine);
+        for p in &pools {
+            assert_eq!(p.used_tokens(), 0, "every lease returned on drop");
+            assert_eq!(p.live_leases(), 0);
+        }
+        for h in handles {
+            let r = h.wait();
+            assert_eq!(r.finish, FinishReason::Cancelled, "drop aborts in-flight streams");
+        }
     }
 }

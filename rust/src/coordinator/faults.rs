@@ -1,0 +1,297 @@
+//! Seeded fault injection for the serving engine — the deterministic chaos
+//! harness behind the resilience property tests.
+//!
+//! A [`FaultPlan`] is a per-worker schedule of three fault kinds, keyed by
+//! the batcher's **loop pass** counter (which advances even on idle passes,
+//! so clamp windows always lift):
+//!
+//! - [`Fault::Panic`] — `panic!` at the top of a chosen pass, exercising
+//!   the batcher's `catch_unwind` isolation layer end to end: in-flight
+//!   streams must terminate with `FinishReason::WorkerFailed`, queued
+//!   requests must re-dispatch to surviving workers, and the pool must
+//!   stay consistent.
+//! - [`Fault::ClampKv`] — transiently clamp the worker pool's token
+//!   capacity to a fraction of nominal for a window of passes (restored
+//!   automatically when the window closes, or by the worker-failure
+//!   cleanup if the worker dies inside it). Simulates memory pressure:
+//!   admission backpressure, failed lease grows (`TruncatedKv`), and
+//!   `Rejected` sheds for requests that can no longer ever fit.
+//! - [`Fault::Stall`] — sleep at the top of a pass, simulating a slow
+//!   iteration (GC pause, noisy neighbor) so deadline sweeps and drain
+//!   timeouts get exercised under latency jitter.
+//!
+//! Plans are built from [`Pcg64`], so a failing property case reproduces
+//! from its seed alone. Tests that inject panics on purpose can install
+//! [`silence_injected_panics`] once per process to keep the default panic
+//! hook from spraying backtraces for expected unwinds.
+
+use super::kvpool::KvPool;
+use crate::util::rng::Pcg64;
+use std::time::Duration;
+
+/// Marker prefix carried by every injected panic's payload; the quiet
+/// panic hook uses it to tell expected unwinds from real bugs.
+pub const INJECTED_PANIC: &str = "injected worker panic";
+
+/// One scheduled fault. Pass numbers are 1-based (the batcher bumps its
+/// pass counter before consulting the schedule).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Panic this worker's loop at pass `at`.
+    Panic { at: usize },
+    /// Clamp the worker pool to `frac` of its nominal token capacity for
+    /// passes `from..until`, restoring the nominal capacity afterwards.
+    ClampKv { from: usize, until: usize, frac: f64 },
+    /// Sleep `ms` milliseconds at the top of pass `at`.
+    Stall { at: usize, ms: u64 },
+}
+
+/// Knobs for [`FaultPlan::random`].
+#[derive(Clone, Debug)]
+pub struct FaultPlanConfig {
+    /// Total injected panics across all workers.
+    pub panics: usize,
+    /// Total transient KV capacity clamps.
+    pub clamps: usize,
+    /// Total slow-iteration stalls.
+    pub stalls: usize,
+    /// Faults land on passes `1..=max_pass` (clamp windows may extend one
+    /// window length past it).
+    pub max_pass: usize,
+    /// Clamp severity range: capacity fraction drawn from
+    /// `[min_frac, max_frac)`.
+    pub min_frac: f64,
+    pub max_frac: f64,
+    /// Stall length drawn from `1..=max_stall_ms`.
+    pub max_stall_ms: u64,
+}
+
+impl Default for FaultPlanConfig {
+    fn default() -> Self {
+        FaultPlanConfig {
+            panics: 1,
+            clamps: 1,
+            stalls: 1,
+            max_pass: 12,
+            min_frac: 0.05,
+            max_frac: 0.5,
+            max_stall_ms: 2,
+        }
+    }
+}
+
+/// A deterministic per-worker fault schedule. Clone-cheap; the engine
+/// hands each worker its own [`WorkerFaults`] cursor via
+/// [`FaultPlan::worker`].
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub per_worker: Vec<Vec<Fault>>,
+}
+
+impl FaultPlan {
+    /// A plan with no faults for `workers` workers.
+    pub fn none(workers: usize) -> FaultPlan {
+        FaultPlan { per_worker: vec![Vec::new(); workers] }
+    }
+
+    /// Draw a random schedule for `workers` workers from `seed`. The same
+    /// `(seed, workers, cfg)` always yields the same plan — a failing
+    /// property case reproduces from its seed.
+    pub fn random(seed: u64, workers: usize, cfg: &FaultPlanConfig) -> FaultPlan {
+        let workers = workers.max(1);
+        let mut rng = Pcg64::new(seed, crate::util::rng::hash_label("fault-plan"));
+        let mut per_worker = vec![Vec::new(); workers];
+        let max_pass = cfg.max_pass.max(1);
+        for _ in 0..cfg.panics {
+            let w = rng.below(workers);
+            per_worker[w].push(Fault::Panic { at: 1 + rng.below(max_pass) });
+        }
+        for _ in 0..cfg.clamps {
+            let w = rng.below(workers);
+            let from = 1 + rng.below(max_pass);
+            let until = from + 1 + rng.below(max_pass);
+            let frac = cfg.min_frac + (cfg.max_frac - cfg.min_frac) * rng.f64();
+            per_worker[w].push(Fault::ClampKv { from, until, frac });
+        }
+        for _ in 0..cfg.stalls {
+            let w = rng.below(workers);
+            per_worker[w].push(Fault::Stall {
+                at: 1 + rng.below(max_pass),
+                ms: 1 + rng.below(cfg.max_stall_ms.max(1) as usize) as u64,
+            });
+        }
+        FaultPlan { per_worker }
+    }
+
+    /// This worker's schedule as a runtime cursor (empty when the plan has
+    /// fewer workers than the engine).
+    pub fn worker(&self, w: usize) -> WorkerFaults {
+        WorkerFaults {
+            worker: w,
+            faults: self.per_worker.get(w).cloned().unwrap_or_default(),
+            nominal_capacity: None,
+            clamped: false,
+        }
+    }
+
+    /// Total scheduled panics — how many workers the plan will kill (a
+    /// worker dies at its first panic; later panics on it are moot).
+    pub fn panic_count(&self) -> usize {
+        self.per_worker
+            .iter()
+            .map(|fs| fs.iter().filter(|f| matches!(f, Fault::Panic { .. })).count())
+            .sum()
+    }
+}
+
+/// One worker's live fault cursor: the batcher calls
+/// [`WorkerFaults::before_pass`] at the top of every loop pass.
+#[derive(Debug)]
+pub struct WorkerFaults {
+    worker: usize,
+    faults: Vec<Fault>,
+    /// Pool capacity observed before the first clamp; clamps are relative
+    /// to it and restores write it back.
+    nominal_capacity: Option<usize>,
+    clamped: bool,
+}
+
+impl WorkerFaults {
+    /// Apply every fault scheduled for `pass`: stalls first, then clamp
+    /// state (enter/leave), panics last — so a pass that both clamps and
+    /// panics leaves the clamp visible to the cleanup path, which calls
+    /// [`WorkerFaults::restore`].
+    pub fn before_pass(&mut self, pass: usize, pool: &KvPool) {
+        for f in &self.faults {
+            if let Fault::Stall { at, ms } = f {
+                if *at == pass {
+                    std::thread::sleep(Duration::from_millis(*ms));
+                }
+            }
+        }
+        // The tightest clamp covering this pass wins.
+        let mut frac: Option<f64> = None;
+        for f in &self.faults {
+            if let Fault::ClampKv { from, until, frac: fr } = f {
+                if (*from..*until).contains(&pass) {
+                    frac = Some(frac.map_or(*fr, |cur: f64| cur.min(*fr)));
+                }
+            }
+        }
+        match frac {
+            Some(fr) => {
+                let nominal =
+                    *self.nominal_capacity.get_or_insert_with(|| pool.capacity_tokens());
+                pool.set_capacity_tokens(((nominal as f64 * fr) as usize).max(1));
+                self.clamped = true;
+            }
+            None => self.restore(pool),
+        }
+        for f in &self.faults {
+            if let Fault::Panic { at } = f {
+                if *at == pass {
+                    panic!("{INJECTED_PANIC}: worker {} pass {}", self.worker, pass);
+                }
+            }
+        }
+    }
+
+    /// Lift any active clamp (idempotent). The worker-failure cleanup path
+    /// calls this so a worker that dies mid-clamp doesn't leave its pool
+    /// pinched forever.
+    pub fn restore(&mut self, pool: &KvPool) {
+        if self.clamped {
+            if let Some(n) = self.nominal_capacity {
+                pool.set_capacity_tokens(n);
+            }
+            self.clamped = false;
+        }
+    }
+}
+
+/// Install (once per process) a panic hook that swallows injected-fault
+/// panics and forwards everything else to the previous hook. Keeps
+/// fault-schedule property tests from burying real failures under pages of
+/// expected backtraces.
+pub fn silence_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.starts_with(INJECTED_PANIC) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let cfg = FaultPlanConfig { panics: 3, clamps: 2, stalls: 2, ..Default::default() };
+        let a = FaultPlan::random(42, 3, &cfg);
+        let b = FaultPlan::random(42, 3, &cfg);
+        assert_eq!(a.per_worker, b.per_worker);
+        assert_eq!(a.panic_count(), 3);
+        let c = FaultPlan::random(43, 3, &cfg);
+        assert_ne!(a.per_worker, c.per_worker, "different seeds must differ");
+        assert_eq!(a.per_worker.len(), 3);
+    }
+
+    #[test]
+    fn clamp_applies_and_restores() {
+        let pool = KvPool::new(1000, 8);
+        let plan = FaultPlan {
+            per_worker: vec![vec![Fault::ClampKv { from: 2, until: 4, frac: 0.1 }]],
+        };
+        let mut wf = plan.worker(0);
+        wf.before_pass(1, &pool);
+        assert_eq!(pool.capacity_tokens(), 1000);
+        wf.before_pass(2, &pool);
+        assert_eq!(pool.capacity_tokens(), 100);
+        assert!(pool.alloc(500).is_none(), "clamped pool must refuse");
+        wf.before_pass(3, &pool);
+        assert_eq!(pool.capacity_tokens(), 100);
+        wf.before_pass(4, &pool);
+        assert_eq!(pool.capacity_tokens(), 1000, "window closed: capacity restored");
+        assert!(pool.alloc(500).is_some());
+    }
+
+    #[test]
+    fn restore_lifts_clamp_for_cleanup_paths() {
+        let pool = KvPool::new(64, 8);
+        let plan = FaultPlan {
+            per_worker: vec![vec![Fault::ClampKv { from: 1, until: 100, frac: 0.25 }]],
+        };
+        let mut wf = plan.worker(0);
+        wf.before_pass(1, &pool);
+        assert_eq!(pool.capacity_tokens(), 16);
+        wf.restore(&pool);
+        assert_eq!(pool.capacity_tokens(), 64);
+        wf.restore(&pool); // idempotent
+        assert_eq!(pool.capacity_tokens(), 64);
+    }
+
+    #[test]
+    fn panic_fires_on_its_pass() {
+        silence_injected_panics();
+        let pool = KvPool::new(64, 8);
+        let plan = FaultPlan { per_worker: vec![vec![Fault::Panic { at: 3 }]] };
+        let mut wf = plan.worker(0);
+        wf.before_pass(1, &pool);
+        wf.before_pass(2, &pool);
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            wf.before_pass(3, &pool);
+        }));
+        assert!(unwound.is_err(), "scheduled panic must fire");
+    }
+}

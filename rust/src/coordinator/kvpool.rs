@@ -481,6 +481,15 @@ pub struct Lease {
 }
 
 impl KvPool {
+    /// Lock the pool state, recovering from mutex poisoning. A worker that
+    /// panicked mid-iteration (fault injection, or a real bug caught by the
+    /// batcher's isolation layer) must not wedge its siblings or the engine
+    /// facade: pool mutations are small and complete-or-not-started, so the
+    /// inner state is still structurally sound after a poisoned unlock.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn new(capacity_tokens: usize, bytes_per_token: usize) -> KvPool {
         KvPool {
             state: Arc::new(Mutex::new(PoolState {
@@ -612,7 +621,7 @@ impl KvPool {
     /// Try to lease `tokens` tokens of KV space, evicting cached prefix
     /// pages under pressure (live sequences always outrank the cache).
     pub fn alloc(&self, tokens: usize) -> Option<Lease> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         if !KvPool::make_room(&mut s, tokens) {
             return None;
         }
@@ -625,13 +634,20 @@ impl KvPool {
     }
 
     /// Grow an existing lease by `extra` tokens (decode step), evicting
-    /// cached prefix pages under pressure.
+    /// cached prefix pages under pressure. A lease the pool no longer knows
+    /// (possible only after a worker-failure cleanup raced a retire) is a
+    /// debug-time invariant violation but degrades to a failed grow in
+    /// release — the sequence finishes truncated instead of panicking a
+    /// second worker.
     pub fn grow(&self, lease: &mut Lease, extra: usize) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         if !KvPool::make_room(&mut s, extra) {
             return false;
         }
-        let entry = s.live.get_mut(&lease.id).expect("lease alive");
+        let Some(entry) = s.live.get_mut(&lease.id) else {
+            debug_assert!(false, "grow of unknown KV lease {}", lease.id);
+            return false;
+        };
         *entry += extra;
         s.used_tokens += extra;
         s.peak_tokens = s.peak_tokens.max(s.used_tokens + s.cached_tokens);
@@ -639,12 +655,29 @@ impl KvPool {
         true
     }
 
-    /// Release a lease. Panics on double free (a bug we want loud).
+    /// Release a lease. A double free is a true invariant violation —
+    /// loud under `debug_assertions` — but degrades to a no-op in release
+    /// so a worker-failure cleanup path can never take the process down.
     pub fn free(&self, lease: Lease) {
-        let mut s = self.state.lock().unwrap();
-        let tokens = s.live.remove(&lease.id).expect("double free of KV lease");
-        assert_eq!(tokens, lease.tokens, "lease size drift");
+        let mut s = self.lock_state();
+        let Some(tokens) = s.live.remove(&lease.id) else {
+            debug_assert!(false, "double free of KV lease {}", lease.id);
+            return;
+        };
+        debug_assert_eq!(tokens, lease.tokens, "lease size drift");
         s.used_tokens -= tokens;
+    }
+
+    /// Clamp (or restore) the pool's token capacity at runtime. Used by the
+    /// fault-injection harness to simulate transient memory pressure: a
+    /// clamp below current occupancy does not reclaim anything by itself —
+    /// it just makes every `alloc`/`grow` fail (after eviction) until
+    /// occupancy drains or the capacity is restored. Admission treats the
+    /// clamped value exactly like a small pool (transient pushback for
+    /// feasible requests, `Rejected` for ones that could never fit).
+    pub fn set_capacity_tokens(&self, tokens: usize) {
+        let mut s = self.lock_state();
+        s.capacity_tokens = tokens.max(1);
     }
 
     /// Build a sequence cache attached to this pool's page meter, seeded
@@ -676,7 +709,7 @@ impl KvPool {
             return (0, Vec::new());
         }
         let max_pages = (tokens.len() - 1) / KV_TILE;
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         s.lru_tick += 1;
         let tick = s.lru_tick;
         let mut pages = Vec::new();
@@ -703,7 +736,7 @@ impl KvPool {
         if n_pages == 0 {
             return;
         }
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         s.lru_tick += 1;
         let tick = s.lru_tick;
         let ti = cache.dtype().index();
@@ -766,31 +799,31 @@ impl KvPool {
     /// Drop every cached prefix page (pages shared with live sequences
     /// survive until those sequences finish).
     pub fn clear_prefix_cache(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         s.tries = [HashMap::new(), HashMap::new()];
         s.cached_tokens = 0;
     }
 
     pub fn used_tokens(&self) -> usize {
-        self.state.lock().unwrap().used_tokens
+        self.lock_state().used_tokens
     }
 
     /// Tokens pinned by trie-cached prefix pages ([`KV_TILE`] per page).
     pub fn cached_tokens(&self) -> usize {
-        self.state.lock().unwrap().cached_tokens
+        self.lock_state().cached_tokens
     }
 
     pub fn capacity_tokens(&self) -> usize {
-        self.state.lock().unwrap().capacity_tokens
+        self.lock_state().capacity_tokens
     }
 
     /// Peak of leased + cached tokens.
     pub fn peak_tokens(&self) -> usize {
-        self.state.lock().unwrap().peak_tokens
+        self.lock_state().peak_tokens
     }
 
     pub fn live_leases(&self) -> usize {
-        self.state.lock().unwrap().live.len()
+        self.lock_state().live.len()
     }
 
     /// Physical KV pages alive across this pool's caches and trie.
@@ -836,6 +869,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(debug_assertions)] // release degrades to a no-op (worker-failure cleanup safety)
     #[should_panic(expected = "double free")]
     fn double_free_panics() {
         let pool = KvPool::new(10, 8);

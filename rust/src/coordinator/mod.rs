@@ -4,6 +4,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod faults;
 pub mod kvpool;
 pub mod pipeline;
 pub mod router;
@@ -11,7 +12,10 @@ pub mod router;
 pub use batcher::{
     BatchConfig, BatchMetrics, FinishReason, GenRequest, Submission, TokenEvent,
 };
-pub use engine::{poll_streams, Engine, EngineConfig, RequestHandle, Response, TryEvent};
+pub use engine::{
+    poll_streams, Engine, EngineConfig, RequestHandle, Response, Shutdown, SubmitError, TryEvent,
+};
+pub use faults::{Fault, FaultPlan, FaultPlanConfig};
 pub use kvpool::{KvDtype, KvPool};
 pub use pipeline::{calibrate_model, quantize_model, run_ptq, CalibStats, PipelineReport};
 pub use router::{serve_requests, synthetic_requests, ServerConfig, ServerRun};

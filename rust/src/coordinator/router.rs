@@ -7,11 +7,11 @@
 //! request-trace builder. New code should use [`Engine::submit`] directly
 //! and consume the token stream.
 
-use super::batcher::{BatchMetrics, GenRequest};
+use super::batcher::{BatchMetrics, FinishReason, GenRequest};
 use super::engine::{Engine, EngineConfig, RequestHandle, Response};
 use crate::model::Gpt;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Engine sizing under its pre-streaming name: the compat wrapper takes the
 /// same configuration the `Engine` does.
@@ -73,7 +73,7 @@ impl ServerRun {
     fn completed_ms(&self, f: impl Fn(&Response) -> f64) -> Vec<f64> {
         let mut ms: Vec<f64> =
             self.responses.iter().filter(|r| r.finish.is_completed()).map(f).collect();
-        ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ms.sort_by(f64::total_cmp);
         ms
     }
 
@@ -111,9 +111,31 @@ pub fn serve_requests(
 ) -> ServerRun {
     let t0 = Instant::now();
     let engine = Engine::new(model, cfg.clone());
-    let handles: Vec<RequestHandle> =
-        requests.into_iter().map(|req| engine.submit(req)).collect();
-    let responses: Vec<Response> = handles.into_iter().map(|h| h.wait()).collect();
+    // `ServerConfig` may bound the per-worker submit queues (`queue_cap`).
+    // A blocking batch surface waits out transient pressure rather than
+    // shedding; a request that still cannot be admitted — or that raced a
+    // shutdown — is reported as `Rejected` instead of panicking the caller.
+    let mut responses: Vec<Response> = Vec::new();
+    let handles: Vec<RequestHandle> = requests
+        .into_iter()
+        .filter_map(|req| match engine.submit_wait(req, Duration::from_secs(60)) {
+            Ok(h) => Some(h),
+            Err(e) => {
+                let req = e.into_request();
+                let waited = req.submitted.elapsed();
+                responses.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    ttft: waited,
+                    total: waited,
+                    prompt_len: req.prompt.len(),
+                    finish: FinishReason::Rejected,
+                });
+                None
+            }
+        })
+        .collect();
+    responses.extend(handles.into_iter().map(|h| h.wait()));
     let per_worker = engine.shutdown();
     ServerRun { responses, per_worker, wall: t0.elapsed() }
 }

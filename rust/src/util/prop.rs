@@ -4,17 +4,83 @@
 //! `rust/tests/`.
 
 use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Configuration for a property run.
 pub struct Config {
     pub cases: usize,
     pub seed: u64,
     pub max_shrink: usize,
+    /// Hang guard: if a single case (or shrink candidate) makes no progress
+    /// for this long, the run prints the property name, active case, and
+    /// seed to stderr and aborts the whole process (exit 101) — a wedged
+    /// fault-injection test fails fast with a reproducible report instead
+    /// of hanging tier-1 until the CI timeout. `None` disables the guard.
+    pub case_timeout: Option<Duration>,
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Config { cases: 128, seed: 0xA5E12, max_shrink: 200 }
+        Config {
+            cases: 128,
+            seed: 0xA5E12,
+            max_shrink: 200,
+            case_timeout: Some(Duration::from_secs(120)),
+        }
+    }
+}
+
+/// Watchdog heartbeat: `check` bumps it on every case and shrink candidate;
+/// the guard thread aborts the process when it stops moving. The guard is
+/// disarmed on drop (normal return or a property-failure panic), so it
+/// never outlives its `check` call armed.
+struct Watchdog {
+    done: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    fn arm(name: &str, seed: u64, timeout: Duration, beat: Arc<AtomicU64>) -> Watchdog {
+        let done = Arc::new(AtomicBool::new(false));
+        let done2 = Arc::clone(&done);
+        let name = name.to_string();
+        std::thread::spawn(move || {
+            let poll = timeout.min(Duration::from_millis(200)).max(Duration::from_millis(10));
+            let mut last = beat.load(Ordering::Acquire);
+            let mut last_change = Instant::now();
+            loop {
+                std::thread::sleep(poll);
+                if done2.load(Ordering::Acquire) {
+                    return;
+                }
+                let now = beat.load(Ordering::Acquire);
+                if now != last {
+                    last = now;
+                    last_change = Instant::now();
+                    continue;
+                }
+                if last_change.elapsed() > timeout {
+                    // Re-check done right before the kill: the run may have
+                    // finished while we slept.
+                    if done2.load(Ordering::Acquire) {
+                        return;
+                    }
+                    eprintln!(
+                        "property '{name}' wedged: no progress for {timeout:?} \
+                         (case {last}, seed {seed:#x}); aborting run"
+                    );
+                    std::process::exit(101);
+                }
+            }
+        });
+        Watchdog { done }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Release);
     }
 }
 
@@ -35,7 +101,11 @@ where
     P: Fn(&T) -> CaseResult,
 {
     let mut rng = Pcg64::new(cfg.seed, crate::util::rng::hash_label(name));
+    let beat = Arc::new(AtomicU64::new(0));
+    let _watchdog =
+        cfg.case_timeout.map(|t| Watchdog::arm(name, cfg.seed, t, Arc::clone(&beat)));
     for case in 0..cfg.cases {
+        beat.store(case as u64, Ordering::Release);
         let input = gen(&mut rng);
         if let CaseResult::Fail(msg) = prop(&input) {
             // Shrink: greedily accept any smaller failing candidate.
@@ -48,6 +118,7 @@ where
                         break 'outer;
                     }
                     budget -= 1;
+                    beat.fetch_add(1, Ordering::Release);
                     if let CaseResult::Fail(m) = prop(&cand) {
                         best = cand;
                         best_msg = m;
@@ -152,6 +223,31 @@ mod tests {
             shrink_vec_f32,
             |v| ensure(v.len() > 100, || format!("len {} <= 100", v.len())),
         );
+    }
+
+    #[test]
+    fn watchdog_tolerates_slow_but_progressing_cases_and_disarms() {
+        let cfg = Config {
+            cases: 3,
+            case_timeout: Some(Duration::from_millis(80)),
+            ..Default::default()
+        };
+        check(
+            "slow_but_progressing",
+            &cfg,
+            |rng| {
+                // Each case is slower than the poll tick but faster than the
+                // timeout: progress keeps the guard quiet.
+                std::thread::sleep(Duration::from_millis(30));
+                1 + rng.below(10)
+            },
+            shrink_usize,
+            |_| CaseResult::Pass,
+        );
+        // The guard must be disarmed now: if it were still armed with the
+        // heartbeat frozen, this sleep would let it kill the process (exit
+        // 101), failing the whole test binary loudly.
+        std::thread::sleep(Duration::from_millis(200));
     }
 
     #[test]

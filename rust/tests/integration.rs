@@ -115,7 +115,7 @@ fn e2e_quantized_serving_matches_offline_generation() {
         std::sync::Arc::clone(&qmodel),
         EngineConfig { workers: 2, kv_tokens: 4096, ..Default::default() },
     );
-    let handles: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone())).collect();
+    let handles: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone()).unwrap()).collect();
     for h in handles {
         let id = h.id() as usize;
         let mut tokens = Vec::new();
@@ -187,10 +187,10 @@ fn e2e_int8_kv_serving_completes_and_drains() {
                 ..Default::default()
             },
             kv_tokens: 4096,
-            draft: None,
+            ..Default::default()
         },
     );
-    let handles: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone())).collect();
+    let handles: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone()).unwrap()).collect();
     for h in handles {
         let id = h.id() as usize;
         let mut n_tokens = 0usize;
@@ -238,11 +238,11 @@ fn e2e_cancel_mid_decode_frees_kv_promptly() {
             workers: 1,
             batch: BatchConfig { stop_on_eos: false, ..Default::default() },
             kv_tokens: 1 << 14,
-            draft: None,
+            ..Default::default()
         },
     );
-    let victim = engine.submit(GenRequest::new(0, vec![2, 3, 4], 2000));
-    let bystander = engine.submit(GenRequest::new(1, vec![5, 6, 7], 8));
+    let victim = engine.submit(GenRequest::new(0, vec![2, 3, 4], 2000)).unwrap();
+    let bystander = engine.submit(GenRequest::new(1, vec![5, 6, 7], 8)).unwrap();
     // Let the victim decode a few tokens, then cancel it.
     let mut seen = 0usize;
     loop {

@@ -724,13 +724,13 @@ fn prop_engine_greedy_matches_pre_redesign_serving() {
                     // here too for exact stream equality.
                     batch: BatchConfig { stop_on_eos: false, ..Default::default() },
                     kv_tokens: 4096,
-                    draft: None,
+                    ..Default::default()
                 },
             );
             let handles: Vec<_> = prompts
                 .iter()
                 .enumerate()
-                .map(|(i, p)| engine.submit(GenRequest::new(i as u64, p.clone(), max_new)))
+                .map(|(i, p)| engine.submit(GenRequest::new(i as u64, p.clone(), max_new)).unwrap())
                 .collect();
             for h in handles {
                 let r = h.wait();
@@ -1331,13 +1331,13 @@ fn prop_engine_int8_greedy_matches_step_oracle() {
                 ..Default::default()
             },
             kv_tokens: 4096,
-            draft: None,
+            ..Default::default()
         },
     );
     let handles: Vec<_> = prompts
         .iter()
         .enumerate()
-        .map(|(i, p)| engine.submit(GenRequest::new(i as u64, p.clone(), max_new)))
+        .map(|(i, p)| engine.submit(GenRequest::new(i as u64, p.clone(), max_new)).unwrap())
         .collect();
     for h in handles {
         let r = h.wait();
@@ -1547,7 +1547,7 @@ fn prop_prefix_cache_on_off_streams_bitwise_identical() {
             .collect()
     };
     let run_wave = |engine: &Engine| -> Vec<Vec<u32>> {
-        let handles: Vec<_> = mk_reqs().into_iter().map(|r| engine.submit(r)).collect();
+        let handles: Vec<_> = mk_reqs().into_iter().map(|r| engine.submit(r).unwrap()).collect();
         let mut out = vec![Vec::new(); handles.len()];
         for h in handles {
             let r = h.wait();
@@ -1570,7 +1570,7 @@ fn prop_prefix_cache_on_off_streams_bitwise_identical() {
                         ..Default::default()
                     },
                     kv_tokens: 1 << 13,
-                    draft: None,
+                    ..Default::default()
                 },
             )
         };
@@ -1848,4 +1848,87 @@ fn prop_greedy_speculation_bitwise_across_method_grid() {
             }
         }
     }
+}
+
+#[test]
+fn prop_fault_schedules_preserve_stream_invariants() {
+    // The resilience layer's pin: under a random seeded fault schedule —
+    // worker panics, transient KV-capacity clamps, slow passes — every
+    // submitted request still reaches exactly one terminal event, no
+    // stream hangs (poll_streams returns; the prop harness watchdog would
+    // abort a wedged case with its seed), the lease meters drain to zero
+    // on every pool, and shutdown(Drain) completes within its deadline.
+    use aser::coordinator::faults::silence_injected_panics;
+    use aser::coordinator::{
+        poll_streams, BatchConfig, Engine, EngineConfig, FaultPlan, FaultPlanConfig, GenRequest,
+        Shutdown, TokenEvent,
+    };
+    use aser::model::synthetic_model;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    silence_injected_panics();
+    let model = Arc::new(synthetic_model("micro", 923).unwrap());
+    check(
+        "fault_schedule_stream_invariants",
+        &cfg(6),
+        |rng| rng.next_u64(),
+        |_| Vec::new(),
+        |&seed| {
+            let workers = 3usize;
+            // ≥ 1 panic, ≤ workers-1, so some worker always survives to
+            // adopt orphans; plus a capacity clamp and a stall.
+            let fcfg = FaultPlanConfig {
+                panics: 1 + (seed as usize % 2),
+                clamps: 1,
+                stalls: 1,
+                ..Default::default()
+            };
+            let plan = FaultPlan::random(seed, workers, &fcfg);
+            let engine = Engine::new(
+                Arc::clone(&model),
+                EngineConfig {
+                    workers,
+                    batch: BatchConfig { max_batch: 2, stop_on_eos: false, ..Default::default() },
+                    kv_tokens: 2048,
+                    faults: Some(plan),
+                    ..Default::default()
+                },
+            );
+            let pools = engine.kv_pool_handles();
+            let handles: Vec<_> = (0..10u64)
+                .map(|i| {
+                    let prompt: Vec<u32> = (0..2 + (i as usize % 4)).map(|t| 2 + i as u32 + t as u32).collect();
+                    engine
+                        .submit(GenRequest::new(i, prompt, 3 + (i as usize % 3)))
+                        .expect("a worker survives every schedule")
+                })
+                .collect();
+            let mut terminals = vec![0usize; handles.len()];
+            poll_streams(&handles, |i, ev| {
+                if matches!(ev, Some(TokenEvent::Finished { .. }) | None) {
+                    terminals[i] += 1;
+                }
+            });
+            let t0 = Instant::now();
+            engine.shutdown_mode(Shutdown::Drain, Some(Duration::from_secs(10)));
+            let drain = t0.elapsed();
+            all(vec![
+                ensure(terminals.iter().all(|&t| t == 1), || {
+                    format!("terminal-per-stream violated: {terminals:?}")
+                }),
+                ensure(drain < Duration::from_secs(20), || {
+                    format!("drain took {drain:?} against a 10s deadline")
+                }),
+                ensure(
+                    pools.iter().all(|p| p.used_tokens() == 0 && p.live_leases() == 0),
+                    || {
+                        let used: Vec<_> =
+                            pools.iter().map(|p| (p.used_tokens(), p.live_leases())).collect();
+                        format!("pool meters did not drain: {used:?}")
+                    },
+                ),
+            ])
+        },
+    );
 }
