@@ -25,11 +25,16 @@
 //! and a `resilience` section (the engine resilience layer under pressure:
 //! time-to-drain for a mid-stream `shutdown(Drain)`, deadline-hit rate on
 //! an oversubscribed worker, p99 TTFT under `queue_cap` shedding, and
-//! decode tok/s with the layer installed but idle).
+//! decode tok/s with the layer installed but idle), and an `http` section
+//! (the network front end end to end: concurrent raw-TCP clients streaming
+//! SSE completions through `HttpServer` — decode tok/s, client-side TTFB
+//! p50/p95, and time-to-cancel-on-disconnect, i.e. socket dropped
+//! mid-stream until the KV pool meter reads zero).
 //! `scripts/bench_diff` gates on long-prompt TTFT, long-context decode,
 //! the Engine-path decode tok/s, int8/f32 decode ≥ 0.9x, int8/f32
 //! capacity ≥ 3x, warm prefix TTFT ≤ 0.6x cold, spec_decode speedup
-//! ≥ 0.9x baseline, and faults-off resilience decode ≥ 0.9x baseline.
+//! ≥ 0.9x baseline, faults-off resilience decode ≥ 0.9x baseline, and
+//! http streamed decode ≥ 0.9x baseline.
 //! `--kv-bits {8,32}` flips the serving/stream sections onto the
 //! quantized cache.
 
@@ -861,6 +866,184 @@ fn main() {
         ])
     };
 
+    // ---- http: the network front end end to end — concurrent raw-TCP
+    //      clients streaming completions over HttpServer (SSE framing and
+    //      request parsing on the wire, not in-process), client-side TTFB,
+    //      and time-to-cancel-on-disconnect: socket dropped mid-stream,
+    //      measured until the engine's KV pool meter reads zero. ----
+    let http = {
+        use aser::coordinator::{HttpServer, HttpServerConfig};
+        use aser::data::Vocab;
+        use std::io::{Read, Write};
+        use std::net::TcpStream;
+
+        // One streamed completion over a fresh connection: returns
+        // (client-side TTFB ms, streamed token events observed).
+        fn stream_once(addr: std::net::SocketAddr, body: &str) -> (f64, usize) {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let req = format!(
+                "POST /v1/completions HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let t0 = Instant::now();
+            conn.write_all(req.as_bytes()).unwrap();
+            let mut first = [0u8; 1];
+            conn.read_exact(&mut first).unwrap();
+            let ttfb_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let mut all = vec![first[0]];
+            conn.read_to_end(&mut all).unwrap();
+            // Each token chunk carries exactly one `"token_id"` key (the
+            // closing quote keeps `"token_index"` from double-counting).
+            let tokens = all.windows(10).filter(|w| *w == b"\"token_id\"").count();
+            (ttfb_ms, tokens)
+        }
+
+        let model = Arc::new(synthetic_model("micro", 7).unwrap());
+        let engine = Arc::new(Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                workers: 1,
+                batch: BatchConfig { max_batch: 8, ..Default::default() },
+                kv_tokens: 1 << 14,
+                ..Default::default()
+            },
+        ));
+        let server = HttpServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&engine),
+            Arc::new(Vocab::new(model.cfg.vocab_size)),
+            HttpServerConfig { threads: 4, ..Default::default() },
+        )
+        .expect("bind http bench server");
+        let addr = server.local_addr();
+        let clients = 4usize;
+        let per_client = 4usize;
+        let max_new = 16usize;
+        let t0 = Instant::now();
+        let samples: Vec<(f64, usize)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        (0..per_client)
+                            .map(|r| {
+                                let body = format!(
+                                    r#"{{"prompt": [{}, {}, 7], "max_tokens": {max_new}, "stream": true, "seed": {}}}"#,
+                                    3 + c,
+                                    5 + r,
+                                    c * 10 + r
+                                );
+                                stream_once(addr, &body)
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let total_tokens: usize = samples.iter().map(|&(_, n)| n).sum();
+        assert!(total_tokens > 0, "http stream bench produced no tokens");
+        let decode_tok_s = total_tokens as f64 / wall;
+        let mut ttfb: Vec<f64> = samples.iter().map(|&(t, _)| t).collect();
+        ttfb.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (ttfb_p50, ttfb_p95) =
+            (percentile_sorted(&ttfb, 50.0), percentile_sorted(&ttfb, 95.0));
+        let returned = server.shutdown(Duration::from_secs(2));
+        drop(engine);
+        Arc::try_unwrap(returned).ok().expect("engine still shared").shutdown();
+
+        // Disconnect: a roomy engine that would decode thousands of tokens,
+        // cut off by dropping the socket after the first streamed token.
+        let mut base = synthetic_model("micro", 7).unwrap();
+        base.cfg.max_seq = 8192; // room to decode until the disconnect lands
+        base.refresh_derived();
+        let engine = Arc::new(Engine::new(
+            Arc::new(base),
+            EngineConfig {
+                workers: 1,
+                batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+                kv_tokens: 1 << 14,
+                ..Default::default()
+            },
+        ));
+        let server = HttpServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&engine),
+            Arc::new(Vocab::new(model.cfg.vocab_size)),
+            HttpServerConfig { threads: 2, ..Default::default() },
+        )
+        .expect("bind http disconnect server");
+        let daddr = server.local_addr();
+        let mut cancel_ms: Vec<f64> = Vec::new();
+        for rep in 0..5u32 {
+            let body = format!(
+                r#"{{"prompt": [2, 3, {}], "max_tokens": 5000, "stream": true}}"#,
+                4 + rep
+            );
+            let mut conn = TcpStream::connect(daddr).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let req = format!(
+                "POST /v1/completions HTTP/1.1\r\nHost: bench\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            conn.write_all(req.as_bytes()).unwrap();
+            let mut seen: Vec<u8> = Vec::new();
+            let mut b = [0u8; 1];
+            while !seen.windows(10).any(|w| w == b"\"token_id\"") {
+                conn.read_exact(&mut b).unwrap();
+                seen.push(b[0]);
+            }
+            drop(conn); // the disconnect under measurement
+            let t0 = Instant::now();
+            while engine.kv_used_tokens() > 0 {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "disconnect did not drain the pool"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            cancel_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        cancel_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (ttc_p50, ttc_p95) =
+            (percentile_sorted(&cancel_ms, 50.0), percentile_sorted(&cancel_ms, 95.0));
+        let returned = server.shutdown(Duration::from_secs(2));
+        drop(engine);
+        Arc::try_unwrap(returned).ok().expect("engine still shared").shutdown();
+
+        println!("\n== http ==");
+        println!(
+            "stream: {clients} clients x {per_client} reqs: {decode_tok_s:.1} tok/s | \
+             ttfb p50/p95 {ttfb_p50:.1}/{ttfb_p95:.1} ms | disconnect time-to-cancel \
+             p50/p95 {ttc_p50:.2}/{ttc_p95:.2} ms"
+        );
+        obj(vec![
+            (
+                "stream",
+                Json::Arr(vec![obj(vec![
+                    ("variant", s("fp16")),
+                    ("clients", num(clients as f64)),
+                    ("requests", num((clients * per_client) as f64)),
+                    ("max_new", num(max_new as f64)),
+                    ("decode_tok_s", num(decode_tok_s)),
+                    ("ttfb_p50_ms", num(ttfb_p50)),
+                    ("ttfb_p95_ms", num(ttfb_p95)),
+                ])]),
+            ),
+            (
+                "disconnect",
+                obj(vec![
+                    ("samples", num(cancel_ms.len() as f64)),
+                    ("time_to_cancel_p50_ms", num(ttc_p50)),
+                    ("time_to_cancel_p95_ms", num(ttc_p95)),
+                ]),
+            ),
+        ])
+    };
+
     let report = obj(vec![
         ("bench", s("serving")),
         ("model", s("micro")),
@@ -881,6 +1064,7 @@ fn main() {
         ("prefix_cache", Json::Arr(prefix_cache_rows)),
         ("spec_decode", Json::Arr(spec_decode_rows)),
         ("resilience", resilience),
+        ("http", http),
     ]);
     std::fs::write("BENCH_serving.json", report.to_string_pretty())
         .expect("write BENCH_serving.json");

@@ -55,6 +55,13 @@ commands:
                    --top-p 0.95 (--seed doubles as the sampling seed;
                    --sample-seed overrides it); --stream prints token
                    events live as the engine generates them
+                   --listen <addr:port> serves HTTP/1.1 + SSE instead of
+                   the synthetic trace: POST /v1/completions (JSON body:
+                   prompt = string|[token ids], max_tokens, temperature,
+                   top_k, top_p, seed, stream, stop, deadline_ms,
+                   ttft_deadline_ms), GET /v1/models, GET /healthz,
+                   POST /admin/shutdown to drain and exit; --http-threads
+                   and --http-backlog size the connection pool
   bench-table    regenerate a paper table: --id t1|t2|...|t8
   figure         regenerate a paper figure: --id f2|...|f8
   runtime-check  load + run the AOT HLO artifacts through PJRT

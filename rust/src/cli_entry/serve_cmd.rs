@@ -6,15 +6,26 @@
 //! decoding policy applied to the trace (temperature 0 = the default greedy
 //! path), and `--stream` switches from the blocking `serve_requests`
 //! compat path to live per-token printing through `poll_streams`.
+//!
+//! `--listen <addr:port>` replaces the synthetic trace with the network
+//! front end ([`crate::coordinator::server::HttpServer`]): an OpenAI-style
+//! `POST /v1/completions` (stream + non-stream), `GET /v1/models`, and
+//! `GET /healthz` over the same engine. The request body is JSON:
+//! `prompt` (string, tokenized with the model vocab, or an array of token
+//! ids), `max_tokens`, `temperature`, `top_k`, `top_p`, `seed`, `stream`,
+//! `stop` (word / id array), `deadline_ms`, `ttft_deadline_ms`. The server
+//! runs until `POST /admin/shutdown` (the SIGTERM-equivalent; std offers no
+//! signal API), then drains via `Engine::shutdown_mode`.
 
 use super::ctx::Ctx;
 use crate::coordinator::{
     poll_streams, run_ptq, serve_requests, synthetic_requests, BatchConfig, BatchMetrics,
-    Engine, EngineConfig, FinishReason, RequestHandle, Response, ServerRun, Shutdown,
-    SubmitError, TokenEvent,
+    Engine, EngineConfig, FinishReason, HttpServer, HttpServerConfig, RequestHandle, Response,
+    ServerRun, Shutdown, SubmitError, TokenEvent,
 };
+use crate::data::Vocab;
 use crate::methods::{method_by_name, RankPolicy};
-use crate::model::{DraftModel, DraftSpec, KvDtype, SamplingParams};
+use crate::model::{DraftModel, DraftSpec, Gpt, KvDtype, SamplingParams};
 use crate::quant::Precision;
 use crate::util::cli::Args;
 use anyhow::Result;
@@ -164,22 +175,6 @@ pub fn run(args: &Args) -> Result<()> {
         qmodel
     };
 
-    let mut requests =
-        synthetic_requests(model.cfg.vocab_size, n_requests, prompt_len, max_new, ctx.seed)?;
-    for req in requests.iter_mut() {
-        req.sampling = SamplingParams {
-            temperature,
-            top_k,
-            top_p,
-            // Independent per-request streams, reproducible from one seed.
-            seed: sample_seed.wrapping_add(req.id),
-            stop_tokens: Vec::new(),
-        };
-        if deadline_ms > 0 {
-            req.deadline = Some(Duration::from_millis(deadline_ms as u64));
-        }
-    }
-
     let model = Arc::new(model);
     let draft = match &draft_spec {
         DraftSpec::Off => None,
@@ -220,6 +215,36 @@ pub fn run(args: &Args) -> Result<()> {
         queue_cap,
         faults: None,
     };
+
+    // `--listen` switches from the synthetic trace to the network front
+    // end: same model, same engine configuration, real clients.
+    if let Some(listen) = args.get("listen").map(|s| s.to_string()) {
+        return run_listen(
+            &listen,
+            model,
+            cfg,
+            &format!("{model_name}-{method_name}"),
+            args,
+            shutdown_mode,
+        );
+    }
+
+    let mut requests =
+        synthetic_requests(model.cfg.vocab_size, n_requests, prompt_len, max_new, ctx.seed)?;
+    for req in requests.iter_mut() {
+        req.sampling = SamplingParams {
+            temperature,
+            top_k,
+            top_p,
+            // Independent per-request streams, reproducible from one seed.
+            seed: sample_seed.wrapping_add(req.id),
+            stop_tokens: Vec::new(),
+        };
+        if deadline_ms > 0 {
+            req.deadline = Some(Duration::from_millis(deadline_ms as u64));
+        }
+    }
+
     let mut shed_at_submit = 0usize;
     let run = if stream {
         let t0 = Instant::now();
@@ -286,6 +311,62 @@ pub fn run(args: &Args) -> Result<()> {
         println!("  shed           {shed_at_submit} requests (queue full at submit)");
     }
     for (i, m) in run.per_worker.iter().enumerate() {
+        print!("{}", worker_summary(i, m));
+    }
+    Ok(())
+}
+
+/// `repro serve --listen <addr:port>`: put the HTTP front end over the
+/// engine and run until a client posts `/admin/shutdown`. `--deadline-ms`
+/// becomes the default per-request deadline, `--shutdown-timeout-ms` the
+/// connection-drain grace (and engine drain timeout), `--http-threads` /
+/// `--http-backlog` size the connection pool.
+fn run_listen(
+    listen: &str,
+    model: Arc<Gpt>,
+    cfg: EngineConfig,
+    model_id: &str,
+    args: &Args,
+    shutdown_mode: Shutdown,
+) -> Result<()> {
+    let deadline_ms = args.usize_or("deadline-ms", 0)?;
+    let shutdown_timeout_ms = args.usize_or("shutdown-timeout-ms", 0)?;
+    let vocab = Arc::new(Vocab::new(model.cfg.vocab_size));
+    let http_cfg = HttpServerConfig {
+        threads: args.usize_or("http-threads", 4)?,
+        backlog: args.usize_or("http-backlog", 64)?,
+        model_id: model_id.to_string(),
+        default_deadline: (deadline_ms > 0)
+            .then(|| Duration::from_millis(deadline_ms as u64)),
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::new(model, cfg));
+    let server = HttpServer::bind(listen, Arc::clone(&engine), vocab, http_cfg)
+        .map_err(|e| anyhow::anyhow!("cannot bind {listen}: {e}"))?;
+    // The server holds its own engine handle; dropping ours keeps the
+    // post-shutdown `Arc::try_unwrap` below viable.
+    drop(engine);
+    println!("[http] listening on {}", server.local_addr());
+    println!(
+        "[http] routes: POST /v1/completions (stream + non-stream) | GET /v1/models | \
+         GET /healthz | POST /admin/shutdown"
+    );
+    while !server.shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("[http] shutdown requested; draining connections then engine");
+    let grace = Duration::from_millis(if shutdown_timeout_ms > 0 {
+        shutdown_timeout_ms as u64
+    } else {
+        5_000
+    });
+    let engine = server.shutdown(grace);
+    let engine = Arc::try_unwrap(engine)
+        .map_err(|_| anyhow::anyhow!("engine still shared after server shutdown"))?;
+    let timeout = (shutdown_timeout_ms > 0)
+        .then(|| Duration::from_millis(shutdown_timeout_ms as u64));
+    let per_worker = engine.shutdown_mode(shutdown_mode, timeout);
+    for (i, m) in per_worker.iter().enumerate() {
         print!("{}", worker_summary(i, m));
     }
     Ok(())

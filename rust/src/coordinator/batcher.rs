@@ -244,6 +244,25 @@ impl FinishReason {
     pub fn is_completed(&self) -> bool {
         matches!(self, FinishReason::Eos | FinishReason::Length | FinishReason::TruncatedKv)
     }
+
+    /// The one `FinishReason` → wire-string mapping, shared by every external
+    /// surface (the HTTP front end's `finish_reason` field, benches, tools).
+    /// `Eos` serializes as `"stop"` per the OpenAI completions convention.
+    /// Deliberately an exhaustive match with no wildcard arm: a new variant
+    /// fails compilation here until it is given a wire name, and
+    /// `wire_str_pins_every_variant` pins each existing name so none can
+    /// silently change.
+    pub fn wire_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "stop",
+            FinishReason::Length => "length",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::TruncatedKv => "truncated_kv",
+            FinishReason::Rejected => "rejected",
+            FinishReason::DeadlineExceeded => "deadline",
+            FinishReason::WorkerFailed => "worker_failed",
+        }
+    }
 }
 
 /// One event on a request's stream. See the module doc for the protocol
@@ -1881,5 +1900,29 @@ mod tests {
         assert_eq!(out[0].tokens, vec![want[0]], "stream must stop at the stop token");
         assert_eq!(out[0].reason, FinishReason::Eos);
         assert_eq!(m.finished_eos, 1);
+    }
+
+    /// Satellite guard: pin every `FinishReason` wire string. The match in
+    /// `wire_str` is exhaustive (compile error on a new variant); this test
+    /// keeps the existing names from drifting, since clients key on them.
+    #[test]
+    fn wire_str_pins_every_variant() {
+        let all = [
+            (FinishReason::Eos, "stop"),
+            (FinishReason::Length, "length"),
+            (FinishReason::Cancelled, "cancelled"),
+            (FinishReason::TruncatedKv, "truncated_kv"),
+            (FinishReason::Rejected, "rejected"),
+            (FinishReason::DeadlineExceeded, "deadline"),
+            (FinishReason::WorkerFailed, "worker_failed"),
+        ];
+        for (reason, wire) in all {
+            assert_eq!(reason.wire_str(), wire, "{reason:?}");
+        }
+        // Every wire name is distinct — two variants must never alias.
+        let mut names: Vec<&str> = all.iter().map(|(_, w)| *w).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
     }
 }

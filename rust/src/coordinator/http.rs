@@ -1,0 +1,1008 @@
+//! Hand-rolled HTTP/1.1 + SSE protocol layer for the serving front end.
+//!
+//! Dependency-free by construction: requests are parsed straight off a
+//! [`std::net::TcpStream`], bodies use [`crate::util::json`], and streamed
+//! responses are written as `Transfer-Encoding: chunked` Server-Sent Events.
+//! The listener/thread-pool half lives in [`super::server`]; this module is
+//! the per-connection state machine and the request/response wire formats.
+//!
+//! # Connection lifecycle
+//!
+//! Each accepted connection runs this state machine ([`handle_connection`]):
+//!
+//! ```text
+//!            ┌────────────────────────── keep-alive ─────────────────────┐
+//!            ▼                                                           │
+//! accept ─► WAIT ─► PARSE ─► ROUTE ─┬─► SUBMIT ─┬─► STREAM (SSE) ────────┤
+//!            │        │             │           └─► DRAIN (non-stream) ──┤
+//!            │        │             └─► static (healthz/models/admin) ───┘
+//!            ▼        ▼
+//!          CLOSE ◄── 4xx
+//! ```
+//!
+//! - **WAIT**: poll for the first request byte ([`wait_readable`]) so an idle
+//!   keep-alive connection can observe server shutdown within ~10 ms instead
+//!   of sleeping through a blocking read. Idle timeout or a half-closed
+//!   socket closes the connection silently.
+//! - **PARSE**: request line + headers + `Content-Length`-bounded body
+//!   ([`read_request`]), with hard caps on line length, header count, and
+//!   body size. Malformed input answers with a 4xx and closes.
+//! - **SUBMIT**: `POST /v1/completions` maps the JSON body onto
+//!   [`GenRequest`]/[`SamplingParams`] ([`parse_completion`]) and submits to
+//!   the [`Engine`](super::engine::Engine). [`SubmitError::QueueFull`] → 429,
+//!   [`SubmitError::Closed`] → 503; neither produces a stream.
+//! - **STREAM / DRAIN**: the accepted [`RequestHandle`] is polled with
+//!   [`RequestHandle::recv_timeout`]. Engine events map onto the wire 1:1 —
+//!   `Token` becomes one `data: {...}` SSE event (or accumulates, when
+//!   `stream=false`), `Finished` becomes the terminal usage event with
+//!   `finish_reason` from [`FinishReason::wire_str`] (deadline expiry thus
+//!   surfaces as `"deadline"`), followed by `data: [DONE]`. Between events
+//!   the socket is probed ([`half_closed`]); a disconnect — detected on a
+//!   failed write or a half-closed socket — calls [`RequestHandle::cancel`],
+//!   so the batcher frees the request's KV lease within one iteration.
+//! - **keep-alive | CLOSE**: HTTP/1.1 defaults to keep-alive (SSE responses
+//!   are chunked precisely so the connection survives a completed stream);
+//!   `Connection: close`, protocol errors, disconnects, and server shutdown
+//!   close instead.
+//!
+//! Server shutdown (the SIGTERM-equivalent `POST /admin/shutdown`) flips
+//! flags in [`ServeCtx`]: `stop` refuses new keep-alive iterations, `abort`
+//! cancels in-flight handles; the engine itself then drains via
+//! `Engine::shutdown_mode(Drain, ..)` in the caller (see `serve_cmd`).
+
+use super::batcher::{FinishReason, GenRequest, TokenEvent};
+use super::engine::{Engine, SubmitError, TryEvent};
+use crate::data::{Cat, Vocab};
+use crate::model::SamplingParams;
+use crate::util::json::{num, obj, s, Json};
+use std::io::{BufRead, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Hard caps on inbound requests: one header line, total header count, and
+/// the `Content-Length` body. Oversize input answers 431/413 and closes.
+pub const MAX_LINE: usize = 8 * 1024;
+pub const MAX_HEADERS: usize = 64;
+
+/// Stream-poll granularity: how quickly a handler notices a half-closed
+/// socket or a server abort between engine events.
+const POLL: Duration = Duration::from_millis(25);
+
+/// How long [`wait_readable`] sleeps between peeks on an idle connection.
+const IDLE_TICK: Duration = Duration::from_millis(10);
+
+/// Shared state every connection handler reads: the engine, the tokenizer
+/// for text prompts and response text, and the server lifecycle flags.
+pub struct ServeCtx {
+    pub engine: Arc<Engine>,
+    pub vocab: Arc<Vocab>,
+    pub vocab_size: usize,
+    /// Served under `GET /v1/models` and echoed in every completion.
+    pub model_id: String,
+    /// Monotonic request-id source shared across connections.
+    pub next_id: AtomicU64,
+    /// Set on shutdown: no new requests are accepted (keep-alive loops end).
+    pub stop: AtomicBool,
+    /// Set after the shutdown grace period: in-flight streams cancel now.
+    pub abort: AtomicBool,
+    /// Set by `POST /admin/shutdown`; the serve loop polls it.
+    pub shutdown_req: AtomicBool,
+    /// Idle keep-alive window before a quiet connection is closed.
+    pub keep_alive: Duration,
+    /// `Content-Length` cap for request bodies.
+    pub max_body: usize,
+    /// Default end-to-end deadline applied when the request carries none.
+    pub default_deadline: Option<Duration>,
+}
+
+/// A parsed HTTP/1.x request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub target: String,
+    pub http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close; an explicit
+    /// `Connection` header overrides either way.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Why [`read_request`] did not produce a request.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean EOF (or idle cutoff) before any request byte — close silently.
+    Closed,
+    /// Malformed or oversize request: answer with this status, then close.
+    Bad(u16, &'static str, String),
+    /// Socket error mid-request — close without a response.
+    Io(std::io::Error),
+}
+
+fn read_line<R: BufRead>(r: &mut R) -> Result<String, ReadError> {
+    let mut buf = Vec::with_capacity(128);
+    loop {
+        let available = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) => return Err(ReadError::Io(e)),
+        };
+        if available.is_empty() {
+            // EOF. Mid-line EOF on a non-empty buffer is a truncated request.
+            if buf.is_empty() {
+                return Err(ReadError::Closed);
+            }
+            return Err(ReadError::Bad(400, "Bad Request", "truncated request line".into()));
+        }
+        let nl = available.iter().position(|&b| b == b'\n');
+        let take = nl.map(|i| i + 1).unwrap_or(available.len());
+        buf.extend_from_slice(&available[..take]);
+        r.consume(take);
+        if nl.is_some() {
+            break;
+        }
+        if buf.len() > MAX_LINE {
+            return Err(ReadError::Bad(
+                431,
+                "Request Header Fields Too Large",
+                format!("header line exceeds {MAX_LINE} bytes"),
+            ));
+        }
+    }
+    if buf.len() > MAX_LINE {
+        return Err(ReadError::Bad(
+            431,
+            "Request Header Fields Too Large",
+            format!("header line exceeds {MAX_LINE} bytes"),
+        ));
+    }
+    // Tolerate bare-LF clients; strip the terminator either way.
+    while buf.last() == Some(&b'\n') || buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map_err(|_| ReadError::Bad(400, "Bad Request", "non-UTF-8 header line".into()))
+}
+
+/// Parse one request off the connection: request line, headers, and a
+/// `Content-Length`-bounded body. Chunked request bodies are refused (501) —
+/// every client this server fronts sends sized bodies.
+pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<HttpRequest, ReadError> {
+    let line = read_line(r)?;
+    let mut parts = line.split_ascii_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if parts.next().is_none() => (m, t, v),
+        _ => {
+            return Err(ReadError::Bad(
+                400,
+                "Bad Request",
+                format!("malformed request line {line:?}"),
+            ))
+        }
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return Err(ReadError::Bad(
+                505,
+                "HTTP Version Not Supported",
+                format!("unsupported version {other:?}"),
+            ))
+        }
+    };
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line(r) {
+            Ok(l) => l,
+            // EOF between headers is still a truncated request.
+            Err(ReadError::Closed) => {
+                return Err(ReadError::Bad(400, "Bad Request", "truncated headers".into()))
+            }
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(ReadError::Bad(
+                431,
+                "Request Header Fields Too Large",
+                format!("more than {MAX_HEADERS} headers"),
+            ));
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(ReadError::Bad(400, "Bad Request", format!("malformed header {line:?}")));
+        };
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    let mut req = HttpRequest {
+        method: method.to_string(),
+        target: target.to_string(),
+        http11,
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(ReadError::Bad(
+            501,
+            "Not Implemented",
+            "chunked request bodies are not supported; send Content-Length".into(),
+        ));
+    }
+    if let Some(cl) = req.header("content-length") {
+        let n: usize = cl.parse().map_err(|_| {
+            ReadError::Bad(400, "Bad Request", format!("bad Content-Length {cl:?}"))
+        })?;
+        if n > max_body {
+            return Err(ReadError::Bad(
+                413,
+                "Payload Too Large",
+                format!("body of {n} bytes exceeds the {max_body}-byte cap"),
+            ));
+        }
+        let mut body = vec![0u8; n];
+        r.read_exact(&mut body).map_err(ReadError::Io)?;
+        req.body = body;
+    }
+    Ok(req)
+}
+
+/// Write a plain (non-SSE) response with a sized body.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// OpenAI-style error body.
+pub fn error_body(status: u16, kind: &str, msg: &str) -> String {
+    obj(vec![(
+        "error",
+        obj(vec![("message", s(msg)), ("type", s(kind)), ("code", num(status as f64))]),
+    )])
+    .to_string_compact()
+}
+
+fn write_error<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    kind: &str,
+    msg: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = error_body(status, kind, msg);
+    write_response(w, status, reason, "application/json", body.as_bytes(), keep_alive)
+}
+
+/// Chunked SSE response writer: one chunk per `data:` event, so each token
+/// hits the wire as soon as the engine emits it and the connection can
+/// keep-alive after the stream's `0\r\n\r\n` trailer.
+pub struct SseWriter<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<'a, W: Write> SseWriter<'a, W> {
+    pub fn begin(w: &'a mut W, keep_alive: bool) -> std::io::Result<SseWriter<'a, W>> {
+        let head = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+             Cache-Control: no-cache\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        w.write_all(head.as_bytes())?;
+        w.flush()?;
+        Ok(SseWriter { w })
+    }
+
+    /// Emit one `data: {payload}\n\n` event as one HTTP chunk.
+    pub fn event(&mut self, payload: &str) -> std::io::Result<()> {
+        let frame = format!("data: {payload}\n\n");
+        let chunk = format!("{:x}\r\n{frame}\r\n", frame.len());
+        self.w.write_all(chunk.as_bytes())?;
+        self.w.flush()
+    }
+
+    /// Terminate the chunked body (the connection may then keep-alive).
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// A `/v1/completions` body mapped onto engine terms.
+pub struct CompletionRequest {
+    pub prompt: Vec<u32>,
+    pub max_tokens: usize,
+    pub sampling: SamplingParams,
+    pub stream: bool,
+    pub deadline: Option<Duration>,
+    pub ttft_deadline: Option<Duration>,
+}
+
+fn field_usize(body: &Json, key: &str, default: usize) -> Result<usize, String> {
+    match body.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_usize().ok_or_else(|| format!("{key} must be a non-negative integer")),
+    }
+}
+
+fn field_f32(body: &Json, key: &str, default: f32) -> Result<f32, String> {
+    match body.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_f64().map(|x| x as f32).ok_or_else(|| format!("{key} must be a number")),
+    }
+}
+
+fn token_id(v: &Json, vocab_size: usize) -> Result<u32, String> {
+    let id = v
+        .as_usize()
+        .ok_or_else(|| format!("token ids must be non-negative integers, got {v:?}"))?;
+    if id >= vocab_size {
+        return Err(format!("token id {id} out of range for vocab of {vocab_size}"));
+    }
+    Ok(id as u32)
+}
+
+/// Map a request body onto a [`CompletionRequest`]. `prompt` is either a
+/// string (tokenized with the model's vocab) or an array of token ids;
+/// `stop` entries are words or ids. See the serve CLI help for the schema.
+pub fn parse_completion(
+    body: &Json,
+    vocab: &Vocab,
+    vocab_size: usize,
+) -> Result<CompletionRequest, String> {
+    let prompt = match body.get("prompt") {
+        Some(Json::Str(text)) => {
+            let ids = vocab.tokenize(text);
+            if ids.is_empty() {
+                return Err(format!("prompt {text:?} produced no tokens under this vocab"));
+            }
+            ids
+        }
+        Some(Json::Arr(items)) => {
+            if items.is_empty() {
+                return Err("prompt must not be empty".into());
+            }
+            items.iter().map(|v| token_id(v, vocab_size)).collect::<Result<Vec<u32>, _>>()?
+        }
+        Some(other) => {
+            return Err(format!("prompt must be a string or an array of token ids, got {other:?}"))
+        }
+        None => return Err("missing required field: prompt".into()),
+    };
+    let max_tokens = field_usize(body, "max_tokens", 16)?;
+    let temperature = field_f32(body, "temperature", 0.0)?;
+    let top_k = field_usize(body, "top_k", 0)?;
+    let top_p = field_f32(body, "top_p", 1.0)?;
+    let seed = match body.get("seed") {
+        None | Some(Json::Null) => 0u64,
+        Some(v) => v
+            .as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as u64)
+            .ok_or_else(|| "seed must be a non-negative integer".to_string())?,
+    };
+    let stream = match body.get("stream") {
+        None | Some(Json::Null) => false,
+        Some(v) => v.as_bool().ok_or_else(|| "stream must be a boolean".to_string())?,
+    };
+    let stop_tokens = match body.get("stop") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(Json::Str(word)) => vec![stop_word(vocab, word)?],
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|v| match v {
+                Json::Str(word) => stop_word(vocab, word),
+                other => token_id(other, vocab_size),
+            })
+            .collect::<Result<Vec<u32>, _>>()?,
+        Some(other) => {
+            return Err(format!("stop must be a word, a token id array, or null, got {other:?}"))
+        }
+    };
+    let deadline = match field_usize(body, "deadline_ms", 0)? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    let ttft_deadline = match field_usize(body, "ttft_deadline_ms", 0)? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    Ok(CompletionRequest {
+        prompt,
+        max_tokens,
+        sampling: SamplingParams { temperature, top_k, top_p, seed, stop_tokens },
+        stream,
+        deadline,
+        ttft_deadline,
+    })
+}
+
+fn stop_word(vocab: &Vocab, word: &str) -> Result<u32, String> {
+    vocab.id_of(word).ok_or_else(|| format!("stop word {word:?} is not in the vocab"))
+}
+
+/// The text delta for one streamed token: spacing matches
+/// [`Vocab::detokenize`] over the generated ids, so concatenating every
+/// chunk's `text` reproduces the non-streamed `text` exactly.
+pub fn token_text(vocab: &Vocab, index: usize, token: u32) -> String {
+    let word = vocab.word(token);
+    if index > 0 && vocab.cat_of(token) != Cat::Punct {
+        format!(" {word}")
+    } else {
+        word.to_string()
+    }
+}
+
+/// Probe for a peer that closed (or half-closed) its end without waking any
+/// read we own: a non-blocking one-byte peek. `Ok(0)` is EOF ⇒ the client is
+/// gone and the request must be cancelled. Pending request bytes (`Ok(n)`)
+/// and `WouldBlock` both mean the peer is still there.
+pub fn half_closed(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut probe = [0u8; 1];
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => !matches!(e.kind(), std::io::ErrorKind::WouldBlock),
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// Block until the connection has a request byte to parse, the peer leaves,
+/// the idle window lapses, or the server stops. `buffered` short-circuits
+/// the probe when the reader already holds pipelined bytes.
+fn wait_readable(stream: &TcpStream, ctx: &ServeCtx, buffered: bool) -> bool {
+    if buffered {
+        return true;
+    }
+    let t0 = Instant::now();
+    loop {
+        if ctx.stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let mut probe = [0u8; 1];
+        let state = stream.peek(&mut probe);
+        let _ = stream.set_nonblocking(false);
+        match state {
+            Ok(0) => return false,
+            Ok(_) => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if t0.elapsed() > ctx.keep_alive {
+                    return false;
+                }
+                std::thread::sleep(IDLE_TICK);
+            }
+            Err(_) => return false,
+        }
+    }
+}
+
+enum ConnAction {
+    Keep,
+    Close,
+}
+
+/// Drive one connection through the module-doc state machine until it
+/// closes. Never panics the worker thread on socket errors — every write is
+/// allowed to fail into `Close`.
+pub fn handle_connection(stream: TcpStream, ctx: &ServeCtx) {
+    let _ = stream.set_nodelay(true);
+    // Once bytes start flowing, individual reads/writes get a bounded
+    // timeout so a stalled peer cannot wedge a worker thread forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = std::io::BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        if !wait_readable(reader.get_ref(), ctx, !reader.buffer().is_empty()) {
+            return;
+        }
+        let req = match read_request(&mut reader, ctx.max_body) {
+            Ok(req) => req,
+            Err(ReadError::Closed) | Err(ReadError::Io(_)) => return,
+            Err(ReadError::Bad(status, reason, msg)) => {
+                let _ = write_error(&mut writer, status, reason, "invalid_request", &msg, false);
+                return;
+            }
+        };
+        let keep = req.keep_alive() && !ctx.stop.load(Ordering::Relaxed);
+        let action = route(&mut writer, ctx, &req, keep);
+        match action {
+            ConnAction::Keep => continue,
+            ConnAction::Close => return,
+        }
+    }
+}
+
+fn route(w: &mut TcpStream, ctx: &ServeCtx, req: &HttpRequest, keep: bool) -> ConnAction {
+    let path = req.target.split('?').next().unwrap_or("");
+    let outcome = match (req.method.as_str(), path) {
+        ("POST", "/v1/completions") => return completions(w, ctx, req, keep),
+        ("GET", "/healthz") => healthz(w, ctx, keep),
+        ("GET", "/v1/models") => models(w, ctx, keep),
+        ("POST", "/admin/shutdown") => {
+            ctx.shutdown_req.store(true, Ordering::SeqCst);
+            let body = obj(vec![("status", s("draining"))]).to_string_compact();
+            write_response(w, 200, "OK", "application/json", body.as_bytes(), false)
+                .map(|_| ConnAction::Close)
+        }
+        ("POST", _) | ("GET", _) => write_error(
+            w,
+            404,
+            "Not Found",
+            "invalid_request",
+            &format!("no route for {} {}", req.method, path),
+            keep,
+        )
+        .map(|_| if keep { ConnAction::Keep } else { ConnAction::Close }),
+        (method, _) => write_error(
+            w,
+            405,
+            "Method Not Allowed",
+            "invalid_request",
+            &format!("method {method} not supported"),
+            keep,
+        )
+        .map(|_| if keep { ConnAction::Keep } else { ConnAction::Close }),
+    };
+    outcome.unwrap_or(ConnAction::Close)
+}
+
+fn healthz(w: &mut TcpStream, ctx: &ServeCtx, keep: bool) -> std::io::Result<ConnAction> {
+    let alive = ctx.engine.alive_workers();
+    let ok = alive > 0;
+    let body = obj(vec![
+        ("status", s(if ok { "ok" } else { "failed" })),
+        ("workers", num(ctx.engine.n_workers() as f64)),
+        ("alive_workers", num(alive as f64)),
+        ("kv_used_tokens", num(ctx.engine.kv_used_tokens() as f64)),
+        ("kv_live_leases", num(ctx.engine.kv_live_leases() as f64)),
+        ("draining", Json::Bool(ctx.stop.load(Ordering::Relaxed))),
+    ])
+    .to_string_compact();
+    let (status, reason) = if ok { (200, "OK") } else { (503, "Service Unavailable") };
+    write_response(w, status, reason, "application/json", body.as_bytes(), keep)
+        .map(|_| if keep { ConnAction::Keep } else { ConnAction::Close })
+}
+
+fn models(w: &mut TcpStream, ctx: &ServeCtx, keep: bool) -> std::io::Result<ConnAction> {
+    let body = obj(vec![
+        ("object", s("list")),
+        (
+            "data",
+            Json::Arr(vec![obj(vec![
+                ("id", s(&ctx.model_id)),
+                ("object", s("model")),
+                ("owned_by", s("aser")),
+            ])]),
+        ),
+    ])
+    .to_string_compact();
+    write_response(w, 200, "OK", "application/json", body.as_bytes(), keep)
+        .map(|_| if keep { ConnAction::Keep } else { ConnAction::Close })
+}
+
+fn completions(w: &mut TcpStream, ctx: &ServeCtx, req: &HttpRequest, keep: bool) -> ConnAction {
+    let fail = |w: &mut TcpStream, msg: &str| {
+        let _ = write_error(w, 400, "Bad Request", "invalid_request", msg, keep);
+        if keep {
+            ConnAction::Keep
+        } else {
+            ConnAction::Close
+        }
+    };
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return fail(w, "body is not UTF-8");
+    };
+    let body = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return fail(w, &format!("invalid JSON body: {} at byte {}", e.msg, e.pos)),
+    };
+    let creq = match parse_completion(&body, &ctx.vocab, ctx.vocab_size) {
+        Ok(c) => c,
+        Err(msg) => return fail(w, &msg),
+    };
+    let id = ctx.next_id.fetch_add(1, Ordering::Relaxed);
+    let prompt_len = creq.prompt.len();
+    let mut gen = GenRequest::new(id, creq.prompt, creq.max_tokens);
+    gen.sampling = creq.sampling;
+    gen.deadline = creq.deadline.or(ctx.default_deadline);
+    gen.ttft_deadline = creq.ttft_deadline;
+    let handle = match ctx.engine.submit(gen) {
+        Ok(h) => h,
+        Err(SubmitError::QueueFull(_)) => {
+            let _ = write_error(
+                w,
+                429,
+                "Too Many Requests",
+                "overloaded",
+                "admission queue is full; retry with backoff",
+                keep,
+            );
+            return if keep { ConnAction::Keep } else { ConnAction::Close };
+        }
+        Err(SubmitError::Closed(_)) => {
+            let _ = write_error(
+                w,
+                503,
+                "Service Unavailable",
+                "shutting_down",
+                "engine is shutting down",
+                false,
+            );
+            return ConnAction::Close;
+        }
+    };
+    if creq.stream {
+        stream_completion(w, ctx, handle, id, prompt_len, keep)
+    } else {
+        blocking_completion(w, ctx, handle, id, prompt_len, keep)
+    }
+}
+
+fn completion_id(id: u64) -> String {
+    format!("cmpl-{id}")
+}
+
+fn usage_json(prompt_len: usize, n_tokens: usize) -> Json {
+    obj(vec![
+        ("prompt_tokens", num(prompt_len as f64)),
+        ("completion_tokens", num(n_tokens as f64)),
+        ("total_tokens", num((prompt_len + n_tokens) as f64)),
+    ])
+}
+
+fn stream_completion(
+    w: &mut TcpStream,
+    ctx: &ServeCtx,
+    handle: super::engine::RequestHandle,
+    id: u64,
+    prompt_len: usize,
+    keep: bool,
+) -> ConnAction {
+    let Ok(mut sse) = SseWriter::begin(w, keep) else {
+        handle.cancel();
+        return ConnAction::Close;
+    };
+    loop {
+        match handle.recv_timeout(POLL) {
+            TryEvent::Event(TokenEvent::PrefillDone { .. }) => {}
+            TryEvent::Event(TokenEvent::Token { token, index }) => {
+                let chunk = obj(vec![
+                    ("id", s(&completion_id(id))),
+                    ("object", s("text_completion.chunk")),
+                    ("model", s(&ctx.model_id)),
+                    (
+                        "choices",
+                        Json::Arr(vec![obj(vec![
+                            ("index", num(0.0)),
+                            ("text", s(&token_text(&ctx.vocab, index, token))),
+                            ("token_id", num(token as f64)),
+                            ("token_index", num(index as f64)),
+                        ])]),
+                    ),
+                ])
+                .to_string_compact();
+                if sse.event(&chunk).is_err() {
+                    // Disconnect detected on write: free the KV lease now.
+                    handle.cancel();
+                    return ConnAction::Close;
+                }
+            }
+            TryEvent::Event(TokenEvent::Finished { reason, n_tokens, ttft, total }) => {
+                let fin = obj(vec![
+                    ("id", s(&completion_id(id))),
+                    ("object", s("text_completion.chunk")),
+                    ("model", s(&ctx.model_id)),
+                    (
+                        "choices",
+                        Json::Arr(vec![obj(vec![
+                            ("index", num(0.0)),
+                            ("text", s("")),
+                            ("finish_reason", s(reason.wire_str())),
+                        ])]),
+                    ),
+                    ("usage", usage_json(prompt_len, n_tokens)),
+                    ("ttft_ms", num(ttft.as_secs_f64() * 1e3)),
+                    ("total_ms", num(total.as_secs_f64() * 1e3)),
+                ])
+                .to_string_compact();
+                let done =
+                    sse.event(&fin).and_then(|_| sse.event("[DONE]")).and_then(|_| sse.finish());
+                let draining =
+                    ctx.stop.load(Ordering::Relaxed) || ctx.abort.load(Ordering::Relaxed);
+                return match done {
+                    Ok(()) if keep && !draining => ConnAction::Keep,
+                    _ => ConnAction::Close,
+                };
+            }
+            TryEvent::Empty => {
+                if ctx.abort.load(Ordering::Relaxed) {
+                    // Server shutdown grace expired: cancel and let the
+                    // terminal Cancelled event close the stream cleanly.
+                    handle.cancel();
+                }
+                if half_closed(sse.w) {
+                    handle.cancel();
+                    return ConnAction::Close;
+                }
+            }
+            TryEvent::Closed => {
+                // Worker died with no terminal event; report and move on.
+                let fin = obj(vec![
+                    ("id", s(&completion_id(id))),
+                    ("object", s("text_completion.chunk")),
+                    (
+                        "choices",
+                        Json::Arr(vec![obj(vec![
+                            ("index", num(0.0)),
+                            ("text", s("")),
+                            ("finish_reason", s(FinishReason::WorkerFailed.wire_str())),
+                        ])]),
+                    ),
+                ])
+                .to_string_compact();
+                let done =
+                    sse.event(&fin).and_then(|_| sse.event("[DONE]")).and_then(|_| sse.finish());
+                return match done {
+                    Ok(()) if keep => ConnAction::Keep,
+                    _ => ConnAction::Close,
+                };
+            }
+        }
+    }
+}
+
+fn blocking_completion(
+    w: &mut TcpStream,
+    ctx: &ServeCtx,
+    handle: super::engine::RequestHandle,
+    id: u64,
+    prompt_len: usize,
+    keep: bool,
+) -> ConnAction {
+    let mut tokens: Vec<u32> = Vec::new();
+    let (finish, ttft, total) = loop {
+        match handle.recv_timeout(POLL) {
+            TryEvent::Event(TokenEvent::PrefillDone { .. }) => {}
+            TryEvent::Event(TokenEvent::Token { token, .. }) => tokens.push(token),
+            TryEvent::Event(TokenEvent::Finished { reason, ttft, total, .. }) => {
+                break (reason, ttft, total)
+            }
+            TryEvent::Empty => {
+                if ctx.abort.load(Ordering::Relaxed) {
+                    handle.cancel();
+                }
+                if half_closed(w) {
+                    // Client gone before the response: free the lease and
+                    // close; there is nobody to answer.
+                    handle.cancel();
+                    return ConnAction::Close;
+                }
+            }
+            TryEvent::Closed => {
+                break (FinishReason::WorkerFailed, Duration::ZERO, handle.elapsed())
+            }
+        }
+    };
+    if finish == FinishReason::Rejected {
+        let _ = write_error(
+            w,
+            400,
+            "Bad Request",
+            "invalid_request",
+            "request rejected at admission: prompt cannot fit the KV window",
+            keep,
+        );
+        return if keep { ConnAction::Keep } else { ConnAction::Close };
+    }
+    let body = obj(vec![
+        ("id", s(&completion_id(id))),
+        ("object", s("text_completion")),
+        ("model", s(&ctx.model_id)),
+        (
+            "choices",
+            Json::Arr(vec![obj(vec![
+                ("index", num(0.0)),
+                ("text", s(&ctx.vocab.detokenize(&tokens))),
+                ("token_ids", Json::Arr(tokens.iter().map(|&t| num(t as f64)).collect())),
+                ("finish_reason", s(finish.wire_str())),
+            ])]),
+        ),
+        ("usage", usage_json(prompt_len, tokens.len())),
+        ("ttft_ms", num(ttft.as_secs_f64() * 1e3)),
+        ("total_ms", num(total.as_secs_f64() * 1e3)),
+    ])
+    .to_string_compact();
+    let draining = ctx.stop.load(Ordering::Relaxed) || ctx.abort.load(Ordering::Relaxed);
+    match write_response(w, 200, "OK", "application/json", body.as_bytes(), keep) {
+        Ok(()) if keep && !draining => ConnAction::Keep,
+        _ => ConnAction::Close,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<HttpRequest, ReadError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let req = parse(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+             Content-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/completions");
+        assert!(req.http11);
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header("CONTENT-LENGTH"), Some("4"));
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn connection_header_controls_keep_alive() {
+        let req = parse("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive());
+        let req = parse("GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!req.keep_alive());
+        let req = parse("GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn malformed_and_oversize_requests_are_rejected() {
+        assert!(matches!(parse("NOPE\r\n\r\n"), Err(ReadError::Bad(400, ..))));
+        assert!(matches!(parse(""), Err(ReadError::Closed)));
+        assert!(matches!(
+            parse("GET / HTTP/2.0\r\n\r\n"),
+            Err(ReadError::Bad(505, ..))
+        ));
+        // Body over the cap (max_body = 1024 in `parse`).
+        let big = format!("POST / HTTP/1.1\r\nContent-Length: 4096\r\n\r\n{}", "x".repeat(4096));
+        assert!(matches!(parse(&big), Err(ReadError::Bad(413, ..))));
+        // Header line over MAX_LINE.
+        let long = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n", "y".repeat(MAX_LINE + 1));
+        assert!(matches!(parse(&long), Err(ReadError::Bad(431, ..))));
+        // Truncated body: Content-Length promises more than the wire holds.
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(ReadError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn completion_body_maps_onto_engine_terms() {
+        let vocab = Vocab::new(128);
+        let body = Json::parse(
+            r#"{"prompt": [3, 5, 7], "max_tokens": 9, "temperature": 0.75,
+                "top_k": 40, "top_p": 0.9, "seed": 11, "stream": true,
+                "deadline_ms": 250}"#,
+        )
+        .unwrap();
+        let creq = parse_completion(&body, &vocab, 128).unwrap();
+        assert_eq!(creq.prompt, vec![3, 5, 7]);
+        assert_eq!(creq.max_tokens, 9);
+        assert!((creq.sampling.temperature - 0.75).abs() < 1e-6);
+        assert_eq!(creq.sampling.top_k, 40);
+        assert_eq!(creq.sampling.seed, 11);
+        assert!(creq.stream);
+        assert_eq!(creq.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(creq.ttft_deadline, None);
+    }
+
+    #[test]
+    fn text_prompt_and_stop_words_use_the_vocab() {
+        let vocab = Vocab::new(128);
+        let text = vocab.detokenize(&[5, 9, 13]);
+        let stop = vocab.word(20).to_string();
+        let body = obj(vec![
+            ("prompt", s(&text)),
+            ("stop", Json::Arr(vec![s(&stop), num(21.0)])),
+        ]);
+        let creq = parse_completion(&body, &vocab, 128).unwrap();
+        assert!(!creq.prompt.is_empty());
+        assert_eq!(creq.sampling.stop_tokens, vec![20, 21]);
+        assert_eq!(creq.max_tokens, 16, "OpenAI-style default");
+        assert!(!creq.stream);
+    }
+
+    #[test]
+    fn completion_body_errors_are_specific() {
+        let vocab = Vocab::new(128);
+        for (body, needle) in [
+            (r#"{}"#, "missing required field: prompt"),
+            (r#"{"prompt": []}"#, "must not be empty"),
+            (r#"{"prompt": [99999]}"#, "out of range"),
+            (r#"{"prompt": [1], "max_tokens": -3}"#, "non-negative integer"),
+            (r#"{"prompt": [1], "stream": 7}"#, "boolean"),
+            (r#"{"prompt": [1], "stop": ["zzzznotaword"]}"#, "not in the vocab"),
+        ] {
+            let err = parse_completion(&Json::parse(body).unwrap(), &vocab, 128).unwrap_err();
+            assert!(err.contains(needle), "{body} → {err}");
+        }
+    }
+
+    #[test]
+    fn streamed_token_texts_concatenate_to_detokenize() {
+        let vocab = Vocab::new(128);
+        let ids = [7u32, 19, 3, 42, 99, 5];
+        let joined: String =
+            ids.iter().enumerate().map(|(i, &t)| token_text(&vocab, i, t)).collect();
+        assert_eq!(joined, vocab.detokenize(&ids));
+    }
+
+    #[test]
+    fn sse_writer_frames_events_as_chunks() {
+        let mut out: Vec<u8> = Vec::new();
+        {
+            let mut sse = SseWriter::begin(&mut out, true).unwrap();
+            sse.event("{\"x\":1}").unwrap();
+            sse.event("[DONE]").unwrap();
+            sse.finish().unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Transfer-Encoding: chunked"));
+        assert!(text.contains("Content-Type: text/event-stream"));
+        // Each event is one correctly sized chunk.
+        let frame = "data: {\"x\":1}\n\n";
+        assert!(text.contains(&format!("{:x}\r\n{frame}\r\n", frame.len())));
+        assert!(text.contains("data: [DONE]\n\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+    }
+
+    #[test]
+    fn error_bodies_are_valid_json() {
+        let body = error_body(429, "overloaded", "queue \"full\"\n");
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("error").unwrap().int("code").unwrap(), 429);
+        assert_eq!(v.get("error").unwrap().str_field("message").unwrap(), "queue \"full\"\n");
+    }
+}

@@ -1,13 +1,15 @@
 //! L3 coordinator: the quantization pipeline orchestrator and the serving
-//! runtime (streaming engine, continuous batcher, KV-cache pool, and the
-//! batch-and-drain compat router).
+//! runtime (streaming engine, continuous batcher, KV-cache pool, the
+//! batch-and-drain compat router, and the HTTP/SSE network front end).
 
 pub mod batcher;
 pub mod engine;
 pub mod faults;
+pub mod http;
 pub mod kvpool;
 pub mod pipeline;
 pub mod router;
+pub mod server;
 
 pub use batcher::{
     BatchConfig, BatchMetrics, FinishReason, GenRequest, Submission, TokenEvent,
@@ -19,3 +21,4 @@ pub use faults::{Fault, FaultPlan, FaultPlanConfig};
 pub use kvpool::{KvDtype, KvPool};
 pub use pipeline::{calibrate_model, quantize_model, run_ptq, CalibStats, PipelineReport};
 pub use router::{serve_requests, synthetic_requests, ServerConfig, ServerRun};
+pub use server::{HttpServer, HttpServerConfig};

@@ -1,0 +1,225 @@
+//! The listener half of the HTTP front end: a bounded accept loop fanned
+//! over a small worker thread pool, plus the server lifecycle.
+//!
+//! [`HttpServer::bind`] spawns one non-blocking accept thread and `threads`
+//! connection workers sharing a bounded channel of accepted sockets; when
+//! the channel is full the accept thread answers a minimal 503 and drops the
+//! connection instead of queueing unbounded work. Each worker runs
+//! [`handle_connection`](super::http::handle_connection) — the per-connection
+//! state machine documented in [`super::http`].
+//!
+//! Shutdown is two-phase ([`HttpServer::shutdown`]): first stop accepting
+//! and let in-flight connections finish their current response within a
+//! grace period, then flip the abort flag so streaming handlers cancel their
+//! engine requests and exit. The engine itself is returned to the caller,
+//! which drains it via `Engine::shutdown_mode(Drain, ..)` — the server never
+//! tears down the engine behind the caller's back. The SIGTERM-equivalent
+//! trigger is `POST /admin/shutdown` (std has no signal API), surfaced
+//! through [`HttpServer::shutdown_requested`] for the serve CLI loop.
+
+use super::engine::Engine;
+use super::http::{handle_connection, write_response, ServeCtx};
+use crate::data::Vocab;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Sizing and per-connection policy for [`HttpServer`].
+#[derive(Clone, Debug)]
+pub struct HttpServerConfig {
+    /// Connection worker threads (concurrent connections served).
+    pub threads: usize,
+    /// Accepted-socket channel bound; overflow is answered 503 and dropped.
+    pub backlog: usize,
+    /// Idle keep-alive window before a quiet connection closes.
+    pub keep_alive: Duration,
+    /// Request body cap in bytes.
+    pub max_body: usize,
+    /// Reported by `GET /v1/models` and echoed in completions.
+    pub model_id: String,
+    /// Default end-to-end deadline stamped on requests that carry none.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> HttpServerConfig {
+        HttpServerConfig {
+            threads: 4,
+            backlog: 64,
+            keep_alive: Duration::from_secs(5),
+            max_body: 1 << 20,
+            model_id: "aser".to_string(),
+            default_deadline: None,
+        }
+    }
+}
+
+/// A running HTTP front end over an [`Engine`]. Dropping an un-shutdown
+/// server aborts its threads (zero grace); prefer [`HttpServer::shutdown`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    ctx: Arc<ServeCtx>,
+    engine: Arc<Engine>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving `engine` immediately.
+    pub fn bind(
+        addr: &str,
+        engine: Arc<Engine>,
+        vocab: Arc<Vocab>,
+        cfg: HttpServerConfig,
+    ) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        // Non-blocking accepts: the loop must poll the stop flag, and std
+        // offers no way to interrupt a blocking `accept`.
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let vocab_size = vocab.size;
+        let ctx = Arc::new(ServeCtx {
+            engine: Arc::clone(&engine),
+            vocab,
+            vocab_size,
+            model_id: cfg.model_id.clone(),
+            next_id: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            abort: AtomicBool::new(false),
+            shutdown_req: AtomicBool::new(false),
+            keep_alive: cfg.keep_alive,
+            max_body: cfg.max_body,
+            default_deadline: cfg.default_deadline,
+        });
+        let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(cfg.backlog.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let workers: Vec<JoinHandle<()>> = (0..cfg.threads.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let ctx = Arc::clone(&ctx);
+                std::thread::Builder::new()
+                    .name(format!("http-worker-{i}"))
+                    .spawn(move || worker_loop(&rx, &ctx))
+                    .expect("spawn http worker")
+            })
+            .collect();
+        let accept = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("http-accept".to_string())
+                .spawn(move || accept_loop(listener, tx, &ctx))
+                .expect("spawn http accept loop")
+        };
+        Ok(HttpServer { addr: local, ctx, engine, accept: Some(accept), workers })
+    }
+
+    /// The bound address — the actual port when bound to `:0`.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a client hit `POST /admin/shutdown` (or
+    /// [`HttpServer::request_shutdown`] ran). The serve loop polls this.
+    pub fn shutdown_requested(&self) -> bool {
+        self.ctx.shutdown_req.load(Ordering::SeqCst)
+    }
+
+    /// Programmatic equivalent of `POST /admin/shutdown`.
+    pub fn request_shutdown(&self) {
+        self.ctx.shutdown_req.store(true, Ordering::SeqCst);
+    }
+
+    /// The engine this server fronts (for meters in tests and benches).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Stop the front end: close admission, give in-flight connections
+    /// `grace` to finish, then cancel the stragglers and join every thread.
+    /// Returns the engine so the caller can drain it
+    /// (`Engine::shutdown_mode(Drain, ..)`) and collect worker metrics.
+    pub fn shutdown(mut self, grace: Duration) -> Arc<Engine> {
+        self.stop_threads(grace);
+        Arc::clone(&self.engine)
+    }
+
+    fn stop_threads(&mut self, grace: Duration) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // The accept loop dropped its sender, so idle workers drain the
+        // channel and exit; busy ones get the grace period.
+        let deadline = Instant::now() + grace;
+        while Instant::now() < deadline && self.workers.iter().any(|w| !w.is_finished()) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.ctx.abort.store(true, Ordering::SeqCst);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() || !self.workers.is_empty() {
+            self.stop_threads(Duration::ZERO);
+        }
+    }
+}
+
+fn worker_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, ctx: &Arc<ServeCtx>) {
+    loop {
+        // Take the lock only to pull the next socket — holding it across
+        // `handle_connection` would serialize the whole pool.
+        let conn = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        match conn {
+            Ok(stream) => handle_connection(stream, ctx),
+            // Sender gone: the accept loop exited; nothing more will come.
+            Err(_) => return,
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: SyncSender<TcpStream>, ctx: &Arc<ServeCtx>) {
+    while !ctx.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => match tx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(stream)) => reject_busy(stream),
+                Err(TrySendError::Disconnected(_)) => return,
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            // Transient accept errors (ECONNABORTED etc.): keep listening.
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    // `tx` drops here; idle workers see Disconnected and exit.
+}
+
+/// Every worker is busy and the hand-off channel is full: shed at the edge
+/// with a minimal 503 rather than queueing unbounded connections.
+fn reject_busy(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let body = super::http::error_body(503, "overloaded", "all connection workers are busy");
+    let _ = write_response(
+        &mut stream,
+        503,
+        "Service Unavailable",
+        "application/json",
+        body.as_bytes(),
+        false,
+    );
+    let _ = stream.flush();
+}

@@ -125,7 +125,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literal; `{x}` would emit
+                    // "NaN"/"inf" and corrupt the document. Null is the
+                    // conventional lossy fallback.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -485,6 +490,26 @@ mod tests {
     fn integers_written_without_fraction() {
         let v = obj(vec![("n", num(3.0))]);
         assert_eq!(v.to_string_compact(), r#"{"n":3}"#);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // Surfaced by the round-trip property test: `{x}` prints "NaN"/"inf"
+        // for non-finite f64, which no JSON parser (ours included) accepts.
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = obj(vec![("x", num(x))]).to_string_compact();
+            assert_eq!(doc, r#"{"x":null}"#);
+            assert!(Json::parse(&doc).is_ok());
+        }
+    }
+
+    #[test]
+    fn extreme_finite_numbers_roundtrip() {
+        for x in [f64::MAX, f64::MIN, f64::MIN_POSITIVE, 5e-324, -0.0, 1e15, 2.5e-7] {
+            let doc = Json::Num(x).to_string_compact();
+            let back = Json::parse(&doc).unwrap();
+            assert_eq!(back.as_f64(), Some(x), "{x} serialized as {doc}");
+        }
     }
 
     #[test]

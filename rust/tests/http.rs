@@ -1,0 +1,407 @@
+//! Integration tests for the HTTP/1.1 + SSE front end: real TCP sockets
+//! against [`aser::coordinator::server::HttpServer`], covering the ISSUE-10
+//! acceptance criteria — a streamed completion bitwise identical to the
+//! in-process `Engine::submit` path, and a mid-stream disconnect that frees
+//! the KV lease and increments `BatchMetrics::cancelled`.
+
+use aser::coordinator::{
+    BatchConfig, Engine, EngineConfig, GenRequest, HttpServer, HttpServerConfig, TokenEvent,
+};
+use aser::data::Vocab;
+use aser::model::{synthetic_model, SamplingParams};
+use aser::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// -- tiny raw-socket HTTP client ------------------------------------------
+
+fn send_request(conn: &mut TcpStream, method: &str, path: &str, body: Option<&str>, close: bool) {
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+    if close {
+        req.push_str("Connection: close\r\n");
+    }
+    if let Some(b) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    conn.write_all(req.as_bytes()).unwrap();
+}
+
+struct HttpResponse {
+    status: u16,
+    body: Vec<u8>,
+}
+
+fn read_byte(conn: &mut TcpStream) -> u8 {
+    let mut b = [0u8; 1];
+    let n = conn.read(&mut b).expect("socket read");
+    assert!(n > 0, "unexpected EOF from server");
+    b[0]
+}
+
+/// Read one response off a (possibly keep-alive) connection: headers, then a
+/// `Content-Length` body or a de-framed chunked body.
+fn read_response(conn: &mut TcpStream) -> HttpResponse {
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut head = Vec::new();
+    while !head.ends_with(b"\r\n\r\n") {
+        head.push(read_byte(conn));
+    }
+    let head = String::from_utf8(head).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let lower = head.to_ascii_lowercase();
+    let body = if let Some(rest) = lower.split("content-length:").nth(1) {
+        let n: usize = rest.split_whitespace().next().unwrap().parse().unwrap();
+        let mut body = vec![0u8; n];
+        conn.read_exact(&mut body).unwrap();
+        body
+    } else if lower.contains("transfer-encoding: chunked") {
+        read_chunked(conn)
+    } else {
+        Vec::new()
+    };
+    HttpResponse { status, body }
+}
+
+fn read_chunked(conn: &mut TcpStream) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let mut line = Vec::new();
+        while !line.ends_with(b"\r\n") {
+            line.push(read_byte(conn));
+        }
+        let size =
+            usize::from_str_radix(std::str::from_utf8(&line).unwrap().trim(), 16).unwrap();
+        let mut chunk = vec![0u8; size + 2]; // payload + trailing CRLF
+        conn.read_exact(&mut chunk).unwrap();
+        if size == 0 {
+            return out;
+        }
+        out.extend_from_slice(&chunk[..size]);
+    }
+}
+
+/// Split an SSE body into `data:` payload strings.
+fn sse_events(body: &[u8]) -> Vec<String> {
+    String::from_utf8_lossy(body)
+        .split("\n\n")
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim_start_matches("data: ").to_string())
+        .collect()
+}
+
+fn micro_server(engine: Arc<Engine>, model_id: &str) -> HttpServer {
+    HttpServer::bind(
+        "127.0.0.1:0",
+        engine,
+        Arc::new(Vocab::new(128)),
+        HttpServerConfig { threads: 2, model_id: model_id.to_string(), ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn teardown(server: HttpServer, engine: Arc<Engine>) -> Vec<aser::coordinator::BatchMetrics> {
+    let returned = server.shutdown(Duration::from_secs(2));
+    drop(engine);
+    let Ok(engine) = Arc::try_unwrap(returned) else {
+        panic!("engine still shared after server shutdown")
+    };
+    engine.shutdown()
+}
+
+// -- tests ----------------------------------------------------------------
+
+/// ISSUE-10 acceptance: the streamed HTTP token sequence is bitwise
+/// identical to the in-process `Engine::submit` path for the same seeded
+/// sampled request — and so is the non-streamed response.
+#[test]
+fn streamed_http_matches_in_process_engine_bitwise() {
+    let model = Arc::new(synthetic_model("micro", 71).unwrap());
+    let engine = Arc::new(Engine::new(
+        Arc::clone(&model),
+        EngineConfig { workers: 1, kv_tokens: 4096, ..Default::default() },
+    ));
+    let mut req = GenRequest::new(999, vec![3, 5, 7], 12);
+    req.sampling = SamplingParams {
+        temperature: 0.9,
+        top_k: 8,
+        top_p: 0.95,
+        seed: 42,
+        stop_tokens: Vec::new(),
+    };
+    let want = engine.submit(req).unwrap().wait();
+    assert!(!want.tokens.is_empty(), "reference stream produced no tokens");
+
+    let server = micro_server(Arc::clone(&engine), "micro-fp16");
+    let addr = server.local_addr();
+    let body = r#"{"prompt": [3, 5, 7], "max_tokens": 12, "temperature": 0.9,
+                   "top_k": 8, "top_p": 0.95, "seed": 42, "stream": true}"#;
+    let mut conn = TcpStream::connect(addr).unwrap();
+    send_request(&mut conn, "POST", "/v1/completions", Some(body), false);
+    let resp = read_response(&mut conn);
+    assert_eq!(resp.status, 200);
+    let events = sse_events(&resp.body);
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"));
+    let mut got: Vec<u32> = Vec::new();
+    let mut finish = String::new();
+    let mut text = String::new();
+    for ev in &events[..events.len() - 1] {
+        let v = Json::parse(ev).unwrap();
+        let choice = &v.get("choices").unwrap().as_arr().unwrap()[0];
+        if let Some(t) = choice.get("token_id").and_then(Json::as_usize) {
+            got.push(t as u32);
+            text.push_str(choice.str_field("text").unwrap());
+        }
+        if let Ok(f) = choice.str_field("finish_reason") {
+            finish = f.to_string();
+        }
+    }
+    assert_eq!(got, want.tokens, "streamed HTTP tokens must match Engine::submit bitwise");
+    assert_eq!(finish, want.finish.wire_str());
+
+    // Non-streamed path, same seed: same ids, and its text equals the
+    // concatenation of the streamed per-token deltas.
+    let body = r#"{"prompt": [3, 5, 7], "max_tokens": 12, "temperature": 0.9,
+                   "top_k": 8, "top_p": 0.95, "seed": 42}"#;
+    let mut conn = TcpStream::connect(addr).unwrap();
+    send_request(&mut conn, "POST", "/v1/completions", Some(body), true);
+    let resp = read_response(&mut conn);
+    assert_eq!(resp.status, 200);
+    let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let choice = &v.get("choices").unwrap().as_arr().unwrap()[0];
+    let ids: Vec<u32> = choice
+        .get("token_ids")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(ids, want.tokens);
+    assert_eq!(choice.str_field("text").unwrap(), text);
+    assert_eq!(choice.str_field("finish_reason").unwrap(), want.finish.wire_str());
+    let usage = v.get("usage").unwrap();
+    assert_eq!(usage.int("prompt_tokens").unwrap(), 3);
+    assert_eq!(usage.int("completion_tokens").unwrap(), want.tokens.len());
+
+    teardown(server, engine);
+}
+
+/// ISSUE-10 acceptance + satellite: dropping the socket mid-generation
+/// frees the request's KV lease within one batcher iteration (pool meter
+/// drains to zero) and the worker's `cancelled` counter increments.
+#[test]
+fn mid_stream_disconnect_frees_kv_and_counts_cancelled() {
+    let mut base = synthetic_model("micro", 72).unwrap();
+    base.cfg.max_seq = 8192; // room to decode until cancelled
+    base.refresh_derived();
+    let engine = Arc::new(Engine::new(
+        Arc::new(base),
+        EngineConfig {
+            workers: 1,
+            kv_tokens: 1 << 14,
+            batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+            ..Default::default()
+        },
+    ));
+    let server = micro_server(Arc::clone(&engine), "micro-fp16");
+    let body = r#"{"prompt": [2, 3, 4], "max_tokens": 5000, "stream": true}"#;
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    send_request(&mut conn, "POST", "/v1/completions", Some(body), false);
+    // Read raw bytes until the first token event is on the wire, so the
+    // disconnect provably lands mid-generation.
+    let mut seen: Vec<u8> = Vec::new();
+    while !seen.windows(8).any(|w| w == b"token_id") {
+        seen.push(read_byte(&mut conn));
+    }
+    assert!(engine.kv_used_tokens() > 0, "stream mid-generation must hold a KV lease");
+    drop(conn); // the disconnect under test
+
+    let t0 = Instant::now();
+    while engine.kv_used_tokens() > 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "KV lease not freed after client disconnect"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(engine.kv_live_leases(), 0);
+
+    let metrics = teardown(server, engine);
+    let cancelled: usize = metrics.iter().map(|m| m.cancelled).sum();
+    assert!(cancelled >= 1, "disconnect must surface as BatchMetrics::cancelled");
+}
+
+/// Routes, keep-alive, error mapping, and the admin shutdown flag.
+#[test]
+fn endpoints_keep_alive_and_error_mapping() {
+    let model = Arc::new(synthetic_model("micro", 73).unwrap());
+    let engine = Arc::new(Engine::new(
+        Arc::clone(&model),
+        EngineConfig { workers: 1, kv_tokens: 4096, ..Default::default() },
+    ));
+    let server = micro_server(Arc::clone(&engine), "micro-fp16");
+    let addr = server.local_addr();
+
+    // One connection, many requests: healthz → models → completion → 404 →
+    // bad JSON → missing prompt. Keep-alive must survive every 2xx/4xx.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    send_request(&mut conn, "GET", "/healthz", None, false);
+    let r = read_response(&mut conn);
+    assert_eq!(r.status, 200);
+    let v = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+    assert_eq!(v.str_field("status").unwrap(), "ok");
+    assert_eq!(v.int("alive_workers").unwrap(), 1);
+
+    send_request(&mut conn, "GET", "/v1/models", None, false);
+    let r = read_response(&mut conn);
+    assert_eq!(r.status, 200);
+    assert!(String::from_utf8_lossy(&r.body).contains("micro-fp16"));
+
+    send_request(
+        &mut conn,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": [3, 5, 7], "max_tokens": 4}"#),
+        false,
+    );
+    let r = read_response(&mut conn);
+    assert_eq!(r.status, 200);
+    let v = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+    let choice = &v.get("choices").unwrap().as_arr().unwrap()[0];
+    let n = choice.get("token_ids").unwrap().as_arr().unwrap().len();
+    assert!(n > 0 && n <= 4);
+    assert_eq!(v.get("usage").unwrap().int("completion_tokens").unwrap(), n);
+
+    send_request(&mut conn, "GET", "/nope", None, false);
+    assert_eq!(read_response(&mut conn).status, 404);
+
+    send_request(&mut conn, "POST", "/v1/completions", Some("{not json"), false);
+    assert_eq!(read_response(&mut conn).status, 400);
+
+    send_request(&mut conn, "POST", "/v1/completions", Some("{}"), true);
+    let r = read_response(&mut conn);
+    assert_eq!(r.status, 400);
+    assert!(String::from_utf8_lossy(&r.body).contains("prompt"));
+    drop(conn);
+
+    // SIGTERM-equivalent: the shutdown endpoint flips the polled flag.
+    assert!(!server.shutdown_requested());
+    let mut conn = TcpStream::connect(addr).unwrap();
+    send_request(&mut conn, "POST", "/admin/shutdown", None, true);
+    assert_eq!(read_response(&mut conn).status, 200);
+    assert!(server.shutdown_requested());
+
+    teardown(server, engine);
+}
+
+/// `SubmitError::QueueFull` maps to HTTP 429 (the engine-side recipe is the
+/// `queue_cap_sheds_and_submit_wait_times_out` engine test).
+#[test]
+fn queue_full_maps_to_429() {
+    let mut base = synthetic_model("micro", 74).unwrap();
+    base.cfg.max_seq = 8192;
+    base.refresh_derived();
+    let engine = Arc::new(Engine::new(
+        Arc::new(base),
+        EngineConfig {
+            workers: 1,
+            kv_tokens: 1 << 14,
+            batch: BatchConfig { max_batch: 1, stop_on_eos: false, ..Default::default() },
+            queue_cap: 1,
+            ..Default::default()
+        },
+    ));
+    let server = micro_server(Arc::clone(&engine), "micro-fp16");
+
+    // Occupy the single batch slot, then the single queue slot, in-process.
+    let blocker = engine.submit(GenRequest::new(0, vec![2, 3], 5000)).unwrap();
+    loop {
+        match blocker.recv().expect("blocker stream open") {
+            TokenEvent::Token { .. } => break,
+            TokenEvent::Finished { .. } => panic!("blocker finished early"),
+            TokenEvent::PrefillDone { .. } => {}
+        }
+    }
+    let queued = engine.submit(GenRequest::new(1, vec![4, 5], 4)).unwrap();
+
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    send_request(
+        &mut conn,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": [6, 7], "max_tokens": 4}"#),
+        true,
+    );
+    let r = read_response(&mut conn);
+    assert_eq!(r.status, 429, "QueueFull must map to 429");
+    let v = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+    assert_eq!(v.get("error").unwrap().int("code").unwrap(), 429);
+
+    blocker.cancel();
+    drop(queued);
+    teardown(server, engine);
+}
+
+/// Deadline expiry surfaces as a terminal SSE event with
+/// `finish_reason: "deadline"`.
+#[test]
+fn deadline_expiry_streams_deadline_finish_reason() {
+    let mut base = synthetic_model("micro", 75).unwrap();
+    base.cfg.max_seq = 8192;
+    base.refresh_derived();
+    let engine = Arc::new(Engine::new(
+        Arc::new(base),
+        EngineConfig {
+            workers: 1,
+            kv_tokens: 1 << 14,
+            batch: BatchConfig { stop_on_eos: false, ..Default::default() },
+            ..Default::default()
+        },
+    ));
+    let server = micro_server(Arc::clone(&engine), "micro-fp16");
+    // A 1 ms budget cannot cover a 5000-token generation; the sweep expires
+    // it after at most a few tokens.
+    let body = r#"{"prompt": [2, 3, 4], "max_tokens": 5000, "stream": true, "deadline_ms": 1}"#;
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    send_request(&mut conn, "POST", "/v1/completions", Some(body), true);
+    let resp = read_response(&mut conn);
+    assert_eq!(resp.status, 200);
+    let events = sse_events(&resp.body);
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"));
+    let terminal = Json::parse(&events[events.len() - 2]).unwrap();
+    let choice = &terminal.get("choices").unwrap().as_arr().unwrap()[0];
+    assert_eq!(choice.str_field("finish_reason").unwrap(), "deadline");
+
+    teardown(server, engine);
+}
+
+/// Sanity for the helper itself: the SocketAddr type keeps the ephemeral
+/// port the OS picked, so every test binds its own isolated listener.
+#[test]
+fn servers_bind_distinct_ephemeral_ports() {
+    let model = Arc::new(synthetic_model("micro", 76).unwrap());
+    let engine = Arc::new(Engine::new(
+        Arc::clone(&model),
+        EngineConfig { workers: 1, kv_tokens: 4096, ..Default::default() },
+    ));
+    let s1 = micro_server(Arc::clone(&engine), "a");
+    let s2 = micro_server(Arc::clone(&engine), "b");
+    let (a1, a2): (SocketAddr, SocketAddr) = (s1.local_addr(), s2.local_addr());
+    assert_ne!(a1.port(), 0);
+    assert_ne!(a1.port(), a2.port());
+    let e1 = s1.shutdown(Duration::from_millis(100));
+    let e2 = s2.shutdown(Duration::from_millis(100));
+    drop((e1, e2));
+    let Ok(engine) = Arc::try_unwrap(engine) else { panic!("engine still shared") };
+    engine.shutdown();
+}

@@ -1851,6 +1851,102 @@ fn prop_greedy_speculation_bitwise_across_method_grid() {
 }
 
 #[test]
+fn prop_json_roundtrip_identity() {
+    // serialize ∘ parse = identity over random `Json` values — nested
+    // containers, strings full of control characters / escapes / multibyte
+    // UTF-8, and numbers across the whole finite f64 range (integer-exact
+    // values, subnormals, f64::MAX). Non-finite numbers are the one
+    // documented lossy case (JSON has no NaN/Infinity literal; the writer
+    // emits null) and are pinned by json.rs unit tests, so the generator
+    // stays finite. Both writers must round-trip: the compact one and the
+    // pretty one (whitespace must parse away).
+    use aser::util::json::Json;
+    use std::collections::BTreeMap;
+
+    // Characters that historically break hand-rolled JSON writers: every
+    // escape class, raw control chars, DEL, multibyte, astral (surrogate
+    // pairs in \u escapes), and the replacement char.
+    const POOL: [char; 19] = [
+        'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{0}', '\u{1}', '\u{1f}',
+        '\u{7f}', 'é', 'Ω', '\u{2028}', '😀', '\u{fffd}',
+    ];
+    const EDGES: [f64; 12] = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        0.1,
+        123456.789,
+        1e15,
+        -1e15,
+        1e300,
+        5e-324, // smallest subnormal
+        f64::MAX,
+        f64::MIN_POSITIVE,
+    ];
+
+    fn gen_string(rng: &mut Pcg64) -> String {
+        let n = rng.below(12);
+        (0..n).map(|_| POOL[rng.below(POOL.len())]).collect()
+    }
+
+    fn gen_num(rng: &mut Pcg64) -> f64 {
+        if rng.below(2) == 0 {
+            EDGES[rng.below(EDGES.len())]
+        } else {
+            (rng.f64() * 2.0 - 1.0) * 10f64.powi(rng.below(61) as i32 - 30)
+        }
+    }
+
+    fn gen_json(rng: &mut Pcg64, depth: usize) -> Json {
+        // At depth 0 only leaves remain, so the tree always terminates.
+        match rng.below(if depth == 0 { 4 } else { 6 }) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num(gen_num(rng)),
+            3 => Json::Str(gen_string(rng)),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|_| (gen_string(rng), gen_json(rng, depth - 1)))
+                    .collect::<BTreeMap<String, Json>>(),
+            ),
+        }
+    }
+
+    check(
+        "json_roundtrip_identity",
+        &cfg(256),
+        |rng| gen_json(rng, 3),
+        |_| Vec::new(),
+        |v| {
+            let compact = v.to_string_compact();
+            let pretty = v.to_string_pretty();
+            all(vec![
+                ensure(Json::parse(&compact).ok().as_ref() == Some(v), || {
+                    format!("compact roundtrip broke: {compact}")
+                }),
+                ensure(Json::parse(&pretty).ok().as_ref() == Some(v), || {
+                    format!("pretty roundtrip broke: {pretty}")
+                }),
+            ])
+        },
+    );
+}
+
+#[test]
+fn prop_json_surrogate_pair_escapes_parse() {
+    // `\ud83d\ude00` is U+1F600 (😀) written as a UTF-16 surrogate pair —
+    // the one escape form that needs pairing logic in the parser — and the
+    // writer's output for the decoded char must itself re-parse equal.
+    use aser::util::json::Json;
+    let v = Json::parse(r#""\ud83d\ude00 ok""#).unwrap();
+    assert_eq!(v, Json::Str("😀 ok".to_string()));
+    let rewritten = v.to_string_compact();
+    assert_eq!(Json::parse(&rewritten).unwrap(), v);
+}
+
+#[test]
 fn prop_fault_schedules_preserve_stream_invariants() {
     // The resilience layer's pin: under a random seeded fault schedule —
     // worker panics, transient KV-capacity clamps, slow passes — every
